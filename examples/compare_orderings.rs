@@ -1,0 +1,64 @@
+//! Fig. 3 in miniature: how request ordering shapes per-step resource
+//! balance.  A workload with compute-intensive requests (BurstGPT) in
+//! front and memory-intensive (OpenVid) behind is served with DFS order
+//! (NanoFlow-DFS: sequential imbalance), random order (NanoFlow-Balance)
+//! and BlendServe's dual scanner.
+//!
+//! ```bash
+//! cargo run --release --example compare_orderings
+//! ```
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::run_system;
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::{TraceKind, Workload};
+use blendserve::util::Table;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let burst = generate_kind(TraceKind::BurstGpt, 3000, 1);
+    let vid = generate_kind(TraceKind::OpenVid, 40, 2);
+    let workload = Workload::concat("burst-then-vid", &[&burst, &vid]);
+    let _ = pm;
+
+    println!(
+        "workload: {} compute-intensive then {} memory-intensive requests\n",
+        burst.len(),
+        vid.len()
+    );
+
+    for (name, cfg) in [
+        ("NanoFlow-DFS", baselines::nanoflow_dfs()),
+        ("NanoFlow-Balance", baselines::nanoflow_balance()),
+        ("BlendServe", baselines::blendserve()),
+    ] {
+        let out = run_system(&cfg, &workload);
+        let mut table = Table::new(
+            &format!(
+                "{name}: per-step compute vs memory time (downsampled; total {:.0}s, {:.0} tok/s)",
+                out.result.total_time, out.result.throughput
+            ),
+            &["step", "t_comp (ms)", "t_mem (ms)", "balance c/(c+m)"],
+        );
+        for s in out.result.downsampled(12) {
+            let bal = if s.t_comp + s.t_mem > 0.0 {
+                s.t_comp / (s.t_comp + s.t_mem)
+            } else {
+                0.0
+            };
+            table.row(&[
+                s.step.to_string(),
+                format!("{:.2}", s.t_comp * 1e3),
+                format!("{:.2}", s.t_mem * 1e3),
+                format!("{:.2}", bal),
+            ]);
+        }
+        println!("{}", table.to_text());
+    }
+    println!(
+        "Expected shape (paper Fig. 3): DFS runs compute-only then memory-only;\n\
+         BlendServe holds balance ~constant across steps."
+    );
+}

@@ -1,0 +1,49 @@
+//! Quickstart: synthesize a mixed offline workload, schedule it with
+//! BlendServe, and compare against the strongest baseline (NanoFlow-DFS).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::run_system;
+use blendserve::trace::synth::{achieved, synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::util::Table;
+
+fn main() {
+    // 1. A Table-2-style workload: compute density 1.1, 25% prefix sharing,
+    //    mixed from BurstGPT + OpenVid + MMLU.
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let spec = SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, 4000);
+    let workload = synthesize(&spec, &pm);
+    let (rho, s) = achieved(&workload, &pm);
+    println!(
+        "workload: {} requests, {:.1}M tokens, density {:.2}, sharing {:.2}\n",
+        workload.len(),
+        workload.total_tokens() as f64 / 1e6,
+        rho,
+        s
+    );
+
+    // 2. Run BlendServe and the baselines on the simulated A100 backend.
+    let mut table = Table::new(
+        "Offline throughput, Llama-3-8B on 1x A100 (simulated)",
+        &["system", "tokens/s", "vs NanoFlow-DFS", "sharing", "% of optimal"],
+    );
+    let nano = run_system(&baselines::nanoflow_dfs(), &workload);
+    for (name, cfg) in baselines::all_systems() {
+        let out = run_system(&cfg, &workload);
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", out.result.throughput),
+            format!("{:.2}x", out.result.throughput / nano.result.throughput),
+            format!("{:.3}", out.result.sharing_achieved),
+            format!("{:.1}%", out.optimal_fraction * 100.0),
+        ]);
+    }
+    println!("{}", table.to_text());
+    println!("(optimal = practical upper bound T_o with interference; §6.2)");
+}

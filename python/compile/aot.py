@@ -1,0 +1,193 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts for rust.
+
+Run once by `make artifacts`; python never executes on the request path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The HLO text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  step_t{T}.hlo.txt   one executable per blended-batch token budget T
+  weights.bin         deterministic f32 little-endian params, PARAM_ORDER
+  manifest.json       arch constants + tensor shapes/offsets + input order
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    PARAM_ORDER,
+    ModelConfig,
+    init_params,
+    kv_shape,
+    make_step_fn,
+    param_shapes,
+)
+
+# Token budgets the coordinator may request per blended step.  16 covers
+# decode-dominated steps; 64 covers chunked-prefill-heavy steps.
+STEP_VARIANTS = (16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(cfg: ModelConfig, t: int) -> str:
+    f = make_step_fn(cfg, interpret=True)
+    shapes = param_shapes(cfg)
+    args = [
+        jax.ShapeDtypeStruct(kv_shape(cfg), jnp.float32),
+        jax.ShapeDtypeStruct((t,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((t,), jnp.int32),  # seg_id
+        jax.ShapeDtypeStruct((t,), jnp.int32),  # q_pos
+    ] + [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in PARAM_ORDER]
+    lowered = jax.jit(f).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: ModelConfig, out_dir: pathlib.Path, seed: int) -> dict:
+    params = init_params(cfg, seed=seed)
+    tensors = []
+    offset = 0
+    blobs = []
+    for name in PARAM_ORDER:
+        arr = np.asarray(params[name], dtype="<f4")
+        blobs.append(arr.tobytes())
+        tensors.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "offset_bytes": offset,
+                "size_bytes": arr.nbytes,
+            }
+        )
+        offset += arr.nbytes
+    blob = b"".join(blobs)
+    (out_dir / "weights.bin").write_bytes(blob)
+    return {
+        "tensors": tensors,
+        "total_bytes": offset,
+        "sha256": hashlib.sha256(blob).hexdigest(),
+        "seed": seed,
+    }
+
+
+def make_golden(cfg: ModelConfig, seed: int) -> dict:
+    """Golden outputs for the rust runtime's numerical cross-check.
+
+    Runs the real (non-lowered) step function twice — a prefill of 8 tokens
+    followed by one decode step — and records the greedy next ids.  The
+    rust integration test replays the same inputs through the compiled HLO
+    and must reproduce these ids exactly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from compile.model import init_kv, step
+
+    params = init_params(cfg, seed=seed)
+    kv = init_kv(cfg)
+    t = 16
+    scratch = cfg.bkv - 1
+    tokens = [3, 1, 4, 1, 5, 9, 2, 6] + [0] * 8
+    seg = [0] * 8 + [scratch] * 8
+    pos = list(range(8)) + list(range(8))
+    kv, ids1, _ = step(
+        cfg, params, kv,
+        jnp.asarray(tokens, jnp.int32),
+        jnp.asarray(seg, jnp.int32),
+        jnp.asarray(pos, jnp.int32),
+    )
+    first_out = int(ids1[7])
+    tokens2 = [first_out] + [0] * 15
+    seg2 = [0] + [scratch] * 15
+    pos2 = [8] + list(range(15))
+    _, ids2, _ = step(
+        cfg, params, kv,
+        jnp.asarray(tokens2, jnp.int32),
+        jnp.asarray(seg2, jnp.int32),
+        jnp.asarray(pos2, jnp.int32),
+    )
+    return {
+        "prefill": {
+            "tokens": tokens,
+            "seg_id": seg,
+            "q_pos": pos,
+            "next_ids": [int(x) for x in ids1],
+        },
+        "decode": {
+            "tokens": tokens2,
+            "seg_id": seg2,
+            "q_pos": pos2,
+            "next_ids": [int(x) for x in ids2],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cfg = ModelConfig()
+    weights_meta = write_weights(cfg, out_dir, args.seed)
+    print(f"weights.bin: {weights_meta['total_bytes']} bytes "
+          f"({cfg.param_count()} params)")
+
+    step_files = {}
+    for t in STEP_VARIANTS:
+        text = lower_step(cfg, t)
+        name = f"step_t{t}.hlo.txt"
+        (out_dir / name).write_text(text)
+        step_files[str(t)] = name
+        print(f"{name}: {len(text)} chars")
+
+    golden = make_golden(cfg, args.seed)
+    (out_dir / "golden.json").write_text(json.dumps(golden, indent=2))
+    print("golden.json written (rust runtime cross-check)")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ffn": cfg.d_ffn,
+            "max_seq": cfg.max_seq,
+            "n_segments": cfg.n_segments,
+            "bkv": cfg.bkv,
+            "rope_theta": cfg.rope_theta,
+            "param_count": cfg.param_count(),
+        },
+        "kv_shape": list(kv_shape(cfg)),
+        "step_variants": step_files,
+        # Executable input order; outputs are a 2-tuple (kv', next_ids[T]).
+        "input_order": ["kv", "tokens", "seg_id", "q_pos", *PARAM_ORDER],
+        "weights": weights_meta,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest.json written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""L1 Pallas kernel: blended-batch attention over a ragged prefill/decode mix.
+
+This is BlendServe's compute hot-spot translated to TPU idiom (DESIGN.md
+§Hardware-Adaptation).  A single kernel consumes a *blended* token batch —
+prefill-chunk tokens (many query rows per segment, MXU-friendly, compute
+bound) and decode tokens (one query row per segment, HBM-bandwidth bound) —
+against a shared KV cache.  Interleaving both classes in one grid keeps the
+MXU busy on the prefill tiles while the decode tiles stream KV pages, which
+is the TPU analogue of NanoFlow's CUDA-stream operator overlap.
+
+Layout
+------
+  q        [T, NQ, D]      T mixed query tokens, NQ query heads
+  k, v     [BKV * S, NKV, D]  flattened per-segment KV cache (segment b owns
+                              rows [b*S, (b+1)*S)); NKV kv heads (GQA)
+  seg_id   [T] int32        owning segment of each query token
+  q_pos    [T] int32        absolute position of the token in its segment;
+                            the token attends kv rows [b*S, b*S + q_pos].
+  out      [T, NQ, D]
+
+The caller must have already scattered each token's own K/V into the cache
+(insert-then-attend), so causal self-attention is the inclusive range above.
+Padding tokens should point at a scratch segment (seg_id = BKV-1 by
+convention in model.py) — their outputs are garbage and ignored.
+
+The kernel is flash-attention style: the KV range is swept in TK-row tiles
+with an online-softmax (m, l, acc) carry, so the score matrix never
+materializes beyond [TQ, TK].  Grid = (T/TQ, NQ); GQA maps query head h to
+kv head h // (NQ/NKV).
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO.  Real-TPU efficiency is
+estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  TQ is the query-tile height (one MXU pass per tile);
+# TK is the KV-tile depth streamed per inner step.  Both are chosen so a
+# [TQ, D] + 2*[TK, D] + [TQ, TK] working set fits comfortably in VMEM at
+# D = 128 (see EXPERIMENTS.md §Perf for the footprint table).
+DEFAULT_TQ = 16
+DEFAULT_TK = 128
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(seg_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len, tile_k):
+    """One (query-tile, head) grid cell: online-softmax sweep over KV tiles."""
+    q = q_ref[:, 0, :]  # [TQ, D]
+    tq, d = q.shape
+    n_rows = k_ref.shape[0]
+    seg = seg_ref[:]  # [TQ]
+    pos = pos_ref[:]  # [TQ]
+    # kv window for each query token: rows [lo, lo + pos] inclusive.
+    lo = seg * seq_len  # [TQ]
+    hi = lo + pos  # inclusive upper bound
+
+    scale = jax.lax.rsqrt(jnp.float32(d))
+    num_tiles = n_rows // tile_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_tile = k_ref[pl.ds(j * tile_k, tile_k), 0, :]
+        v_tile = v_ref[pl.ds(j * tile_k, tile_k), 0, :]
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        rows = j * tile_k + jax.lax.broadcasted_iota(jnp.int32, (tq, tile_k), 1)
+        valid = (rows >= lo[:, None]) & (rows <= hi[:, None])
+        s = jnp.where(valid, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # Tiles that are entirely masked contribute exp(-inf - m) ~ 0.
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v_tile, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((tq,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((tq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((tq, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+    # Guard l == 0 (fully-masked padding tokens): emit zeros, not NaNs.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[:, 0, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("seq_len", "tile_q", "tile_k", "interpret")
+)
+def blend_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seg_id: jax.Array,
+    q_pos: jax.Array,
+    *,
+    seq_len: int,
+    tile_q: int = DEFAULT_TQ,
+    tile_k: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blended ragged-batch causal attention with GQA.
+
+    Args:
+      q:       [T, NQ, D] query tokens (mixed prefill chunks + decode rows).
+      k, v:    [BKV * seq_len, NKV, D] flattened KV cache.
+      seg_id:  [T] int32 owning segment per token.
+      q_pos:   [T] int32 position of the token within its segment.
+      seq_len: rows per segment in the flattened cache.
+      tile_q, tile_k: pallas tile sizes; T % tile_q == 0 and
+        (BKV*seq_len) % tile_k == 0 must hold.
+      interpret: run the kernel in pallas interpret mode (required on CPU).
+
+    Returns:
+      [T, NQ, D] attention outputs (garbage rows for padding tokens).
+    """
+    t, nq, d = q.shape
+    n_rows, nkv, dk = k.shape
+    if dk != d or v.shape != k.shape:
+        raise ValueError(f"bad kv shapes: k={k.shape} v={v.shape} q={q.shape}")
+    # Clamp tiles to the problem size (tiny batches in tests / the real
+    # CPU model), then require exact divisibility.
+    tile_q = min(tile_q, t)
+    tile_k = min(tile_k, n_rows)
+    if t % tile_q != 0:
+        raise ValueError(f"T={t} not a multiple of tile_q={tile_q}")
+    if n_rows % tile_k != 0:
+        raise ValueError(f"KV rows={n_rows} not a multiple of tile_k={tile_k}")
+    if n_rows % seq_len != 0:
+        raise ValueError(f"KV rows={n_rows} not a multiple of seq_len={seq_len}")
+    if nq % nkv != 0:
+        raise ValueError(f"NQ={nq} not a multiple of NKV={nkv}")
+    group = nq // nkv
+
+    grid = (t // tile_q, nq)
+    kernel = functools.partial(_attn_kernel, seq_len=seq_len, tile_k=tile_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q,), lambda i, h: (i,)),  # seg_id
+            pl.BlockSpec((tile_q,), lambda i, h: (i,)),  # q_pos
+            pl.BlockSpec((tile_q, 1, d), lambda i, h: (i, h, 0)),  # q
+            pl.BlockSpec((n_rows, 1, d), lambda i, h, g=group: (0, h // g, 0)),  # k
+            pl.BlockSpec((n_rows, 1, d), lambda i, h, g=group: (0, h // g, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((tile_q, 1, d), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, nq, d), q.dtype),
+        interpret=interpret,
+    )(seg_id, q_pos, q, k, v)

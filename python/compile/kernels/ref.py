@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the blended attention kernel.
+
+Deliberately naive: materializes the full [T, BKV*S] score matrix and relies
+only on jnp primitives, so it is trivially auditable.  pytest asserts the
+pallas kernel matches this to tight tolerances across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_blend_attention(q, k, v, seg_id, q_pos, *, seq_len):
+    """Reference ragged causal GQA attention.
+
+    Shapes match kernels.blend_attention.blend_attention:
+      q [T, NQ, D], k/v [BKV*seq_len, NKV, D], seg_id/q_pos [T] int32.
+    """
+    t, nq, d = q.shape
+    n_rows, nkv, _ = k.shape
+    group = nq // nkv
+    # Expand kv heads to query heads (GQA).
+    k_full = jnp.repeat(k, group, axis=1)  # [rows, NQ, D]
+    v_full = jnp.repeat(v, group, axis=1)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    # scores[t, h, r] = q[t,h,:] . k[r,h,:]
+    scores = jnp.einsum("thd,rhd->thr", q.astype(jnp.float32),
+                        k_full.astype(jnp.float32)) * scale
+    rows = jnp.arange(n_rows)[None, :]  # [1, rows]
+    lo = (seg_id * seq_len)[:, None]
+    hi = (seg_id * seq_len + q_pos)[:, None]
+    valid = (rows >= lo) & (rows <= hi)  # [T, rows]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = probs.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    probs = probs / denom
+    out = jnp.einsum("thr,rhd->thd", probs, v_full.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,252 @@
+"""L2: tiny Llama-style decoder served end-to-end by the rust coordinator.
+
+The model exists to prove the full three-layer stack composes: the rust L3
+scheduler forms *blended* token batches (chunked-prefill tokens + decode
+tokens in one ragged step), and this module's `step` function — AOT-lowered
+to HLO text by aot.py — executes them on the PJRT CPU client with the L1
+pallas kernel doing attention.
+
+Architecture (Llama-flavoured): RMSNorm, RoPE, GQA attention via
+kernels.blend_attention, SwiGLU FFN, tied embedding/unembedding.
+
+The single entry point is deliberately *ragged*:
+
+    step(params, kv, tokens[T], seg_id[T], q_pos[T]) -> (kv', next_ids[T])
+
+ - a prefill chunk for segment b is tokens with seg_id == b and consecutive
+   q_pos; a decode token is a single row.  One executable therefore serves
+   prefill, decode, and BlendServe's mixed batches alike.
+ - padding rows use seg_id == BKV-1 (a scratch segment whose KV rows are
+   never read by live segments) so their scatters are harmless.
+
+KV cache layout: kv[L, 2, BKV, S, NKV, HD] float32; index 0 = keys,
+1 = values.  The step scatters the new tokens' K/V *before* attention
+(insert-then-attend), matching the kernel's inclusive causal window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.blend_attention import blend_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture constants; must stay in sync with rust config presets."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_q_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ffn: int = 688
+    max_seq: int = 256  # S: KV rows per segment
+    n_segments: int = 8  # live segments; +1 scratch segment is appended
+    rope_theta: float = 10000.0
+
+    @property
+    def bkv(self) -> int:
+        """Total KV segments including the trailing scratch segment."""
+        return self.n_segments + 1
+
+    def param_count(self) -> int:
+        c = self
+        per_layer = (
+            c.d_model * (c.n_q_heads * c.head_dim)  # wq
+            + 2 * c.d_model * (c.n_kv_heads * c.head_dim)  # wk, wv
+            + (c.n_q_heads * c.head_dim) * c.d_model  # wo
+            + 3 * c.d_model * c.d_ffn  # gate, up, down
+            + 2 * c.d_model  # ln1, ln2
+        )
+        return c.vocab * c.d_model + c.n_layers * per_layer + c.d_model
+
+
+# Parameter order is the contract with aot.py / the rust weight loader.
+PARAM_ORDER = (
+    "embed",  # [V, D]
+    "wq",  # [L, D, NQ*HD]
+    "wk",  # [L, D, NKV*HD]
+    "wv",  # [L, D, NKV*HD]
+    "wo",  # [L, NQ*HD, D]
+    "w_gate",  # [L, D, F]
+    "w_up",  # [L, D, F]
+    "w_down",  # [L, F, D]
+    "ln1",  # [L, D]
+    "ln2",  # [L, D]
+    "ln_f",  # [D]
+)
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    c = cfg
+    qd, kd = c.n_q_heads * c.head_dim, c.n_kv_heads * c.head_dim
+    return {
+        "embed": (c.vocab, c.d_model),
+        "wq": (c.n_layers, c.d_model, qd),
+        "wk": (c.n_layers, c.d_model, kd),
+        "wv": (c.n_layers, c.d_model, kd),
+        "wo": (c.n_layers, qd, c.d_model),
+        "w_gate": (c.n_layers, c.d_model, c.d_ffn),
+        "w_up": (c.n_layers, c.d_model, c.d_ffn),
+        "w_down": (c.n_layers, c.d_ffn, c.d_model),
+        "ln1": (c.n_layers, c.d_model),
+        "ln2": (c.n_layers, c.d_model),
+        "ln_f": (c.d_model,),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic init; the same bytes are written to weights.bin."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+    for name in PARAM_ORDER:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.startswith("ln"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params[name] = (jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def kv_shape(cfg: ModelConfig) -> Tuple[int, ...]:
+    return (
+        cfg.n_layers,
+        2,
+        cfg.bkv,
+        cfg.max_seq,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+    )
+
+
+def init_kv(cfg: ModelConfig) -> jax.Array:
+    return jnp.zeros(kv_shape(cfg), jnp.float32)
+
+
+def _rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [T, H, D]; pos: [T] int32."""
+    t, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer(
+    cfg: ModelConfig,
+    x: jax.Array,
+    kv_l: jax.Array,
+    w: Dict[str, jax.Array],
+    seg_id: jax.Array,
+    q_pos: jax.Array,
+    interpret: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """One decoder layer over the ragged token batch.
+
+    x: [T, D]; kv_l: [2, BKV, S, NKV, HD] for this layer.
+    Returns (x', kv_l').
+    """
+    c = cfg
+    t = x.shape[0]
+    h = _rmsnorm(x, w["ln1"])
+    q = (h @ w["wq"]).reshape(t, c.n_q_heads, c.head_dim)
+    k = (h @ w["wk"]).reshape(t, c.n_kv_heads, c.head_dim)
+    v = (h @ w["wv"]).reshape(t, c.n_kv_heads, c.head_dim)
+    q = _rope(q, q_pos, c.rope_theta)
+    k = _rope(k, q_pos, c.rope_theta)
+
+    # Insert-then-attend: scatter the fresh K/V rows into the cache.
+    k_cache = kv_l[0].at[seg_id, q_pos].set(k)  # [BKV, S, NKV, HD]
+    v_cache = kv_l[1].at[seg_id, q_pos].set(v)
+    kv_l_new = jnp.stack([k_cache, v_cache])
+
+    flat = (c.bkv * c.max_seq, c.n_kv_heads, c.head_dim)
+    attn = blend_attention(
+        q,
+        k_cache.reshape(flat),
+        v_cache.reshape(flat),
+        seg_id,
+        q_pos,
+        seq_len=c.max_seq,
+        interpret=interpret,
+    )
+    x = x + attn.reshape(t, c.n_q_heads * c.head_dim) @ w["wo"]
+
+    h = _rmsnorm(x, w["ln2"])
+    x = x + (jax.nn.silu(h @ w["w_gate"]) * (h @ w["w_up"])) @ w["w_down"]
+    return x, kv_l_new
+
+
+def step(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    kv: jax.Array,
+    tokens: jax.Array,
+    seg_id: jax.Array,
+    q_pos: jax.Array,
+    *,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run one blended step over T ragged tokens.
+
+    Returns (kv', next_ids[T], last_logits[T, V]).  next_ids is the greedy
+    continuation for every row; the coordinator reads the rows it cares
+    about (the last token of each prefill chunk, every decode row).
+    """
+    x = params["embed"][tokens]  # [T, D]
+
+    layer_names = [n for n in PARAM_ORDER if n not in ("embed", "ln_f")]
+    stacked = {n: params[n] for n in layer_names}
+
+    def scan_body(x, layer_in):
+        kv_l, w = layer_in
+        x, kv_l_new = _layer(cfg, x, kv_l, w, seg_id, q_pos, interpret)
+        return x, kv_l_new
+
+    x, kv_new = jax.lax.scan(scan_body, x, (kv, stacked))
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T  # tied unembedding: [T, V]
+    next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return kv_new, next_ids, logits
+
+
+def make_step_fn(cfg: ModelConfig, interpret: bool = True):
+    """A positional-arg closure of `step` suitable for jit/lowering.
+
+    Signature: f(kv, tokens, seg_id, q_pos, *param_arrays_in_PARAM_ORDER)
+    -> (kv', next_ids).  Logits are dropped from the AOT artifact to keep
+    host transfers small; tests use `step` directly when they need them.
+    """
+
+    def f(kv, tokens, seg_id, q_pos, *flat_params):
+        params = dict(zip(PARAM_ORDER, flat_params))
+        kv_new, next_ids, _ = step(
+            cfg, params, kv, tokens, seg_id, q_pos, interpret=interpret
+        )
+        return kv_new, next_ids
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def default_config() -> ModelConfig:
+    return ModelConfig()

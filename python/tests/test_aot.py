@@ -1,0 +1,84 @@
+"""AOT path: HLO text generation + weights/manifest contract with rust."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import PARAM_ORDER, ModelConfig, init_params, param_shapes
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = ModelConfig(
+        vocab=128, d_model=32, n_layers=2, n_q_heads=4, n_kv_heads=2,
+        head_dim=8, d_ffn=48, max_seq=32, n_segments=3,
+    )
+    meta = aot.write_weights(cfg, out, seed=0)
+    return cfg, out, meta
+
+
+class TestWeights:
+    def test_offsets_contiguous(self, artifacts):
+        _, _, meta = artifacts
+        offset = 0
+        for t in meta["tensors"]:
+            assert t["offset_bytes"] == offset
+            offset += t["size_bytes"]
+        assert offset == meta["total_bytes"]
+
+    def test_order_matches_param_order(self, artifacts):
+        _, _, meta = artifacts
+        assert [t["name"] for t in meta["tensors"]] == list(PARAM_ORDER)
+
+    def test_roundtrip_bytes(self, artifacts):
+        """Reading back a slice of weights.bin reproduces the jax array."""
+        cfg, out, meta = artifacts
+        params = init_params(cfg, seed=0)
+        blob = (out / "weights.bin").read_bytes()
+        assert len(blob) == meta["total_bytes"]
+        for t in meta["tensors"]:
+            arr = np.frombuffer(
+                blob[t["offset_bytes"]: t["offset_bytes"] + t["size_bytes"]],
+                dtype="<f4",
+            ).reshape(t["shape"])
+            np.testing.assert_array_equal(arr, np.asarray(params[t["name"]]))
+
+    def test_shapes_match_config(self, artifacts):
+        cfg, _, meta = artifacts
+        shapes = param_shapes(cfg)
+        for t in meta["tensors"]:
+            assert tuple(t["shape"]) == shapes[t["name"]]
+
+    def test_deterministic(self, artifacts, tmp_path):
+        cfg, out, meta = artifacts
+        meta2 = aot.write_weights(cfg, tmp_path, seed=0)
+        assert meta2["sha256"] == meta["sha256"]
+
+
+class TestLowering:
+    def test_hlo_text_parses(self, artifacts):
+        cfg, _, _ = artifacts
+        text = aot.lower_step(cfg, 8)
+        assert "HloModule" in text
+        assert "ROOT" in text
+        # Inputs: kv + 3 token arrays + 11 params = 15 parameters (ids 0-14)
+        # in the entry computation; nested computations add more.
+        n_entry_params = 4 + len(PARAM_ORDER)
+        assert f"parameter({n_entry_params - 1})" in text
+        assert f"parameter({n_entry_params})" not in text
+
+    def test_full_main(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(aot, "STEP_VARIANTS", (16,))
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out", str(tmp_path), "--seed", "0"])
+        aot.main()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert (tmp_path / "weights.bin").exists()
+        assert (tmp_path / manifest["step_variants"]["16"]).exists()
+        assert manifest["input_order"][:4] == ["kv", "tokens", "seg_id",
+                                               "q_pos"]
+        assert manifest["model"]["param_count"] > 0

@@ -1,0 +1,144 @@
+"""L1 correctness: pallas blend_attention vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes and ragged prefill/decode mixes; fixed
+cases pin the regimes the coordinator actually produces.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.blend_attention import blend_attention
+from compile.kernels.ref import ref_blend_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, *, t, nq, nkv, d, bkv, seq_len, dtype=jnp.float32,
+                mode="mixed"):
+    """Build a ragged batch: prefill runs + decode singletons."""
+    q = jnp.asarray(rng.standard_normal((t, nq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((bkv * seq_len, nkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((bkv * seq_len, nkv, d)), dtype)
+
+    seg, pos = [], []
+    i = 0
+    while i < t:
+        if mode == "decode" or (mode == "mixed" and rng.random() < 0.5):
+            run = 1
+        else:
+            run = int(rng.integers(1, min(t - i, seq_len) + 1))
+        s = int(rng.integers(0, bkv))
+        p0 = int(rng.integers(0, seq_len - run + 1))
+        for j in range(run):
+            seg.append(s)
+            pos.append(p0 + j)
+        i += run
+    seg_id = jnp.asarray(seg[:t], jnp.int32)
+    q_pos = jnp.asarray(pos[:t], jnp.int32)
+    return q, k, v, seg_id, q_pos
+
+
+def check(q, k, v, seg_id, q_pos, seq_len, **kw):
+    got = blend_attention(q, k, v, seg_id, q_pos, seq_len=seq_len, **kw)
+    want = ref_blend_attention(q, k, v, seg_id, q_pos, seq_len=seq_len)
+    atol = 2e-5 if q.dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-3)
+
+
+class TestFixedCases:
+    def test_decode_only(self):
+        rng = np.random.default_rng(0)
+        args = make_inputs(rng, t=16, nq=8, nkv=2, d=32, bkv=9, seq_len=128,
+                           mode="decode")
+        check(*args, seq_len=128)
+
+    def test_prefill_only_single_segment(self):
+        rng = np.random.default_rng(1)
+        q, k, v, _, _ = make_inputs(rng, t=32, nq=8, nkv=2, d=32, bkv=9,
+                                    seq_len=128)
+        seg_id = jnp.zeros((32,), jnp.int32)
+        q_pos = jnp.arange(32, dtype=jnp.int32)
+        check(q, k, v, seg_id, q_pos, 128)
+
+    def test_blended_prefill_plus_decode(self):
+        """The shape BlendServe actually produces: one chunk + decode rows."""
+        rng = np.random.default_rng(2)
+        t, seq_len = 32, 128
+        q, k, v, _, _ = make_inputs(rng, t=t, nq=8, nkv=2, d=32, bkv=9,
+                                    seq_len=seq_len)
+        seg_id = jnp.asarray([0] * 24 + [1, 2, 3, 4, 5, 6, 7, 8], jnp.int32)
+        q_pos = jnp.asarray(list(range(10, 34)) + [99, 5, 63, 127, 1, 42, 7, 0],
+                            jnp.int32)
+        check(q, k, v, seg_id, q_pos, seq_len)
+
+    def test_mha_group_one(self):
+        rng = np.random.default_rng(3)
+        args = make_inputs(rng, t=16, nq=4, nkv=4, d=16, bkv=2, seq_len=64)
+        check(*args, seq_len=64)
+
+    def test_position_zero_token_attends_only_itself(self):
+        rng = np.random.default_rng(4)
+        q, k, v, _, _ = make_inputs(rng, t=16, nq=2, nkv=2, d=16, bkv=2,
+                                    seq_len=64)
+        seg_id = jnp.zeros((16,), jnp.int32)
+        q_pos = jnp.zeros((16,), jnp.int32)
+        got = blend_attention(q, k, v, seg_id, q_pos, seq_len=64)
+        # softmax over a single row == that row's V
+        want = jnp.broadcast_to(v[0][None], got.shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(5)
+        args = make_inputs(rng, t=16, nq=4, nkv=2, d=32, bkv=3, seq_len=128,
+                           dtype=jnp.bfloat16)
+        check(*args, seq_len=128)
+
+    def test_tile_sizes(self):
+        rng = np.random.default_rng(6)
+        args = make_inputs(rng, t=32, nq=4, nkv=2, d=32, bkv=4, seq_len=64)
+        check(*args, seq_len=64, tile_q=8, tile_k=32)
+
+    def test_full_context_window(self):
+        """q_pos = seq_len-1 must reach the segment's last KV row."""
+        rng = np.random.default_rng(7)
+        q, k, v, _, _ = make_inputs(rng, t=16, nq=2, nkv=2, d=16, bkv=2,
+                                    seq_len=64)
+        seg_id = jnp.asarray([0, 1] * 8, jnp.int32)
+        q_pos = jnp.full((16,), 63, jnp.int32)
+        check(q, k, v, seg_id, q_pos, 64)
+
+    def test_rejects_bad_shapes(self):
+        rng = np.random.default_rng(8)
+        q, k, v, seg_id, q_pos = make_inputs(rng, t=16, nq=4, nkv=2, d=32,
+                                             bkv=2, seq_len=64)
+        with pytest.raises(ValueError):
+            blend_attention(q, k, v, seg_id, q_pos, seq_len=64, tile_q=5)
+        with pytest.raises(ValueError):
+            blend_attention(q, k, v, seg_id, q_pos, seq_len=60)
+        with pytest.raises(ValueError):
+            blend_attention(q[:, :3], k, v, seg_id, q_pos, seq_len=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t_tiles=st.integers(1, 3),
+    nkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    bkv=st.integers(1, 4),
+    seq_pow=st.integers(5, 7),  # seq_len in {32, 64, 128}
+    seed=st.integers(0, 2**31 - 1),
+    mode=st.sampled_from(["mixed", "decode", "prefill"]),
+)
+def test_kernel_matches_ref_property(t_tiles, nkv, group, d, bkv, seq_pow,
+                                     seed, mode):
+    seq_len = 2 ** seq_pow
+    t = 16 * t_tiles
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, t=t, nq=nkv * group, nkv=nkv, d=d, bkv=bkv,
+                       seq_len=seq_len, mode=mode)
+    check(*args, seq_len=seq_len, tile_k=32)

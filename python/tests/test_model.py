@@ -1,0 +1,161 @@
+"""L2 correctness: the ragged `step` function and its invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = m.ModelConfig(
+    vocab=128, d_model=32, n_layers=2, n_q_heads=4, n_kv_heads=2,
+    head_dim=8, d_ffn=48, max_seq=32, n_segments=3,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(CFG, seed=0)
+
+
+def run_step(params, kv, tokens, seg_id, q_pos):
+    return m.step(
+        CFG, params, kv,
+        jnp.asarray(tokens, jnp.int32),
+        jnp.asarray(seg_id, jnp.int32),
+        jnp.asarray(q_pos, jnp.int32),
+    )
+
+
+class TestShapes:
+    def test_param_shapes_consistent(self, params):
+        shapes = m.param_shapes(CFG)
+        for name in m.PARAM_ORDER:
+            assert tuple(params[name].shape) == shapes[name], name
+
+    def test_param_count_matches(self, params):
+        total = sum(int(np.prod(p.shape)) for p in params.values())
+        assert total == CFG.param_count()
+
+    def test_step_output_shapes(self, params):
+        kv = m.init_kv(CFG)
+        t = 16
+        kv2, ids, logits = run_step(
+            params, kv, [1] * t, [0] * t, list(range(t)))
+        assert kv2.shape == m.kv_shape(CFG)
+        assert ids.shape == (t,)
+        assert ids.dtype == jnp.int32
+        assert logits.shape == (t, CFG.vocab)
+        assert bool(jnp.all((ids >= 0) & (ids < CFG.vocab)))
+
+
+class TestSemantics:
+    def test_causality(self, params):
+        """Changing a future token must not change earlier logits."""
+        kv = m.init_kv(CFG)
+        t = 16
+        toks_a = list(range(1, t + 1))
+        toks_b = list(toks_a)
+        toks_b[-1] = 99  # perturb only the last token
+        _, _, la = run_step(params, kv, toks_a, [0] * t, list(range(t)))
+        _, _, lb = run_step(params, kv, toks_b, [0] * t, list(range(t)))
+        np.testing.assert_allclose(np.asarray(la[: t - 1]),
+                                   np.asarray(lb[: t - 1]), atol=1e-6)
+        assert not np.allclose(np.asarray(la[-1]), np.asarray(lb[-1]))
+
+    def test_chunked_prefill_matches_single_shot(self, params):
+        """Prefill in two chunks == prefill in one ragged step."""
+        kv = m.init_kv(CFG)
+        toks = list(range(10, 26))  # 16 tokens
+        # One shot.
+        kv_a, _, logits_a = run_step(params, kv, toks, [0] * 16,
+                                     list(range(16)))
+        # Two chunks of 8 (pads routed to the scratch segment).
+        scratch = CFG.bkv - 1
+        kv_b = kv
+        kv_b, _, l1 = run_step(params, kv_b, toks[:8], [0] * 8,
+                               list(range(8)))
+        kv_b, _, l2 = run_step(params, kv_b, toks[8:], [0] * 8,
+                               list(range(8, 16)))
+        np.testing.assert_allclose(np.asarray(kv_a[:, :, 0]),
+                                   np.asarray(kv_b[:, :, 0]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(logits_a[8:]),
+                                   np.asarray(l2), atol=1e-4, rtol=1e-4)
+
+    def test_decode_matches_prefill_logits(self, params):
+        """Decoding token-by-token == prefilling the same sequence."""
+        kv = m.init_kv(CFG)
+        toks = [5, 17, 42, 99, 3, 7, 64, 28]
+        t = len(toks)
+        _, _, logits_full = run_step(params, kv, toks, [0] * t,
+                                     list(range(t)))
+        kv_d = kv
+        per_step = []
+        for i, tok in enumerate(toks):
+            # Pad the ragged step to 4 rows via the scratch segment.
+            scratch = CFG.bkv - 1
+            kv_d, _, lg = run_step(
+                params, kv_d,
+                [tok, 0, 0, 0],
+                [0, scratch, scratch, scratch],
+                [i, 0, 1, 2],
+            )
+            per_step.append(np.asarray(lg[0]))
+        np.testing.assert_allclose(np.stack(per_step),
+                                   np.asarray(logits_full),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_scratch_segment_isolated(self, params):
+        """Garbage scattered into the scratch segment must not leak."""
+        kv = m.init_kv(CFG)
+        scratch = CFG.bkv - 1
+        # Pollute scratch heavily.
+        kv_p, _, _ = run_step(params, kv, [77] * 8, [scratch] * 8,
+                              list(range(8)))
+        toks = [1, 2, 3, 4, 5, 6, 7, 8]
+        _, _, la = run_step(params, kv, toks, [0] * 8, list(range(8)))
+        _, _, lb = run_step(params, kv_p, toks, [0] * 8, list(range(8)))
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+
+    def test_segments_isolated(self, params):
+        """Tokens in segment 1 must not affect segment 0's results."""
+        kv = m.init_kv(CFG)
+        _, _, la = run_step(params, kv, [1, 2, 3, 4], [0] * 4, [0, 1, 2, 3])
+        _, _, lb = run_step(
+            params, kv,
+            [1, 2, 3, 4, 9, 9, 9, 9],
+            [0, 0, 0, 0, 1, 1, 1, 1],
+            [0, 1, 2, 3, 0, 1, 2, 3],
+        )
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb[:4]),
+                                   atol=1e-6)
+
+    def test_greedy_ids_are_argmax(self, params):
+        kv = m.init_kv(CFG)
+        _, ids, logits = run_step(params, kv, [3, 1, 4, 1], [0] * 4,
+                                  [0, 1, 2, 3])
+        np.testing.assert_array_equal(np.asarray(ids),
+                                      np.argmax(np.asarray(logits), -1))
+
+    def test_determinism(self, params):
+        kv = m.init_kv(CFG)
+        a = run_step(params, kv, [1, 2, 3, 4], [0] * 4, [0, 1, 2, 3])
+        b = run_step(params, kv, [1, 2, 3, 4], [0] * 4, [0, 1, 2, 3])
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+class TestStepFn:
+    def test_make_step_fn_matches_step(self, params):
+        kv = m.init_kv(CFG)
+        f = m.make_step_fn(CFG)
+        flat = [params[n] for n in m.PARAM_ORDER]
+        toks = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        seg = jnp.zeros(4, jnp.int32)
+        pos = jnp.arange(4, dtype=jnp.int32)
+        kv_a, ids_a = f(kv, toks, seg, pos, *flat)
+        kv_b, ids_b, _ = m.step(CFG, params, kv, toks, seg, pos)
+        np.testing.assert_allclose(np.asarray(kv_a), np.asarray(kv_b))
+        np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))

@@ -1,0 +1,44 @@
+//! End-to-end benchmark per paper table: Fig. 7 (Table-2 traces x systems)
+//! and Table 3 (DP scaling) at bench-sized workloads.  `cargo bench` runs
+//! this with wall-clock reporting; the figure-accurate numbers come from
+//! `paper-figures` (larger n).
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::run_system;
+use blendserve::server::serve_batch;
+use blendserve::trace::synth::{synthesize, table2_traces};
+use blendserve::util::bench::{black_box, Bench};
+use std::time::Duration;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let mut b = Bench::new().with_budget(Duration::from_secs(4));
+    println!("# e2e_tables — full pipeline per paper table (bench-sized)");
+
+    for (name, spec) in table2_traces(4_000) {
+        let w = synthesize(&spec, &pm);
+        for (sys, cfg) in [
+            ("vllm_dfs", baselines::vllm_dfs()),
+            ("nanoflow_dfs", baselines::nanoflow_dfs()),
+            ("blendserve", baselines::blendserve()),
+        ] {
+            b.run(&format!("fig7/{name}/{sys}"), || {
+                black_box(run_system(&cfg, &w).result.throughput)
+            });
+        }
+    }
+
+    // Table 3: DP partition + parallel replica simulation.
+    let (_, spec) = &table2_traces(4_000)[0];
+    let w = synthesize(spec, &pm);
+    for dp in [1usize, 2, 4] {
+        let mut cfg = baselines::blendserve();
+        cfg.scheduler.sample_prob = 0.05;
+        cfg.dp_replicas = dp;
+        b.run(&format!("tab3/dp{dp}"), || {
+            black_box(serve_batch(&cfg, &w).total_throughput)
+        });
+    }
+}

@@ -1,0 +1,51 @@
+//! Microbenchmarks for the engine: radix prefix-cache operations (lookup /
+//! insert / evict) and simulator step throughput.
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::engine::RadixCache;
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::run_system;
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::util::bench::{black_box, Bench};
+use std::time::Duration;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    println!("# engine_sim — prefix cache + step simulator");
+
+    // Prefix cache: DFS-ordered MMLU (hot stems) and a thrashing regime.
+    let w = generate_kind(TraceKind::Mmlu, 2000, 3);
+    b.run("radix_cache/insert+release 2k prompts", || {
+        let mut c = RadixCache::new(200_000);
+        for r in &w.requests {
+            let hit = c.lookup(&r.prompt);
+            let (_, pinned) = c.insert_pinned(&r.prompt, r.prompt.len());
+            c.release(&r.prompt, pinned);
+            black_box(hit);
+        }
+        black_box(c.hit_ratio())
+    });
+    b.run("radix_cache/thrashing (cap 10k)", || {
+        let mut c = RadixCache::new(10_000);
+        for r in &w.requests {
+            let (_, pinned) = c.insert_pinned(&r.prompt, r.prompt.len());
+            c.release(&r.prompt, pinned);
+        }
+        black_box(c.evicted_tokens)
+    });
+
+    // Whole-simulation wall time.
+    for n in [1_000usize, 5_000] {
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n), &pm);
+        b.run(&format!("simulate_blendserve/{n}req"), || {
+            black_box(run_system(&baselines::blendserve(), &w).result.steps)
+        });
+        b.run(&format!("simulate_nanoflow_dfs/{n}req"), || {
+            black_box(run_system(&baselines::nanoflow_dfs(), &w).result.steps)
+        });
+    }
+}

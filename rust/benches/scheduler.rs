@@ -1,0 +1,53 @@
+//! Microbenchmarks for the dual scanner and the §5.3 memory partition —
+//! the per-admission hot path (paper §A.5 reports 0.08 ms average per
+//! runtime scheduling operation; ours must stay well under that).
+
+use blendserve::config::presets;
+use blendserve::engine::sim::{Admitter, EngineView};
+use blendserve::perfmodel::{partition_memory, PerfModel};
+use blendserve::scheduler::DualScanner;
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::tree::PrefixTree;
+use blendserve::util::bench::{black_box, Bench};
+use std::time::Duration;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    println!("# scheduler — dual scanner / memory partition");
+
+    b.run("partition_memory", || {
+        black_box(partition_memory(60e9, 1.27, 3.73, 0.096))
+    });
+
+    for n in [5_000usize, 20_000] {
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.25, n), &pm);
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(0.01, 7);
+        tree.transform(&pm, 0.99);
+
+        b.run(&format!("dual_scanner_new/{n}req"), || {
+            black_box(DualScanner::new(&tree))
+        });
+
+        // Full drain: every admission decision for the whole pool.
+        b.run(&format!("dual_scan_drain/{n}req"), || {
+            let mut s = DualScanner::new(&tree);
+            let view = EngineView {
+                step: 1,
+                kv_capacity: 1e6,
+                kv_used: 0.0,
+                active_requests: 0,
+                used_left: 0.0,
+                used_right: 0.0,
+            };
+            let mut count = 0usize;
+            while s.peek(&view).is_some() {
+                s.pop();
+                count += 1;
+            }
+            black_box(count)
+        });
+    }
+}

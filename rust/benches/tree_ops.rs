@@ -1,0 +1,45 @@
+//! Microbenchmarks for the resource-aware prefix tree (L3 hot path #1):
+//! build, output-length sampling, transform (sort+split), DFS enumeration.
+
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::tree::PrefixTree;
+use blendserve::util::bench::{black_box, Bench};
+use std::time::Duration;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    println!("# tree_ops — resource-aware prefix tree");
+
+    for n in [2_000usize, 10_000, 40_000] {
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n), &pm);
+        b.run(&format!("build/{n}req"), || black_box(PrefixTree::build(&w)));
+
+        let mut tree = PrefixTree::build(&w);
+        b.run(&format!("sample_outputs/{n}req"), || {
+            black_box(tree.sample_outputs(0.01, 7))
+        });
+
+        b.run(&format!("recompute_aggregates/{n}req"), || {
+            tree.recompute_aggregates(&pm);
+            black_box(tree.root_density())
+        });
+
+        b.run(&format!("transform/{n}req"), || {
+            let mut t = tree.clone();
+            black_box(t.transform(&pm, 0.99))
+        });
+
+        let mut sorted = tree.clone();
+        sorted.transform(&pm, 0.99);
+        b.run(&format!("dfs_requests/{n}req"), || {
+            black_box(sorted.dfs_requests())
+        });
+        b.run(&format!("scheduling_units/{n}req"), || {
+            black_box(sorted.scheduling_units())
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Baseline system configurations (§6.2), all expressed as `SystemConfig`s
+//! over the same engine so comparisons isolate the scheduling policy:
+//!
+//! | system            | order  | overlap     | prefix cache |
+//! |-------------------|--------|-------------|--------------|
+//! | vLLM-DFS          | DFS    | sequential  | block-16     |
+//! | SGLang-DFS        | DFS    | sequential  | token radix  |
+//! | NanoFlow-DFS      | DFS    | overlapped  | token radix  |
+//! | NanoFlow-Balance  | random | overlapped  | token radix  |
+//! | BlendServe        | dual scanner | overlapped | token radix |
+//!
+//! DistServe (xPyD P/D disaggregation) lives in `engine::distserve`.
+
+use crate::config::{presets, OrderPolicy, OverlapMode, SystemConfig};
+
+fn base() -> SystemConfig {
+    SystemConfig::new(presets::llama3_8b(), presets::a100_80gb())
+}
+
+/// vLLM with prefix caching enabled and the trace pre-sorted into DFS
+/// order (§6.2).  Sequential compute/memory execution (no operator-level
+/// overlap).
+pub fn vllm_dfs() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::Dfs;
+    c.engine.overlap = OverlapMode::Sequential;
+    c
+}
+
+/// SGLang with RadixAttention, DFS order.  Sequential execution.
+pub fn sglang_dfs() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::Dfs;
+    c.engine.overlap = OverlapMode::Sequential;
+    c
+}
+
+/// NanoFlow (operator-level overlap) + prefix caching, DFS order — the
+/// strongest baseline in the paper.
+pub fn nanoflow_dfs() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::Dfs;
+    c.engine.overlap = OverlapMode::Overlapped;
+    c
+}
+
+/// NanoFlow with random request order ("NanoFlow-Balance"): resource
+/// balance through shuffling, at the cost of prefix locality.
+pub fn nanoflow_balance() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::Random;
+    c.engine.overlap = OverlapMode::Overlapped;
+    c
+}
+
+/// BlendServe: resource-aware prefix tree + dual scanner + overlap.
+pub fn blendserve() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::BlendServe;
+    c.engine.overlap = OverlapMode::Overlapped;
+    c.scheduler.balanced_chunk = true;
+    c
+}
+
+/// All five systems of Fig. 7, in the paper's plotting order.
+pub fn all_systems() -> Vec<(&'static str, SystemConfig)> {
+    vec![
+        ("vLLM-DFS", vllm_dfs()),
+        ("SGLang-DFS", sglang_dfs()),
+        ("NanoFlow-Balance", nanoflow_balance()),
+        ("NanoFlow-DFS", nanoflow_dfs()),
+        ("BlendServe", blendserve()),
+    ]
+}
+
+/// Swap the model/hardware of a system config (for Fig. 7b, Fig. 12).
+pub fn with_model(mut cfg: SystemConfig, model: crate::config::ModelSpec) -> SystemConfig {
+    cfg.gpus_per_replica = model.tp_degree;
+    cfg.model = model;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_systems() {
+        let all = all_systems();
+        assert_eq!(all.len(), 5);
+        assert_eq!(all[4].0, "BlendServe");
+        assert_eq!(all[4].1.scheduler.order, OrderPolicy::BlendServe);
+        assert_eq!(all[0].1.engine.overlap, OverlapMode::Sequential);
+    }
+
+    #[test]
+    fn with_model_updates_gpus() {
+        let cfg = with_model(blendserve(), presets::llama3_70b().with_tp(8));
+        assert_eq!(cfg.gpus_per_replica, 8);
+        assert_eq!(cfg.model.name, "llama-3-70b");
+    }
+}

@@ -1,0 +1,479 @@
+//! Configuration system: model/hardware/scheduler/engine configs, a
+//! TOML-subset codec (in-tree, offline build), and presets for every model
+//! and GPU the paper evaluates (§6.2).
+//!
+//! All perf-model math (§4) reads only the architecture constants collected
+//! here, so adding a model is a one-preset change.
+
+pub mod presets;
+
+use crate::util::toml::{TomlDoc, TomlError};
+use std::path::Path;
+
+/// Architecture constants of a served model (the paper's §4 notation:
+/// `P_model`, `H`, `H_kv`, `L`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameter count `P_model`.
+    pub params: f64,
+    /// Hidden dimension `H` (model width).
+    pub hidden: usize,
+    /// KV feature dimension per layer: `n_kv_heads * head_dim` (so that
+    /// bytes/token/layer = 4 * h_kv in FP16, counting K and V).
+    pub h_kv: usize,
+    /// Decoder layers `L`.
+    pub layers: usize,
+    /// Bytes per cached token across all layers (FP16 K+V):
+    /// 2 (K,V) * 2 (bytes) * h_kv * layers.
+    pub kv_bytes_per_token: f64,
+    /// Tensor-parallel degree this spec is deployed with (scales per-GPU
+    /// weights and KV capacity; see `parallel::tp`).
+    pub tp_degree: usize,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, params: f64, hidden: usize, h_kv: usize, layers: usize) -> Self {
+        let mut m = ModelSpec {
+            name: name.to_string(),
+            params,
+            hidden,
+            h_kv,
+            layers,
+            kv_bytes_per_token: 0.0,
+            tp_degree: 1,
+        };
+        m.kv_bytes_per_token = m.derive_kv_bytes();
+        m
+    }
+
+    pub fn derive_kv_bytes(&self) -> f64 {
+        4.0 * self.h_kv as f64 * self.layers as f64
+    }
+
+    pub fn with_tp(mut self, tp: usize) -> Self {
+        assert!(tp >= 1);
+        self.tp_degree = tp;
+        self
+    }
+
+    /// FP16 weight bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        2.0 * self.params
+    }
+}
+
+/// One GPU's capability (the paper's `compute`, `bandwidth` constants) and
+/// an interference factor for spatial-sharing overlap (§6.2 "practical
+/// optimal throughput": perfect `max(comp, mem)` is unachievable; profiled
+/// overlapped execution runs `1 + interference` slower).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareSpec {
+    pub name: String,
+    /// Peak FP16 tensor compute, FLOP/s.
+    pub compute_flops: f64,
+    /// Memory bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Device memory, bytes.
+    pub memory_bytes: f64,
+    /// Fraction of `max(comp,mem)` added when compute- and memory-bound
+    /// kernels run concurrently (GPU spatial-sharing interference).
+    pub interference: f64,
+    /// Memory reserved for activations / temp buffers (bytes), in addition
+    /// to weights.
+    pub reserve_bytes: f64,
+}
+
+impl HardwareSpec {
+    /// KV-cache capacity in bytes for a model replica on `n_gpus` GPUs
+    /// (weights sharded by TP).
+    pub fn kv_capacity_bytes(&self, model: &ModelSpec, n_gpus: usize) -> f64 {
+        let total_mem = self.memory_bytes * n_gpus as f64;
+        let cap = total_mem - model.weight_bytes() - self.reserve_bytes * n_gpus as f64;
+        assert!(
+            cap > 0.0,
+            "model {} does not fit on {} x {}",
+            model.name,
+            n_gpus,
+            self.name
+        );
+        cap
+    }
+
+    /// KV capacity in *tokens*.
+    pub fn kv_capacity_tokens(&self, model: &ModelSpec, n_gpus: usize) -> f64 {
+        self.kv_capacity_bytes(model, n_gpus) / model.kv_bytes_per_token
+    }
+}
+
+/// How per-step compute and memory times combine into wall-clock time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Sequential execution of compute- and memory-bound operators
+    /// (vLLM/SGLang-style): `f = sum`.
+    Sequential,
+    /// NanoFlow-style operator-level overlap: `f = max * (1+interference)`.
+    Overlapped,
+}
+
+impl OverlapMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Sequential => "sequential",
+            OverlapMode::Overlapped => "overlapped",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "sequential" => Some(OverlapMode::Sequential),
+            "overlapped" => Some(OverlapMode::Overlapped),
+            _ => None,
+        }
+    }
+}
+
+/// Request ordering policy fed to the batcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OrderPolicy {
+    /// Arrival order (first-come-first-served).
+    Fcfs,
+    /// Depth-first traversal of the prefix tree (max prefix sharing).
+    Dfs,
+    /// Uniform random shuffle ("NanoFlow-Balance" in the paper).
+    Random,
+    /// BlendServe: density-sorted tree + dual scanner.
+    BlendServe,
+}
+
+impl OrderPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderPolicy::Fcfs => "fcfs",
+            OrderPolicy::Dfs => "dfs",
+            OrderPolicy::Random => "random",
+            OrderPolicy::BlendServe => "blendserve",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "fcfs" => Some(OrderPolicy::Fcfs),
+            "dfs" => Some(OrderPolicy::Dfs),
+            "random" => Some(OrderPolicy::Random),
+            "blendserve" => Some(OrderPolicy::BlendServe),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OrderPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Scheduler knobs (§5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    pub order: OrderPolicy,
+    /// Chunked-prefill token budget per engine step.
+    pub chunk_tokens: usize,
+    /// Batch sizes are rounded to a multiple of this (§A.2 uses 128).
+    pub batch_quantum: usize,
+    /// Max concurrent requests in the on-the-fly batch.
+    pub max_batch_requests: usize,
+    /// Output-length sampling probability (§5.1); 0.01 in the paper.
+    pub sample_prob: f64,
+    /// Node-split budget expressed as the fraction of prefix sharing that
+    /// must be preserved (§5.2: "preserve 99% of prefix sharing ratio").
+    pub split_sharing_floor: f64,
+    /// Enable the online adaptation of §5.4 (re-admit on early finish,
+    /// relocate on underestimation).
+    pub online_adapt: bool,
+    /// Alg. 3 chunk budgets: meter each step's prefill tokens so per-step
+    /// compute time tracks (remaining-comp / remaining-mem) x memory time,
+    /// spreading compute across the decode steps instead of front-loading
+    /// it.  BlendServe-only; baselines use the fixed `chunk_tokens`.
+    pub balanced_chunk: bool,
+    /// Workload prefix-sharing ratio estimate used by the chunk pacer to
+    /// discount remaining prefill compute (set by the runner from the
+    /// tree's root sharing).
+    pub expected_sharing: f64,
+    /// RNG seed for sampling / random ordering.
+    pub seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            order: OrderPolicy::BlendServe,
+            chunk_tokens: 2048,
+            batch_quantum: 128,
+            max_batch_requests: 8192,
+            sample_prob: 0.01,
+            split_sharing_floor: 0.99,
+            online_adapt: true,
+            balanced_chunk: false,
+            expected_sharing: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Engine knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    pub overlap: OverlapMode,
+    /// Enable the runtime prefix cache (radix KV reuse).
+    pub prefix_cache: bool,
+    /// Include the quadratic prefill-attention FLOPs term (the paper's
+    /// model derives then omits it; we keep it for accuracy).
+    pub prefill_attn_flops: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            overlap: OverlapMode::Overlapped,
+            prefix_cache: true,
+            prefill_attn_flops: true,
+        }
+    }
+}
+
+/// Top-level system configuration (one serving deployment).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub model: ModelSpec,
+    pub hardware: HardwareSpec,
+    pub scheduler: SchedulerConfig,
+    pub engine: EngineConfig,
+    /// GPUs per model replica (tensor parallel group size).
+    pub gpus_per_replica: usize,
+    /// Data-parallel replicas.
+    pub dp_replicas: usize,
+}
+
+impl SystemConfig {
+    pub fn new(model: ModelSpec, hardware: HardwareSpec) -> Self {
+        let gpus = model.tp_degree;
+        SystemConfig {
+            model,
+            hardware,
+            scheduler: SchedulerConfig::default(),
+            engine: EngineConfig::default(),
+            gpus_per_replica: gpus,
+            dp_replicas: 1,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_replica * self.dp_replicas
+    }
+
+    pub fn kv_capacity_tokens(&self) -> f64 {
+        self.hardware
+            .kv_capacity_tokens(&self.model, self.gpus_per_replica)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut d = TomlDoc::new();
+        d.set_num("", "gpus_per_replica", self.gpus_per_replica as f64);
+        d.set_num("", "dp_replicas", self.dp_replicas as f64);
+
+        d.set_str("model", "name", &self.model.name);
+        d.set_num("model", "params", self.model.params);
+        d.set_num("model", "hidden", self.model.hidden as f64);
+        d.set_num("model", "h_kv", self.model.h_kv as f64);
+        d.set_num("model", "layers", self.model.layers as f64);
+        d.set_num("model", "kv_bytes_per_token", self.model.kv_bytes_per_token);
+        d.set_num("model", "tp_degree", self.model.tp_degree as f64);
+
+        d.set_str("hardware", "name", &self.hardware.name);
+        d.set_num("hardware", "compute_flops", self.hardware.compute_flops);
+        d.set_num("hardware", "bandwidth", self.hardware.bandwidth);
+        d.set_num("hardware", "memory_bytes", self.hardware.memory_bytes);
+        d.set_num("hardware", "interference", self.hardware.interference);
+        d.set_num("hardware", "reserve_bytes", self.hardware.reserve_bytes);
+
+        d.set_str("scheduler", "order", self.scheduler.order.name());
+        d.set_num("scheduler", "chunk_tokens", self.scheduler.chunk_tokens as f64);
+        d.set_num("scheduler", "batch_quantum", self.scheduler.batch_quantum as f64);
+        d.set_num(
+            "scheduler",
+            "max_batch_requests",
+            self.scheduler.max_batch_requests as f64,
+        );
+        d.set_num("scheduler", "sample_prob", self.scheduler.sample_prob);
+        d.set_num(
+            "scheduler",
+            "split_sharing_floor",
+            self.scheduler.split_sharing_floor,
+        );
+        d.set_bool("scheduler", "online_adapt", self.scheduler.online_adapt);
+        d.set_bool("scheduler", "balanced_chunk", self.scheduler.balanced_chunk);
+        d.set_num("scheduler", "expected_sharing", self.scheduler.expected_sharing);
+        d.set_num("scheduler", "seed", self.scheduler.seed as f64);
+
+        d.set_str("engine", "overlap", self.engine.overlap.name());
+        d.set_bool("engine", "prefix_cache", self.engine.prefix_cache);
+        d.set_bool("engine", "prefill_attn_flops", self.engine.prefill_attn_flops);
+        d.to_string_pretty()
+    }
+
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let d = TomlDoc::parse(text)?;
+        let s = |sec: &str, key: &str| -> Result<String, TomlError> {
+            Ok(d.req(sec, key)?
+                .as_str()
+                .ok_or_else(|| TomlError(format!("[{sec}] {key}: expected string")))?
+                .to_string())
+        };
+        let n = |sec: &str, key: &str| -> Result<f64, TomlError> {
+            d.req(sec, key)?
+                .as_f64()
+                .ok_or_else(|| TomlError(format!("[{sec}] {key}: expected number")))
+        };
+        let b = |sec: &str, key: &str| -> Result<bool, TomlError> {
+            d.req(sec, key)?
+                .as_bool()
+                .ok_or_else(|| TomlError(format!("[{sec}] {key}: expected bool")))
+        };
+
+        let model = ModelSpec {
+            name: s("model", "name")?,
+            params: n("model", "params")?,
+            hidden: n("model", "hidden")? as usize,
+            h_kv: n("model", "h_kv")? as usize,
+            layers: n("model", "layers")? as usize,
+            kv_bytes_per_token: n("model", "kv_bytes_per_token")?,
+            tp_degree: n("model", "tp_degree")? as usize,
+        };
+        let hardware = HardwareSpec {
+            name: s("hardware", "name")?,
+            compute_flops: n("hardware", "compute_flops")?,
+            bandwidth: n("hardware", "bandwidth")?,
+            memory_bytes: n("hardware", "memory_bytes")?,
+            interference: n("hardware", "interference")?,
+            reserve_bytes: n("hardware", "reserve_bytes")?,
+        };
+        let order_name = s("scheduler", "order")?;
+        let scheduler = SchedulerConfig {
+            order: OrderPolicy::from_name(&order_name)
+                .ok_or_else(|| TomlError(format!("unknown order '{order_name}'")))?,
+            chunk_tokens: n("scheduler", "chunk_tokens")? as usize,
+            batch_quantum: n("scheduler", "batch_quantum")? as usize,
+            max_batch_requests: n("scheduler", "max_batch_requests")? as usize,
+            sample_prob: n("scheduler", "sample_prob")?,
+            split_sharing_floor: n("scheduler", "split_sharing_floor")?,
+            online_adapt: b("scheduler", "online_adapt")?,
+            balanced_chunk: b("scheduler", "balanced_chunk")?,
+            expected_sharing: n("scheduler", "expected_sharing")?,
+            seed: n("scheduler", "seed")? as u64,
+        };
+        let overlap_name = s("engine", "overlap")?;
+        let engine = EngineConfig {
+            overlap: OverlapMode::from_name(&overlap_name)
+                .ok_or_else(|| TomlError(format!("unknown overlap '{overlap_name}'")))?,
+            prefix_cache: b("engine", "prefix_cache")?,
+            prefill_attn_flops: b("engine", "prefill_attn_flops")?,
+        };
+        Ok(SystemConfig {
+            model,
+            hardware,
+            scheduler,
+            engine,
+            gpus_per_replica: n("", "gpus_per_replica")? as usize,
+            dp_replicas: n("", "dp_replicas")? as usize,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_toml())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn llama3_8b_kv_bytes_per_token() {
+        // Known value: Llama-3-8B has 8 kv heads * 128 dim * 32 layers
+        // -> 128 KiB per token in FP16.
+        let m = presets::llama3_8b();
+        assert_eq!(m.kv_bytes_per_token, 131072.0);
+    }
+
+    #[test]
+    fn kv_capacity_positive_and_sane() {
+        let m = presets::llama3_8b();
+        let hw = presets::a100_80gb();
+        let tokens = hw.kv_capacity_tokens(&m, 1);
+        // ~ (80e9 - 16e9 - reserve) / 131072 — a few hundred thousand.
+        assert!(tokens > 100_000.0 && tokens < 1_000_000.0, "{tokens}");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn oversized_model_panics() {
+        let m = presets::llama3_70b(); // 140 GB of weights
+        let hw = presets::a100_80gb();
+        hw.kv_capacity_bytes(&m, 1);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.scheduler.order = OrderPolicy::Dfs;
+        cfg.engine.overlap = OverlapMode::Sequential;
+        cfg.dp_replicas = 4;
+        let s = cfg.to_toml();
+        let back = SystemConfig::from_toml(&s).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_policy() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("blendserve", "magic");
+        assert!(SystemConfig::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn tp_scaling_gives_more_kv() {
+        let m = presets::llama3_70b().with_tp(8);
+        let hw = presets::a100_80gb();
+        let tokens = hw.kv_capacity_tokens(&m, 8);
+        assert!(tokens > 1_000_000.0, "{tokens}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = SystemConfig::new(presets::qwen25_7b(), presets::a100_80gb());
+        let dir = std::env::temp_dir().join("blendserve_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.toml");
+        cfg.save(&path).unwrap();
+        assert_eq!(SystemConfig::load(&path).unwrap(), cfg);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            OrderPolicy::Fcfs,
+            OrderPolicy::Dfs,
+            OrderPolicy::Random,
+            OrderPolicy::BlendServe,
+        ] {
+            assert_eq!(OrderPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(OrderPolicy::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,126 @@
+//! Model and hardware presets for everything the paper evaluates (§6.2,
+//! §6.6): Llama-3-8B/70B, Llama-2-7B, Qwen-2.5-7B/72B, DeepSeek-67B on
+//! A100-80GB-SXM, plus the tiny CPU model actually served end-to-end.
+
+use super::{HardwareSpec, ModelSpec};
+
+/// Llama-3(.1)-8B: 32 layers, H=4096, 8 KV heads x 128 = 1024.
+pub fn llama3_8b() -> ModelSpec {
+    ModelSpec::new("llama-3-8b", 8.03e9, 4096, 1024, 32)
+}
+
+/// Llama-3(.1)-70B: 80 layers, H=8192, 8 KV heads x 128 = 1024 (GQA).
+pub fn llama3_70b() -> ModelSpec {
+    ModelSpec::new("llama-3-70b", 70.6e9, 8192, 1024, 80)
+}
+
+/// Llama-2-7B: MHA (32 kv heads x 128 = 4096), 32 layers, H=4096.
+pub fn llama2_7b() -> ModelSpec {
+    ModelSpec::new("llama-2-7b", 6.74e9, 4096, 4096, 32)
+}
+
+/// Qwen-2.5-7B: 28 layers, H=3584, GQA 4 kv heads x 128 = 512.
+pub fn qwen25_7b() -> ModelSpec {
+    ModelSpec::new("qwen-2.5-7b", 7.62e9, 3584, 512, 28)
+}
+
+/// Qwen-2.5-72B: 80 layers, H=8192, GQA 8 kv heads x 128 = 1024.
+pub fn qwen25_72b() -> ModelSpec {
+    ModelSpec::new("qwen-2.5-72b", 72.7e9, 8192, 1024, 80)
+}
+
+/// DeepSeek-67B: 95 layers, H=8192, GQA 8 kv heads x 128 = 1024.
+pub fn deepseek_67b() -> ModelSpec {
+    ModelSpec::new("deepseek-67b", 67.0e9, 8192, 1024, 95)
+}
+
+/// The 3.4M-parameter model really served via PJRT on CPU
+/// (python/compile/model.py; constants must match ModelConfig there).
+pub fn tiny_cpu() -> ModelSpec {
+    // vocab=2048 d=256 L=4 nq=8 nkv=2 hd=32 ffn=688 -> h_kv = 2*32 = 64.
+    ModelSpec::new("tiny-cpu", 3.295488e6, 256, 64, 4)
+}
+
+/// NVIDIA A100-80GB SXM: 312 TFLOPS FP16 tensor, 2039 GB/s HBM2e.
+///
+/// `interference = 0.15` is the calibrated spatial-sharing penalty: the
+/// paper's "practical optimal" profiles overlapped GEMM+attention execution
+/// instead of assuming a perfect `max(comp, mem)` (§6.2); NanoFlow reports
+/// roughly 10-20% overhead from SM contention, and 15% reproduces the
+/// paper's optimal-vs-achieved gaps.
+pub fn a100_80gb() -> HardwareSpec {
+    HardwareSpec {
+        name: "a100-80gb-sxm".to_string(),
+        compute_flops: 312e12,
+        bandwidth: 2.039e12,
+        memory_bytes: 80e9,
+        interference: 0.15,
+        reserve_bytes: 4e9,
+    }
+}
+
+/// The host CPU as PJRT sees it — used only by the real-model runtime's
+/// perf accounting; numbers are order-of-magnitude (single socket).
+pub fn cpu_host() -> HardwareSpec {
+    HardwareSpec {
+        name: "cpu-host".to_string(),
+        compute_flops: 2e11,
+        bandwidth: 4e10,
+        memory_bytes: 16e9,
+        interference: 0.0,
+        reserve_bytes: 1e9,
+    }
+}
+
+/// All GPU-model presets the paper's figures touch, keyed by name.
+pub fn model_by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "llama-3-8b" => Some(llama3_8b()),
+        "llama-3-70b" => Some(llama3_70b()),
+        "llama-2-7b" => Some(llama2_7b()),
+        "qwen-2.5-7b" => Some(qwen25_7b()),
+        "qwen-2.5-72b" => Some(qwen25_72b()),
+        "deepseek-67b" => Some(deepseek_67b()),
+        "tiny-cpu" => Some(tiny_cpu()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_resolvable_by_name() {
+        for name in [
+            "llama-3-8b",
+            "llama-3-70b",
+            "llama-2-7b",
+            "qwen-2.5-7b",
+            "qwen-2.5-72b",
+            "deepseek-67b",
+            "tiny-cpu",
+        ] {
+            let m = model_by_name(name).unwrap();
+            assert_eq!(m.name, name);
+            assert!(m.kv_bytes_per_token > 0.0);
+        }
+        assert!(model_by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn llama2_is_mha_heavy() {
+        // MHA Llama-2-7B stores 4x the KV bytes of GQA Llama-3-8B.
+        assert_eq!(
+            llama2_7b().kv_bytes_per_token,
+            4.0 * llama3_8b().kv_bytes_per_token
+        );
+    }
+
+    #[test]
+    fn a100_constants() {
+        let hw = a100_80gb();
+        assert_eq!(hw.compute_flops, 312e12);
+        assert_eq!(hw.bandwidth, 2.039e12);
+    }
+}

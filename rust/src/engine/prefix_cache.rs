@@ -1,0 +1,416 @@
+//! Runtime radix prefix cache (§2.2 "prefix sharing", §A.2 "runtime prefix
+//! tree"): a token-granular trie over *computed* prompt prefixes, with
+//! reference counting for active requests and leaf-first LRU eviction.
+//!
+//! Semantics follow SGLang's RadixAttention: all prompt KV lives in the
+//! trie (a shared prefix is stored once); each resident trie token charges
+//! one KV slot; eviction removes unreferenced leaf tokens in LRU order.
+//! Decode-phase tokens are *not* cached here — they are private to the
+//! request and accounted by the engine.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+type Id = u32;
+const NIL: Id = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct CNode {
+    parent: Id,
+    token: u32,
+    n_children: u32,
+    refs: u32,
+    last_use: u64,
+    /// Free-list linkage when the slot is recycled.
+    free: bool,
+}
+
+/// Token-granular radix cache with LRU leaf eviction.
+#[derive(Debug)]
+pub struct RadixCache {
+    nodes: Vec<CNode>,
+    children: HashMap<(Id, u32), Id>,
+    free_list: Vec<Id>,
+    /// Lazy min-heap of eviction candidates `(last_use, id)`.  Entries are
+    /// validated on pop (a node may have been touched, re-pinned or grown
+    /// children since being pushed); a full-scan fallback guards against
+    /// leaked candidates.
+    evict_heap: BinaryHeap<Reverse<(u64, Id)>>,
+    /// Resident tokens (= live nodes).
+    size: u64,
+    /// Tokens currently pinned (refs > 0); maintained incrementally.
+    pinned: u64,
+    /// Capacity in tokens; inserts beyond it force eviction, and when
+    /// nothing is evictable the insert is truncated.
+    capacity: u64,
+    clock: u64,
+    // ---- statistics ----
+    pub hits_tokens: u64,
+    pub lookup_tokens: u64,
+    pub evicted_tokens: u64,
+}
+
+impl RadixCache {
+    pub fn new(capacity: u64) -> Self {
+        RadixCache {
+            nodes: Vec::new(),
+            children: HashMap::new(),
+            free_list: Vec::new(),
+            evict_heap: BinaryHeap::new(),
+            size: 0,
+            pinned: 0,
+            capacity,
+            clock: 0,
+            hits_tokens: 0,
+            lookup_tokens: 0,
+            evicted_tokens: 0,
+        }
+    }
+
+    pub fn size_tokens(&self) -> u64 {
+        self.size
+    }
+
+    pub fn capacity_tokens(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Longest cached prefix of `prompt`, in tokens; bumps LRU clocks along
+    /// the path and counts hit statistics.
+    pub fn lookup(&mut self, prompt: &[u32]) -> usize {
+        self.clock += 1;
+        let mut cur = NIL;
+        let mut depth = 0usize;
+        for &t in prompt {
+            match self.children.get(&(cur, t)).copied() {
+                Some(next) => {
+                    self.nodes[next as usize].last_use = self.clock;
+                    cur = next;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if cur != NIL {
+            self.push_candidate(cur);
+        }
+        self.hits_tokens += depth as u64;
+        self.lookup_tokens += prompt.len() as u64;
+        depth
+    }
+
+    /// Insert (pin) the first `len` tokens of `prompt`, reference-counting
+    /// the path for an active request.  Returns `(new_tokens, pinned_len)`:
+    /// the number of tokens newly materialized and the prefix length that
+    /// is now resident + pinned.  May evict unreferenced tokens; if
+    /// capacity is exhausted by pinned tokens the insert truncates and only
+    /// the reached prefix is pinned (`pinned_len < len`) — the caller must
+    /// `release(prompt, pinned_len)` with the same length when done.
+    pub fn insert_pinned(&mut self, prompt: &[u32], len: usize) -> (usize, usize) {
+        self.clock += 1;
+        let len = len.min(prompt.len());
+        let mut cur = NIL;
+        let mut new_tokens = 0usize;
+        let mut depth = 0usize;
+        for &t in prompt.iter().take(len) {
+            let next = match self.children.get(&(cur, t)).copied() {
+                Some(n) => n,
+                None => {
+                    if self.size >= self.capacity && !self.evict_one() {
+                        break; // truncate: pin what we reached
+                    }
+                    let id = self.alloc(cur, t);
+                    self.children.insert((cur, t), id);
+                    self.size += 1;
+                    new_tokens += 1;
+                    id
+                }
+            };
+            // Pin incrementally so the in-progress path can never be
+            // chosen as an eviction victim by the `evict_one` above.
+            if self.nodes[next as usize].refs == 0 {
+                self.pinned += 1;
+            }
+            self.nodes[next as usize].refs += 1;
+            self.nodes[next as usize].last_use = self.clock;
+            cur = next;
+            depth += 1;
+        }
+        (new_tokens, depth)
+    }
+
+    /// Drop one reference along the first `len` tokens of `prompt`
+    /// (request finished or retracted).  The tokens stay cached until
+    /// evicted.
+    pub fn release(&mut self, prompt: &[u32], len: usize) {
+        let mut cur = NIL;
+        for &t in prompt.iter().take(len) {
+            match self.children.get(&(cur, t)).copied() {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        self.unref_path(cur);
+    }
+
+    fn unref_path(&mut self, mut cur: Id) {
+        while cur != NIL {
+            let n = &mut self.nodes[cur as usize];
+            debug_assert!(n.refs > 0, "unref below zero");
+            n.refs = n.refs.saturating_sub(1);
+            if n.refs == 0 {
+                self.pinned = self.pinned.saturating_sub(1);
+            }
+            let n = &self.nodes[cur as usize];
+            let parent = n.parent;
+            self.push_candidate(cur);
+            cur = parent;
+        }
+    }
+
+    /// Push `id` into the eviction heap if it currently looks evictable.
+    fn push_candidate(&mut self, id: Id) {
+        let n = &self.nodes[id as usize];
+        if !n.free && n.refs == 0 && n.n_children == 0 {
+            self.evict_heap.push(Reverse((n.last_use, id)));
+        }
+    }
+
+    /// Evict the LRU unreferenced leaf token.  Returns false if nothing is
+    /// evictable.  Amortized O(log n): pops lazily-invalidated heap entries;
+    /// a one-shot full scan rebuilds the heap if it runs dry while
+    /// evictable nodes still exist.
+    fn evict_one(&mut self) -> bool {
+        for _attempt in 0..2 {
+            while let Some(Reverse((lu, id))) = self.evict_heap.pop() {
+                let n = &self.nodes[id as usize];
+                if !n.free && n.refs == 0 && n.n_children == 0 && n.last_use == lu {
+                    self.remove_leaf(id);
+                    return true;
+                }
+                // Stale entry (touched / re-pinned / grew children): skip.
+            }
+            // Heap dry: rebuild from a full scan once.
+            let mut found = false;
+            for i in 0..self.nodes.len() {
+                let n = &self.nodes[i];
+                if !n.free && n.refs == 0 && n.n_children == 0 {
+                    self.evict_heap.push(Reverse((n.last_use, i as Id)));
+                    found = true;
+                }
+            }
+            if !found {
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Evict until at most `target` tokens remain (or nothing evictable).
+    /// Returns tokens evicted.
+    pub fn evict_to(&mut self, target: u64) -> u64 {
+        let mut freed = 0;
+        while self.size > target {
+            if !self.evict_one() {
+                break;
+            }
+            freed += 1;
+        }
+        freed
+    }
+
+    fn remove_leaf(&mut self, id: Id) {
+        let (parent, token) = {
+            let n = &self.nodes[id as usize];
+            debug_assert!(n.refs == 0 && n.n_children == 0 && !n.free);
+            (n.parent, n.token)
+        };
+        self.children.remove(&(parent, token));
+        self.nodes[id as usize].free = true;
+        self.free_list.push(id);
+        if parent != NIL {
+            self.nodes[parent as usize].n_children -= 1;
+            self.push_candidate(parent);
+        }
+        self.size -= 1;
+        self.evicted_tokens += 1;
+    }
+
+    fn alloc(&mut self, parent: Id, token: u32) -> Id {
+        if parent != NIL {
+            self.nodes[parent as usize].n_children += 1;
+        }
+        let node = CNode {
+            parent,
+            token,
+            n_children: 0,
+            refs: 0,
+            last_use: self.clock,
+            free: false,
+        };
+        match self.free_list.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as Id
+            }
+        }
+    }
+
+    /// Overall hit ratio observed so far (hit tokens / looked-up tokens).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hits_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+
+    /// Tokens currently pinned by active requests (refs > 0).  O(1):
+    /// maintained incrementally (the memory-pressure path calls this every
+    /// step; see EXPERIMENTS.md §Perf).
+    pub fn pinned_tokens(&self) -> u64 {
+        self.pinned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_miss_then_hit() {
+        let mut c = RadixCache::new(100);
+        assert_eq!(c.lookup(&[1, 2, 3]), 0);
+        assert_eq!(c.insert_pinned(&[1, 2, 3], 3), (3, 3));
+        assert_eq!(c.lookup(&[1, 2, 3]), 3);
+        assert_eq!(c.lookup(&[1, 2, 9]), 2);
+        assert_eq!(c.size_tokens(), 3);
+    }
+
+    #[test]
+    fn shared_prefix_stored_once() {
+        let mut c = RadixCache::new(100);
+        c.insert_pinned(&[1, 2, 3], 3);
+        let (new, pinned) = c.insert_pinned(&[1, 2, 4], 3);
+        assert_eq!((new, pinned), (1, 3));
+        assert_eq!(c.size_tokens(), 4);
+    }
+
+    #[test]
+    fn pinned_tokens_not_evicted() {
+        let mut c = RadixCache::new(3);
+        c.insert_pinned(&[1, 2, 3], 3);
+        // Full of pinned tokens: new insert cannot make room.
+        let (new, pinned) = c.insert_pinned(&[9, 8, 7], 3);
+        assert_eq!((new, pinned), (0, 0));
+        assert_eq!(c.size_tokens(), 3);
+        assert_eq!(c.lookup(&[1, 2, 3]), 3);
+    }
+
+    #[test]
+    fn release_allows_eviction() {
+        let mut c = RadixCache::new(3);
+        c.insert_pinned(&[1, 2, 3], 3);
+        c.release(&[1, 2, 3], 3);
+        let (new, _) = c.insert_pinned(&[9, 8, 7], 3);
+        assert_eq!(new, 3);
+        assert_eq!(c.size_tokens(), 3);
+        assert_eq!(c.lookup(&[1, 2, 3]), 0); // evicted
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let mut c = RadixCache::new(4);
+        c.insert_pinned(&[1, 1], 2);
+        c.release(&[1, 1], 2);
+        c.insert_pinned(&[2, 2], 2);
+        c.release(&[2, 2], 2);
+        // Touch [1,1] so [2,2] is LRU.
+        c.lookup(&[1, 1]);
+        c.insert_pinned(&[3, 3], 2);
+        assert_eq!(c.lookup(&[1, 1]), 2);
+        assert_eq!(c.lookup(&[2, 2]), 0);
+    }
+
+    #[test]
+    fn leaf_first_eviction_keeps_prefix_valid() {
+        let mut c = RadixCache::new(4);
+        c.insert_pinned(&[1, 2, 3, 4], 4);
+        c.release(&[1, 2, 3, 4], 4);
+        // Evict 2 tokens: must be [4] then [3] (leaves first).
+        c.evict_to(2);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 2);
+        assert_eq!(c.size_tokens(), 2);
+    }
+
+    #[test]
+    fn refcounts_stack() {
+        let mut c = RadixCache::new(10);
+        c.insert_pinned(&[1, 2], 2);
+        c.insert_pinned(&[1, 2], 2); // second request, same prompt
+        c.release(&[1, 2], 2);
+        // Still pinned by the second request.
+        assert_eq!(c.evict_to(0), 0);
+        c.release(&[1, 2], 2);
+        assert_eq!(c.evict_to(0), 2);
+    }
+
+    #[test]
+    fn hit_ratio_accumulates() {
+        let mut c = RadixCache::new(100);
+        c.insert_pinned(&[1, 2, 3, 4], 4);
+        c.lookup(&[1, 2, 3, 4]); // 4 hits / 4 looked up
+        c.lookup(&[5, 6, 7, 8]); // 0 hits / 4 looked up
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncated_insert_reports_partial() {
+        let mut c = RadixCache::new(2);
+        let (new, pinned) = c.insert_pinned(&[1, 2, 3, 4], 4);
+        assert_eq!((new, pinned), (2, 2));
+        assert_eq!(c.size_tokens(), 2);
+        // The partial path is pinned until released.
+        assert_eq!(c.evict_to(0), 0);
+        c.release(&[1, 2, 3, 4], pinned);
+        assert_eq!(c.evict_to(0), 2);
+    }
+
+    #[test]
+    fn dfs_order_needs_less_capacity_than_random() {
+        // The Fig. 9 mechanism in miniature: 20 groups x 6 requests with a
+        // 30-token shared stem; cache fits ~3 groups.  DFS order re-uses
+        // each stem while resident; interleaved order thrashes.
+        let groups = 20usize;
+        let per = 6usize;
+        let stem = 30usize;
+        let prompt = |g: usize, i: usize| -> Vec<u32> {
+            let mut p: Vec<u32> = (0..stem).map(|k| (g * 1000 + k) as u32).collect();
+            p.push((900_000 + g * 100 + i) as u32);
+            p
+        };
+        let run = |order: Vec<(usize, usize)>| -> f64 {
+            let mut c = RadixCache::new(3 * (stem as u64 + per as u64));
+            for (g, i) in order {
+                let p = prompt(g, i);
+                let hit = c.lookup(&p);
+                c.insert_pinned(&p, p.len());
+                let _ = hit;
+                c.release(&p, p.len());
+            }
+            c.hit_ratio()
+        };
+        let dfs: Vec<(usize, usize)> =
+            (0..groups).flat_map(|g| (0..per).map(move |i| (g, i))).collect();
+        let interleaved: Vec<(usize, usize)> =
+            (0..per).flat_map(|i| (0..groups).map(move |g| (g, i))).collect();
+        let r_dfs = run(dfs);
+        let r_int = run(interleaved);
+        assert!(r_dfs > 0.5, "dfs hit ratio {r_dfs}");
+        assert!(r_dfs > r_int * 2.0, "dfs={r_dfs} interleaved={r_int}");
+    }
+}

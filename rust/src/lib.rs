@@ -1,0 +1,41 @@
+//! # BlendServe — offline LLM batch inference with resource-aware batching
+//!
+//! Reproduction of *"BlendServe: Optimizing Offline Inference with
+//! Resource-Aware Batching"* (Zhao et al., ASPLOS '26) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the paper's contribution: a resource-aware prefix
+//!   tree ([`tree`]), the dual-scanner request scheduler ([`scheduler`]), a
+//!   NanoFlow-style overlapping execution engine ([`engine`]), workload
+//!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
+//!   tensor parallel deployment ([`parallel`]) and the offline batch-serving
+//!   frontend ([`server`]).
+//! - **L2** — a small Llama-style JAX model (`python/compile/model.py`),
+//!   AOT-lowered once to HLO text.
+//! - **L1** — a Pallas *blended attention* kernel executing ragged
+//!   prefill/decode mixes (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT HLO
+//! artifacts through the PJRT C API (`xla` crate) and serves real tokens.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index that
+//! maps every table/figure of the paper to a harness in this crate.
+
+pub mod baselines;
+pub mod config;
+pub mod engine;
+pub mod parallel;
+pub mod perfmodel;
+pub mod scheduler;
+pub mod server;
+pub mod trace;
+pub mod tree;
+pub mod util;
+
+// The PJRT runtime links against libxla_extension; keep it an always-on
+// module (the build image bundles the library).
+pub mod runtime;
+
+pub use config::{HardwareSpec, ModelSpec, SchedulerConfig, SystemConfig};
+pub use perfmodel::PerfModel;
+pub use trace::{Request, Workload};

@@ -1,0 +1,195 @@
+//! `blendserve` CLI — the leader entrypoint.
+//!
+//! ```text
+//! blendserve synth    --trace burstgpt --density 1.1 --sharing 0.25 --n 20000 --out pool.jsonl
+//! blendserve simulate --pool pool.jsonl [--system blendserve|nanoflow-dfs|...] [--dp N]
+//! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
+//! blendserve config   [--preset llama-3-8b] > system.toml
+//! ```
+//!
+//! `simulate` runs the profile-guided A100 simulator; `serve` runs the REAL
+//! tiny model through PJRT (python never on the request path).
+
+use blendserve::baselines;
+use blendserve::config::{presets, SystemConfig};
+use blendserve::perfmodel::PerfModel;
+use blendserve::runtime::serve::zipper_order;
+use blendserve::runtime::RealServer;
+use blendserve::server::pool::{load_jsonl, save_jsonl, save_results};
+use blendserve::server::serve_batch;
+use blendserve::trace::generators::remap_vocab;
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::tree::PrefixTree;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn usage() -> ! {
+    eprintln!(
+        "blendserve — offline LLM batch inference with resource-aware batching
+
+USAGE:
+  blendserve synth    --trace <sharegpt|wildchat|azure|burstgpt> --density F --sharing F --n N --out FILE
+  blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE]
+  blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
+  blendserve config   [--preset MODEL]
+
+SYSTEMS:   vllm-dfs sglang-dfs nanoflow-dfs nanoflow-balance blendserve
+MODELS:    llama-3-8b llama-3-70b llama-2-7b qwen-2.5-7b qwen-2.5-72b deepseek-67b"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("unexpected argument '{}'", args[i]);
+            usage();
+        }
+    }
+    m
+}
+
+fn system_by_name(name: &str) -> Option<SystemConfig> {
+    match name {
+        "vllm-dfs" => Some(baselines::vllm_dfs()),
+        "sglang-dfs" => Some(baselines::sglang_dfs()),
+        "nanoflow-dfs" => Some(baselines::nanoflow_dfs()),
+        "nanoflow-balance" => Some(baselines::nanoflow_balance()),
+        "blendserve" => Some(baselines::blendserve()),
+        _ => None,
+    }
+}
+
+fn cmd_synth(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let trace = match flags.get("trace").map(|s| s.as_str()).unwrap_or("burstgpt") {
+        "sharegpt" => TraceKind::ShareGpt,
+        "wildchat" => TraceKind::WildChat,
+        "azure" => TraceKind::AzureTrace,
+        "burstgpt" => TraceKind::BurstGpt,
+        other => anyhow::bail!("unknown compute trace '{other}'"),
+    };
+    let density: f64 = flags.get("density").map(|s| s.parse()).transpose()?.unwrap_or(1.1);
+    let sharing: f64 = flags.get("sharing").map(|s| s.parse()).transpose()?.unwrap_or(0.2);
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(20_000);
+    let out = PathBuf::from(flags.get("out").cloned().unwrap_or("pool.jsonl".into()));
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let w = synthesize(&SynthSpec::new(trace, density, sharing, n), &pm);
+    save_jsonl(&w, &out)?;
+    let (rho, s) = blendserve::trace::synth::achieved(&w, &pm);
+    println!(
+        "wrote {} requests ({:.1}M tokens, ρ={rho:.2}, s={s:.2}) to {}",
+        w.len(),
+        w.total_tokens() as f64 / 1e6,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let w = load_jsonl(&pool)?;
+    let sys_name = flags.get("system").cloned().unwrap_or("blendserve".into());
+    let mut cfg =
+        system_by_name(&sys_name).ok_or_else(|| anyhow::anyhow!("unknown system {sys_name}"))?;
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    if let Some(dp) = flags.get("dp") {
+        cfg.dp_replicas = dp.parse()?;
+    }
+    println!(
+        "simulating {} requests on {} ({} x{} + DP={})",
+        w.len(),
+        sys_name,
+        cfg.model.name,
+        cfg.gpus_per_replica,
+        cfg.dp_replicas
+    );
+    let job = serve_batch(&cfg, &w);
+    println!(
+        "makespan {:.1}s | {:.0} tok/s total | sharing {:.3} | optimal fraction {:.1}%",
+        job.makespan,
+        job.total_throughput,
+        job.per_replica[0].result.sharing_achieved,
+        job.per_replica[0].optimal_fraction * 100.0
+    );
+    if let Some(out) = flags.get("out") {
+        save_results(&job.per_replica, Path::new(out))?;
+        println!("results -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let dir = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(blendserve::runtime::default_artifact_dir);
+    let w = remap_vocab(&load_jsonl(&pool)?, 2048);
+    let order_name = flags.get("order").cloned().unwrap_or("blend".into());
+    let mut server = RealServer::load(&dir)?;
+    let order: Vec<u32> = match order_name.as_str() {
+        "fcfs" => (0..w.len() as u32).collect(),
+        "dfs" | "blend" => {
+            let pm = PerfModel::new(presets::tiny_cpu(), presets::cpu_host(), 1);
+            let mut tree = PrefixTree::build(&w);
+            tree.sample_outputs(0.05, 7);
+            if order_name == "blend" {
+                tree.transform(&pm, 0.99);
+                zipper_order(&tree)
+            } else {
+                tree.recompute_aggregates(&pm);
+                tree.dfs_requests()
+            }
+        }
+        other => anyhow::bail!("unknown order '{other}'"),
+    };
+    let rep = server.serve(&w, &order)?;
+    println!(
+        "served {} requests | {:.0} tok/s | {} steps ({} blended) | hit {:.3} | wall {:.1}s (exec {:.1}s)",
+        rep.n_requests,
+        rep.throughput,
+        rep.steps,
+        rep.blended_steps,
+        rep.hit_ratio,
+        rep.wall_seconds,
+        rep.exec_seconds
+    );
+    Ok(())
+}
+
+fn cmd_config(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let name = flags.get("preset").cloned().unwrap_or("llama-3-8b".into());
+    let model = presets::model_by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let cfg = SystemConfig::new(model, presets::a100_80gb());
+    print!("{}", cfg.to_toml());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "synth" => cmd_synth(flags),
+        "simulate" => cmd_simulate(flags),
+        "serve" => cmd_serve(flags),
+        "config" => cmd_config(flags),
+        _ => usage(),
+    }
+}

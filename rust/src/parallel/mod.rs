@@ -1,0 +1,201 @@
+//! Distributed deployment (§5.5): data parallelism via dual-scanner tree
+//! decomposition, and tensor parallelism as resource scaling.
+//!
+//! **DP**: the centralized resource-aware prefix tree is decomposed into
+//! `dp` *parallelized subtrees* with (a) balanced estimated processing
+//! time and (b) per-partition density close to the global root density, so
+//! every replica can blend locally.  The decomposition reuses the dual
+//! scanner: units are taken from the compute end or the memory end
+//! depending on which keeps the open partition's density near ρ(rt); a
+//! partition closes when it reaches the per-replica time target.
+//!
+//! **TP**: both compute and bandwidth scale with the replica's GPU count
+//! (communication assumed overlappable, as in NanoFlow/Centauri); this is
+//! already captured by `PerfModel::new(model, hw, n_gpus)`.
+
+use crate::perfmodel::PerfModel;
+use crate::tree::PrefixTree;
+
+/// Result of a DP decomposition: request ids per replica.
+#[derive(Clone, Debug)]
+pub struct DpPartition {
+    pub replicas: Vec<Vec<u32>>,
+    /// Estimated optimal processing time per replica (balance diagnostic).
+    pub est_times: Vec<f64>,
+}
+
+impl DpPartition {
+    /// Max/mean imbalance of the estimated replica times.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.est_times.iter().cloned().fold(0.0f64, f64::max);
+        let mean =
+            self.est_times.iter().sum::<f64>() / self.est_times.len().max(1) as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Decompose a transformed tree into `dp` balanced partitions (§5.5).
+///
+/// The tree must have been `transform`ed (or at least have aggregates
+/// recomputed) so scheduling units carry densities; estimates come from
+/// `est_output`.
+pub fn partition_dp(tree: &PrefixTree, pm: &PerfModel, dp: usize) -> DpPartition {
+    assert!(dp >= 1);
+    let units = tree.scheduling_units();
+    // Per-unit demand (comp discounted by the unit's amortized sharing —
+    // approximated with the unit density which already includes it).
+    struct U {
+        reqs: Vec<u32>,
+        comp_eff: f64,
+        mem: f64,
+    }
+    let mut us: Vec<U> = Vec::with_capacity(units.len());
+    for (id, density) in &units {
+        let node = &tree.nodes[*id];
+        let mut mem = 0.0;
+        for &r in &node.requests {
+            let p = tree.input_len(r);
+            let d = tree.est_output[r as usize].max(1) as usize;
+            mem += pm.mem_request(p, d);
+        }
+        // density = comp_eff / mem  =>  comp_eff = density * mem.
+        let comp_eff = if mem > 0.0 { density * mem } else { 0.0 };
+        us.push(U { reqs: node.requests.clone(), comp_eff, mem });
+    }
+    let rho_root = tree.root_density();
+
+    let mut replicas: Vec<Vec<u32>> = Vec::with_capacity(dp);
+    let mut est_times: Vec<f64> = Vec::with_capacity(dp);
+    let (mut l, mut r) = (0usize, us.len());
+    let mut remaining_time = {
+        let c: f64 = us.iter().map(|u| u.comp_eff).sum();
+        let m: f64 = us.iter().map(|u| u.mem).sum();
+        c.max(m)
+    };
+    for rep in 0..dp {
+        // Remaining-aware target keeps later partitions from starving when
+        // earlier ones overshoot on a coarse unit.
+        let parts_left = dp - rep;
+        let target = remaining_time / parts_left as f64;
+        let mut reqs = Vec::new();
+        let (mut c, mut m) = (0.0f64, 0.0f64);
+        let last = rep + 1 == dp;
+        while l < r {
+            // Density-steered side choice (dual-scanner reuse).
+            let take_left = if m <= 0.0 { true } else { (c / m) <= rho_root };
+            let u_idx = if take_left { l } else { r - 1 };
+            let u = &us[u_idx];
+            let after = (c + u.comp_eff).max(m + u.mem);
+            if !last && after >= target {
+                // Close before or after this unit, whichever lands nearer
+                // the target.
+                let before = c.max(m);
+                if after - target <= target - before {
+                    if take_left {
+                        l += 1;
+                    } else {
+                        r -= 1;
+                    }
+                    reqs.extend_from_slice(&u.reqs);
+                    c += u.comp_eff;
+                    m += u.mem;
+                }
+                break;
+            }
+            if take_left {
+                l += 1;
+            } else {
+                r -= 1;
+            }
+            reqs.extend_from_slice(&u.reqs);
+            c += u.comp_eff;
+            m += u.mem;
+        }
+        let t = c.max(m);
+        remaining_time = (remaining_time - t).max(0.0);
+        est_times.push(t);
+        replicas.push(reqs);
+    }
+    DpPartition { replicas, est_times }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::TraceKind;
+
+    fn setup(n: usize) -> (PrefixTree, PerfModel, usize) {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n), &pm);
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(1.0, 3);
+        tree.transform(&pm, 0.99);
+        (tree, pm, w.len())
+    }
+
+    #[test]
+    fn partitions_cover_all_requests() {
+        let (tree, pm, n) = setup(1200);
+        for dp in [1, 2, 4] {
+            let part = partition_dp(&tree, &pm, dp);
+            assert_eq!(part.replicas.len(), dp);
+            let mut all: Vec<u32> =
+                part.replicas.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n as u32).collect::<Vec<_>>(), "dp={dp}");
+        }
+    }
+
+    #[test]
+    fn partitions_balanced() {
+        let (tree, pm, _) = setup(2400);
+        // Balance is granularity-limited: at test size (~2.4k requests) a
+        // single OpenVid unit is ~half a partition's work, so the bound is
+        // loose; at the paper's 400k-request scale imbalance is ~1.05
+        // (Table 3 harness measures the end metric).
+        for dp in [2, 4] {
+            let part = partition_dp(&tree, &pm, dp);
+            assert!(
+                part.imbalance() < 1.35,
+                "dp={dp}: imbalance {}",
+                part.imbalance()
+            );
+        }
+    }
+
+    #[test]
+    fn dp1_single_partition() {
+        let (tree, pm, n) = setup(300);
+        let part = partition_dp(&tree, &pm, 1);
+        assert_eq!(part.replicas.len(), 1);
+        assert_eq!(part.replicas[0].len(), n);
+        assert!((part.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partitions_each_contain_blendable_mix() {
+        // Every partition should carry both compute- and memory-intensive
+        // requests so each replica can blend locally (§5.5).
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 0.9, 0.2, 3000), &pm);
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(1.0, 3);
+        tree.transform(&pm, 0.99);
+        let part = partition_dp(&tree, &pm, 2);
+        for (i, reqs) in part.replicas.iter().enumerate() {
+            let has_video = reqs
+                .iter()
+                .any(|&r| w.requests[r as usize].dataset == TraceKind::OpenVid);
+            let has_compute = reqs
+                .iter()
+                .any(|&r| w.requests[r as usize].dataset == TraceKind::BurstGpt);
+            assert!(has_video && has_compute, "replica {i} not blendable");
+        }
+    }
+}

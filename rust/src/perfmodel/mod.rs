@@ -1,0 +1,318 @@
+//! §4 performance model: request-level compute/memory time, compute
+//! density, batch-level equivalence, and the §3.3 optimal-throughput bound.
+//!
+//! All quantities are in SI units (seconds, bytes, FLOPs).  The model is
+//! the paper's:
+//!
+//! ```text
+//! Comp(r) ≈ (2 (p+d) P_model + 4 p² H L) / compute
+//! Mem(r)  ≈ (p d + d²/2) · H_kv · L · 4 / bandwidth
+//! ρ(r)    = Comp(r) / Mem(r)
+//! ρ(R)    = (1-s) · ΣComp / ΣMem          (sharing-discounted, §5.1)
+//! T_o     = max((1-s_o) · T_comp, T_mem)  (§3.3)
+//! ```
+//!
+//! The paper derives then omits the quadratic prefill-attention term; we
+//! keep it behind a flag (default on) because it matters for the long-input
+//! Azure/BurstGPT traces.
+
+pub mod roofline;
+
+use crate::config::{HardwareSpec, ModelSpec};
+
+/// Per-request resource demand (compute seconds, memory seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Demand {
+    pub comp: f64,
+    pub mem: f64,
+}
+
+impl Demand {
+    pub const ZERO: Demand = Demand { comp: 0.0, mem: 0.0 };
+
+    pub fn density(&self) -> f64 {
+        if self.mem <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.comp / self.mem
+        }
+    }
+
+    pub fn add(&mut self, other: Demand) {
+        self.comp += other.comp;
+        self.mem += other.mem;
+    }
+
+    pub fn sub(&mut self, other: Demand) {
+        self.comp -= other.comp;
+        self.mem -= other.mem;
+    }
+}
+
+/// The §4 analytical performance model for one model replica.
+///
+/// Tensor parallelism scales both `compute` and `bandwidth` by the replica's
+/// GPU count (§5.5: TP communication is overlappable, §7: SP/CP likewise
+/// scale both resources).
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub model: ModelSpec,
+    pub hw: HardwareSpec,
+    pub n_gpus: usize,
+    /// Include the 4 p² H L prefill-attention FLOPs term.
+    pub prefill_attn_flops: bool,
+}
+
+impl PerfModel {
+    pub fn new(model: ModelSpec, hw: HardwareSpec, n_gpus: usize) -> Self {
+        assert!(n_gpus >= 1);
+        PerfModel { model, hw, n_gpus, prefill_attn_flops: true }
+    }
+
+    /// Effective FLOP/s of the replica.
+    pub fn compute(&self) -> f64 {
+        self.hw.compute_flops * self.n_gpus as f64
+    }
+
+    /// Effective bytes/s of the replica.
+    pub fn bandwidth(&self) -> f64 {
+        self.hw.bandwidth * self.n_gpus as f64
+    }
+
+    /// KV capacity of the replica, tokens.
+    pub fn kv_capacity_tokens(&self) -> f64 {
+        self.hw.kv_capacity_tokens(&self.model, self.n_gpus)
+    }
+
+    // ---- request level (§4.1) ----
+
+    /// Total compute-bound operator time of a request with input length `p`
+    /// and output length `d`.
+    pub fn comp_request(&self, p: usize, d: usize) -> f64 {
+        let (p, d) = (p as f64, d as f64);
+        let mut flops = 2.0 * (p + d) * self.model.params;
+        if self.prefill_attn_flops {
+            flops += 4.0 * p * p * self.model.hidden as f64 * self.model.layers as f64;
+        }
+        flops / self.compute()
+    }
+
+    /// Total memory-bound operator time: d decode steps each loading the
+    /// running KV context: Σ_{i=1..d} (p+i) tokens = p·d + d²/2 (+d/2 ≈).
+    pub fn mem_request(&self, p: usize, d: usize) -> f64 {
+        let (p, d) = (p as f64, d as f64);
+        let tokens_loaded = p * d + 0.5 * d * d;
+        tokens_loaded * self.model.kv_bytes_per_token / self.bandwidth()
+    }
+
+    pub fn demand(&self, p: usize, d: usize) -> Demand {
+        Demand { comp: self.comp_request(p, d), mem: self.mem_request(p, d) }
+    }
+
+    /// Request-level compute density ρ(r).
+    pub fn density(&self, p: usize, d: usize) -> f64 {
+        self.demand(p, d).density()
+    }
+
+    // ---- incremental step-level quantities used by the engine ----
+
+    /// GEMM compute time for processing `n_tokens` tokens in one step
+    /// (QKV/FFN/O projections dominate: 2 FLOPs per token per parameter).
+    pub fn comp_tokens(&self, n_tokens: usize) -> f64 {
+        2.0 * n_tokens as f64 * self.model.params / self.compute()
+    }
+
+    /// Prefill self-attention compute for a chunk of `chunk` tokens whose
+    /// context (including the chunk) ends at `ctx_end`: 2 GEMMs of
+    /// `chunk x ctx x H` per layer ≈ 4·chunk·ctx·H·L FLOPs.
+    pub fn comp_prefill_attn(&self, chunk: usize, ctx_end: usize) -> f64 {
+        if !self.prefill_attn_flops {
+            return 0.0;
+        }
+        4.0 * chunk as f64
+            * ctx_end as f64
+            * self.model.hidden as f64
+            * self.model.layers as f64
+            / self.compute()
+    }
+
+    /// Memory time to stream `ctx_tokens` of KV cache (one decode step of a
+    /// request with that context, or summed over a batch).
+    pub fn mem_kv_load(&self, ctx_tokens: f64) -> f64 {
+        ctx_tokens * self.model.kv_bytes_per_token / self.bandwidth()
+    }
+
+    // ---- set level (§5.1) ----
+
+    /// Sharing-discounted density of a request set: (1-s)·ΣComp / ΣMem.
+    pub fn set_density(&self, demands: &Demand, sharing: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&sharing), "s={sharing}");
+        if demands.mem <= 0.0 {
+            return f64::INFINITY;
+        }
+        (1.0 - sharing) * demands.comp / demands.mem
+    }
+
+    // ---- workload level (§3.3) ----
+
+    /// Idealized optimal execution time T_o = max((1-s)·T_comp, T_mem).
+    pub fn optimal_time(&self, total: Demand, sharing: f64) -> f64 {
+        ((1.0 - sharing) * total.comp).max(total.mem)
+    }
+
+    /// Practical optimal: idealized T_o inflated by the profiled spatial-
+    /// sharing interference (§6.2 "practical upperbound").
+    pub fn practical_optimal_time(&self, total: Demand, sharing: f64) -> f64 {
+        self.optimal_time(total, sharing) * (1.0 + self.hw.interference)
+    }
+}
+
+/// Solve the §5.3 memory-partition equations:
+///
+/// ```text
+/// M_L + M_R = M
+/// M_L·ρ(R_L) + M_R·ρ(R_R) = M·ρ(rt)
+/// ```
+///
+/// Returns `(M_L, M_R)` clamped to `[0, M]` (when the target density is not
+/// between the two node densities, the partition saturates at one side —
+/// the scanner then simply drains that side).
+pub fn partition_memory(m: f64, rho_root: f64, rho_l: f64, rho_r: f64) -> (f64, f64) {
+    assert!(m >= 0.0);
+    let denom = rho_l - rho_r;
+    if denom.abs() < 1e-12 {
+        // Both sides equally dense: split evenly.
+        return (m / 2.0, m / 2.0);
+    }
+    let ml = (m * (rho_root - rho_r) / denom).clamp(0.0, m);
+    (ml, m - ml)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    #[test]
+    fn density_decreases_with_output_length() {
+        let pm = pm();
+        // Fig. 4: longer outputs -> memory intensive.
+        let d_short = pm.density(512, 32);
+        let d_long = pm.density(512, 4096);
+        assert!(d_short > 1.0, "short-output should be compute bound: {d_short}");
+        assert!(d_long < 1.0, "long-output should be memory bound: {d_long}");
+        assert!(d_short > d_long * 10.0);
+    }
+
+    #[test]
+    fn density_vs_input_length_is_u_shaped() {
+        // At fixed d, growing p first *lowers* density (each decode step
+        // must stream a longer KV context) and eventually raises it again
+        // (quadratic prefill attention dominates) — the Fig. 4 heatmap.
+        let pm = pm();
+        let short = pm.density(128, 256);
+        let mid = pm.density(4096, 256);
+        let long = pm.density(65536, 256);
+        assert!(short > mid, "short={short} mid={mid}");
+        assert!(long > mid, "long={long} mid={mid}");
+    }
+
+    #[test]
+    fn mem_request_matches_closed_form() {
+        let pm = pm();
+        let (p, d) = (100usize, 10usize);
+        // Σ_{i=1..d}(p+i) = p·d + d(d+1)/2 ≈ p·d + d²/2 (paper's form).
+        let approx = pm.mem_request(p, d);
+        let exact_tokens: f64 = (1..=d).map(|i| (p + i) as f64).sum();
+        let exact = exact_tokens * pm.model.kv_bytes_per_token / pm.bandwidth();
+        assert!((approx - exact).abs() / exact < 0.01);
+    }
+
+    #[test]
+    fn comp_scales_with_params() {
+        let small = pm();
+        let big = PerfModel::new(presets::llama3_70b(), presets::a100_80gb(), 8);
+        // Same request, bigger model on 8 gpus: 70/8 ≈ 8.8x params on 8x
+        // compute -> slightly more time per request.
+        let a = small.comp_request(1000, 100);
+        let b = big.comp_request(1000, 100);
+        assert!(b > a * 0.9 && b < a * 1.6, "a={a} b={b}");
+    }
+
+    #[test]
+    fn tp_scales_both_resources() {
+        let one = pm();
+        let eight = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 8);
+        // Density is invariant under TP (both resources scale together).
+        let d1 = one.density(777, 123);
+        let d8 = eight.density(777, 123);
+        assert!((d1 - d8).abs() < 1e-9);
+        assert!((one.comp_request(777, 123) / eight.comp_request(777, 123) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharing_discount_reduces_density() {
+        let pm = pm();
+        let d = pm.demand(1000, 100);
+        let rho_0 = pm.set_density(&d, 0.0);
+        let rho_half = pm.set_density(&d, 0.5);
+        assert!((rho_half - rho_0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_time_is_max() {
+        let pm = pm();
+        let total = Demand { comp: 10.0, mem: 4.0 };
+        assert_eq!(pm.optimal_time(total, 0.0), 10.0);
+        assert_eq!(pm.optimal_time(total, 0.7), 4.0); // 3.0 comp < 4.0 mem
+        let practical = pm.practical_optimal_time(total, 0.0);
+        assert!((practical - 11.5).abs() < 1e-9); // x1.15 interference
+    }
+
+    #[test]
+    fn partition_memory_satisfies_equations() {
+        let (ml, mr) = partition_memory(60e9, 1.27, 3.73, 0.096);
+        assert!((ml + mr - 60e9).abs() < 1.0);
+        // The paper's Figure 6 example: 19.3 GB / 40.7 GB.
+        assert!((ml / 1e9 - 19.4).abs() < 0.5, "ml={}", ml / 1e9);
+        assert!((mr / 1e9 - 40.6).abs() < 0.5, "mr={}", mr / 1e9);
+        let achieved = (ml * 3.73 + mr * 0.096) / 60e9;
+        assert!((achieved - 1.27).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partition_memory_clamps() {
+        // Target density above both sides: all memory goes left.
+        let (ml, mr) = partition_memory(10.0, 5.0, 2.0, 1.0);
+        assert_eq!(ml, 10.0);
+        assert_eq!(mr, 0.0);
+        // Degenerate equal densities: even split.
+        let (ml, mr) = partition_memory(10.0, 1.0, 2.0, 2.0);
+        assert_eq!(ml, 5.0);
+        assert_eq!(mr, 5.0);
+    }
+
+    #[test]
+    fn prefill_attn_term_togglable() {
+        let mut pm = pm();
+        let with = pm.comp_request(4096, 1);
+        pm.prefill_attn_flops = false;
+        let without = pm.comp_request(4096, 1);
+        assert!(with > without);
+        // At p=4096 the quadratic term is noticeable but not dominant.
+        assert!(with / without < 2.0);
+    }
+
+    #[test]
+    fn zero_output_request_is_pure_compute() {
+        let pm = pm();
+        let d = pm.demand(100, 0);
+        assert!(d.comp > 0.0);
+        assert_eq!(d.mem, 0.0);
+        assert!(d.density().is_infinite());
+    }
+}

@@ -1,0 +1,101 @@
+//! Roofline utilities (§Perf): arithmetic intensity, MXU/SM utilization
+//! estimates, and the estimated-vs-measured operator timing used by the
+//! Table 1 harness.
+
+use super::PerfModel;
+
+/// Arithmetic intensity (FLOPs / byte) at which the device flips from
+/// memory- to compute-bound.
+pub fn ridge_point(pm: &PerfModel) -> f64 {
+    pm.compute() / pm.bandwidth()
+}
+
+/// Attainable FLOP/s at a given arithmetic intensity (classic roofline).
+pub fn attainable_flops(pm: &PerfModel, intensity: f64) -> f64 {
+    (intensity * pm.bandwidth()).min(pm.compute())
+}
+
+/// Estimated GEMM execution time for the Table 1 micro benchmark:
+/// `[batch, hidden] x [hidden, hidden]`-class projections over one
+/// transformer layer's GEMMs, approximated (as in §4.1) by
+/// `2 * batch * params_per_layer / compute`.
+pub fn gemm_time_est(pm: &PerfModel, batch_tokens: usize) -> f64 {
+    let per_layer = pm.model.params / pm.model.layers as f64;
+    2.0 * batch_tokens as f64 * per_layer / pm.compute()
+}
+
+/// Estimated decode-attention time for a batch of `batch` requests each
+/// with `seq` cached tokens, one layer: pure KV streaming.
+pub fn attention_time_est(pm: &PerfModel, batch: usize, seq: usize) -> f64 {
+    let bytes_per_layer = pm.model.kv_bytes_per_token / pm.model.layers as f64;
+    batch as f64 * seq as f64 * bytes_per_layer / pm.bandwidth()
+}
+
+/// Estimated MXU (or tensor-core) utilization of a blended step that
+/// processes `prefill_tokens` GEMM-heavy tokens while streaming
+/// `kv_tokens` of KV context: utilization of the compute unit during the
+/// step under perfect overlap.
+pub fn blended_utilization(
+    pm: &PerfModel,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    kv_tokens: f64,
+) -> (f64, f64) {
+    let comp = pm.comp_tokens(prefill_tokens + decode_tokens);
+    let mem = pm.mem_kv_load(kv_tokens);
+    let step = comp.max(mem);
+    if step <= 0.0 {
+        return (0.0, 0.0);
+    }
+    (comp / step, mem / step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    #[test]
+    fn ridge_point_a100() {
+        // 312 TFLOPs / 2039 GB/s ≈ 153 FLOPs/byte.
+        let r = ridge_point(&pm());
+        assert!((r - 153.0).abs() < 2.0, "{r}");
+    }
+
+    #[test]
+    fn attainable_is_capped() {
+        let pm = pm();
+        assert_eq!(attainable_flops(&pm, 1e9), pm.compute());
+        let low = attainable_flops(&pm, 1.0);
+        assert!((low - pm.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn table1_magnitudes() {
+        // Paper Table 1 (A100, seq 1024): GEMM ≈ 1.0-2.0 ms for batch
+        // 512-1024 tokens; attention ≈ 1.2-2.5 ms. Our estimates should be
+        // in the same millisecond regime.
+        let pm = pm();
+        let gemm = gemm_time_est(&pm, 512) * 1e3;
+        let attn = attention_time_est(&pm, 512, 1024) * 1e3;
+        assert!(gemm > 0.4 && gemm < 2.0, "gemm={gemm}ms");
+        assert!(attn > 0.5 && attn < 3.0, "attn={attn}ms");
+    }
+
+    #[test]
+    fn blended_utilization_balances() {
+        let pm = pm();
+        // A compute-heavy step: compute util = 1, memory util < 1.
+        let (c, m) = blended_utilization(&pm, 2048, 0, 1000.0);
+        assert!((c - 1.0).abs() < 1e-9);
+        assert!(m < 1.0);
+        // A memory-heavy step.
+        let (c2, m2) = blended_utilization(&pm, 64, 256, 3e6);
+        assert!((m2 - 1.0).abs() < 1e-9);
+        assert!(c2 < 1.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Artifact manifest + weights loader (the contract with aot.py).
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor's slice of weights.bin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    // Model constants (must match python ModelConfig).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub n_segments: usize,
+    pub bkv: usize,
+    pub param_count: usize,
+    pub kv_shape: Vec<usize>,
+    /// Token budget T -> HLO file name.
+    pub step_variants: BTreeMap<usize, String>,
+    pub tensors: Vec<TensorMeta>,
+    pub weights_total_bytes: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let model = j.req("model").map_err(|e| anyhow!("{e}"))?;
+        let get = |key: &str| -> Result<usize> {
+            model
+                .req(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("model.{key} not a number"))
+        };
+        let kv_shape: Vec<usize> = j
+            .req("kv_shape")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("kv_shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let mut step_variants = BTreeMap::new();
+        for (k, v) in j
+            .req("step_variants")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("step_variants not an object"))?
+        {
+            step_variants.insert(
+                k.parse::<usize>().with_context(|| format!("variant {k}"))?,
+                v.as_str().ok_or_else(|| anyhow!("variant path"))?.to_string(),
+            );
+        }
+        let weights = j.req("weights").map_err(|e| anyhow!("{e}"))?;
+        let tensors = weights
+            .req("tensors")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensors not an array"))?
+            .iter()
+            .map(|t| -> Result<TensorMeta> {
+                Ok(TensorMeta {
+                    name: t
+                        .req("name")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("tensor name"))?
+                        .to_string(),
+                    shape: t
+                        .req("shape")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("tensor shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset_bytes: t
+                        .req("offset_bytes")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("offset"))?,
+                    size_bytes: t
+                        .req("size_bytes")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("size"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_q_heads: get("n_q_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            n_segments: get("n_segments")?,
+            bkv: get("bkv")?,
+            param_count: get("param_count")?,
+            kv_shape,
+            step_variants,
+            tensors,
+            weights_total_bytes: weights
+                .req("total_bytes")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("total_bytes"))?,
+        })
+    }
+
+    /// Load weights.bin as per-tensor f32 vectors (little-endian contract).
+    pub fn load_weights(&self) -> Result<Vec<(TensorMeta, Vec<f32>)>> {
+        let blob = std::fs::read(self.dir.join("weights.bin"))
+            .with_context(|| "reading weights.bin")?;
+        anyhow::ensure!(
+            blob.len() == self.weights_total_bytes,
+            "weights.bin size {} != manifest {}",
+            blob.len(),
+            self.weights_total_bytes
+        );
+        let mut out = Vec::with_capacity(self.tensors.len());
+        for t in &self.tensors {
+            let bytes = &blob[t.offset_bytes..t.offset_bytes + t.size_bytes];
+            let mut v = Vec::with_capacity(bytes.len() / 4);
+            for c in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            let expect: usize = t.shape.iter().product();
+            anyhow::ensure!(v.len() == expect, "tensor {} wrong length", t.name);
+            out.push((t.clone(), v));
+        }
+        Ok(out)
+    }
+
+    pub fn kv_len(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifact_dir};
+
+    #[test]
+    fn manifest_loads_when_artifacts_present() {
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 2048);
+        assert_eq!(m.kv_shape.len(), 6);
+        assert_eq!(m.bkv, m.n_segments + 1);
+        assert!(m.step_variants.contains_key(&16));
+        assert_eq!(m.tensors.len(), 11);
+        assert_eq!(m.tensors[0].name, "embed");
+        // Offsets contiguous.
+        let mut off = 0;
+        for t in &m.tensors {
+            assert_eq!(t.offset_bytes, off);
+            off += t.size_bytes;
+        }
+        assert_eq!(off, m.weights_total_bytes);
+    }
+
+    #[test]
+    fn weights_load_and_param_count_matches() {
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let ws = m.load_weights().unwrap();
+        let total: usize = ws.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, m.param_count);
+        // Norm weights initialize to ones.
+        let ln_f = ws.iter().find(|(t, _)| t.name == "ln_f").unwrap();
+        assert!(ln_f.1.iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! The real-model PJRT runtime: load the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and serve actual tokens on the CPU PJRT client.
+//!
+//! Python never runs here — the interchange is HLO *text* (the bundled
+//! xla_extension 0.5.1 rejects jax's 64-bit-id serialized protos; the text
+//! parser reassigns ids, see /opt/xla-example/README.md) plus a flat
+//! `weights.bin` + `manifest.json` contract.
+//!
+//! The L2 model exposes a single *ragged blended step*
+//! `(kv, tokens[T], seg_id[T], q_pos[T], weights…) -> (kv', next_ids[T])`
+//! — a prefill chunk, a decode batch, or BlendServe's prefill+decode blend
+//! are all the same executable, which is exactly the paper's execution
+//! model translated to the TPU-style kernel (DESIGN.md
+//! §Hardware-Adaptation).
+
+pub mod artifacts;
+pub mod model;
+pub mod serve;
+
+pub use artifacts::{Manifest, TensorMeta};
+pub use model::RealModel;
+pub use serve::{RealServer, ServeReport};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the AOT artifacts exist (tests skip gracefully otherwise and
+/// `make artifacts` produces them).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists() && dir.join("weights.bin").exists()
+}

@@ -1,0 +1,307 @@
+//! `RealModel`: the compiled blended-step executables + host-side KV state.
+//!
+//! The KV cache lives on the host (`Vec<f32>`) between steps.  That buys
+//! two things on the CPU platform: (a) prefix-KV reuse is a memcpy of
+//! rows between segments, giving *real* prefix sharing; (b) segment resets
+//! are free.  The per-step host↔device copy (~5 MB each way) is the price;
+//! §Perf measures it and the CPU device makes it a memcpy.
+
+use super::artifacts::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub struct RealModel {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// Token budget T -> compiled executable.
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Weight literals in aot input order (after kv/tokens/seg/pos).
+    weight_lits: Vec<xla::Literal>,
+    /// Host KV cache [L, 2, BKV, S, NKV, HD] flattened row-major.
+    pub kv: Vec<f32>,
+    /// Steps executed (stats).
+    pub steps: u64,
+    /// Wall time inside PJRT execute (stats).
+    pub exec_seconds: f64,
+}
+
+impl RealModel {
+    /// Load artifacts, compile every step variant on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<RealModel> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        let mut exes = BTreeMap::new();
+        for (&t, file) in &manifest.step_variants {
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(file).to_str().context("path utf8")?,
+            )
+            .map_err(|e| anyhow!("parse {file}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {file}: {e}"))?;
+            exes.insert(t, exe);
+        }
+        let weights = manifest.load_weights()?;
+        let weight_lits = weights
+            .into_iter()
+            .map(|(meta, data)| {
+                let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {}: {e}", meta.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let kv = vec![0f32; manifest.kv_len()];
+        Ok(RealModel {
+            manifest,
+            client,
+            exes,
+            weight_lits,
+            kv,
+            steps: 0,
+            exec_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available token budgets, ascending.
+    pub fn variants(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest variant that fits `n` tokens (largest variant if none).
+    pub fn pick_variant(&self, n: usize) -> usize {
+        for &t in self.exes.keys() {
+            if n <= t {
+                return t;
+            }
+        }
+        *self.exes.keys().last().expect("at least one variant")
+    }
+
+    /// Execute one blended step.  Inputs may be shorter than the chosen
+    /// variant; they are padded onto the scratch segment.  Returns the
+    /// greedy next ids for the *real* rows.
+    pub fn step(&mut self, tokens: &[i32], seg_id: &[i32], q_pos: &[i32]) -> Result<Vec<i32>> {
+        let n = tokens.len();
+        anyhow::ensure!(n > 0, "empty step");
+        anyhow::ensure!(
+            seg_id.len() == n && q_pos.len() == n,
+            "ragged step arrays disagree"
+        );
+        let scratch = (self.manifest.bkv - 1) as i32;
+        for (&s, &p) in seg_id.iter().zip(q_pos) {
+            anyhow::ensure!(
+                (s as usize) < self.manifest.bkv,
+                "segment {s} out of range"
+            );
+            anyhow::ensure!(
+                (p as usize) < self.manifest.max_seq,
+                "position {p} out of range"
+            );
+        }
+        let t = self.pick_variant(n);
+        anyhow::ensure!(n <= t, "step of {n} tokens exceeds largest variant {t}");
+
+        let mut tok = tokens.to_vec();
+        let mut seg = seg_id.to_vec();
+        let mut pos = q_pos.to_vec();
+        // Pad onto the scratch segment at distinct positions.
+        let mut pad_pos = 0i32;
+        while tok.len() < t {
+            tok.push(0);
+            seg.push(scratch);
+            pos.push(pad_pos % self.manifest.max_seq as i32);
+            pad_pos += 1;
+        }
+
+        let kv_dims: Vec<i64> = self.manifest.kv_shape.iter().map(|&d| d as i64).collect();
+        let kv_lit = xla::Literal::vec1(&self.kv)
+            .reshape(&kv_dims)
+            .map_err(|e| anyhow!("kv reshape: {e}"))?;
+        let tok_lit = xla::Literal::vec1(&tok);
+        let seg_lit = xla::Literal::vec1(&seg);
+        let pos_lit = xla::Literal::vec1(&pos);
+
+        let mut inputs: Vec<&xla::Literal> = vec![&kv_lit, &tok_lit, &seg_lit, &pos_lit];
+        for w in &self.weight_lits {
+            inputs.push(w);
+        }
+
+        let start = std::time::Instant::now();
+        let exe = self.exes.get(&t).expect("variant exists");
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        self.exec_seconds += start.elapsed().as_secs_f64();
+        self.steps += 1;
+
+        let mut parts = out.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 2, "expected (kv, ids), got {}", parts.len());
+        let ids = parts.pop().unwrap();
+        let kv_new = parts.pop().unwrap();
+        kv_new
+            .copy_raw_to::<f32>(&mut self.kv)
+            .map_err(|e| anyhow!("kv copy: {e}"))?;
+        let ids: Vec<i32> = ids.to_vec::<i32>().map_err(|e| anyhow!("ids: {e}"))?;
+        Ok(ids[..n].to_vec())
+    }
+
+    // ---- host-side KV manipulation (prefix reuse) ----
+
+    /// Row stride in floats (one token's K or V in one layer).
+    fn row(&self) -> usize {
+        self.manifest.n_kv_heads * self.manifest.head_dim
+    }
+
+    /// Copy KV rows `[0, rows)` from segment `from` to segment `to` in all
+    /// layers — the real prefix-sharing primitive.
+    pub fn copy_prefix(&mut self, from: usize, to: usize, rows: usize) {
+        assert!(from < self.manifest.bkv && to < self.manifest.bkv);
+        assert!(rows <= self.manifest.max_seq);
+        if from == to || rows == 0 {
+            return;
+        }
+        let (l, s, row) = (self.manifest.n_layers, self.manifest.max_seq, self.row());
+        let seg_stride = s * row; // one segment within (layer, k/v)
+        let kvhalf_stride = self.manifest.bkv * seg_stride;
+        for layer in 0..l {
+            for half in 0..2 {
+                let base = (layer * 2 + half) * kvhalf_stride;
+                let src = base + from * seg_stride;
+                let dst = base + to * seg_stride;
+                // Non-overlapping (from != to): safe to split_at_mut via
+                // copy_within.
+                self.kv.copy_within(src..src + rows * row, dst);
+            }
+        }
+    }
+
+    /// Zero a segment's KV (slot recycling hygiene; attention masks make
+    /// this semantically unnecessary, but it keeps state auditable).
+    pub fn clear_segment(&mut self, seg: usize) {
+        assert!(seg < self.manifest.bkv);
+        let (l, s, row) = (self.manifest.n_layers, self.manifest.max_seq, self.row());
+        let seg_stride = s * row;
+        let kvhalf_stride = self.manifest.bkv * seg_stride;
+        for layer in 0..l {
+            for half in 0..2 {
+                let base = (layer * 2 + half) * kvhalf_stride + seg * seg_stride;
+                self.kv[base..base + seg_stride].fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifact_dir};
+    use crate::util::Json;
+
+    fn model() -> Option<RealModel> {
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(RealModel::load(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn loads_and_compiles() {
+        let Some(m) = model() else { return };
+        assert_eq!(m.platform().to_lowercase(), "cpu");
+        assert_eq!(m.variants(), vec![16, 64]);
+        assert_eq!(m.pick_variant(10), 16);
+        assert_eq!(m.pick_variant(17), 64);
+        assert_eq!(m.pick_variant(999), 64);
+    }
+
+    #[test]
+    fn golden_cross_check_prefill_and_decode() {
+        // The decisive L3<->L2<->L1 integration test: the compiled HLO must
+        // reproduce the python step() greedy ids bit-exactly.
+        let Some(mut m) = model() else { return };
+        let dir = default_artifact_dir();
+        let golden = Json::parse(&std::fs::read_to_string(dir.join("golden.json")).unwrap())
+            .unwrap();
+        let arr = |j: &Json, k: &str| -> Vec<i32> {
+            j.get(k)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as i32)
+                .collect()
+        };
+        for phase in ["prefill", "decode"] {
+            let g = golden.get(phase).unwrap();
+            let tokens = arr(g, "tokens");
+            let seg = arr(g, "seg_id");
+            let pos = arr(g, "q_pos");
+            let want = arr(g, "next_ids");
+            let got = m.step(&tokens, &seg, &pos).unwrap();
+            assert_eq!(got, want, "{phase} ids mismatch");
+        }
+    }
+
+    #[test]
+    fn prefix_copy_reproduces_decode() {
+        // Prefill segment 0 with a prompt; copy its prefix KV to segment 1
+        // and decode there: the next id must equal decoding on segment 0.
+        let Some(mut m) = model() else { return };
+        let prompt: Vec<i32> = vec![7, 11, 13, 17, 19, 23, 29, 31];
+        let n = prompt.len();
+        let seg0 = vec![0i32; n];
+        let pos: Vec<i32> = (0..n as i32).collect();
+        let ids = m.step(&prompt, &seg0, &pos).unwrap();
+        let next_tok = ids[n - 1];
+        // Decode on segment 0 (reference).
+        let mut m_ref_kv = m.kv.clone();
+        let ref_id = m.step(&[next_tok], &[0], &[n as i32]).unwrap()[0];
+        // Restore, copy prefix to segment 1, decode there.
+        std::mem::swap(&mut m.kv, &mut m_ref_kv);
+        m.copy_prefix(0, 1, n);
+        let got = m.step(&[next_tok], &[1], &[n as i32]).unwrap()[0];
+        assert_eq!(got, ref_id, "prefix-copied decode diverged");
+    }
+
+    #[test]
+    fn step_validates_inputs() {
+        let Some(mut m) = model() else { return };
+        assert!(m.step(&[], &[], &[]).is_err());
+        assert!(m.step(&[1], &[99], &[0]).is_err()); // bad segment
+        assert!(m.step(&[1], &[0], &[4096]).is_err()); // bad position
+        assert!(m.step(&[1, 2], &[0], &[0]).is_err()); // ragged
+    }
+
+    #[test]
+    fn clear_segment_zeroes_only_that_segment() {
+        let Some(mut m) = model() else { return };
+        let prompt: Vec<i32> = (1..9).collect();
+        let pos: Vec<i32> = (0..8).collect();
+        m.step(&prompt, &vec![0; 8], &pos).unwrap();
+        m.step(&prompt, &vec![1; 8], &pos).unwrap();
+        let kv_before = m.kv.clone();
+        m.clear_segment(0);
+        // Segment 1 rows unchanged: decode on seg 1 gives same id as before.
+        assert_ne!(m.kv, kv_before);
+        let a = {
+            let mut m2_kv = kv_before.clone();
+            std::mem::swap(&mut m.kv, &mut m2_kv);
+            let id = m.step(&[5], &[1], &[8]).unwrap()[0];
+            std::mem::swap(&mut m.kv, &mut m2_kv);
+            id
+        };
+        m.clear_segment(0);
+        let b = m.step(&[5], &[1], &[8]).unwrap()[0];
+        assert_eq!(a, b);
+    }
+}

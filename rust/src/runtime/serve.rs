@@ -1,0 +1,354 @@
+//! `RealServer`: a miniature BlendServe coordinator over the *real* model.
+//!
+//! This is the end-to-end proof that the three layers compose: the L3
+//! scheduler forms ragged blended batches (chunked prefill + decode rows in
+//! one step), the L2/L1 compiled HLO executes them, and prefix sharing is
+//! *actual KV-row reuse* (segment-affinity hits plus cross-segment
+//! `copy_prefix`), not an accounting fiction.
+//!
+//! Scale note: the CPU model has `n_segments` (8) concurrent slots and a
+//! 256-token context, so workloads are generated with
+//! `TraceSpec::scaled(..)` — same structure, smaller lengths.
+
+use super::model::RealModel;
+use crate::trace::Workload;
+use crate::tree::PrefixTree;
+use anyhow::Result;
+use std::path::Path;
+use std::time::Instant;
+
+/// Outcome of serving one workload on the real model.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub n_requests: usize,
+    pub steps: u64,
+    /// Steps that blended prefill and decode rows.
+    pub blended_steps: u64,
+    pub wall_seconds: f64,
+    /// Time inside PJRT execute (the rest is coordinator overhead).
+    pub exec_seconds: f64,
+    /// Σ prompt + output tokens (the paper's throughput numerator).
+    pub total_tokens: u64,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    /// Prompt tokens served by KV reuse instead of prefill compute.
+    pub reused_tokens: u64,
+    pub throughput: f64,
+    /// reused / prompt.
+    pub hit_ratio: f64,
+}
+
+struct ReqState {
+    prompt: Vec<i32>,
+    out_budget: usize,
+    prefill_pos: usize,
+    generated: usize,
+    cur_len: usize,
+    last_token: i32,
+    decoding: bool,
+}
+
+struct Slot {
+    /// Prompt tokens whose KV rows are valid in this segment.
+    resident: Vec<u32>,
+    req: Option<ReqState>,
+}
+
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// A blended static order: interleave the density-sorted scheduling units
+/// from both ends so concurrently-resident slots hold a compute/memory mix
+/// (the dual scanner flattened for a fixed-slot backend).
+pub fn zipper_order(tree: &PrefixTree) -> Vec<u32> {
+    let units = tree.scheduling_units();
+    let mut reqs: Vec<Vec<u32>> =
+        units.iter().map(|&(id, _)| tree.nodes[id].requests.clone()).collect();
+    let mut out = Vec::with_capacity(tree.n_requests());
+    let (mut l, mut r) = (0usize, reqs.len());
+    let mut from_left = true;
+    while l < r {
+        let side = if from_left {
+            l += 1;
+            &mut reqs[l - 1]
+        } else {
+            r -= 1;
+            &mut reqs[r]
+        };
+        out.append(side);
+        from_left = !from_left;
+    }
+    out
+}
+
+pub struct RealServer {
+    pub model: RealModel,
+}
+
+impl RealServer {
+    pub fn load(dir: &Path) -> Result<RealServer> {
+        Ok(RealServer { model: RealModel::load(dir)? })
+    }
+
+    /// Serve `workload` in the given admission order.  Prompt token ids
+    /// must be `< vocab`; prompts are truncated to fit the context window
+    /// alongside their output budget.
+    pub fn serve(&mut self, workload: &Workload, order: &[u32]) -> Result<ServeReport> {
+        let m = &self.model.manifest;
+        let n_slots = m.n_segments;
+        let max_seq = m.max_seq;
+        let budget = *self.model.variants().last().unwrap();
+        let mut report = ServeReport {
+            n_requests: workload.len(),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let exec0 = self.model.exec_seconds;
+        let steps0 = self.model.steps;
+
+        let mut slots: Vec<Slot> = (0..n_slots)
+            .map(|_| Slot { resident: Vec::new(), req: None })
+            .collect();
+        let mut queue: Vec<u32> = order.to_vec();
+        queue.reverse(); // pop from back
+        let mut remaining = workload.len();
+
+        while remaining > 0 {
+            // ---- admission: fill free slots, best prefix affinity first --
+            loop {
+                let Some(&next) = queue.last() else { break };
+                let Some(free) = slots.iter().position(|s| s.req.is_none()) else {
+                    break;
+                };
+                queue.pop();
+                let r = &workload.requests[next as usize];
+                let out_budget = (r.output_len as usize).clamp(1, max_seq / 2);
+                let max_prompt = max_seq - out_budget - 1;
+                let prompt_u32: Vec<u32> =
+                    r.prompt.iter().take(max_prompt).copied().collect();
+                // Best resident prefix across all slots.
+                let (best_slot, best_lcp) = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| (i, lcp(&s.resident, &prompt_u32)))
+                    .max_by_key(|&(_, l)| l)
+                    .unwrap();
+                let mut reuse = lcp(&slots[free].resident, &prompt_u32);
+                if best_lcp > reuse && best_slot != free {
+                    self.model.copy_prefix(best_slot, free, best_lcp);
+                    slots[free].resident =
+                        slots[best_slot].resident[..best_lcp].to_vec();
+                    reuse = best_lcp;
+                }
+                report.reused_tokens += reuse as u64;
+                report.prompt_tokens += prompt_u32.len() as u64;
+                let p = prompt_u32.len();
+                slots[free].resident = prompt_u32.clone();
+                slots[free].req = Some(ReqState {
+                    prompt: prompt_u32.iter().map(|&t| t as i32).collect(),
+                    out_budget,
+                    prefill_pos: reuse.min(p.saturating_sub(1)),
+                    generated: 0,
+                    cur_len: p,
+                    last_token: 0,
+                    decoding: false,
+                });
+                // Note: even on a full-prompt hit we re-feed the last
+                // prompt token (prefill_pos = p-1) to obtain the first
+                // output token's logits.
+            }
+
+            // ---- assemble one blended step ----
+            let mut tokens = Vec::with_capacity(budget);
+            let mut seg = Vec::with_capacity(budget);
+            let mut pos = Vec::with_capacity(budget);
+            // (slot, kind): kind = how to interpret the row's next id.
+            enum RowKind {
+                PrefillLast,
+                Prefill,
+                Decode,
+            }
+            let mut rows: Vec<(usize, RowKind)> = Vec::new();
+            let mut had_decode = false;
+            let mut had_prefill = false;
+            // Decode rows first (one per decoding slot).
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let Some(req) = slot.req.as_mut() else { continue };
+                if req.decoding {
+                    tokens.push(req.last_token);
+                    seg.push(si as i32);
+                    pos.push(req.cur_len as i32);
+                    rows.push((si, RowKind::Decode));
+                    had_decode = true;
+                }
+            }
+            // Prefill chunks fill the remaining budget.
+            for (si, slot) in slots.iter_mut().enumerate() {
+                if tokens.len() >= budget {
+                    break;
+                }
+                let Some(req) = slot.req.as_mut() else { continue };
+                if req.decoding {
+                    continue;
+                }
+                let p = req.prompt.len();
+                let room = budget - tokens.len();
+                let take = (p - req.prefill_pos).min(room);
+                for k in 0..take {
+                    let at = req.prefill_pos + k;
+                    tokens.push(req.prompt[at]);
+                    seg.push(si as i32);
+                    pos.push(at as i32);
+                    let last = at + 1 == p;
+                    rows.push((si, if last { RowKind::PrefillLast } else { RowKind::Prefill }));
+                }
+                req.prefill_pos += take;
+                if take > 0 {
+                    had_prefill = true;
+                }
+            }
+
+            if tokens.is_empty() {
+                anyhow::bail!("scheduler stalled with {remaining} requests left");
+            }
+            if had_decode && had_prefill {
+                report.blended_steps += 1;
+            }
+
+            let ids = self.model.step(&tokens, &seg, &pos)?;
+
+            // ---- apply results ----
+            for (row, (si, kind)) in rows.iter().enumerate() {
+                let slot = &mut slots[*si];
+                let Some(req) = slot.req.as_mut() else { continue };
+                match kind {
+                    RowKind::Prefill => {}
+                    RowKind::PrefillLast => {
+                        req.decoding = true;
+                        req.last_token = ids[row];
+                        req.generated = 1;
+                        report.output_tokens += 1;
+                    }
+                    RowKind::Decode => {
+                        req.cur_len += 1;
+                        req.generated += 1;
+                        req.last_token = ids[row];
+                        report.output_tokens += 1;
+                    }
+                }
+                let done = req.decoding
+                    && (req.generated >= req.out_budget
+                        || req.cur_len + 1 >= max_seq);
+                if done {
+                    report.total_tokens +=
+                        (req.prompt.len() + req.generated) as u64;
+                    slot.req = None; // resident prompt stays for reuse
+                    remaining -= 1;
+                }
+            }
+        }
+
+        report.steps = self.model.steps - steps0;
+        report.exec_seconds = self.model.exec_seconds - exec0;
+        report.wall_seconds = start.elapsed().as_secs_f64();
+        report.throughput = report.total_tokens as f64 / report.wall_seconds.max(1e-9);
+        report.hit_ratio = if report.prompt_tokens > 0 {
+            report.reused_tokens as f64 / report.prompt_tokens as f64
+        } else {
+            0.0
+        };
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifact_dir};
+    use crate::trace::{Request, TraceKind};
+
+    fn server() -> Option<RealServer> {
+        let dir = default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(RealServer::load(&dir).expect("load"))
+    }
+
+    fn req(id: u32, prompt: Vec<u32>, out: u32) -> Request {
+        Request::new(id, TraceKind::Custom, prompt, out)
+    }
+
+    #[test]
+    fn serves_small_workload_end_to_end() {
+        let Some(mut s) = server() else { return };
+        let w = Workload::new(
+            "mini",
+            (0..12u32)
+                .map(|i| req(i, vec![i % 7 + 1, i % 5 + 1, i % 3 + 1, 42], 6))
+                .collect(),
+        );
+        let order: Vec<u32> = (0..12).collect();
+        let rep = s.serve(&w, &order).unwrap();
+        assert_eq!(rep.n_requests, 12);
+        assert_eq!(rep.output_tokens, 12 * 6);
+        assert!(rep.steps > 0);
+        assert!(rep.throughput > 0.0);
+    }
+
+    #[test]
+    fn shared_prefixes_are_reused() {
+        let Some(mut s) = server() else { return };
+        // 8 requests sharing a 20-token stem.
+        let stem: Vec<u32> = (100..120).collect();
+        let reqs: Vec<Request> = (0..8u32)
+            .map(|i| {
+                let mut p = stem.clone();
+                p.push(200 + i);
+                req(i, p, 4)
+            })
+            .collect();
+        let w = Workload::new("shared", reqs);
+        let order: Vec<u32> = (0..8).collect();
+        let rep = s.serve(&w, &order).unwrap();
+        // 7 of 8 should reuse the stem.
+        assert!(
+            rep.reused_tokens >= 7 * 20,
+            "reused {} tokens",
+            rep.reused_tokens
+        );
+        assert!(rep.hit_ratio > 0.5, "{}", rep.hit_ratio);
+    }
+
+    #[test]
+    fn blended_steps_occur_with_mixed_lengths() {
+        let Some(mut s) = server() else { return };
+        // Long-output (decode heavy) + long-prompt (prefill heavy) mix.
+        let mut reqs = Vec::new();
+        for i in 0..4u32 {
+            reqs.push(req(i, vec![i + 1, i + 2], 40)); // decode heavy
+        }
+        for i in 4..8u32 {
+            let p: Vec<u32> = (0..60).map(|k| 300 + i * 100 + k).collect();
+            reqs.push(req(i, p, 2)); // prefill heavy
+        }
+        let w = Workload::new("mix", reqs);
+        let order: Vec<u32> = (0..8).collect();
+        let rep = s.serve(&w, &order).unwrap();
+        assert!(rep.blended_steps > 0, "no blended steps");
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let Some(mut s) = server() else { return };
+        let w = Workload::new("det", vec![req(0, vec![5, 6, 7], 8)]);
+        let r1 = s.serve(&w, &[0]).unwrap();
+        // Re-serve on a fresh server: token counts identical.
+        let Some(mut s2) = server() else { return };
+        let r2 = s2.serve(&w, &[0]).unwrap();
+        assert_eq!(r1.output_tokens, r2.output_tokens);
+        assert_eq!(r1.total_tokens, r2.total_tokens);
+    }
+}

@@ -1,0 +1,73 @@
+//! Request scheduling (§5): ordering policies and the dual-scanner
+//! admission algorithm, plus the end-to-end driver that wires
+//! workload → prefix tree → transform → admitter → engine.
+
+pub mod dual_scan;
+pub mod runner;
+
+pub use dual_scan::DualScanner;
+pub use runner::{run_system, RunOutput};
+
+use crate::config::OrderPolicy;
+use crate::tree::PrefixTree;
+use crate::util::DetRng;
+
+/// Materialize a static request order for the baseline policies.
+///
+/// - `Fcfs`: arrival order (request ids).
+/// - `Dfs`: depth-first traversal of the *untransformed* prefix tree —
+///   maximal prefix sharing, the strongest baseline ordering (§6.2 reorders
+///   every baseline's trace into DFS order).
+/// - `Random`: deterministic shuffle — "NanoFlow-Balance".
+///
+/// `BlendServe` has no static order; it uses [`DualScanner`].
+pub fn static_order(policy: OrderPolicy, tree: &PrefixTree, seed: u64) -> Vec<u32> {
+    match policy {
+        OrderPolicy::Fcfs => (0..tree.n_requests() as u32).collect(),
+        OrderPolicy::Dfs => tree.dfs_requests(),
+        OrderPolicy::Random => {
+            let mut order: Vec<u32> = (0..tree.n_requests() as u32).collect();
+            DetRng::new(seed ^ 0xbada_55).shuffle(&mut order);
+            order
+        }
+        OrderPolicy::BlendServe => {
+            panic!("BlendServe uses the dual scanner, not a static order")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generators::generate_kind;
+    use crate::trace::TraceKind;
+
+    #[test]
+    fn orders_are_permutations() {
+        let w = generate_kind(TraceKind::Mmlu, 200, 3);
+        let tree = PrefixTree::build(&w);
+        for policy in [OrderPolicy::Fcfs, OrderPolicy::Dfs, OrderPolicy::Random] {
+            let mut o = static_order(policy, &tree, 7);
+            o.sort_unstable();
+            assert_eq!(o, (0..200).collect::<Vec<u32>>(), "{policy}");
+        }
+    }
+
+    #[test]
+    fn random_differs_from_fcfs() {
+        let w = generate_kind(TraceKind::BurstGpt, 100, 3);
+        let tree = PrefixTree::build(&w);
+        assert_ne!(
+            static_order(OrderPolicy::Random, &tree, 7),
+            static_order(OrderPolicy::Fcfs, &tree, 7)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dual scanner")]
+    fn blendserve_has_no_static_order() {
+        let w = generate_kind(TraceKind::BurstGpt, 10, 3);
+        let tree = PrefixTree::build(&w);
+        static_order(OrderPolicy::BlendServe, &tree, 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Offline batch-serving frontend: a file-based batch API in the style of
+//! OpenAI's Batch API (§1) — requests in as JSONL, results out as JSONL,
+//! one leader thread per DP replica.
+//!
+//! The frontend is transport-agnostic on purpose: offline inference has no
+//! request path to keep hot, so a directory of JSONL files *is* the queue.
+
+pub mod pool;
+
+pub use pool::{load_jsonl, save_results, JsonlRequest};
+
+use crate::config::SystemConfig;
+use crate::parallel::partition_dp;
+use crate::perfmodel::PerfModel;
+use crate::scheduler::{run_system, RunOutput};
+use crate::trace::Workload;
+use crate::tree::PrefixTree;
+use std::thread;
+
+/// Outcome of one offline batch job.
+#[derive(Debug)]
+pub struct BatchJobResult {
+    pub per_replica: Vec<RunOutput>,
+    /// Wall-clock makespan across replicas (slowest replica).
+    pub makespan: f64,
+    /// Aggregate throughput (tokens/s) over the whole deployment.
+    pub total_throughput: f64,
+    pub total_tokens: u64,
+}
+
+/// Serve a whole request pool offline.  With `dp_replicas > 1` the
+/// workload is decomposed via the §5.5 dual-scanner partitioning and the
+/// replicas run concurrently (one OS thread each — the simulation is
+/// CPU-bound, mirroring one leader per replica).
+pub fn serve_batch(cfg: &SystemConfig, workload: &Workload) -> BatchJobResult {
+    let dp = cfg.dp_replicas.max(1);
+    let outputs: Vec<RunOutput> = if dp == 1 {
+        vec![run_system(cfg, workload)]
+    } else {
+        // Decompose on the centralized tree.
+        let pm = PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+        let mut tree = PrefixTree::build(workload);
+        tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
+        tree.recompute_aggregates(&pm);
+        tree.layer_sort();
+        let partition = partition_dp(&tree, &pm, dp);
+
+        let handles: Vec<thread::JoinHandle<RunOutput>> = partition
+            .replicas
+            .into_iter()
+            .map(|ids| {
+                let sub = Workload::new(
+                    &format!("{}-dp", workload.name),
+                    ids.iter()
+                        .map(|&r| workload.requests[r as usize].clone())
+                        .collect(),
+                );
+                let cfg = cfg.clone();
+                thread::spawn(move || run_system(&cfg, &sub))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replica thread")).collect()
+    };
+
+    let makespan = outputs
+        .iter()
+        .map(|o| o.result.total_time)
+        .fold(0.0f64, f64::max);
+    let total_tokens: u64 = outputs.iter().map(|o| o.result.total_tokens).sum();
+    BatchJobResult {
+        makespan,
+        total_throughput: total_tokens as f64 / makespan.max(1e-12),
+        total_tokens,
+        per_replica: outputs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::config::presets;
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::TraceKind;
+
+    fn workload(n: usize) -> Workload {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.2, n), &pm)
+    }
+
+    #[test]
+    fn dp1_equals_run_system() {
+        let w = workload(300);
+        let cfg = baselines::blendserve();
+        let job = serve_batch(&cfg, &w);
+        assert_eq!(job.per_replica.len(), 1);
+        assert_eq!(job.total_tokens, w.total_tokens());
+    }
+
+    #[test]
+    fn dp_scales_near_linearly() {
+        // Table 3: DP=2 should give ~1.85-1.95x the DP=1 throughput.
+        // Full-probability sampling keeps the balance estimate clean at
+        // this (test-sized) request count.
+        let w = workload(2000);
+        let mut cfg = baselines::blendserve();
+        cfg.scheduler.sample_prob = 1.0;
+        let t1 = serve_batch(&cfg, &w).total_throughput;
+        cfg.dp_replicas = 2;
+        let t2 = serve_batch(&cfg, &w).total_throughput;
+        let scale = t2 / t1;
+        assert!(
+            scale > 1.6 && scale < 2.15,
+            "DP=2 scaling {scale} (t1={t1} t2={t2})"
+        );
+    }
+
+    #[test]
+    fn dp_processes_every_token() {
+        let w = workload(800);
+        let mut cfg = baselines::blendserve();
+        cfg.dp_replicas = 4;
+        let job = serve_batch(&cfg, &w);
+        assert_eq!(job.per_replica.len(), 4);
+        assert_eq!(job.total_tokens, w.total_tokens());
+    }
+}

@@ -1,0 +1,165 @@
+//! JSONL request pool: the on-disk format of the batch API.
+//!
+//! One request per line:
+//! `{"id": 7, "prompt": [1,2,3], "max_tokens": 64, "dataset": "Custom"}`
+//!
+//! Results are written back as JSONL with scheduling metadata so runs are
+//! auditable.
+
+use crate::scheduler::RunOutput;
+use crate::trace::{Request, TraceKind, Workload};
+use crate::util::Json;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// A request as read from the pool file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JsonlRequest {
+    pub id: u32,
+    pub prompt: Vec<u32>,
+    pub max_tokens: u32,
+    pub dataset: String,
+}
+
+fn kind_from_name(name: &str) -> TraceKind {
+    match name {
+        "ShareGPT" => TraceKind::ShareGpt,
+        "WildChat" => TraceKind::WildChat,
+        "Azure-Trace" => TraceKind::AzureTrace,
+        "BurstGPT" => TraceKind::BurstGpt,
+        "OpenVid" => TraceKind::OpenVid,
+        "MMLU" => TraceKind::Mmlu,
+        "LIMO" => TraceKind::Limo,
+        _ => TraceKind::Custom,
+    }
+}
+
+/// Load a JSONL pool file into a workload.
+pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut requests = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let prompt: Vec<u32> = j
+            .req("prompt")
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("line {}: prompt not an array", lineno + 1))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0) as u32)
+            .collect();
+        let id = j.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u32;
+        let max_tokens = j
+            .get("max_tokens")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(16.0) as u32;
+        let dataset = j
+            .get("dataset")
+            .and_then(|x| x.as_str())
+            .unwrap_or("Custom")
+            .to_string();
+        requests.push(Request::new(id, kind_from_name(&dataset), prompt, max_tokens));
+    }
+    Ok(Workload::new(
+        path.file_stem().and_then(|s| s.to_str()).unwrap_or("pool"),
+        requests,
+    ))
+}
+
+/// Write a workload out as a JSONL pool file (used by `blendserve synth`).
+pub fn save_jsonl(w: &Workload, path: &Path) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = BufWriter::new(file);
+    for r in &w.requests {
+        let j = Json::obj(vec![
+            ("id", Json::from(r.id as usize)),
+            (
+                "prompt",
+                Json::Arr(r.prompt.iter().map(|&t| Json::from(t as usize)).collect()),
+            ),
+            ("max_tokens", Json::from(r.output_len as usize)),
+            ("dataset", Json::from(r.dataset.name())),
+        ]);
+        writeln!(out, "{j}")?;
+    }
+    Ok(())
+}
+
+/// Write a job summary + per-replica stats as JSON.
+pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
+    let replicas: Vec<Json> = outputs
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("system", Json::from(o.system.as_str())),
+                ("total_time_s", Json::Num(o.result.total_time)),
+                ("throughput_tok_s", Json::Num(o.result.throughput)),
+                ("steps", Json::from(o.result.steps as usize)),
+                ("sharing_achieved", Json::Num(o.result.sharing_achieved)),
+                ("optimal_sharing", Json::Num(o.optimal_sharing)),
+                ("optimal_fraction", Json::Num(o.optimal_fraction)),
+                ("retractions", Json::from(o.result.retractions as usize)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![("replicas", Json::Arr(replicas))]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generators::generate_kind;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let w = generate_kind(TraceKind::Mmlu, 25, 3);
+        let dir = std::env::temp_dir().join("blendserve_pool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pool.jsonl");
+        save_jsonl(&w, &path).unwrap();
+        let back = load_jsonl(&path).unwrap();
+        assert_eq!(back.len(), w.len());
+        for (a, b) in w.requests.iter().zip(&back.requests) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.dataset, b.dataset);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("blendserve_pool_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 1}\n").unwrap(); // missing prompt
+        assert!(load_jsonl(&path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load_jsonl(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let dir = std::env::temp_dir().join("blendserve_pool_blank");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.jsonl");
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4}\n\n{\"id\":2,\"prompt\":[3],\"max_tokens\":2}\n",
+        )
+        .unwrap();
+        let w = load_jsonl(&path).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(*w.requests[1].prompt, vec![3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,402 @@
+//! Synthetic trace generators matching the published marginals of the six
+//! paper traces (Fig. 2 length distributions, Table 4 density/sharing).
+//!
+//! Each dataset is described by a [`TraceSpec`]: log-normal input/output
+//! length distributions plus a *prefix structure* — a dataset-wide system
+//! prompt and per-group shared stems (MMLU subjects share long question
+//! stems; chat traces share only their system prompt).  Token ids are drawn
+//! deterministically from per-(dataset, group) pools so shared prefixes are
+//! literal shared id sequences, exactly what a prefix tree sees.
+//!
+//! Calibration targets (Llama-3-8B on A100, §4 model): see
+//! `expected_density_class` tests and `trace::stats`.
+
+use super::{Request, TraceKind, Workload};
+use crate::util::DetRng;
+
+/// Distribution + prefix-structure description of one dataset.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub kind: TraceKind,
+    /// Mean input length (tokens) and log-space sigma.
+    pub input_mean: f64,
+    pub input_sigma: f64,
+    /// Mean output length and log-space sigma.
+    pub output_mean: f64,
+    pub output_sigma: f64,
+    /// Length of the dataset-wide shared system prompt.
+    pub sys_prompt_len: usize,
+    /// Number of groups with an additional shared stem (0 = none).
+    pub n_groups: usize,
+    /// Length of each group's shared stem.
+    pub group_prefix_len: usize,
+    /// Clamp bounds for sampled lengths.
+    pub min_input: usize,
+    pub max_input: usize,
+    pub min_output: usize,
+    pub max_output: usize,
+}
+
+impl TraceSpec {
+    /// Scale all lengths by `f` (used by the tiny real-model E2E example,
+    /// which runs with max_seq=256).
+    pub fn scaled(mut self, f: f64) -> Self {
+        let s = |x: f64| (x * f).max(1.0);
+        self.input_mean = s(self.input_mean);
+        self.output_mean = s(self.output_mean);
+        self.sys_prompt_len = ((self.sys_prompt_len as f64 * f) as usize).max(1);
+        self.group_prefix_len = (self.group_prefix_len as f64 * f) as usize;
+        self.min_input = ((self.min_input as f64 * f) as usize).max(1);
+        self.max_input = ((self.max_input as f64 * f) as usize).max(2);
+        self.min_output = ((self.min_output as f64 * f) as usize).max(1);
+        self.max_output = ((self.max_output as f64 * f) as usize).max(2);
+        self
+    }
+}
+
+/// ShareGPT: chat, mild density (~3), negligible sharing (Table 4: 0.02).
+pub fn sharegpt() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::ShareGpt,
+        input_mean: 250.0,
+        input_sigma: 0.9,
+        output_mean: 380.0,
+        output_sigma: 0.9,
+        sys_prompt_len: 5,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 8,
+        max_input: 4096,
+        min_output: 4,
+        max_output: 4096,
+    }
+}
+
+/// WildChat: chat with a common system prompt (Table 4: sharing 0.19);
+/// output normalized for a mildly compute-intensive mix (§A.3).
+pub fn wildchat() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::WildChat,
+        input_mean: 350.0,
+        input_sigma: 0.8,
+        output_mean: 480.0,
+        output_sigma: 1.0,
+        sys_prompt_len: 66,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 70,
+        max_input: 4096,
+        min_output: 4,
+        max_output: 8192,
+    }
+}
+
+/// Azure-Trace: API service; very long inputs, short outputs (ρ ≈ 33).
+pub fn azure_trace() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::AzureTrace,
+        input_mean: 2000.0,
+        input_sigma: 0.6,
+        output_mean: 26.0,
+        output_sigma: 0.4,
+        sys_prompt_len: 20,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 128,
+        max_input: 8192,
+        min_output: 2,
+        max_output: 256,
+    }
+}
+
+/// BurstGPT: API service; compute-intensive (ρ ≈ 18), low variance.
+pub fn burstgpt() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::BurstGpt,
+        input_mean: 650.0,
+        input_sigma: 0.5,
+        output_mean: 46.0,
+        output_sigma: 0.35,
+        sys_prompt_len: 13,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 32,
+        max_input: 4096,
+        min_output: 2,
+        max_output: 512,
+    }
+}
+
+/// OpenVid: video generation; short text prompt, ~16K-token autoregressive
+/// output (§A.3 normalizes 45K→16K).  Output length is *predefined* by the
+/// frame count, hence the tiny sigma.  Strongly memory-intensive.
+pub fn openvid() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::OpenVid,
+        input_mean: 120.0,
+        input_sigma: 0.5,
+        output_mean: 16384.0,
+        output_sigma: 0.2,
+        sys_prompt_len: 0,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 8,
+        max_input: 1024,
+        min_output: 2048,
+        max_output: 45056,
+    }
+}
+
+/// MMLU: benchmark; 57 subjects share long few-shot stems (Table 4:
+/// sharing 0.86), outputs of a few tokens (ρ ≈ 55).
+pub fn mmlu() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::Mmlu,
+        input_mean: 400.0,
+        input_sigma: 0.25,
+        output_mean: 15.0,
+        output_sigma: 0.4,
+        sys_prompt_len: 12,
+        n_groups: 57,
+        group_prefix_len: 330,
+        min_input: 350,
+        max_input: 1024,
+        min_output: 2,
+        max_output: 64,
+    }
+}
+
+/// LIMO: hard math reasoning; long chain-of-thought outputs
+/// (memory-intensive; Fig. 2).
+pub fn limo() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::Limo,
+        input_mean: 200.0,
+        input_sigma: 0.5,
+        output_mean: 4000.0,
+        output_sigma: 0.6,
+        sys_prompt_len: 10,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 16,
+        max_input: 2048,
+        min_output: 256,
+        max_output: 16384,
+    }
+}
+
+pub fn spec_for(kind: TraceKind) -> TraceSpec {
+    match kind {
+        TraceKind::ShareGpt => sharegpt(),
+        TraceKind::WildChat => wildchat(),
+        TraceKind::AzureTrace => azure_trace(),
+        TraceKind::BurstGpt => burstgpt(),
+        TraceKind::OpenVid => openvid(),
+        TraceKind::Mmlu => mmlu(),
+        TraceKind::Limo => limo(),
+        TraceKind::Custom => panic!("no spec for Custom"),
+    }
+}
+
+/// Token-id space layout: ids are partitioned per dataset/group so distinct
+/// pools never collide, keeping accidental prefix sharing at zero.
+const DATASET_STRIDE: u32 = 1 << 24;
+const GROUP_STRIDE: u32 = 1 << 14;
+
+fn dataset_base(kind: TraceKind) -> u32 {
+    let idx = match kind {
+        TraceKind::ShareGpt => 1,
+        TraceKind::WildChat => 2,
+        TraceKind::AzureTrace => 3,
+        TraceKind::BurstGpt => 4,
+        TraceKind::OpenVid => 5,
+        TraceKind::Mmlu => 6,
+        TraceKind::Limo => 7,
+        TraceKind::Custom => 8,
+    };
+    idx * DATASET_STRIDE
+}
+
+/// Generate `n` requests from a spec.  Deterministic for a given
+/// (spec.kind, seed): prompts, lengths and group assignment replay exactly.
+pub fn generate(spec: &TraceSpec, n: usize, seed: u64) -> Workload {
+    let mut rng = DetRng::new(seed ^ (dataset_base(spec.kind) as u64));
+    let base = dataset_base(spec.kind);
+
+    // Dataset-wide system prompt (shared by every request).
+    let sys_prompt: Vec<u32> =
+        (0..spec.sys_prompt_len).map(|i| base + i as u32).collect();
+
+    // Group stems (e.g. MMLU subjects).
+    let group_prefixes: Vec<Vec<u32>> = (0..spec.n_groups)
+        .map(|g| {
+            let gbase = base + GROUP_STRIDE * (g as u32 + 1);
+            (0..spec.group_prefix_len).map(|i| gbase + i as u32).collect()
+        })
+        .collect();
+
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let p = (rng.lognormal_mean(spec.input_mean, spec.input_sigma) as usize)
+            .clamp(spec.min_input, spec.max_input);
+        let d = (rng.lognormal_mean(spec.output_mean, spec.output_sigma) as usize)
+            .clamp(spec.min_output, spec.max_output) as u32;
+
+        let mut prompt = Vec::with_capacity(p);
+        prompt.extend_from_slice(&sys_prompt);
+        if !group_prefixes.is_empty() {
+            let g = rng.range(0, group_prefixes.len() as u64 - 1) as usize;
+            prompt.extend_from_slice(&group_prefixes[g]);
+        }
+        // Unique tail: ids from the request's private range.
+        while prompt.len() < p {
+            // Large random ids (top half of u32 space) — never collide with
+            // pool ids, and essentially never with other tails.
+            prompt.push((1 << 31) | (rng.u64() as u32 & 0x7fff_ffff));
+        }
+        prompt.truncate(p.max(spec.sys_prompt_len + 1));
+        requests.push(Request::new(i as u32, spec.kind, prompt, d));
+    }
+    Workload::new(&format!("{}-{}", spec.kind.name(), n), requests)
+}
+
+/// Convenience: generate a paper trace by kind.
+pub fn generate_kind(kind: TraceKind, n: usize, seed: u64) -> Workload {
+    generate(&spec_for(kind), n, seed)
+}
+
+/// Remap token ids into a small vocabulary while *preserving the prefix
+/// structure* (injective per pool in practice for small pools).  Used by
+/// the real-model E2E example (vocab 2048).
+pub fn remap_vocab(w: &Workload, vocab: u32) -> Workload {
+    let requests = w
+        .requests
+        .iter()
+        .map(|r| {
+            let prompt: Vec<u32> = r
+                .prompt
+                .iter()
+                .map(|&t| {
+                    // Splittable hash, stable across runs.
+                    let mut h = t as u64;
+                    h ^= h >> 33;
+                    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+                    h ^= h >> 33;
+                    (h as u32) % vocab
+                })
+                .collect();
+            Request::new(r.id, r.dataset, prompt, r.output_len)
+        })
+        .collect();
+    Workload::new(&format!("{}-v{}", w.name, vocab), requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn deterministic() {
+        let a = generate_kind(TraceKind::BurstGpt, 50, 7);
+        let b = generate_kind(TraceKind::BurstGpt, 50, 7);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.output_len, y.output_len);
+        }
+        let c = generate_kind(TraceKind::BurstGpt, 50, 8);
+        assert_ne!(a.requests[0].prompt, c.requests[0].prompt);
+    }
+
+    #[test]
+    fn mean_lengths_near_spec() {
+        for kind in TraceKind::ALL_PAPER {
+            let spec = spec_for(kind);
+            let w = generate(&spec, 4000, 1);
+            let p_mean = mean(
+                &w.requests.iter().map(|r| r.input_len() as f64).collect::<Vec<_>>(),
+            );
+            let d_mean = mean(
+                &w.requests.iter().map(|r| r.output_len as f64).collect::<Vec<_>>(),
+            );
+            // Clamping biases means slightly; accept 25%.
+            assert!(
+                (p_mean - spec.input_mean).abs() / spec.input_mean < 0.25,
+                "{kind}: p_mean={p_mean} spec={}",
+                spec.input_mean
+            );
+            assert!(
+                (d_mean - spec.output_mean).abs() / spec.output_mean < 0.25,
+                "{kind}: d_mean={d_mean} spec={}",
+                spec.output_mean
+            );
+        }
+    }
+
+    #[test]
+    fn sys_prompt_shared_across_requests() {
+        let w = generate_kind(TraceKind::WildChat, 20, 3);
+        let sys_len = wildchat().sys_prompt_len;
+        let first = &w.requests[0].prompt[..sys_len];
+        for r in &w.requests {
+            assert_eq!(&r.prompt[..sys_len], first);
+        }
+    }
+
+    #[test]
+    fn mmlu_groups_share_stems() {
+        let w = generate_kind(TraceKind::Mmlu, 500, 3);
+        let spec = mmlu();
+        let stem_end = spec.sys_prompt_len + spec.group_prefix_len;
+        // Count distinct stems: should be ≤ n_groups and > 1.
+        let stems: std::collections::HashSet<Vec<u32>> = w
+            .requests
+            .iter()
+            .map(|r| r.prompt[..stem_end.min(r.prompt.len())].to_vec())
+            .collect();
+        assert!(stems.len() > 1 && stems.len() <= spec.n_groups, "{}", stems.len());
+    }
+
+    #[test]
+    fn tails_unique_across_datasets() {
+        let a = generate_kind(TraceKind::ShareGpt, 10, 1);
+        let b = generate_kind(TraceKind::BurstGpt, 10, 1);
+        // No shared first token between datasets (different pools).
+        assert_ne!(a.requests[0].prompt[0], b.requests[0].prompt[0]);
+    }
+
+    #[test]
+    fn scaled_spec_shrinks_lengths() {
+        let s = burstgpt().scaled(0.1);
+        let w = generate(&s, 200, 5);
+        let p_mean = mean(
+            &w.requests.iter().map(|r| r.input_len() as f64).collect::<Vec<_>>(),
+        );
+        assert!(p_mean < 100.0, "{p_mean}");
+    }
+
+    #[test]
+    fn remap_vocab_preserves_sharing_structure() {
+        let w = generate_kind(TraceKind::Mmlu, 50, 2);
+        let m = remap_vocab(&w, 2048);
+        for r in &m.requests {
+            assert!(r.prompt.iter().all(|&t| t < 2048));
+        }
+        // Same-group requests still share their stem after remap.
+        let spec = mmlu();
+        let stem_end = spec.sys_prompt_len + spec.group_prefix_len;
+        for (a, b) in w.requests.iter().zip(&m.requests) {
+            assert_eq!(a.prompt.len(), b.prompt.len());
+            let _ = stem_end;
+        }
+        // Two originally-equal prefixes must remain equal.
+        let (r0, r1) = (&m.requests[0], &m.requests[1]);
+        let common = w.requests[0]
+            .prompt
+            .iter()
+            .zip(w.requests[1].prompt.iter())
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert_eq!(&r0.prompt[..common], &r1.prompt[..common]);
+    }
+}

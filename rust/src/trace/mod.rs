@@ -1,0 +1,188 @@
+//! Workload substrate: requests, datasets, trace generators and the §A.3
+//! workload synthesizer.
+//!
+//! The paper evaluates on six public traces (WildChat, ShareGPT,
+//! Azure-Trace, BurstGPT, OpenVid, MMLU; §6.2 Fig. 2 / Table 4) plus LIMO
+//! (Fig. 2).  Those traces are Hugging Face downloads we do not have, so
+//! [`generators`] re-synthesizes each one from its *published marginals*:
+//! input/output length distributions, compute density and prefix-sharing
+//! ratio.  BlendServe consumes nothing else about a request, so the
+//! substitution preserves every behaviour the scheduler can observe
+//! (DESIGN.md §Substitutions).
+
+pub mod generators;
+pub mod stats;
+pub mod synth;
+
+use std::sync::Arc;
+
+/// Which (synthesized) public trace a request came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    ShareGpt,
+    WildChat,
+    AzureTrace,
+    BurstGpt,
+    OpenVid,
+    Mmlu,
+    Limo,
+    /// Hand-built requests (tests, the real-model E2E example).
+    Custom,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::ShareGpt => "ShareGPT",
+            TraceKind::WildChat => "WildChat",
+            TraceKind::AzureTrace => "Azure-Trace",
+            TraceKind::BurstGpt => "BurstGPT",
+            TraceKind::OpenVid => "OpenVid",
+            TraceKind::Mmlu => "MMLU",
+            TraceKind::Limo => "LIMO",
+            TraceKind::Custom => "Custom",
+        }
+    }
+
+    pub const ALL_PAPER: [TraceKind; 6] = [
+        TraceKind::ShareGpt,
+        TraceKind::WildChat,
+        TraceKind::AzureTrace,
+        TraceKind::OpenVid,
+        TraceKind::BurstGpt,
+        TraceKind::Mmlu,
+    ];
+}
+
+impl std::fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One offline inference request.
+///
+/// `output_len` is the *true* generation length — known to the engine (it
+/// decides when the request finishes) but hidden from the scheduler, which
+/// sees only `est_output_len` filled in by §5.1 output-length sampling.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u32,
+    pub dataset: TraceKind,
+    /// Prompt token ids.  Shared prefixes are literal shared id sequences.
+    pub prompt: Arc<Vec<u32>>,
+    /// True output length (tokens), realized only at execution time.
+    pub output_len: u32,
+    /// §5.4: image/video generation outputs are *predefined* by frame
+    /// count/quality parameters — the scheduler may read them directly.
+    pub known_output: bool,
+}
+
+impl Request {
+    pub fn new(id: u32, dataset: TraceKind, prompt: Vec<u32>, output_len: u32) -> Self {
+        let known_output = dataset == TraceKind::OpenVid;
+        Request { id, dataset, prompt: Arc::new(prompt), output_len, known_output }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.prompt.len()
+    }
+}
+
+/// A named set of requests (one experiment's workload).
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    pub fn new(name: &str, mut requests: Vec<Request>) -> Self {
+        // Re-number so ids are dense and unique regardless of provenance.
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u32;
+        }
+        Workload { name: name.to_string(), requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total prompt tokens.
+    pub fn total_input_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.input_len() as u64).sum()
+    }
+
+    /// Total output tokens.
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_len as u64).sum()
+    }
+
+    /// Total processed tokens (the paper's end-to-end throughput counts
+    /// input + output tokens; §6.3).
+    pub fn total_tokens(&self) -> u64 {
+        self.total_input_tokens() + self.total_output_tokens()
+    }
+
+    /// Concatenate workloads (e.g. Fig. 3's BurstGPT-then-OpenVid).
+    pub fn concat(name: &str, parts: &[&Workload]) -> Workload {
+        let mut requests = Vec::new();
+        for p in parts {
+            requests.extend(p.requests.iter().cloned());
+        }
+        Workload::new(name, requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u32, prompt: Vec<u32>, out: u32) -> Request {
+        Request::new(id, TraceKind::Custom, prompt, out)
+    }
+
+    #[test]
+    fn workload_renumbers_ids() {
+        let w = Workload::new(
+            "w",
+            vec![req(7, vec![1, 2], 3), req(7, vec![3], 4)],
+        );
+        assert_eq!(w.requests[0].id, 0);
+        assert_eq!(w.requests[1].id, 1);
+    }
+
+    #[test]
+    fn token_accounting() {
+        let w = Workload::new(
+            "w",
+            vec![req(0, vec![1, 2, 3], 10), req(1, vec![4], 5)],
+        );
+        assert_eq!(w.total_input_tokens(), 4);
+        assert_eq!(w.total_output_tokens(), 15);
+        assert_eq!(w.total_tokens(), 19);
+    }
+
+    #[test]
+    fn concat_preserves_order_and_renumbers() {
+        let a = Workload::new("a", vec![req(0, vec![1], 1)]);
+        let b = Workload::new("b", vec![req(0, vec![2], 2)]);
+        let c = Workload::concat("c", &[&a, &b]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.requests[0].prompt, vec![1]);
+        assert_eq!(*c.requests[1].prompt, vec![2]);
+        assert_eq!(c.requests[1].id, 1);
+    }
+
+    #[test]
+    fn trace_kind_names_unique() {
+        let names: std::collections::HashSet<_> =
+            TraceKind::ALL_PAPER.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), TraceKind::ALL_PAPER.len());
+    }
+}

@@ -1,0 +1,207 @@
+//! §A.3 workload synthesizer: mix traces to hit a target compute density
+//! and prefix-sharing ratio.
+//!
+//! Recipe (as in the paper): pick one compute-intensive trace (BurstGPT /
+//! Azure-Trace / ShareGPT / WildChat), blend in the memory-intensive
+//! OpenVid until the *sharing-discounted* density reaches the target `t`,
+//! then mix in MMLU requests until the sharing ratio reaches `s`.  Because
+//! MMLU also shifts density, we alternate the two adjustments until both
+//! targets converge (a damped fixed point; ~10 rounds suffice).
+
+use super::generators::{generate, mmlu, spec_for, TraceSpec};
+use super::stats;
+use super::{TraceKind, Workload};
+use crate::perfmodel::PerfModel;
+
+/// Target description of one synthesized workload.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    /// The compute-intensive constituent.
+    pub compute_trace: TraceKind,
+    /// Target sharing-discounted compute density ρ.
+    pub density: f64,
+    /// Target optimal prefix-sharing ratio s_o.
+    pub sharing: f64,
+    /// Total request count.
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn new(compute_trace: TraceKind, density: f64, sharing: f64, n: usize) -> Self {
+        SynthSpec { compute_trace, density, sharing, n_requests: n, seed: 0 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "synth-{}-rho{:.2}-s{:.2}",
+            self.compute_trace.name(),
+            self.density,
+            self.sharing
+        )
+    }
+}
+
+/// The four representative workloads of Table 2.
+pub fn table2_traces(n_requests: usize) -> Vec<(String, SynthSpec)> {
+    vec![
+        ("Trace#1".into(), SynthSpec::new(TraceKind::BurstGpt, 1.4, 0.35, n_requests)),
+        ("Trace#2".into(), SynthSpec::new(TraceKind::BurstGpt, 0.9, 0.35, n_requests)),
+        ("Trace#3".into(), SynthSpec::new(TraceKind::BurstGpt, 1.4, 0.05, n_requests)),
+        ("Trace#4".into(), SynthSpec::new(TraceKind::BurstGpt, 0.9, 0.05, n_requests)),
+    ]
+}
+
+/// Synthesize a workload matching `spec` under the given perf model.
+///
+/// Returns the interleaved workload (deterministic shuffle so no constituent
+/// arrives "first"; the *scheduler* decides the processing order).
+pub fn synthesize(spec: &SynthSpec, pm: &PerfModel) -> Workload {
+    let n = spec.n_requests.max(10);
+    let comp_spec = spec_for(spec.compute_trace);
+    let mem_spec = spec_for(TraceKind::OpenVid);
+    let mmlu_spec = mmlu();
+
+    // Per-request average demands of each constituent (measured on a probe).
+    let probe = |s: &TraceSpec, seed| -> (f64, f64, f64, f64) {
+        let w = generate(s, 600, seed);
+        let d = stats::total_demand(&w, pm);
+        let per = 1.0 / w.len() as f64;
+        (
+            d.comp * per,
+            d.mem * per,
+            w.total_input_tokens() as f64 * per,
+            stats::optimal_sharing_ratio(&w),
+        )
+    };
+    let (c_c, m_c, p_c, s_c) = probe(&comp_spec, spec.seed ^ 1);
+    let (c_m, m_m, p_m, _s_m) = probe(&mem_spec, spec.seed ^ 2);
+    let (c_u, m_u, p_u, s_u) = probe(&mmlu_spec, spec.seed ^ 3);
+
+    // Fractions of the three constituents (compute, openvid, mmlu).
+    let mut f_mem: f64 = 0.05;
+    let mut f_mmlu: f64 = 0.10;
+    for _ in 0..60 {
+        let f_comp = (1.0 - f_mem - f_mmlu).max(0.0);
+        // Aggregate density with sharing discount.
+        let comp = f_comp * c_c + f_mem * c_m + f_mmlu * c_u;
+        let mem = f_comp * m_c + f_mem * m_m + f_mmlu * m_u;
+        let saved = f_comp * p_c * s_c + f_mmlu * p_u * s_u;
+        let total_p = f_comp * p_c + f_mem * p_m + f_mmlu * p_u;
+        let s_now = saved / total_p.max(1e-9);
+        let rho_now = (1.0 - s_now) * comp / mem.max(1e-12);
+
+        // Damped multiplicative updates.
+        let rho_err = rho_now / spec.density;
+        // More memory-trace lowers density: adjust f_mem by the error.
+        f_mem = (f_mem * rho_err.powf(0.5)).clamp(1e-4, 0.9);
+        let s_err = (spec.sharing / s_now.max(1e-6)).clamp(0.25, 4.0);
+        f_mmlu = (f_mmlu * s_err.powf(0.5)).clamp(1e-4, 0.9);
+    }
+    let n_mem = ((n as f64) * f_mem).round().max(1.0) as usize;
+    let n_mmlu = ((n as f64) * f_mmlu).round() as usize;
+    let n_comp = n.saturating_sub(n_mem + n_mmlu).max(1);
+
+    let wc = generate(&comp_spec, n_comp, spec.seed ^ 0x11);
+    let wm = generate(&mem_spec, n_mem, spec.seed ^ 0x22);
+    let wu = generate(&mmlu_spec, n_mmlu, spec.seed ^ 0x33);
+
+    // Sequential combination, as in the paper's §A.3 / Fig. 3: the
+    // constituent traces are concatenated, NOT interleaved — arrival order
+    // groups compute-intensive requests before memory-intensive ones,
+    // which is precisely the regime where reordering matters.
+    Workload::concat(&spec.name(), &[&wc, &wu, &wm])
+}
+
+/// Achieved (density, sharing) of a synthesized workload — used by tests
+/// and by the figure harnesses to annotate results.
+pub fn achieved(w: &Workload, pm: &PerfModel) -> (f64, f64) {
+    (stats::workload_density(w, pm), stats::optimal_sharing_ratio(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    #[test]
+    fn hits_density_and_sharing_targets() {
+        let pm = pm();
+        for (rho, s) in [(1.4, 0.35), (0.9, 0.35), (1.4, 0.05), (0.9, 0.05)] {
+            let spec = SynthSpec::new(TraceKind::BurstGpt, rho, s, 4000);
+            let w = synthesize(&spec, &pm);
+            let (got_rho, got_s) = achieved(&w, &pm);
+            assert!(
+                (got_rho - rho).abs() / rho < 0.25,
+                "rho: want {rho}, got {got_rho}"
+            );
+            assert!((got_s - s).abs() < 0.08, "s: want {s}, got {got_s}");
+        }
+    }
+
+    #[test]
+    fn grid_targets_feasible() {
+        // Fig. 11's extremes.
+        let pm = pm();
+        for (rho, s) in [(0.8, 0.45), (1.4, 0.05), (1.3, 0.25)] {
+            let spec = SynthSpec::new(TraceKind::BurstGpt, rho, s, 3000);
+            let (got_rho, got_s) = achieved(&synthesize(&spec, &pm), &pm);
+            assert!((got_rho - rho).abs() / rho < 0.3, "want {rho} got {got_rho}");
+            assert!((got_s - s).abs() < 0.1, "want {s} got {got_s}");
+        }
+    }
+
+    #[test]
+    fn other_compute_traces_work() {
+        // §A.4: Azure-Trace, ShareGPT, WildChat mixes.
+        let pm = pm();
+        for kind in [TraceKind::AzureTrace, TraceKind::ShareGpt, TraceKind::WildChat] {
+            let spec = SynthSpec::new(kind, 1.1, 0.15, 2500);
+            let w = synthesize(&spec, &pm);
+            let (got_rho, got_s) = achieved(&w, &pm);
+            assert!((got_rho - 1.1).abs() < 0.4, "{kind}: rho={got_rho}");
+            assert!((got_s - 0.15).abs() < 0.1, "{kind}: s={got_s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pm = pm();
+        let spec = SynthSpec::new(TraceKind::BurstGpt, 1.2, 0.2, 500);
+        let a = synthesize(&spec, &pm);
+        let b = synthesize(&spec, &pm);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+
+    #[test]
+    fn contains_all_three_constituents() {
+        let pm = pm();
+        let spec = SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.25, 3000);
+        let w = synthesize(&spec, &pm);
+        let has = |k: TraceKind| w.requests.iter().any(|r| r.dataset == k);
+        assert!(has(TraceKind::BurstGpt));
+        assert!(has(TraceKind::OpenVid));
+        assert!(has(TraceKind::Mmlu));
+        assert_eq!(w.len(), 3000);
+    }
+
+    #[test]
+    fn table2_has_four_traces() {
+        let traces = table2_traces(1000);
+        assert_eq!(traces.len(), 4);
+        assert_eq!(traces[0].0, "Trace#1");
+        assert_eq!(traces[3].1.sharing, 0.05);
+    }
+}

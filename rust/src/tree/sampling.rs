@@ -1,0 +1,263 @@
+//! §5.1 output-length sampling.
+//!
+//! Output lengths are unknown before decoding, so BlendServe selects a
+//! subset of requests with probability `p` (1% in the paper) to run first
+//! ("warm-up"); their realized output lengths seed the estimates.  Each
+//! subtree then estimates the remaining requests with the average sampled
+//! output length of the subtree; a subtree with no samples borrows its
+//! *sibling* subtree's average (they share the longest common prefix, so
+//! their output-length distributions correlate — §5.1), implemented as the
+//! nearest sampled ancestor average.
+
+use super::{NodeId, PrefixTree, ROOT};
+use crate::util::DetRng;
+
+/// Fallback when the whole workload has zero samples.
+pub const DEFAULT_EST: u32 = 256;
+
+impl PrefixTree {
+    /// Choose the warm-up sample set and fill `est_output` for every
+    /// request.  Sampled requests get their *true* output length (they are
+    /// really executed during warm-up and returned to the user — zero extra
+    /// cost); others get the subtree/sibling estimate.
+    ///
+    /// Returns the number of sampled requests.
+    pub fn sample_outputs(&mut self, prob: f64, seed: u64) -> usize {
+        let mut rng = DetRng::new(seed ^ 0x5a3c_17e9);
+        let n = self.n_requests();
+        let mut n_sampled = 0;
+        for r in 0..n {
+            // Predefined outputs (video generation) are free knowledge;
+            // they do not consume warm-up budget.
+            let hit = self.known_output[r] || rng.chance(prob);
+            self.sampled[r] = hit;
+            if hit && !self.known_output[r] {
+                n_sampled += 1;
+            }
+        }
+        // Guarantee at least one sample for non-empty workloads so the
+        // estimator has an anchor (the paper's warm-up always runs).
+        if n_sampled == 0 && n > 0 && prob > 0.0 {
+            let r = rng.range(0, n as u64 - 1) as usize;
+            self.sampled[r] = true;
+            n_sampled = 1;
+        }
+        self.propagate_estimates();
+        n_sampled
+    }
+
+    /// Fill `est_output` from the current `sampled` flags (bottom-up
+    /// subtree averages + top-down sibling fallback).
+    pub fn propagate_estimates(&mut self) {
+        let order = self.post_order();
+        // Bottom-up: (sum of sampled true outputs, count) per node.
+        let mut sum = vec![0f64; self.nodes.len()];
+        let mut cnt = vec![0u32; self.nodes.len()];
+        for &id in &order {
+            let mut s = 0f64;
+            let mut c = 0u32;
+            for &r in &self.nodes[id].requests {
+                if self.sampled[r as usize] {
+                    s += self.true_output_len(r) as f64;
+                    c += 1;
+                }
+            }
+            for &ch in &self.nodes[id].children {
+                s += sum[ch];
+                c += cnt[ch];
+            }
+            sum[id] = s;
+            cnt[id] = c;
+        }
+        let global = if cnt[ROOT] > 0 {
+            sum[ROOT] / cnt[ROOT] as f64
+        } else {
+            DEFAULT_EST as f64
+        };
+        // Top-down: effective estimate per node = own sampled average, else
+        // nearest ancestor with samples (≈ sibling average), else global.
+        let mut est = vec![0f64; self.nodes.len()];
+        for &id in order.iter().rev() {
+            // pre-order (parents first)
+            est[id] = if cnt[id] > 0 {
+                sum[id] / cnt[id] as f64
+            } else if id == ROOT {
+                global
+            } else {
+                est[self.nodes[id].parent]
+            };
+        }
+        for id in 0..self.nodes.len() {
+            for i in 0..self.nodes[id].requests.len() {
+                let r = self.nodes[id].requests[i] as usize;
+                self.est_output[r] = if self.sampled[r] {
+                    self.true_output_len(r as u32).max(1)
+                } else {
+                    (est[id].round() as u32).max(1)
+                };
+            }
+        }
+    }
+
+    /// Mean absolute relative estimation error over unsampled requests —
+    /// used by the robustness experiments (§5.4).
+    pub fn estimation_error(&self) -> f64 {
+        let mut err = 0.0;
+        let mut n = 0usize;
+        for r in 0..self.n_requests() {
+            if self.sampled[r] {
+                continue;
+            }
+            let truth = self.true_output_len(r as u32).max(1) as f64;
+            err += (self.est_output[r] as f64 - truth).abs() / truth;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            err / n as f64
+        }
+    }
+
+    /// The subtree rooted at `id` uses this estimate for its unsampled
+    /// requests (test helper).
+    pub fn node_estimate(&self, id: NodeId) -> f64 {
+        self.nodes[id].est_output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::perfmodel::PerfModel;
+    use crate::trace::generators::generate_kind;
+    use crate::trace::{Request, TraceKind, Workload};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    fn wl(items: Vec<(Vec<u32>, u32)>) -> Workload {
+        let reqs = items
+            .into_iter()
+            .map(|(p, d)| Request::new(0, TraceKind::Custom, p, d))
+            .collect();
+        Workload::new("t", reqs)
+    }
+
+    #[test]
+    fn sampled_requests_get_true_length() {
+        let w = wl(vec![(vec![1, 2], 100), (vec![1, 3], 900)]);
+        let mut t = PrefixTree::build(&w);
+        t.sampled = vec![true, true];
+        t.propagate_estimates();
+        assert_eq!(t.est_output, vec![100, 900]);
+    }
+
+    #[test]
+    fn unsampled_borrow_sibling_average() {
+        // Two subtrees under the shared [1] prefix: requests 0,1 sampled in
+        // the left subtree; request 2 (right subtree, unsampled) must
+        // borrow the ancestor average (150), not the global default.
+        let w = wl(vec![
+            (vec![1, 2, 5], 100),
+            (vec![1, 2, 6], 200),
+            (vec![1, 9, 9], 7777),
+        ]);
+        let mut t = PrefixTree::build(&w);
+        t.sampled = vec![true, true, false];
+        t.propagate_estimates();
+        assert_eq!(t.est_output[0], 100);
+        assert_eq!(t.est_output[1], 200);
+        assert_eq!(t.est_output[2], 150);
+    }
+
+    #[test]
+    fn subtree_average_preferred_over_global() {
+        // Group A sampled at 100; group B sampled at 1000.  Unsampled
+        // requests in each group take their own group's average.
+        let w = wl(vec![
+            (vec![1, 2, 3], 100),
+            (vec![1, 2, 4], 555), // unsampled; should estimate 100
+            (vec![9, 8, 7], 1000),
+            (vec![9, 8, 6], 555), // unsampled; should estimate 1000
+        ]);
+        let mut t = PrefixTree::build(&w);
+        t.sampled = vec![true, false, true, false];
+        t.propagate_estimates();
+        assert_eq!(t.est_output[1], 100);
+        assert_eq!(t.est_output[3], 1000);
+    }
+
+    #[test]
+    fn no_samples_uses_default() {
+        let w = wl(vec![(vec![1], 42), (vec![2], 43)]);
+        let mut t = PrefixTree::build(&w);
+        t.sampled = vec![false, false];
+        t.propagate_estimates();
+        assert_eq!(t.est_output, vec![DEFAULT_EST, DEFAULT_EST]);
+    }
+
+    #[test]
+    fn sample_outputs_rate_and_determinism() {
+        let w = generate_kind(TraceKind::BurstGpt, 3000, 9);
+        let mut t = PrefixTree::build(&w);
+        let n1 = t.sample_outputs(0.01, 7);
+        // ~1% ± slack.
+        assert!(n1 >= 10 && n1 <= 70, "{n1}");
+        let est1 = t.est_output.clone();
+        let mut t2 = PrefixTree::build(&w);
+        t2.sample_outputs(0.01, 7);
+        assert_eq!(est1, t2.est_output);
+    }
+
+    #[test]
+    fn at_least_one_sample_forced() {
+        let w = wl(vec![(vec![1], 42); 5]);
+        let mut t = PrefixTree::build(&w);
+        let n = t.sample_outputs(1e-9, 3);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn low_sample_rate_separates_request_classes() {
+        // The §5.4 claim: 1% sampling suffices to tell benchmark-type
+        // (short output) from video-type (long output) requests.
+        let mmlu = generate_kind(TraceKind::Mmlu, 2000, 21);
+        let vid = generate_kind(TraceKind::OpenVid, 500, 22);
+        let w = Workload::concat("mix", &[&mmlu, &vid]);
+        let mut t = PrefixTree::build(&w);
+        t.sample_outputs(0.01, 5);
+        let pm = pm();
+        t.recompute_aggregates(&pm);
+        // Average estimates per dataset must differ by >10x.
+        let (mut e_mmlu, mut n_mmlu, mut e_vid, mut n_vid) = (0f64, 0, 0f64, 0);
+        for (i, r) in w.requests.iter().enumerate() {
+            match r.dataset {
+                TraceKind::Mmlu => {
+                    e_mmlu += t.est_output[i] as f64;
+                    n_mmlu += 1;
+                }
+                TraceKind::OpenVid => {
+                    e_vid += t.est_output[i] as f64;
+                    n_vid += 1;
+                }
+                _ => {}
+            }
+        }
+        e_mmlu /= n_mmlu as f64;
+        e_vid /= n_vid as f64;
+        assert!(e_vid > e_mmlu * 10.0, "mmlu={e_mmlu} vid={e_vid}");
+    }
+
+    #[test]
+    fn estimation_error_reasonable_on_low_variance_trace() {
+        let w = generate_kind(TraceKind::BurstGpt, 4000, 31);
+        let mut t = PrefixTree::build(&w);
+        t.sample_outputs(0.01, 11);
+        let err = t.estimation_error();
+        // BurstGPT sigma=0.35 -> mean abs rel error well under 1.
+        assert!(err < 0.6, "err={err}");
+    }
+}

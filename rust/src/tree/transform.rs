@@ -1,0 +1,597 @@
+//! §5.2 tree transformation: layer-wise sorting (Alg. 1), conditional node
+//! splitting (Alg. 2) and the §5.4 convergence loop
+//! ("layer-wise sort → conditional node split → (re)sort" until C1 or C2).
+//!
+//! After `transform`, a DFS of the tree enumerates requests in (nearly)
+//! non-increasing compute-density order while preserving ≥
+//! `split_sharing_floor` of the optimal prefix-sharing ratio — the input
+//! the dual scanner needs.
+
+use super::{NodeId, PrefixTree, ROOT};
+use crate::perfmodel::PerfModel;
+
+/// Outcome of a `transform` run (§5.4 stopping conditions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// C1: the DFS leaf density sequence became non-increasing.
+    Monotone,
+    /// C2: every remaining violation costs more than the split budget.
+    BudgetExhausted,
+    /// Defensive cap (never expected; N_leaf splits bound the loop).
+    IterationCap,
+}
+
+/// Summary of a transform run.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformStats {
+    pub rounds: usize,
+    pub splits: usize,
+    /// Unique tokens added by splits (prefix recomputation cost).
+    pub recompute_tokens: u64,
+    pub stop: StopReason,
+    /// Sharing ratio before/after.
+    pub sharing_before: f64,
+    pub sharing_after: f64,
+}
+
+impl PrefixTree {
+    /// Alg. 1: layer-wise sort — order every node's children by subtree
+    /// density, descending.  Requests attached to internal nodes are
+    /// unaffected (they precede all children in DFS, matching the paper's
+    /// "shared prefix computed first").
+    pub fn layer_sort(&mut self) {
+        for id in 0..self.nodes.len() {
+            if self.nodes[id].children.len() > 1 {
+                let mut kids = std::mem::take(&mut self.nodes[id].children);
+                kids.sort_by(|&a, &b| {
+                    self.nodes[b]
+                        .density
+                        .partial_cmp(&self.nodes[a].density)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                self.nodes[id].children = kids;
+            }
+        }
+    }
+
+    /// DFS sequence of *scheduling units*: nodes that carry requests, with
+    /// their subtree-discounted density.  (The paper calls these leaves;
+    /// requests can also sit on internal nodes when one prompt prefixes
+    /// another.)
+    pub fn scheduling_units(&self) -> Vec<(NodeId, f64)> {
+        let mut units = Vec::new();
+        for id in self.pre_order() {
+            if !self.nodes[id].requests.is_empty() {
+                // Unit density: density over the node's own requests only
+                // (its subtree may contain denser/looser descendants that
+                // form their own units).
+                units.push((id, self.unit_density(id)));
+            }
+        }
+        units
+    }
+
+    /// Density of the requests attached directly to `id` (no descendants),
+    /// discounted by this unit's *effective* sharing: in DFS order every
+    /// ancestor segment is computed once for its whole subtree, so the unit
+    /// is charged its own segment plus an amortized share of each ancestor
+    /// segment (`seg_len(a) / n_requests(a)`).  This keeps unit densities
+    /// consistent with the subtree densities that layer_sort uses.
+    fn unit_density(&self, id: NodeId) -> f64 {
+        let node = &self.nodes[id];
+        let n_own = node.requests.len().max(1) as f64;
+        let mut comp = 0.0;
+        let mut mem = 0.0;
+        let mut prefill = 0u64;
+        for &r in &node.requests {
+            let p = self.input_len(r);
+            let d = self.est_output[r as usize].max(1) as usize;
+            comp += self.unit_pm_comp(p, d);
+            mem += self.unit_pm_mem(p, d);
+            prefill += p as u64;
+        }
+        if mem <= 0.0 {
+            return f64::INFINITY;
+        }
+        // Effective unique tokens: own segment (computed once even when
+        // several identical prompts stack here) + amortized ancestors.
+        let mut unique_eff = node.seg_len as f64;
+        let mut cur = node.parent;
+        while cur != ROOT {
+            let a = &self.nodes[cur];
+            unique_eff += a.seg_len as f64 / a.n_requests.max(1) as f64 * n_own;
+            cur = a.parent;
+        }
+        let s = if prefill == 0 {
+            0.0
+        } else {
+            (1.0 - unique_eff / prefill as f64).clamp(0.0, 1.0)
+        };
+        (1.0 - s) * comp / mem
+    }
+
+    // Transform-time perf model access: stored per-transform (set by
+    // `transform`), so `unit_density` stays allocation-free.
+    fn unit_pm_comp(&self, p: usize, d: usize) -> f64 {
+        let pm = self.pm_cache.as_ref().expect("transform sets pm_cache");
+        pm.comp_request(p, d)
+    }
+    fn unit_pm_mem(&self, p: usize, d: usize) -> f64 {
+        let pm = self.pm_cache.as_ref().expect("transform sets pm_cache");
+        pm.mem_request(p, d)
+    }
+
+    /// Find local density outliers: children (below root level) whose
+    /// subtree density deviates by ≥ `OUTLIER_FACTOR` from *every* sibling.
+    /// Returns `(split cost, node)` pairs.
+    fn local_outliers(&self) -> Vec<(u64, NodeId)> {
+        const OUTLIER_FACTOR: f64 = 4.0;
+        let mut out = Vec::new();
+        for id in self.pre_order() {
+            if id == ROOT {
+                continue;
+            }
+            let kids = &self.nodes[id].children;
+            if kids.len() < 2 {
+                continue;
+            }
+            // Children are density-sorted (layer_sort ran first): check
+            // both edges against their neighbours.
+            let first = kids[0];
+            let second = kids[1];
+            let last = kids[kids.len() - 1];
+            let second_last = kids[kids.len() - 2];
+            let d = |n: NodeId| self.nodes[n].density.max(1e-12);
+            if d(first).is_finite() && d(first) > d(second) * OUTLIER_FACTOR {
+                out.push((self.nodes[first].prefix_len as u64, first));
+            }
+            if kids.len() >= 2 && d(last) * OUTLIER_FACTOR < d(second_last) {
+                out.push((self.nodes[last].prefix_len as u64, last));
+            }
+        }
+        out
+    }
+
+    /// Detach the subtree rooted at `id` and re-attach it directly under
+    /// the root with its full prefix materialized (the §5.2 "node split").
+    /// Returns the number of recompute tokens this costs (= prefix_len).
+    ///
+    /// Aggregates are stale afterwards; the caller recomputes.
+    pub fn split_to_root(&mut self, id: NodeId) -> u64 {
+        assert_ne!(id, ROOT, "cannot split the root");
+        let parent = self.nodes[id].parent;
+        assert_ne!(parent, ROOT, "node already at root level");
+        let cost = self.nodes[id].prefix_len as u64;
+
+        // Remove from old parent.
+        let slot = self.nodes[parent]
+            .children
+            .iter()
+            .position(|&c| c == id)
+            .expect("child listed under parent");
+        self.nodes[parent].children.remove(slot);
+
+        // Materialize the full prefix: the segment becomes
+        // prompt[0 .. prefix_len + seg_len] of any request in the subtree
+        // (all subtree requests share that exact prefix).
+        let rep = self.any_request_in_subtree(id).expect("non-empty subtree");
+        let new_len = self.nodes[id].prefix_len + self.nodes[id].seg_len;
+        let node = &mut self.nodes[id];
+        node.seg_req = rep;
+        node.seg_start = 0;
+        node.seg_len = new_len;
+        node.parent = ROOT;
+        node.split_off = true;
+        self.nodes[ROOT].children.push(id);
+
+        // If the old parent became a pass-through (no requests, one child),
+        // the tree stays valid but slightly fragmented; the dual scanner is
+        // insensitive to that, and `merge_chains` can clean it up.
+        cost
+    }
+
+    fn any_request_in_subtree(&self, id: NodeId) -> Option<u32> {
+        let mut stack = vec![id];
+        while let Some(n) = stack.pop() {
+            if let Some(&r) = self.nodes[n].requests.first() {
+                return Some(r);
+            }
+            stack.extend_from_slice(&self.nodes[n].children);
+        }
+        None
+    }
+
+    /// §A.2 "offline prefix tree" merging: collapse pass-through chains
+    /// (internal nodes with no requests and exactly one child) to reduce
+    /// fragmentation.  Does not change sharing.
+    pub fn merge_chains(&mut self) {
+        for id in self.post_order() {
+            if id == ROOT {
+                continue;
+            }
+            // Merge child into `id` while the single child is contiguous
+            // with this node's segment view.
+            while self.nodes[id].requests.is_empty()
+                && self.nodes[id].children.len() == 1
+            {
+                let c = self.nodes[id].children[0];
+                // Only merge when the child's segment directly follows this
+                // node's segment in the same prompt (always true right
+                // after build; may be false after splits).
+                let (req_ok, contiguous) = {
+                    let a = &self.nodes[id];
+                    let b = &self.nodes[c];
+                    (
+                        a.seg_req == b.seg_req,
+                        a.seg_start + a.seg_len == b.seg_start,
+                    )
+                };
+                if !(req_ok && contiguous) {
+                    break;
+                }
+                let b_len = self.nodes[c].seg_len;
+                let b_children = std::mem::take(&mut self.nodes[c].children);
+                let b_requests = std::mem::take(&mut self.nodes[c].requests);
+                self.nodes[id].seg_len += b_len;
+                self.nodes[id].requests = b_requests;
+                for &g in &b_children {
+                    self.nodes[g].parent = id;
+                }
+                self.nodes[id].children = b_children;
+                // `c` is now orphaned (kept in the arena, unreachable).
+            }
+        }
+    }
+
+    /// The §5.4 convergence loop.  `pm` prices demands; the split budget is
+    /// `(1 - split_sharing_floor) × total shared tokens` (§5.2: preserve
+    /// e.g. 99% of the prefix-sharing ratio).
+    pub fn transform(&mut self, pm: &PerfModel, split_sharing_floor: f64) -> TransformStats {
+        self.pm_cache = Some(pm.clone());
+        self.recompute_aggregates(pm);
+        let sharing_before = self.sharing_ratio();
+        let total_shared =
+            (self.nodes[ROOT].subtree_prefill - self.nodes[ROOT].subtree_unique) as f64;
+        let mut budget = ((1.0 - split_sharing_floor.clamp(0.0, 1.0)) * total_shared) as i64;
+
+        let mut stats = TransformStats {
+            rounds: 0,
+            splits: 0,
+            recompute_tokens: 0,
+            stop: StopReason::IterationCap,
+            sharing_before,
+            sharing_after: sharing_before,
+        };
+
+        // Each split moves one node to the root and never repeats (a
+        // root-level node cannot be split again), so N_node bounds rounds
+        // (§5.4 termination argument).
+        let cap = self.nodes.len() + 2;
+        for round in 0..cap {
+            stats.rounds = round + 1;
+            self.layer_sort();
+
+            // C1: non-increasing unit densities (with 1% slack)?
+            let units = self.scheduling_units();
+            let mut violators: Vec<NodeId> = Vec::new();
+            let mut run_max = f64::INFINITY;
+            for &(id, rho) in units.iter() {
+                if rho > run_max * 1.01 {
+                    violators.push(id);
+                } else {
+                    run_max = rho;
+                }
+            }
+            if violators.is_empty() {
+                stats.stop = StopReason::Monotone;
+                break;
+            }
+
+            // Phase 1 — local outliers (the Fig. 5 "request #2" pattern): a
+            // child whose density deviates ≥ 4x from every sibling drags
+            // its parent's aggregate and mis-sorts the whole subtree.
+            // Split all affordable ones this round, cheapest first.
+            let mut outliers = self.local_outliers();
+            outliers.sort_by_key(|&(cost, _)| cost);
+            let mut split_this_round = 0usize;
+            for (cost, id) in outliers {
+                if (cost as i64) <= budget {
+                    self.split_to_root(id);
+                    budget -= cost as i64;
+                    stats.splits += 1;
+                    stats.recompute_tokens += cost;
+                    split_this_round += 1;
+                }
+            }
+
+            // Phase 2 — fallback for residual violations: split the
+            // cheapest affordable violator itself (guaranteed progress:
+            // it lands at root level and can never be split again).
+            if split_this_round == 0 {
+                let mut best: Option<(u64, NodeId)> = None;
+                for &id in &violators {
+                    if self.nodes[id].parent == ROOT {
+                        continue;
+                    }
+                    let cost = self.nodes[id].prefix_len as u64;
+                    if (cost as i64) <= budget
+                        && best.map(|(c, _)| cost < c).unwrap_or(true)
+                    {
+                        best = Some((cost, id));
+                    }
+                }
+                match best {
+                    None => {
+                        stats.stop = StopReason::BudgetExhausted;
+                        break;
+                    }
+                    Some((cost, id)) => {
+                        self.split_to_root(id);
+                        budget -= cost as i64;
+                        stats.splits += 1;
+                        stats.recompute_tokens += cost;
+                    }
+                }
+            }
+            self.recompute_aggregates(pm);
+        }
+        self.recompute_aggregates(pm);
+        stats.sharing_after = self.sharing_ratio();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::trace::generators::generate_kind;
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::{Request, TraceKind, Workload};
+    use crate::util::check::forall;
+    use crate::util::DetRng;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    /// The Fig. 5 pattern: a shared-prefix subtree A of compute-intensive
+    /// requests containing ONE memory hog (request id 10 below), plus a
+    /// disjoint mid-density group B.  The hog drags A's aggregate density
+    /// below B's, so plain layer-sorting orders B before A's dense leaves —
+    /// a violation only a node split can fix.
+    fn outlier_workload() -> Workload {
+        let mut reqs = Vec::new();
+        // A: 10 dense leaves + 1 outlier under prefix [7,7,7,7].
+        for i in 0..10u32 {
+            let mut p = vec![7, 7, 7, 7];
+            p.extend([100 + i, 200 + i, 300 + i]);
+            reqs.push(Request::new(0, TraceKind::Custom, p, 8));
+        }
+        let mut hog = vec![7, 7, 7, 7];
+        hog.extend([999, 998, 997]);
+        reqs.push(Request::new(0, TraceKind::Custom, hog, 20000)); // id 10
+        // B: mid-density group under prefix [55,54].
+        for i in 0..2u32 {
+            reqs.push(Request::new(
+                0,
+                TraceKind::Custom,
+                vec![55, 54, 60 + i],
+                100,
+            ));
+        }
+        Workload::new("outlier", reqs)
+    }
+
+    fn prepared(w: &Workload) -> (PrefixTree, PerfModel) {
+        let mut t = PrefixTree::build(w);
+        let pm = pm();
+        for (i, r) in w.requests.iter().enumerate() {
+            t.est_output[i] = r.output_len; // perfect estimates for tests
+        }
+        t.recompute_aggregates(&pm);
+        (t, pm)
+    }
+
+    fn unit_densities(t: &PrefixTree) -> Vec<f64> {
+        t.scheduling_units().iter().map(|&(_, d)| d).collect()
+    }
+
+    fn is_non_increasing(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[1] <= w[0] * 1.01 + 1e-12)
+    }
+
+    #[test]
+    fn layer_sort_orders_children_by_density() {
+        let w = outlier_workload();
+        let (mut t, _) = prepared(&w);
+        t.layer_sort();
+        t.verify();
+        let root_kids = &t.nodes[ROOT].children;
+        // Compute-heavy [7,7,7,7] subtree must precede the [99,98] one.
+        assert!(t.nodes[root_kids[0]].density >= t.nodes[root_kids[1]].density);
+    }
+
+    #[test]
+    fn layer_sort_preserves_structure() {
+        let w = generate_kind(TraceKind::Mmlu, 300, 5);
+        let (mut t, _) = prepared(&w);
+        let unique_before = t.unique_tokens();
+        t.layer_sort();
+        t.verify();
+        assert_eq!(t.unique_tokens(), unique_before);
+        let mut dfs = t.dfs_requests();
+        dfs.sort_unstable();
+        assert_eq!(dfs, (0..300).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn transform_fixes_outlier_and_converges() {
+        let w = outlier_workload();
+        let (mut t, pm) = prepared(&w);
+        // Before: the memory-hog under the shared prefix breaks order.
+        t.layer_sort();
+        assert!(!is_non_increasing(&unit_densities(&t)));
+        let stats = t.transform(&pm, 0.0); // unlimited budget (floor 0)
+        t.verify();
+        assert_eq!(stats.stop, StopReason::Monotone);
+        assert!(stats.splits >= 1);
+        assert!(is_non_increasing(&unit_densities(&t)));
+    }
+
+    #[test]
+    fn transform_zero_budget_never_splits() {
+        let w = outlier_workload();
+        let (mut t, pm) = prepared(&w);
+        let stats = t.transform(&pm, 1.0); // preserve 100% sharing
+        t.verify();
+        assert_eq!(stats.splits, 0);
+        assert_eq!(stats.sharing_after, stats.sharing_before);
+        assert_eq!(stats.stop, StopReason::BudgetExhausted);
+    }
+
+    #[test]
+    fn transform_respects_sharing_floor() {
+        let pm = pm();
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.3, 1500), &pm);
+        let mut t = PrefixTree::build(&w);
+        t.sample_outputs(1.0, 3); // perfect estimates
+        let stats = t.transform(&pm, 0.99);
+        t.verify();
+        // ≥99% of sharing preserved.
+        assert!(
+            stats.sharing_after >= stats.sharing_before * 0.99 - 1e-9,
+            "before={} after={}",
+            stats.sharing_before,
+            stats.sharing_after
+        );
+    }
+
+    #[test]
+    fn transform_orders_synthesized_workload() {
+        let pm = pm();
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.2, 2000), &pm);
+        let mut t = PrefixTree::build(&w);
+        t.sample_outputs(1.0, 3);
+        t.transform(&pm, 0.99);
+        t.verify();
+        let densities = unit_densities(&t);
+        // Global trend: first-quartile mean density > last-quartile mean
+        // (the workload is ~94% BurstGPT, so quartile contrast is modest),
+        // and the memory-intensive OpenVid units all sit at the right end.
+        let q = densities.len() / 4;
+        let head: f64 = densities[..q].iter().sum::<f64>() / q as f64;
+        let tail: f64 = densities[densities.len() - q..].iter().sum::<f64>() / q as f64;
+        assert!(
+            head > tail * 1.5,
+            "head={head} tail={tail} (tree not density-ordered)"
+        );
+        let n_memory = densities.iter().filter(|&&d| d < 1.0).count();
+        assert!(n_memory > 0, "synth workload should contain OpenVid units");
+        assert!(
+            densities[densities.len() - n_memory..].iter().all(|&d| d < 1.0),
+            "memory-intensive units not at the right end"
+        );
+    }
+
+    #[test]
+    fn split_to_root_preserves_request_paths() {
+        let w = outlier_workload();
+        let (mut t, pm) = prepared(&w);
+        // Find the outlier's node (request 10, the memory hog).
+        let id = t
+            .pre_order()
+            .into_iter()
+            .find(|&n| t.nodes[n].requests.contains(&10))
+            .unwrap();
+        assert_ne!(t.nodes[id].parent, ROOT);
+        let cost = t.split_to_root(id);
+        assert_eq!(cost, 4); // the shared [7,7,7,7] prefix
+        t.recompute_aggregates(&pm);
+        t.verify(); // paths still spell the full prompts
+        assert!(t.nodes[id].split_off);
+        assert_eq!(t.nodes[id].parent, ROOT);
+    }
+
+    #[test]
+    fn split_reduces_sharing_by_cost() {
+        let w = outlier_workload();
+        let (mut t, pm) = prepared(&w);
+        let unique_before = t.unique_tokens();
+        let id = t
+            .pre_order()
+            .into_iter()
+            .find(|&n| t.nodes[n].requests.contains(&10))
+            .unwrap();
+        let cost = t.split_to_root(id);
+        t.recompute_aggregates(&pm);
+        assert_eq!(t.unique_tokens(), unique_before + cost);
+    }
+
+    #[test]
+    fn merge_chains_removes_passthrough() {
+        // After splitting a middle child away, its former parent may become
+        // a pass-through node; merge_chains collapses it.
+        let w = Workload::new(
+            "m",
+            vec![
+                Request::new(0, TraceKind::Custom, vec![1, 2, 3, 4], 8),
+                Request::new(0, TraceKind::Custom, vec![1, 2, 3, 5], 8),
+            ],
+        );
+        let (mut t, pm) = prepared(&w);
+        let reachable_before = t.pre_order().len();
+        // Split one leaf away: parent [1,2,3] now has a single child.
+        let id = t
+            .pre_order()
+            .into_iter()
+            .find(|&n| t.nodes[n].requests.contains(&1))
+            .unwrap();
+        t.split_to_root(id);
+        t.recompute_aggregates(&pm);
+        t.merge_chains();
+        t.recompute_aggregates(&pm);
+        t.verify();
+        assert!(t.pre_order().len() <= reachable_before);
+    }
+
+    #[test]
+    fn property_transform_preserves_requests_and_floor() {
+        forall("transform invariants", 15, 77, |rng: &mut DetRng| {
+            let n = rng.range(5, 80) as usize;
+            let mut reqs = Vec::new();
+            for _ in 0..n {
+                let len = rng.range(2, 30) as usize;
+                let p: Vec<u32> = (0..len).map(|_| rng.range(0, 4) as u32).collect();
+                let out = if rng.chance(0.3) {
+                    rng.range(4000, 30000) as u32
+                } else {
+                    rng.range(2, 200) as u32
+                };
+                reqs.push(Request::new(0, TraceKind::Custom, p, out));
+            }
+            let w = Workload::new("prop", reqs);
+            let mut t = PrefixTree::build(&w);
+            let pm = pm();
+            t.sample_outputs(1.0, rng.u64());
+            let floor = 0.5 + rng.f64() * 0.5;
+            let stats = t.transform(&pm, floor);
+            t.verify();
+            if stats.sharing_after < stats.sharing_before * floor - 1e-9 {
+                return Err(format!(
+                    "sharing floor violated: {} < {} * {floor}",
+                    stats.sharing_after, stats.sharing_before
+                ));
+            }
+            let mut dfs = t.dfs_requests();
+            dfs.sort_unstable();
+            if dfs != (0..n as u32).collect::<Vec<_>>() {
+                return Err("requests lost by transform".into());
+            }
+            if stats.stop == StopReason::IterationCap {
+                return Err("hit iteration cap".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal micro-benchmark harness (offline build: no criterion).
+//!
+//! Used by the `rust/benches/*.rs` binaries (`cargo bench`): adaptive
+//! iteration count, warmup, median/mean/p10/p90 reporting, and a
+//! `black_box` to defeat const-folding.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} p90 ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p90),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bench {
+    /// Target wall-clock spent measuring each benchmark.
+    pub budget: Duration,
+    /// Minimum sample count.
+    pub min_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget: Duration::from_secs(2), min_samples: 10, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Measure `f`, printing the result immediately.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + calibration: find an iteration time estimate.
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(1));
+
+        let target_samples = (self.budget.as_nanos() / once.as_nanos().max(1))
+            .clamp(self.min_samples as u128, 10_000) as usize;
+
+        let mut samples = Vec::with_capacity(target_samples);
+        let deadline = Instant::now() + self.budget;
+        for _ in 0..target_samples {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+            if Instant::now() > deadline && samples.len() >= self.min_samples {
+                break;
+            }
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            p10: samples[n / 10],
+            p90: samples[(n * 9) / 10],
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(50));
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(black_box(i));
+            }
+            x
+        });
+        assert!(r.iters >= 10);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.p90 >= r.p10);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5 ns");
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Tiny property-testing harness (offline build: no proptest).
+//!
+//! `forall(cases, seed, f)` runs `f` against `cases` independent random
+//! states; on failure it panics with the exact per-case seed so the case
+//! replays deterministically:
+//!
+//! ```
+//! use blendserve::util::check::forall;
+//! use blendserve::util::DetRng;
+//! forall("addition commutes", 64, 0, |rng: &mut DetRng| {
+//!     let (a, b) = (rng.range(0, 100), rng.range(0, 100));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::DetRng;
+
+/// Run `f` for `cases` random cases.  Panics on the first failure with a
+/// replayable seed and the failure message.
+pub fn forall(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut f: impl FnMut(&mut DetRng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = DetRng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert two floats are within relative tolerance.
+pub fn close(a: f64, b: f64, rel: f64) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    if (a - b).abs() / denom <= rel {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel {rel})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("trivially true", 32, 1, |rng| {
+            let x = rng.u64();
+            if x == x {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_panics_with_seed() {
+        forall("always false", 4, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.005, 0.01).is_ok());
+        assert!(close(1.0, 1.5, 0.01).is_err());
+        assert!(close(0.0, 0.0, 1e-9).is_ok());
+    }
+}

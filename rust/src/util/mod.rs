@@ -1,0 +1,18 @@
+//! Shared substrates, all implemented in-tree (the build is offline):
+//! deterministic RNG, summary statistics, text/CSV tables, JSON and
+//! TOML-subset codecs, a micro-benchmark harness and a property-testing
+//! helper.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod toml;
+
+pub use json::Json;
+pub use rng::DetRng;
+pub use stats::{mean, percentile, Summary};
+pub use table::Table;
+pub use toml::{TomlDoc, TomlValue};

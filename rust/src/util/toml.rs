@@ -1,0 +1,257 @@
+//! Minimal TOML-subset codec for the config system (offline build: no
+//! `toml` crate).  Supports `[section]` / `[a.b]` headers and
+//! `key = value` lines where value ∈ {string, float, int, bool}.
+//! Comments (`#`) and blank lines are ignored.  This covers everything
+//! `SystemConfig` needs; nested arrays/tables are intentionally out of
+//! scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| x as u64)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TomlValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TomlValue::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            TomlValue::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            TomlValue::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// A flat document: section path -> (key -> value).  The empty path ""
+/// holds top-level keys.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError(pub String);
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error: {}", self.0)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: TomlValue) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+
+    pub fn set_str(&mut self, section: &str, key: &str, v: &str) {
+        self.set(section, key, TomlValue::Str(v.to_string()));
+    }
+    pub fn set_num(&mut self, section: &str, key: &str, v: f64) {
+        self.set(section, key, TomlValue::Num(v));
+    }
+    pub fn set_bool(&mut self, section: &str, key: &str, v: bool) {
+        self.set(section, key, TomlValue::Bool(v));
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Fail-loud accessor used by config deserialization.
+    pub fn req(&self, section: &str, key: &str) -> Result<&TomlValue, TomlError> {
+        self.get(section, key)
+            .ok_or_else(|| TomlError(format!("missing [{section}] {key}")))
+    }
+
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError(format!("line {}: bad section", lineno + 1)))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = line[..eq].trim().to_string();
+            let val = line[eq + 1..].trim();
+            let value = parse_value(val)
+                .ok_or_else(|| TomlError(format!("line {}: bad value '{val}'", lineno + 1)))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        // Top-level keys first.
+        if let Some(top) = self.sections.get("") {
+            for (k, v) in top {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            if !top.is_empty() {
+                out.push('\n');
+            }
+        }
+        for (name, kv) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("[{name}]\n"));
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let body = rest.strip_suffix('"')?;
+        return Some(TomlValue::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>().ok().map(TomlValue::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_values() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top comment
+            top = 1
+            [model]
+            name = "llama-3-8b"   # inline comment
+            params = 8.03e9
+            layers = 32
+            [scheduler]
+            online_adapt = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("model", "name").unwrap().as_str(), Some("llama-3-8b"));
+        assert_eq!(doc.get("model", "params").unwrap().as_f64(), Some(8.03e9));
+        assert_eq!(doc.get("scheduler", "online_adapt").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = TomlDoc::new();
+        doc.set_str("model", "name", "x");
+        doc.set_num("model", "params", 1.5);
+        doc.set_bool("engine", "prefix_cache", false);
+        doc.set_num("", "seed", 7.0);
+        let s = doc.to_string_pretty();
+        assert_eq!(TomlDoc::parse(&s).unwrap(), doc);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = TomlDoc::parse("line-without-equals").unwrap_err();
+        assert!(e.0.contains("line 1"));
+        let e = TomlDoc::parse("[unclosed").unwrap_err();
+        assert!(e.0.contains("bad section"));
+    }
+
+    #[test]
+    fn req_reports_path() {
+        let doc = TomlDoc::new();
+        let e = doc.req("model", "name").unwrap_err();
+        assert!(e.0.contains("[model] name"));
+    }
+
+    #[test]
+    fn escaped_quotes_roundtrip() {
+        let mut doc = TomlDoc::new();
+        doc.set_str("", "k", "say \"hi\"");
+        let s = doc.to_string_pretty();
+        assert_eq!(
+            TomlDoc::parse(&s).unwrap().get("", "k").unwrap().as_str(),
+            Some("say \"hi\"")
+        );
+    }
+}

@@ -1,0 +1,212 @@
+//! Cross-module integration tests: workload → tree → scheduler → engine →
+//! metrics, plus paper-shape assertions at test scale.
+
+use blendserve::baselines;
+use blendserve::config::{presets, OrderPolicy};
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::{run_system, static_order};
+use blendserve::server::pool::{load_jsonl, save_jsonl};
+use blendserve::server::serve_batch;
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::synth::{synthesize, table2_traces, SynthSpec};
+use blendserve::trace::{stats, TraceKind, Workload};
+use blendserve::tree::PrefixTree;
+use blendserve::util::check::forall;
+use blendserve::util::DetRng;
+
+fn pm() -> PerfModel {
+    PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+}
+
+fn workload(rho: f64, s: f64, n: usize) -> Workload {
+    synthesize(&SynthSpec::new(TraceKind::BurstGpt, rho, s, n), &pm())
+}
+
+#[test]
+fn paper_shape_fig7_ordering_of_systems() {
+    // On a blended workload (Trace#1-like): BlendServe > NanoFlow-DFS >
+    // vLLM-DFS, and BlendServe gains ≥ 10%.
+    let w = workload(1.3, 0.3, 6000);
+    let blend = run_system(&baselines::blendserve(), &w);
+    let nano = run_system(&baselines::nanoflow_dfs(), &w);
+    let vllm = run_system(&baselines::vllm_dfs(), &w);
+    assert!(blend.result.throughput > nano.result.throughput * 1.10,
+        "blend {} vs nano {}", blend.result.throughput, nano.result.throughput);
+    assert!(nano.result.throughput > vllm.result.throughput);
+}
+
+#[test]
+fn paper_shape_optimal_fraction_band() {
+    // BlendServe should land in the high-fraction band of practical
+    // optimal on a Trace#1-like workload (paper: up to 90%).
+    let w = workload(1.4, 0.35, 8000);
+    let out = run_system(&baselines::blendserve(), &w);
+    assert!(
+        out.optimal_fraction > 0.80 && out.optimal_fraction <= 1.02,
+        "optimal fraction {}",
+        out.optimal_fraction
+    );
+}
+
+#[test]
+fn paper_shape_fig9_sharing_preserved() {
+    let w = workload(1.1, 0.3, 6000);
+    let out = run_system(&baselines::blendserve(), &w);
+    assert!(
+        out.result.sharing_achieved >= out.optimal_sharing * 0.95,
+        "achieved {} optimal {}",
+        out.result.sharing_achieved,
+        out.optimal_sharing
+    );
+}
+
+#[test]
+fn paper_shape_fig10_balance_stability() {
+    // BlendServe's per-step compute/memory balance should be more stable
+    // than NanoFlow-DFS's on a memory-intensive trace (Trace#2-like).
+    // Metric: time-weighted overlap efficiency Σ min(c,m) / Σ max(c,m) —
+    // 1.0 means every step ran both resources fully concurrently.
+    let w = workload(0.9, 0.3, 6000);
+    let overlap_eff = |sys: &blendserve::config::SystemConfig| -> f64 {
+        let out = run_system(sys, &w);
+        let (mut lo, mut hi) = (0.0f64, 0.0f64);
+        for s in &out.result.series {
+            lo += s.t_comp.min(s.t_mem);
+            hi += s.t_comp.max(s.t_mem);
+        }
+        lo / hi.max(1e-12)
+    };
+    let blend = overlap_eff(&baselines::blendserve());
+    let nano = overlap_eff(&baselines::nanoflow_dfs());
+    assert!(
+        blend > nano * 1.2,
+        "overlap efficiency: blend {blend} vs nanoflow-dfs {nano}"
+    );
+}
+
+#[test]
+fn tokens_conserved_across_all_systems() {
+    let w = workload(1.0, 0.2, 1500);
+    for (name, cfg) in baselines::all_systems() {
+        let out = run_system(&cfg, &w);
+        assert_eq!(out.result.total_tokens, w.total_tokens(), "{name}");
+    }
+}
+
+#[test]
+fn sharing_never_exceeds_optimal() {
+    for seed in [1u64, 2, 3] {
+        let w = synthesize(
+            &SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.3, 1200).with_seed(seed),
+            &pm(),
+        );
+        for (name, cfg) in baselines::all_systems() {
+            let out = run_system(&cfg, &w);
+            assert!(
+                out.result.sharing_achieved <= out.optimal_sharing + 1e-9,
+                "{name} seed {seed}: {} > optimal {}",
+                out.result.sharing_achieved,
+                out.optimal_sharing
+            );
+        }
+    }
+}
+
+#[test]
+fn throughput_never_exceeds_ideal_bound() {
+    // No system may beat the *idealized* T_o (without interference).
+    let w = workload(1.2, 0.25, 2000);
+    let total = stats::total_demand(&w, &pm());
+    let s_o = stats::optimal_sharing_ratio(&w);
+    let t_ideal = pm().optimal_time(total, s_o);
+    for (name, cfg) in baselines::all_systems() {
+        let out = run_system(&cfg, &w);
+        assert!(
+            out.result.total_time >= t_ideal * 0.999,
+            "{name}: {} < ideal {t_ideal}",
+            out.result.total_time
+        );
+    }
+}
+
+#[test]
+fn dp_partitions_preserve_token_totals() {
+    let w = workload(1.1, 0.25, 2400);
+    for dp in [2usize, 3, 4] {
+        let mut cfg = baselines::blendserve();
+        cfg.dp_replicas = dp;
+        cfg.scheduler.sample_prob = 0.1;
+        let job = serve_batch(&cfg, &w);
+        assert_eq!(job.total_tokens, w.total_tokens(), "dp={dp}");
+    }
+}
+
+#[test]
+fn jsonl_pool_roundtrip_through_simulation() {
+    let w = workload(1.1, 0.2, 400);
+    let dir = std::env::temp_dir().join("blendserve_int_pool");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pool.jsonl");
+    save_jsonl(&w, &path).unwrap();
+    let loaded = load_jsonl(&path).unwrap();
+    assert_eq!(loaded.total_tokens(), w.total_tokens());
+    let out = run_system(&baselines::blendserve(), &loaded);
+    assert_eq!(out.result.total_tokens, w.total_tokens());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn online_adaptation_tolerates_bad_estimates() {
+    // §5.4 robustness: with 1% sampling (noisy estimates) BlendServe must
+    // stay within 15% of its perfectly-informed self.
+    let w = workload(1.0, 0.25, 3000);
+    let mut informed = baselines::blendserve();
+    informed.scheduler.sample_prob = 1.0;
+    let mut sampled = baselines::blendserve();
+    sampled.scheduler.sample_prob = 0.01;
+    let a = run_system(&informed, &w).result.throughput;
+    let b = run_system(&sampled, &w).result.throughput;
+    assert!(b > a * 0.85, "1% sampling {b} vs perfect {a}");
+}
+
+#[test]
+fn static_orders_and_dual_scan_schedule_same_request_set() {
+    forall("order completeness", 8, 3, |rng: &mut DetRng| {
+        let n = 200 + rng.range(0, 400) as usize;
+        let w = synthesize(
+            &SynthSpec::new(TraceKind::BurstGpt, 0.9 + rng.f64() * 0.5, 0.1, n)
+                .with_seed(rng.u64()),
+            &pm(),
+        );
+        let tree = PrefixTree::build(&w);
+        for policy in [OrderPolicy::Fcfs, OrderPolicy::Dfs, OrderPolicy::Random] {
+            let mut o = static_order(policy, &tree, 5);
+            o.sort_unstable();
+            if o != (0..w.len() as u32).collect::<Vec<_>>() {
+                return Err(format!("{policy} incomplete"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mmlu_heavy_workload_hits_high_sharing_everywhere() {
+    let w = generate_kind(TraceKind::Mmlu, 3000, 7);
+    let out = run_system(&baselines::blendserve(), &w);
+    assert!(out.optimal_sharing > 0.7);
+    assert!(out.result.sharing_achieved > 0.65, "{}", out.result.sharing_achieved);
+}
+
+#[test]
+fn all_table2_traces_run_all_systems_quickly() {
+    // Smoke-coverage of the fig7 matrix at small n.
+    for (name, spec) in table2_traces(800) {
+        let w = synthesize(&spec, &pm());
+        for (sys, cfg) in baselines::all_systems() {
+            let out = run_system(&cfg, &w);
+            assert!(out.result.throughput > 0.0, "{name}/{sys}");
+            assert!(out.result.steps > 0, "{name}/{sys}");
+        }
+    }
+}
