@@ -1,0 +1,88 @@
+//! Online/offline co-located serving (DESIGN.md §Co-located-Serving):
+//! sweep the online arrival rate and watch the elastic admitter trade
+//! offline goodput for online SLO attainment.
+//!
+//! At `online_rate = 0` the co-located path must reproduce pure-offline
+//! BlendServe throughput within 1% (it is in fact bit-identical); as the
+//! rate rises, offline goodput degrades gracefully while TTFT/TPOT SLOs
+//! hold.
+//!
+//! ```bash
+//! cargo run --release --example colocated_serving
+//! ```
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::run_system;
+use blendserve::server::{online_stream, serve_colocated};
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::util::Table;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let offline = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, 4000), &pm);
+    println!(
+        "offline pool: {} requests, {:.1}M tokens",
+        offline.len(),
+        offline.total_tokens() as f64 / 1e6
+    );
+
+    // Reference: pure-offline BlendServe through the standard runner.
+    let pure = run_system(&baselines::blendserve(), &offline);
+    println!(
+        "pure offline BlendServe: {:.0} tok/s over {:.1}s\n",
+        pure.result.throughput, pure.result.total_time
+    );
+
+    let mut table = Table::new(
+        "Elastic co-location: online load vs offline goodput (Llama-3-8B, 1x A100, simulated)",
+        &[
+            "online req/s",
+            "n online",
+            "SLO attain",
+            "TTFT mean",
+            "TTFT p99",
+            "queueing",
+            "offline tok/s",
+            "vs pure offline",
+            "retractions",
+        ],
+    );
+
+    for rate in [0.0, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        let mut cfg = baselines::blendserve();
+        cfg.colocate.online_rate = rate;
+        // ~30 s of live chat traffic at each rate.
+        let n_online = (rate * 30.0) as usize;
+        let online = online_stream(&cfg, TraceKind::ShareGpt, n_online, 7);
+        let rep = serve_colocated(&cfg, &offline, &online);
+        let vs_pure = rep.offline_throughput / pure.result.throughput;
+        table.row(&[
+            format!("{rate:.0}"),
+            rep.n_online.to_string(),
+            format!("{:.1}%", rep.slo_attainment * 100.0),
+            format!("{:.0}ms", rep.mean_ttft * 1e3),
+            format!("{:.0}ms", rep.p99_ttft * 1e3),
+            format!("{:.0}ms", rep.mean_queue_delay * 1e3),
+            format!("{:.0}", rep.offline_throughput),
+            format!("{:.1}%", vs_pure * 100.0),
+            rep.result.retractions.to_string(),
+        ]);
+        if rate == 0.0 {
+            assert!(
+                (vs_pure - 1.0).abs() < 0.01,
+                "rate-0 co-location drifted from pure offline: {vs_pure}"
+            );
+        }
+    }
+    println!("{}", table.to_text());
+    println!(
+        "(SLOs: HyGen-style, {}x the loaded-step baseline; policy: {}; \
+         reserve {:.0}% of KV)",
+        baselines::blendserve().colocate.slo_scale,
+        baselines::blendserve().colocate.policy,
+        baselines::blendserve().colocate.online_reserve * 100.0
+    );
+}

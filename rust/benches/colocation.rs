@@ -1,0 +1,67 @@
+//! Microbenchmarks for the co-location subsystem: online stream
+//! generation, the elastic admitter's per-admission hot path (it sits on
+//! the same §A.5 budget as the dual scanner), and the end-to-end
+//! co-located run at two online loads.
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::engine::sim::{Admitter, EngineView};
+use blendserve::perfmodel::PerfModel;
+use blendserve::scheduler::{DualScanner, ElasticAdmitter};
+use blendserve::server::{online_stream, serve_colocated};
+use blendserve::trace::synth::{synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::tree::PrefixTree;
+use blendserve::util::bench::{black_box, Bench};
+use std::time::Duration;
+
+fn main() {
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    println!("# colocation — online stream + elastic admitter + e2e");
+
+    let mut cfg = baselines::blendserve();
+    cfg.colocate.online_rate = 8.0;
+
+    b.run("online_stream/2000req", || {
+        black_box(online_stream(&cfg, TraceKind::ShareGpt, 2000, 7).len())
+    });
+
+    // Elastic admitter drain: every admission decision for a mixed pool.
+    let n = 10_000;
+    let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.25, n), &pm);
+    let mut tree = PrefixTree::build(&w);
+    tree.sample_outputs(0.01, 7);
+    tree.transform(&pm, 0.99);
+    let online = online_stream(&cfg, TraceKind::ShareGpt, 500, 7);
+    b.run(&format!("elastic_drain/{n}+500req"), || {
+        let items = ElasticAdmitter::online_items(&online, n as u32);
+        let mut ad = ElasticAdmitter::new(DualScanner::new(&tree), items, 0.1, 0.5);
+        let view = EngineView {
+            step: 1,
+            now: 1e9, // everything has arrived: worst-case queue contention
+            kv_capacity: 1e9,
+            kv_used: 0.0,
+            active_requests: 1,
+            used_left: 0.0,
+            used_right: 0.0,
+        };
+        let mut count = 0usize;
+        while ad.peek(&view).is_some() {
+            ad.pop();
+            count += 1;
+        }
+        black_box(count)
+    });
+
+    // End-to-end co-located runs.
+    let offline = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, 2_000), &pm);
+    for rate in [2.0, 16.0] {
+        let mut cfg = baselines::blendserve();
+        cfg.colocate.online_rate = rate;
+        let online = online_stream(&cfg, TraceKind::ShareGpt, (rate * 10.0) as usize, 7);
+        b.run(&format!("serve_colocated/2000off+{}on", online.len()), || {
+            black_box(serve_colocated(&cfg, &offline, &online).result.steps)
+        });
+    }
+}

@@ -36,6 +36,7 @@ fn main() {
             let mut s = DualScanner::new(&tree);
             let view = EngineView {
                 step: 1,
+                now: 0.0,
                 kv_capacity: 1e6,
                 kv_used: 0.0,
                 active_requests: 0,

@@ -171,6 +171,77 @@ impl std::fmt::Display for OrderPolicy {
     }
 }
 
+/// How online requests are folded into the offline blend schedule
+/// (DESIGN.md §Co-located-Serving).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColocationPolicy {
+    /// SLO-aware: arrival priority + KV headroom reserve + SLO-risk
+    /// preemption of offline work.
+    Elastic,
+    /// Arrival priority only — no reserve, no preemption.  The ablation
+    /// baseline for the elastic policy.
+    BestEffort,
+}
+
+impl ColocationPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ColocationPolicy::Elastic => "elastic",
+            ColocationPolicy::BestEffort => "best-effort",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "elastic" => Some(ColocationPolicy::Elastic),
+            "best-effort" => Some(ColocationPolicy::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ColocationPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Online/offline co-location knobs.  The default (`online_rate = 0`)
+/// means pure offline serving; every path then reduces to BlendServe
+/// exactly (`server::colocate` tests pin this down).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColocateConfig {
+    /// Mean online arrival rate, requests/s (0 = no online stream).
+    pub online_rate: f64,
+    /// SLO slack multiplier over the idle-replica baseline latency
+    /// (HyGen-style; 1.0 = tightest, larger = more relaxed).
+    pub slo_scale: f64,
+    pub policy: ColocationPolicy,
+    /// Fraction of KV capacity reserved for online bursts (Elastic only).
+    pub online_reserve: f64,
+    /// TTFT slack fraction that makes an admission urgent enough to
+    /// preempt offline work (Elastic only).
+    pub urgency: f64,
+    /// Burstiness of the arrival process: 1.0 = Poisson; > 1 = bursty
+    /// with this peak-to-calm rate ratio (mean rate stays `online_rate`).
+    pub burst_factor: f64,
+    /// Mean calm/burst phase length in seconds (used when bursty).
+    pub phase_secs: f64,
+}
+
+impl Default for ColocateConfig {
+    fn default() -> Self {
+        ColocateConfig {
+            online_rate: 0.0,
+            slo_scale: 5.0,
+            policy: ColocationPolicy::Elastic,
+            online_reserve: 0.1,
+            urgency: 0.5,
+            burst_factor: 1.0,
+            phase_secs: 30.0,
+        }
+    }
+}
+
 /// Scheduler knobs (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -247,6 +318,8 @@ pub struct SystemConfig {
     pub hardware: HardwareSpec,
     pub scheduler: SchedulerConfig,
     pub engine: EngineConfig,
+    /// Online/offline co-location knobs (inert at `online_rate = 0`).
+    pub colocate: ColocateConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -261,6 +334,7 @@ impl SystemConfig {
             hardware,
             scheduler: SchedulerConfig::default(),
             engine: EngineConfig::default(),
+            colocate: ColocateConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -317,6 +391,14 @@ impl SystemConfig {
         d.set_str("engine", "overlap", self.engine.overlap.name());
         d.set_bool("engine", "prefix_cache", self.engine.prefix_cache);
         d.set_bool("engine", "prefill_attn_flops", self.engine.prefill_attn_flops);
+
+        d.set_num("colocate", "online_rate", self.colocate.online_rate);
+        d.set_num("colocate", "slo_scale", self.colocate.slo_scale);
+        d.set_str("colocate", "policy", self.colocate.policy.name());
+        d.set_num("colocate", "online_reserve", self.colocate.online_reserve);
+        d.set_num("colocate", "urgency", self.colocate.urgency);
+        d.set_num("colocate", "burst_factor", self.colocate.burst_factor);
+        d.set_num("colocate", "phase_secs", self.colocate.phase_secs);
         d.to_string_pretty()
     }
 
@@ -377,11 +459,60 @@ impl SystemConfig {
             prefix_cache: b("engine", "prefix_cache")?,
             prefill_attn_flops: b("engine", "prefill_attn_flops")?,
         };
+        // The [colocate] section is optional (older config files predate
+        // co-located serving); absent keys fall back to the inert default.
+        let cdef = ColocateConfig::default();
+        let cnum = |key: &str, def: f64| -> Result<f64, TomlError> {
+            match d.get("colocate", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[colocate] {key}: expected number"))),
+            }
+        };
+        let policy = match d.get("colocate", "policy") {
+            None => cdef.policy,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| TomlError("[colocate] policy: expected string".into()))?;
+                ColocationPolicy::from_name(s)
+                    .ok_or_else(|| TomlError(format!("unknown colocation policy '{s}'")))?
+            }
+        };
+        let colocate = ColocateConfig {
+            online_rate: cnum("online_rate", cdef.online_rate)?,
+            slo_scale: cnum("slo_scale", cdef.slo_scale)?,
+            policy,
+            online_reserve: cnum("online_reserve", cdef.online_reserve)?,
+            urgency: cnum("urgency", cdef.urgency)?,
+            burst_factor: cnum("burst_factor", cdef.burst_factor)?,
+            phase_secs: cnum("phase_secs", cdef.phase_secs)?,
+        };
+        // Range-check here so a bad config file is a parse error, not a
+        // panic from the admitter/generator asserts downstream.
+        fn check(cond: bool, msg: &str) -> Result<(), TomlError> {
+            if cond {
+                Ok(())
+            } else {
+                Err(TomlError(format!("[colocate] {msg}")))
+            }
+        }
+        check(colocate.online_rate >= 0.0, "online_rate must be >= 0")?;
+        check(colocate.slo_scale > 0.0, "slo_scale must be > 0")?;
+        check(
+            (0.0..1.0).contains(&colocate.online_reserve),
+            "online_reserve must be in [0, 1)",
+        )?;
+        check((0.0..=1.0).contains(&colocate.urgency), "urgency must be in [0, 1]")?;
+        check(colocate.burst_factor >= 1.0, "burst_factor must be >= 1 (1 = Poisson)")?;
+        check(colocate.phase_secs > 0.0, "phase_secs must be > 0")?;
         Ok(SystemConfig {
             model,
             hardware,
             scheduler,
             engine,
+            colocate,
             gpus_per_replica: n("", "gpus_per_replica")? as usize,
             dp_replicas: n("", "dp_replicas")? as usize,
         })
@@ -462,6 +593,61 @@ mod tests {
         cfg.save(&path).unwrap();
         assert_eq!(SystemConfig::load(&path).unwrap(), cfg);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn colocate_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.colocate.online_rate = 3.5;
+        cfg.colocate.policy = ColocationPolicy::BestEffort;
+        cfg.colocate.burst_factor = 4.0;
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating co-location (no [colocate] section) must
+        // parse with the inert default.
+        let mut stripped = String::new();
+        let mut in_coloc = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[colocate]" {
+                in_coloc = true;
+                continue;
+            }
+            if in_coloc && line.trim().starts_with('[') {
+                in_coloc = false;
+            }
+            if !in_coloc {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.colocate, ColocateConfig::default());
+    }
+
+    #[test]
+    fn from_toml_rejects_out_of_range_colocate_values() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.colocate.online_reserve = 0.5;
+        let text = cfg.to_toml().replace("online_reserve = 0.5", "online_reserve = 1");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("slo_scale = 5", "slo_scale = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_colocation_policy() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("\"elastic\"", "\"psychic\"");
+        assert!(SystemConfig::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn colocation_policy_names_roundtrip() {
+        for p in [ColocationPolicy::Elastic, ColocationPolicy::BestEffort] {
+            assert_eq!(ColocationPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(ColocationPolicy::from_name("bogus"), None);
     }
 
     #[test]

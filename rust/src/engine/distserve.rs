@@ -145,11 +145,13 @@ mod tests {
 
     fn reqs(n: usize, p: usize, d: u32) -> Vec<SimRequest> {
         (0..n)
-            .map(|i| SimRequest {
-                id: i as u32,
-                prompt: Arc::new((0..p).map(|k| (i * p + k) as u32).collect()),
-                true_output: d,
-                est_output: d,
+            .map(|i| {
+                SimRequest::offline(
+                    i as u32,
+                    Arc::new((0..p).map(|k| (i * p + k) as u32).collect()),
+                    d,
+                    d,
+                )
             })
             .collect()
     }

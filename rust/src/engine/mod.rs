@@ -22,7 +22,8 @@ pub mod sim;
 
 pub use prefix_cache::RadixCache;
 pub use sim::{
-    Admitter, EngineView, SimEngine, SimRequest, SimResult, StaticOrder, StepSample,
+    Admitter, EngineView, RequestTiming, SimEngine, SimRequest, SimResult, StaticOrder,
+    StepSample,
 };
 
 use crate::config::OverlapMode;

@@ -27,9 +27,57 @@ pub struct SimRequest {
     pub true_output: u32,
     /// Scheduler-side estimate (§5.1), used only for admission accounting.
     pub est_output: u32,
+    /// Arrival time in seconds since batch start.  Offline pool requests
+    /// are all present at t = 0; online requests stream in and must not be
+    /// admitted earlier (enforced by time-gated admitters via
+    /// [`EngineView::now`], not by the engine).
+    pub arrival: f64,
+    /// Time-to-first-token SLO in seconds ([`f64::INFINITY`] = none).
+    pub ttft_slo: f64,
+    /// Time-per-output-token SLO in seconds ([`f64::INFINITY`] = none).
+    pub tpot_slo: f64,
+    /// Latency-sensitive online request: its prefill chunks take priority
+    /// over offline prefills and it is exempt from SLO-driven preemption.
+    pub is_online: bool,
 }
 
 impl SimRequest {
+    /// An offline pool request: present at t = 0, no latency SLOs.
+    pub fn offline(id: u32, prompt: Arc<Vec<u32>>, true_output: u32, est_output: u32) -> Self {
+        SimRequest {
+            id,
+            prompt,
+            true_output: true_output.max(1),
+            est_output: est_output.max(1),
+            arrival: 0.0,
+            ttft_slo: f64::INFINITY,
+            tpot_slo: f64::INFINITY,
+            is_online: false,
+        }
+    }
+
+    /// A latency-sensitive online request with per-request SLOs.
+    pub fn online(
+        id: u32,
+        prompt: Arc<Vec<u32>>,
+        true_output: u32,
+        est_output: u32,
+        arrival: f64,
+        ttft_slo: f64,
+        tpot_slo: f64,
+    ) -> Self {
+        SimRequest {
+            id,
+            prompt,
+            true_output: true_output.max(1),
+            est_output: est_output.max(1),
+            arrival,
+            ttft_slo,
+            tpot_slo,
+            is_online: true,
+        }
+    }
+
     pub fn input_len(&self) -> usize {
         self.prompt.len()
     }
@@ -46,12 +94,7 @@ impl SimRequest {
         w.requests
             .iter()
             .zip(est)
-            .map(|(r, &e)| SimRequest {
-                id: r.id,
-                prompt: r.prompt.clone(),
-                true_output: r.output_len.max(1),
-                est_output: e.max(1),
-            })
+            .map(|(r, &e)| SimRequest::offline(r.id, r.prompt.clone(), r.output_len, e))
             .collect()
     }
 }
@@ -60,6 +103,9 @@ impl SimRequest {
 #[derive(Clone, Copy, Debug)]
 pub struct EngineView {
     pub step: u64,
+    /// Simulated wall-clock time (s since batch start) — lets time-gated
+    /// admitters hold back online requests that have not arrived yet.
+    pub now: f64,
     pub kv_capacity: f64,
     pub kv_used: f64,
     pub active_requests: usize,
@@ -76,6 +122,20 @@ pub trait Admitter {
     fn pop(&mut self);
     /// All requests handed out?
     fn exhausted(&self) -> bool;
+    /// Earliest arrival time of a request this policy is still holding
+    /// back, if any.  When the engine runs dry (nothing active, `peek`
+    /// returns `None`, not exhausted) it advances its clock here instead
+    /// of deadlocking.  Purely-offline policies keep the default `None`.
+    fn next_arrival(&self) -> Option<f64> {
+        None
+    }
+    /// True when the pending candidate is latency-critical (an online
+    /// request whose TTFT deadline is at risk): the engine may then
+    /// preempt offline work to make room instead of queueing the
+    /// admission behind memory.
+    fn urgent(&mut self, _view: &EngineView) -> bool {
+        false
+    }
 }
 
 /// Admit requests in a fixed order (FCFS / DFS / Random baselines).
@@ -115,6 +175,32 @@ pub struct StepSample {
     pub kv_used: f64,
 }
 
+/// Per-request latency record (all timestamps in simulated seconds since
+/// batch start; `NAN` where the event never happened).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestTiming {
+    pub id: u32,
+    pub arrival: f64,
+    /// First admission into the running batch.
+    pub admit: f64,
+    /// First output token produced (TTFT reference point).
+    pub first_token: f64,
+    pub finish: f64,
+    pub is_online: bool,
+}
+
+impl RequestTiming {
+    /// Time-to-first-token (queueing + prefill).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Queueing delay before first admission.
+    pub fn queue_delay(&self) -> f64 {
+        self.admit - self.arrival
+    }
+}
+
 /// Simulation outcome.
 #[derive(Clone, Debug, Default)]
 pub struct SimResult {
@@ -123,6 +209,25 @@ pub struct SimResult {
     /// Σ input+output tokens of all completed requests.
     pub total_tokens: u64,
     pub throughput: f64,
+    /// Σ input+output tokens of completed *offline* requests (the
+    /// co-location goodput numerator; equals `total_tokens` when the
+    /// workload has no online requests).
+    pub offline_tokens: u64,
+    /// Offline goodput: `offline_tokens / total_time`.
+    pub offline_throughput: f64,
+    /// Number of online (SLO-carrying) requests served.
+    pub n_online: usize,
+    /// Online requests that met both their TTFT and TPOT SLOs.
+    pub slo_attained: usize,
+    /// `slo_attained / n_online` (1.0 when there are no online requests).
+    pub slo_attainment: f64,
+    /// Mean / p99 time-to-first-token over online requests (0 when none).
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    /// Mean admission queueing delay over online requests (0 when none).
+    pub mean_queue_delay: f64,
+    /// Per-request latency records, indexed like the engine's request set.
+    pub timings: Vec<RequestTiming>,
     /// Prefill tokens served from the prefix cache at admission.
     pub hit_tokens: u64,
     /// Total prompt tokens over all admissions (excluding retraction
@@ -186,6 +291,40 @@ struct Active {
     relocated: bool,
 }
 
+/// Retract `active[i]` (vLLM-style preemption): undo its memory and
+/// side accounting and queue it for priority re-admission.  Shared by the
+/// memory-pressure path and SLO-driven offline preemption.
+#[allow(clippy::too_many_arguments)]
+fn retract_one(
+    i: usize,
+    active: &mut Vec<Active>,
+    requests: &[SimRequest],
+    by_id: &HashMap<u32, usize>,
+    cache: &mut RadixCache,
+    use_cache: bool,
+    decode_ctx_sum: &mut f64,
+    private_tokens: &mut f64,
+    used_left: &mut f64,
+    used_right: &mut f64,
+    retract_queue: &mut Vec<u32>,
+) {
+    let a = active.remove(i);
+    let idx = by_id[&a.req];
+    let r = &requests[idx];
+    if use_cache {
+        cache.release(&r.prompt, a.pinned_len);
+    }
+    if a.decoding {
+        *decode_ctx_sum -= (r.input_len() + a.decoded as usize) as f64;
+    }
+    *private_tokens -= a.private_prompt + a.decoded as f64;
+    match a.side {
+        Side::Left => *used_left -= a.charge,
+        Side::Right => *used_right -= a.charge,
+    }
+    retract_queue.push(a.req);
+}
+
 /// The step simulator.
 pub struct SimEngine {
     pm: PerfModel,
@@ -228,6 +367,18 @@ impl SimEngine {
         let mut active: Vec<Active> = Vec::new();
         // Queue of retracted requests: re-admitted with priority.
         let mut retract_queue: Vec<u32> = Vec::new();
+        let mut timings: Vec<RequestTiming> = self
+            .requests
+            .iter()
+            .map(|r| RequestTiming {
+                id: r.id,
+                arrival: r.arrival,
+                admit: f64::NAN,
+                first_token: f64::NAN,
+                finish: f64::NAN,
+                is_online: r.is_online,
+            })
+            .collect();
         // Requests currently prefilling, FIFO (indices into `active`).
         let mut clock = 0.0f64;
         let mut step = 0u64;
@@ -274,30 +425,68 @@ impl SimEngine {
                 let committed = private_tokens + self.cache.pinned_tokens() as f64;
                 let view = EngineView {
                     step,
+                    now: clock,
                     kv_capacity: self.kv_capacity,
                     kv_used: committed,
                     active_requests: active.len(),
                     used_left,
                     used_right,
                 };
-                // Retracted requests first.
-                let (req, side, readmission) = if let Some(&r) = retract_queue.first() {
-                    (r, Side::Left, true)
+                // An SLO-critical online candidate jumps even the
+                // retraction queue; otherwise retracted requests first.
+                let urgent = admitter.urgent(&view);
+                let (req, side, readmission) = if !urgent && !retract_queue.is_empty() {
+                    (retract_queue[0], Side::Left, true)
                 } else {
                     match admitter.peek(&view) {
-                        None => break,
                         Some((r, s)) => (r, s, false),
+                        None => match retract_queue.first() {
+                            Some(&r) => (r, Side::Left, true),
+                            None => break,
+                        },
                     }
                 };
                 let idx = self.by_id[&req];
                 let est = self.requests[idx].est_kv_tokens();
                 if committed + est > self.kv_capacity && !active.is_empty() {
+                    // SLO-critical admission under memory pressure:
+                    // retract the newest *offline* request to make room
+                    // (its progress is cheap to redo; the online TTFT
+                    // deadline is not).
+                    if urgent && !readmission {
+                        let victim = active
+                            .iter()
+                            .rposition(|a| !self.requests[self.by_id[&a.req]].is_online);
+                        match victim {
+                            Some(v) if active.len() > 1 => {
+                                retract_one(
+                                    v,
+                                    &mut active,
+                                    &self.requests,
+                                    &self.by_id,
+                                    &mut self.cache,
+                                    self.cfg.prefix_cache,
+                                    &mut decode_ctx_sum,
+                                    &mut private_tokens,
+                                    &mut used_left,
+                                    &mut used_right,
+                                    &mut retract_queue,
+                                );
+                                result.retractions += 1;
+                                continue; // re-evaluate with freed memory
+                            }
+                            _ => break, // nothing preemptible
+                        }
+                    }
                     break; // wait for memory
                 }
                 if readmission {
                     retract_queue.remove(0);
                 } else {
                     admitter.pop();
+                }
+                if timings[idx].admit.is_nan() {
+                    timings[idx].admit = clock;
                 }
                 let prompt = self.requests[idx].prompt.clone();
                 let hit = if self.cfg.prefix_cache {
@@ -346,6 +535,7 @@ impl SimEngine {
                 } else {
                     let view = EngineView {
                         step,
+                        now: clock,
                         kv_capacity: self.kv_capacity,
                         kv_used: private_tokens + self.cache.pinned_tokens() as f64,
                         active_requests: 0,
@@ -357,10 +547,24 @@ impl SimEngine {
                             admitter.pop();
                             (r, s)
                         }
-                        None => break, // admitter empty but requests missing: bail
+                        None => {
+                            // Time-gated admitter, nothing arrived yet:
+                            // idle-skip the clock to the next arrival and
+                            // retry admission.
+                            if let Some(t) = admitter.next_arrival() {
+                                if t.is_finite() && t > clock {
+                                    clock = t;
+                                    continue;
+                                }
+                            }
+                            break; // admitter empty but requests missing: bail
+                        }
                     }
                 };
                 let idx = self.by_id[&req];
+                if timings[idx].admit.is_nan() {
+                    timings[idx].admit = clock;
+                }
                 let prompt = self.requests[idx].prompt.clone();
                 let hit = if self.cfg.prefix_cache { self.cache.lookup(&prompt) } else { 0 };
                 let (_, pinned_len) = if self.cfg.prefix_cache {
@@ -426,21 +630,27 @@ impl SimEngine {
             }
             let mut prefill_tokens = 0usize;
             let mut t_comp_attn = 0.0f64;
-            let mut decode_tokens = 0usize;
-            for a in active.iter_mut() {
-                if a.decoding {
-                    decode_tokens += 1;
-                    continue;
+            let decode_tokens = active.iter().filter(|a| a.decoding).count();
+            // Online (latency-critical) prefills consume the chunk budget
+            // first; offline prefills backfill whatever remains.  With no
+            // online requests pass 0 matches nothing and the schedule is
+            // identical to the plain single-pass loop.
+            for pass in 0..2 {
+                for a in active.iter_mut() {
+                    if a.decoding || chunk_left == 0 {
+                        continue;
+                    }
+                    let req = &self.requests[self.by_id[&a.req]];
+                    if (pass == 0) != req.is_online {
+                        continue;
+                    }
+                    let p = req.input_len();
+                    let take = (p - a.prefill_pos).min(chunk_left);
+                    t_comp_attn += self.pm.comp_prefill_attn(take, a.prefill_pos + take);
+                    a.prefill_pos += take;
+                    chunk_left -= take;
+                    prefill_tokens += take;
                 }
-                let p = self.requests[self.by_id[&a.req]].input_len();
-                if chunk_left == 0 {
-                    continue;
-                }
-                let take = (p - a.prefill_pos).min(chunk_left);
-                t_comp_attn += self.pm.comp_prefill_attn(take, a.prefill_pos + take);
-                a.prefill_pos += take;
-                chunk_left -= take;
-                prefill_tokens += take;
             }
 
             // ---- step time ----
@@ -469,6 +679,9 @@ impl SimEngine {
                     active[i].decoded += 1;
                     decode_ctx_sum += 1.0;
                     private_tokens += 1.0;
+                    if active[i].decoded == 1 && timings[idx].first_token.is_nan() {
+                        timings[idx].first_token = clock;
+                    }
                     // §5.4 online adaptation: underestimated output length
                     // relocates the request's charge Left -> Right.
                     if self.sched.online_adapt
@@ -495,6 +708,10 @@ impl SimEngine {
                             Side::Right => used_right -= a.charge,
                         }
                         result.total_tokens += (p as u64) + r.true_output as u64;
+                        if !r.is_online {
+                            result.offline_tokens += (p as u64) + r.true_output as u64;
+                        }
+                        timings[idx].finish = clock;
                         finished += 1;
                         continue;
                     }
@@ -511,22 +728,27 @@ impl SimEngine {
                 self.cache.evict_to(target.max(self.cache.pinned_tokens()));
                 let committed = private_tokens + self.cache.pinned_tokens() as f64;
                 if committed > self.kv_capacity && active.len() > 1 {
-                    // Retract the newest request (vLLM-style preemption).
-                    let a = active.pop().unwrap();
-                    let idx = self.by_id[&a.req];
-                    let r = &self.requests[idx];
-                    if self.cfg.prefix_cache {
-                        self.cache.release(&r.prompt, a.pinned_len);
-                    }
-                    if a.decoding {
-                        decode_ctx_sum -= (r.input_len() + a.decoded as usize) as f64;
-                    }
-                    private_tokens -= a.private_prompt + a.decoded as f64;
-                    match a.side {
-                        Side::Left => used_left -= a.charge,
-                        Side::Right => used_right -= a.charge,
-                    }
-                    retract_queue.push(a.req);
+                    // Retract the newest request (vLLM-style preemption),
+                    // preferring offline work so online SLOs survive
+                    // memory pressure.  All-offline batches pick the very
+                    // newest, exactly as before.
+                    let victim = active
+                        .iter()
+                        .rposition(|a| !self.requests[self.by_id[&a.req]].is_online)
+                        .unwrap_or(active.len() - 1);
+                    retract_one(
+                        victim,
+                        &mut active,
+                        &self.requests,
+                        &self.by_id,
+                        &mut self.cache,
+                        self.cfg.prefix_cache,
+                        &mut decode_ctx_sum,
+                        &mut private_tokens,
+                        &mut used_left,
+                        &mut used_right,
+                        &mut retract_queue,
+                    );
                     result.retractions += 1;
                 }
             }
@@ -564,6 +786,50 @@ impl SimEngine {
         } else {
             0.0
         };
+        result.offline_throughput = if clock > 0.0 {
+            result.offline_tokens as f64 / clock
+        } else {
+            0.0
+        };
+
+        // ---- online SLO attainment (co-location accounting) ----
+        let mut ttfts = Vec::new();
+        let mut delays = Vec::new();
+        let mut attained = 0usize;
+        let mut n_online = 0usize;
+        for (i, t) in timings.iter().enumerate() {
+            let r = &self.requests[i];
+            if !r.is_online {
+                continue;
+            }
+            n_online += 1;
+            let ttft = t.ttft();
+            if !ttft.is_finite() {
+                continue; // never produced a token (defensive bail path)
+            }
+            ttfts.push(ttft);
+            delays.push(t.queue_delay());
+            let d = r.true_output;
+            let tpot = if d > 1 {
+                (t.finish - t.first_token) / (d - 1) as f64
+            } else {
+                0.0
+            };
+            if ttft <= r.ttft_slo && tpot <= r.tpot_slo {
+                attained += 1;
+            }
+        }
+        result.n_online = n_online;
+        result.slo_attained = attained;
+        result.slo_attainment = if n_online > 0 {
+            attained as f64 / n_online as f64
+        } else {
+            1.0
+        };
+        result.mean_ttft = crate::util::stats::mean(&ttfts);
+        result.p99_ttft = crate::util::stats::percentile(&ttfts, 99.0);
+        result.mean_queue_delay = crate::util::stats::mean(&delays);
+        result.timings = timings;
         result
     }
 }
@@ -590,13 +856,13 @@ mod tests {
 
     fn mk_reqs(n: usize, p: usize, d: u32, base_tok: u32) -> Vec<SimRequest> {
         (0..n)
-            .map(|i| SimRequest {
-                id: i as u32,
-                prompt: Arc::new(
-                    (0..p).map(|k| base_tok + (i * p + k) as u32).collect(),
-                ),
-                true_output: d,
-                est_output: d,
+            .map(|i| {
+                SimRequest::offline(
+                    i as u32,
+                    Arc::new((0..p).map(|k| base_tok + (i * p + k) as u32).collect()),
+                    d,
+                    d,
+                )
             })
             .collect()
     }
@@ -618,12 +884,7 @@ mod tests {
         // 10 identical prompts: 9 should fully hit.
         let prompt: Arc<Vec<u32>> = Arc::new((0..200u32).collect());
         let reqs: Vec<SimRequest> = (0..10)
-            .map(|i| SimRequest {
-                id: i,
-                prompt: prompt.clone(),
-                true_output: 20,
-                est_output: 20,
-            })
+            .map(|i| SimRequest::offline(i, prompt.clone(), 20, 20))
             .collect();
         let mut e = engine(reqs);
         let mut ad = StaticOrder::new((0..10).collect());
@@ -637,12 +898,7 @@ mod tests {
     fn no_prefix_cache_means_no_hits() {
         let prompt: Arc<Vec<u32>> = Arc::new((0..100u32).collect());
         let reqs: Vec<SimRequest> = (0..5)
-            .map(|i| SimRequest {
-                id: i,
-                prompt: prompt.clone(),
-                true_output: 10,
-                est_output: 10,
-            })
+            .map(|i| SimRequest::offline(i, prompt.clone(), 10, 10))
             .collect();
         let mut cfg = EngineConfig::default();
         cfg.prefix_cache = false;
@@ -659,15 +915,13 @@ mod tests {
         let shared: Arc<Vec<u32>> = Arc::new((0..1000u32).collect());
         let mk = |unique: bool| -> Vec<SimRequest> {
             (0..30u32)
-                .map(|i| SimRequest {
-                    id: i,
-                    prompt: if unique {
+                .map(|i| {
+                    let prompt = if unique {
                         Arc::new((0..1000u32).map(|k| 100_000 + i * 1000 + k).collect())
                     } else {
                         shared.clone()
-                    },
-                    true_output: 10,
-                    est_output: 10,
+                    };
+                    SimRequest::offline(i, prompt, 10, 10)
                 })
                 .collect()
         };
@@ -739,6 +993,118 @@ mod tests {
         assert!(ds.len() <= 17);
         // Total time preserved approximately by mean*count.
         assert!(!ds.is_empty());
+    }
+
+    #[test]
+    fn offline_run_records_timings_and_trivial_slo() {
+        let reqs = mk_reqs(15, 80, 30, 0);
+        let mut e = engine(reqs);
+        let r = e.run(&mut StaticOrder::new((0..15).collect()));
+        // No online requests: attainment is vacuously perfect and all
+        // tokens are offline goodput.
+        assert_eq!(r.n_online, 0);
+        assert_eq!(r.slo_attainment, 1.0);
+        assert_eq!(r.offline_tokens, r.total_tokens);
+        assert!((r.offline_throughput - r.throughput).abs() < 1e-9);
+        assert_eq!(r.timings.len(), 15);
+        for t in &r.timings {
+            assert!(!t.is_online);
+            assert_eq!(t.arrival, 0.0);
+            assert!(t.admit.is_finite());
+            assert!(t.first_token >= t.admit, "first token before admit");
+            assert!(t.finish >= t.first_token);
+        }
+    }
+
+    #[test]
+    fn online_request_slo_accounting() {
+        // One offline request plus one online request arriving mid-run
+        // through a time-gated admitter: TTFT must be measured from the
+        // online arrival, not from t=0.
+        struct Gated {
+            order: Vec<(u32, f64)>, // (request, arrival)
+            pos: usize,
+        }
+        impl Admitter for Gated {
+            fn peek(&mut self, view: &EngineView) -> Option<(u32, Side)> {
+                let &(r, at) = self.order.get(self.pos)?;
+                if at <= view.now {
+                    Some((r, Side::Left))
+                } else {
+                    None
+                }
+            }
+            fn pop(&mut self) {
+                self.pos += 1;
+            }
+            fn exhausted(&self) -> bool {
+                self.pos >= self.order.len()
+            }
+            fn next_arrival(&self) -> Option<f64> {
+                self.order.get(self.pos).map(|&(_, at)| at)
+            }
+        }
+        let arrival = 0.5;
+        let reqs = vec![
+            SimRequest::offline(0, Arc::new((0..400).collect()), 2000, 2000),
+            SimRequest::online(
+                1,
+                Arc::new((10_000..10_200).collect()),
+                20,
+                20,
+                arrival,
+                f64::INFINITY,
+                f64::INFINITY,
+            ),
+        ];
+        let mut e = engine(reqs);
+        let mut ad = Gated { order: vec![(0, 0.0), (1, arrival)], pos: 0 };
+        let r = e.run(&mut ad);
+        assert_eq!(r.n_online, 1);
+        assert_eq!(r.slo_attained, 1); // infinite SLOs always met
+        let t = r.timings.iter().find(|t| t.is_online).unwrap();
+        assert_eq!(t.arrival, arrival);
+        assert!(t.admit >= arrival, "admitted before arrival");
+        assert!(r.mean_ttft > 0.0 && r.mean_ttft.is_finite());
+        assert_eq!(r.offline_tokens, 400 + 2000);
+        assert_eq!(r.total_tokens, 400 + 2000 + 200 + 20);
+    }
+
+    #[test]
+    fn idle_engine_jumps_clock_to_next_arrival() {
+        // A single online request arriving at t=3: the engine must
+        // idle-skip to the arrival rather than deadlock, and total time
+        // must include the idle gap.
+        struct LateOne {
+            done: bool,
+        }
+        impl Admitter for LateOne {
+            fn peek(&mut self, view: &EngineView) -> Option<(u32, Side)> {
+                (!self.done && view.now >= 3.0).then_some((0, Side::Left))
+            }
+            fn pop(&mut self) {
+                self.done = true;
+            }
+            fn exhausted(&self) -> bool {
+                self.done
+            }
+            fn next_arrival(&self) -> Option<f64> {
+                (!self.done).then_some(3.0)
+            }
+        }
+        let reqs = vec![SimRequest::online(
+            0,
+            Arc::new((0..50).collect()),
+            5,
+            5,
+            3.0,
+            f64::INFINITY,
+            f64::INFINITY,
+        )];
+        let mut e = engine(reqs);
+        let r = e.run(&mut LateOne { done: false });
+        assert_eq!(r.total_tokens, 55);
+        assert!(r.total_time >= 3.0, "idle gap lost: {}", r.total_time);
     }
 
     #[test]

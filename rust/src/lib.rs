@@ -8,8 +8,10 @@
 //!   tree ([`tree`]), the dual-scanner request scheduler ([`scheduler`]), a
 //!   NanoFlow-style overlapping execution engine ([`engine`]), workload
 //!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
-//!   tensor parallel deployment ([`parallel`]) and the offline batch-serving
-//!   frontend ([`server`]).
+//!   tensor parallel deployment ([`parallel`]) and the serving frontends
+//!   ([`server`]) — the offline batch API plus online/offline co-located
+//!   serving with SLO-aware elastic admission (DESIGN.md
+//!   §Co-located-Serving).
 //! - **L2** — a small Llama-style JAX model (`python/compile/model.py`),
 //!   AOT-lowered once to HLO text.
 //! - **L1** — a Pallas *blended attention* kernel executing ragged
@@ -36,6 +38,8 @@ pub mod util;
 // module (the build image bundles the library).
 pub mod runtime;
 
-pub use config::{HardwareSpec, ModelSpec, SchedulerConfig, SystemConfig};
+pub use config::{
+    ColocateConfig, ColocationPolicy, HardwareSpec, ModelSpec, SchedulerConfig, SystemConfig,
+};
 pub use perfmodel::PerfModel;
 pub use trace::{Request, Workload};

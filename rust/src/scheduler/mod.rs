@@ -1,12 +1,15 @@
 //! Request scheduling (§5): ordering policies and the dual-scanner
-//! admission algorithm, plus the end-to-end driver that wires
+//! admission algorithm, the SLO-aware elastic admitter for co-located
+//! online/offline serving, plus the end-to-end driver that wires
 //! workload → prefix tree → transform → admitter → engine.
 
 pub mod dual_scan;
+pub mod elastic;
 pub mod runner;
 
 pub use dual_scan::DualScanner;
-pub use runner::{run_system, RunOutput};
+pub use elastic::{ElasticAdmitter, OnlineItem};
+pub use runner::{prepare_blendserve, run_system, RunOutput};
 
 use crate::config::OrderPolicy;
 use crate::tree::PrefixTree;

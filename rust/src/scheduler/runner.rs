@@ -32,33 +32,47 @@ pub struct RunOutput {
     pub n_sampled: usize,
 }
 
-/// Run one system configuration over a workload.
-pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
+/// The BlendServe preprocessing pipeline: perf model + prefix tree with
+/// §5.1 output sampling and the §5.2 transform applied.  Shared by
+/// [`run_system`] and `server::colocate` so the "rate-0 co-location is
+/// bit-identical to pure offline" invariant cannot drift between the two
+/// paths.  Returns `(pm, tree, n_sampled, transform_splits)`.
+pub fn prepare_blendserve(
+    cfg: &SystemConfig,
+    workload: &Workload,
+) -> (PerfModel, PrefixTree, usize, usize) {
     let mut pm = PerfModel::new(
         cfg.model.clone(),
         cfg.hardware.clone(),
         cfg.gpus_per_replica,
     );
     pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
-
-    // Shared preprocessing: the prefix tree over all prompts.
     let mut tree = PrefixTree::build(workload);
+    let n = tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
+    let stats = tree.transform(&pm, cfg.scheduler.split_sharing_floor);
+    (pm, tree, n, stats.splits)
+}
 
+/// Run one system configuration over a workload.
+pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
     // Baselines schedule with no output-length knowledge; BlendServe
     // samples.  (Estimates only affect admission accounting + ordering.)
-    let (n_sampled, transform_splits) = match cfg.scheduler.order {
-        OrderPolicy::BlendServe => {
-            let n = tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
-            let stats = tree.transform(&pm, cfg.scheduler.split_sharing_floor);
-            (n, stats.splits)
-        }
+    let (pm, tree, n_sampled, transform_splits) = match cfg.scheduler.order {
+        OrderPolicy::BlendServe => prepare_blendserve(cfg, workload),
         _ => {
+            let mut pm = PerfModel::new(
+                cfg.model.clone(),
+                cfg.hardware.clone(),
+                cfg.gpus_per_replica,
+            );
+            pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
+            let mut tree = PrefixTree::build(workload);
             // Baselines still need *some* estimate for admission
             // accounting; use the same sampling mechanism (they all run
             // continuous batching with KV-aware admission in practice).
             let n = tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
             tree.recompute_aggregates(&pm);
-            (n, 0)
+            (pm, tree, n, 0)
         }
     };
 

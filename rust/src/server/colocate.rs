@@ -1,0 +1,278 @@
+//! Online/offline co-located serving entry point
+//! (DESIGN.md §Co-located-Serving).
+//!
+//! [`serve_colocated`] runs one replica serving BlendServe's offline blend
+//! schedule *and* an open stream of latency-sensitive online requests:
+//! the offline pool goes through the standard §5 pipeline (output-length
+//! sampling → tree transform → dual scanner) and the online stream is
+//! folded in by the [`ElasticAdmitter`], which admits arrived online
+//! requests immediately, reserves KV headroom for bursts, preempts
+//! offline work when TTFT deadlines are at risk, and backfills offline
+//! requests — in dual-scanner order, so prefix-tree DFS locality is
+//! preserved — whenever the online load ebbs.
+//!
+//! With an empty online stream the whole path is bit-identical to
+//! [`run_system`](crate::scheduler::run_system) with the BlendServe
+//! config (pinned by tests here and by `examples/colocated_serving.rs`).
+
+use crate::config::{ColocationPolicy, SystemConfig};
+use crate::engine::sim::{SimEngine, SimRequest, SimResult};
+use crate::perfmodel::PerfModel;
+use crate::scheduler::{prepare_blendserve, DualScanner, ElasticAdmitter};
+use crate::trace::online::{generate_online, ArrivalProcess, OnlineSpec, OnlineWorkload};
+use crate::trace::{TraceKind, Workload};
+
+/// Outcome of one co-located run.
+#[derive(Clone, Debug)]
+pub struct ColocateReport {
+    pub result: SimResult,
+    pub n_offline: usize,
+    pub n_online: usize,
+    /// Offline goodput in tokens/s (the co-location cost metric).
+    pub offline_throughput: f64,
+    /// Fraction of online requests that met both TTFT and TPOT SLOs.
+    pub slo_attainment: f64,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_queue_delay: f64,
+}
+
+/// Build the online stream described by `cfg.colocate`: `n_requests`
+/// requests at the configured mean rate/burstiness with SLOs scaled by
+/// `slo_scale`.  Returns an empty stream when the rate is zero.
+pub fn online_stream(
+    cfg: &SystemConfig,
+    trace: TraceKind,
+    n_requests: usize,
+    seed: u64,
+) -> OnlineWorkload {
+    let c = &cfg.colocate;
+    if c.online_rate <= 0.0 || n_requests == 0 {
+        return OnlineWorkload::default();
+    }
+    let arrivals = if c.burst_factor > 1.0 {
+        ArrivalProcess::bursty_with_mean(c.online_rate, c.burst_factor, c.phase_secs)
+    } else {
+        ArrivalProcess::Poisson { rate: c.online_rate }
+    };
+    let pm = PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+    generate_online(
+        &OnlineSpec::new(trace, c.online_rate, n_requests)
+            .with_arrivals(arrivals)
+            .with_slo_scale(c.slo_scale)
+            .with_seed(seed),
+        &pm,
+    )
+}
+
+/// Serve `offline` and `online` together on one replica under
+/// `cfg.colocate.policy`.  The offline pool uses the BlendServe scheduler
+/// regardless of `cfg.scheduler.order` (co-location presumes the blend
+/// schedule; the baselines exist as colocation *policies*, not orders).
+pub fn serve_colocated(
+    cfg: &SystemConfig,
+    offline: &Workload,
+    online: &OnlineWorkload,
+) -> ColocateReport {
+    // Offline preprocessing: the exact same pipeline as run_system's
+    // BlendServe path (shared helper, so the two cannot drift).
+    let (pm, tree, _, _) = prepare_blendserve(cfg, offline);
+
+    // Combined engine request set: offline ids keep their workload ids,
+    // online ids follow densely.  Online output lengths are served to the
+    // admission accountant as exact estimates — live traffic would use a
+    // §5.1-style predictor, which only shifts admission accounting, not
+    // SLO measurement.
+    let mut requests = SimRequest::from_workload(offline, &tree.est_output);
+    // Workload::new re-densifies ids, so max+1 == len for every normal
+    // pool; computing it defends against hand-built workloads with
+    // sparse ids (a collision would silently corrupt the engine's
+    // id -> index map).
+    let id_base = requests.iter().map(|r| r.id).max().map_or(0, |m| m + 1);
+    for (i, r) in online.requests.iter().enumerate() {
+        requests.push(SimRequest::online(
+            id_base + i as u32,
+            r.request.prompt.clone(),
+            r.request.output_len,
+            r.request.output_len,
+            r.arrival,
+            r.ttft_slo,
+            r.tpot_slo,
+        ));
+    }
+
+    let mut sched = cfg.scheduler.clone();
+    sched.expected_sharing = tree.sharing_ratio();
+    let mut engine = SimEngine::new(pm, cfg.engine.clone(), sched, requests);
+
+    let (reserve, urgency) = match cfg.colocate.policy {
+        ColocationPolicy::Elastic => (cfg.colocate.online_reserve, cfg.colocate.urgency),
+        ColocationPolicy::BestEffort => (0.0, 0.0),
+    };
+    let items = ElasticAdmitter::online_items(online, id_base);
+    let mut admitter = ElasticAdmitter::new(DualScanner::new(&tree), items, reserve, urgency);
+    let result = engine.run(&mut admitter);
+
+    ColocateReport {
+        n_offline: offline.len(),
+        n_online: online.len(),
+        offline_throughput: result.offline_throughput,
+        slo_attainment: result.slo_attainment,
+        mean_ttft: result.mean_ttft,
+        p99_ttft: result.p99_ttft,
+        mean_queue_delay: result.mean_queue_delay,
+        result,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::scheduler::run_system;
+    use crate::trace::synth::{synthesize, SynthSpec};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(
+            crate::config::presets::llama3_8b(),
+            crate::config::presets::a100_80gb(),
+            1,
+        )
+    }
+
+    fn offline_pool(n: usize) -> Workload {
+        synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n), &pm())
+    }
+
+    fn cfg_with_rate(rate: f64) -> SystemConfig {
+        let mut cfg = baselines::blendserve();
+        cfg.colocate.online_rate = rate;
+        cfg
+    }
+
+    #[test]
+    fn zero_rate_reproduces_pure_offline_blendserve_exactly() {
+        let w = offline_pool(800);
+        let cfg = cfg_with_rate(0.0);
+        let colocated = serve_colocated(&cfg, &w, &OnlineWorkload::default());
+        let pure = run_system(&cfg, &w);
+        // Same preprocessing, transparent admitter, same engine: the two
+        // schedules must be bit-identical, not merely close.
+        assert_eq!(colocated.result.steps, pure.result.steps);
+        assert_eq!(colocated.result.total_time, pure.result.total_time);
+        assert_eq!(colocated.result.total_tokens, pure.result.total_tokens);
+        assert_eq!(colocated.result.hit_tokens, pure.result.hit_tokens);
+        assert_eq!(colocated.slo_attainment, 1.0);
+        assert_eq!(colocated.n_online, 0);
+    }
+
+    #[test]
+    fn low_online_load_attains_slo_target() {
+        let w = offline_pool(600);
+        let cfg = cfg_with_rate(2.0);
+        let online = online_stream(&cfg, TraceKind::ShareGpt, 30, 7);
+        let rep = serve_colocated(&cfg, &w, &online);
+        assert_eq!(rep.n_online, 30);
+        assert_eq!(rep.result.n_online, 30);
+        assert!(
+            rep.slo_attainment >= 0.9,
+            "low-load SLO attainment {}",
+            rep.slo_attainment
+        );
+        assert!(rep.mean_ttft > 0.0 && rep.mean_ttft.is_finite());
+        assert!(rep.p99_ttft >= rep.mean_ttft);
+    }
+
+    #[test]
+    fn offline_throughput_degrades_monotonically_with_online_rate() {
+        let w = offline_pool(600);
+        let mut last = f64::INFINITY;
+        for rate in [0.0, 4.0, 16.0] {
+            let cfg = cfg_with_rate(rate);
+            let n_online = (rate * 8.0) as usize; // ~8 s of traffic
+            let online = online_stream(&cfg, TraceKind::ShareGpt, n_online, 11);
+            let rep = serve_colocated(&cfg, &w, &online);
+            // Offline goodput must not *increase* with more online load
+            // (tiny tolerance for step-quantization).
+            assert!(
+                rep.offline_throughput <= last * 1.005,
+                "offline tput {} at rate {rate} vs previous {last}",
+                rep.offline_throughput
+            );
+            // All offline tokens still served.
+            assert_eq!(rep.result.offline_tokens, w.total_tokens());
+            last = rep.offline_throughput;
+        }
+    }
+
+    #[test]
+    fn colocated_schedule_is_deterministic_under_fixed_seed() {
+        let w = offline_pool(400);
+        let mut cfg = cfg_with_rate(6.0);
+        cfg.colocate.burst_factor = 4.0;
+        cfg.colocate.phase_secs = 2.0;
+        let run = || {
+            let online = online_stream(&cfg, TraceKind::ShareGpt, 40, 13);
+            serve_colocated(&cfg, &w, &online)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.result.total_time, b.result.total_time);
+        assert_eq!(a.result.steps, b.result.steps);
+        assert_eq!(a.slo_attainment, b.slo_attainment);
+        assert_eq!(a.mean_ttft, b.mean_ttft);
+        assert_eq!(a.result.retractions, b.result.retractions);
+    }
+
+    #[test]
+    fn tokens_conserved_across_both_streams() {
+        let w = offline_pool(300);
+        let cfg = cfg_with_rate(8.0);
+        let online = online_stream(&cfg, TraceKind::ShareGpt, 25, 3);
+        let rep = serve_colocated(&cfg, &w, &online);
+        assert_eq!(
+            rep.result.total_tokens,
+            w.total_tokens() + online.total_tokens()
+        );
+        assert_eq!(
+            rep.result.total_tokens - rep.result.offline_tokens,
+            online.total_tokens()
+        );
+    }
+
+    #[test]
+    fn elastic_beats_best_effort_on_slo_under_bursts() {
+        // Under a hard burst the headroom reserve + preemption must not
+        // hurt attainment; usually they help.  (Weak-inequality check: the
+        // elastic policy is never *worse* by more than one request.)
+        let w = offline_pool(500);
+        let mut cfg = cfg_with_rate(20.0);
+        cfg.colocate.burst_factor = 6.0;
+        cfg.colocate.phase_secs = 1.0;
+        cfg.colocate.slo_scale = 3.0;
+        let online = online_stream(&cfg, TraceKind::ShareGpt, 60, 5);
+        let elastic = serve_colocated(&cfg, &w, &online);
+        cfg.colocate.policy = ColocationPolicy::BestEffort;
+        let best_effort = serve_colocated(&cfg, &w, &online);
+        assert!(
+            elastic.result.slo_attained + 1 >= best_effort.result.slo_attained,
+            "elastic {} vs best-effort {}",
+            elastic.slo_attainment,
+            best_effort.slo_attainment
+        );
+    }
+
+    #[test]
+    fn online_prefix_sharing_spans_streams() {
+        // Online requests drawn from the same trace as the offline pool
+        // share its system prompt; the radix cache must convert that into
+        // hits even across the online/offline boundary.
+        let w = crate::trace::generators::generate_kind(TraceKind::WildChat, 300, 3);
+        let cfg = cfg_with_rate(5.0);
+        let online = online_stream(&cfg, TraceKind::WildChat, 20, 9);
+        let rep = serve_colocated(&cfg, &w, &online);
+        assert!(
+            rep.result.hit_tokens > 0,
+            "no cache hits in a shared-prefix colocated run"
+        );
+    }
+}

@@ -1,12 +1,16 @@
-//! Offline batch-serving frontend: a file-based batch API in the style of
-//! OpenAI's Batch API (§1) — requests in as JSONL, results out as JSONL,
-//! one leader thread per DP replica.
+//! Serving frontends: the file-based offline batch API (JSONL in, JSONL
+//! out, one leader thread per DP replica) and the online/offline
+//! co-located entry point ([`colocate`]).
 //!
-//! The frontend is transport-agnostic on purpose: offline inference has no
-//! request path to keep hot, so a directory of JSONL files *is* the queue.
+//! The offline frontend is transport-agnostic on purpose: offline
+//! inference has no request path to keep hot, so a directory of JSONL
+//! files *is* the queue.  Co-location adds the latency-sensitive request
+//! path on top of the same engine (DESIGN.md §Co-located-Serving).
 
+pub mod colocate;
 pub mod pool;
 
+pub use colocate::{online_stream, serve_colocated, ColocateReport};
 pub use pool::{load_jsonl, save_results, JsonlRequest};
 
 use crate::config::SystemConfig;

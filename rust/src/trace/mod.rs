@@ -11,6 +11,7 @@
 //! (DESIGN.md §Substitutions).
 
 pub mod generators;
+pub mod online;
 pub mod stats;
 pub mod synth;
 

@@ -1,0 +1,366 @@
+//! Online (latency-sensitive) arrival streams for co-located serving.
+//!
+//! BlendServe (§1, §5) schedules a *closed* offline pool with relaxed
+//! latency.  The co-location subsystem (DESIGN.md §Co-located-Serving)
+//! adds an *open* stream of online requests in the style of HyGen and the
+//! hybrid offline/online schedulers: requests drawn from the same §A.3
+//! trace marginals as the offline pool ([`super::generators`]), but tagged
+//! with an arrival timestamp and per-request TTFT/TPOT SLOs.
+//!
+//! Two arrival processes are provided, both byte-for-byte deterministic
+//! from the spec's seed:
+//!
+//! - [`ArrivalProcess::Poisson`]: exponential inter-arrival gaps at a
+//!   constant rate — the steady-traffic regime.
+//! - [`ArrivalProcess::Bursty`]: a two-phase Markov-modulated Poisson
+//!   process alternating calm and burst phases (BurstGPT-style diurnal
+//!   bursts compressed to batch scale) — the regime that actually stresses
+//!   SLO-aware admission, because bursts demand headroom and the ebbs are
+//!   where offline backfill wins its throughput back.
+//!
+//! SLOs follow the HyGen convention: a baseline per-request latency is
+//! derived from the perf model ([`baseline_latency`]: the prompt's own
+//! prefill compute plus fully-loaded engine steps) and multiplied by a
+//! `slo_scale` knob — scale 1.0 means "no worse than a fully-loaded
+//! blended step per token", larger scales relax the deadline.
+
+use super::generators::{spec_for, TraceSpec};
+use super::{Request, TraceKind, Workload};
+use crate::perfmodel::PerfModel;
+use crate::util::DetRng;
+
+/// How online arrivals are spaced in time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate Poisson arrivals (`rate` requests/s).
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson: calm phases at `rate`, burst phases at
+    /// `rate * burst_factor`, with exponentially-distributed phase
+    /// lengths of mean `phase_secs`.
+    Bursty { rate: f64, burst_factor: f64, phase_secs: f64 },
+}
+
+impl ArrivalProcess {
+    /// Long-run average arrival rate (requests/s).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            // Phases alternate calm/burst with equal mean lengths.
+            ArrivalProcess::Bursty { rate, burst_factor, .. } => {
+                rate * (1.0 + burst_factor) / 2.0
+            }
+        }
+    }
+
+    /// A bursty process whose *long-run mean* rate is `mean_rate` — the
+    /// inverse of [`Self::mean_rate`], kept next to it so the phase
+    /// algebra lives in one place.
+    pub fn bursty_with_mean(mean_rate: f64, burst_factor: f64, phase_secs: f64) -> Self {
+        ArrivalProcess::Bursty {
+            rate: 2.0 * mean_rate / (1.0 + burst_factor),
+            burst_factor,
+            phase_secs,
+        }
+    }
+}
+
+/// Description of one online request stream.
+#[derive(Clone, Debug)]
+pub struct OnlineSpec {
+    /// Which trace's length marginals the requests are drawn from
+    /// (chat-style ShareGPT is the natural default for live traffic).
+    pub trace: TraceKind,
+    pub arrivals: ArrivalProcess,
+    /// Number of online requests to generate.
+    pub n_requests: usize,
+    /// SLO slack multiplier over the idle-replica baseline latency
+    /// (HyGen-style; 1.0 = tightest, larger = more relaxed).
+    pub slo_scale: f64,
+    pub seed: u64,
+}
+
+impl OnlineSpec {
+    pub fn new(trace: TraceKind, rate: f64, n_requests: usize) -> Self {
+        OnlineSpec {
+            trace,
+            arrivals: ArrivalProcess::Poisson { rate },
+            n_requests,
+            slo_scale: 5.0,
+            seed: 0,
+        }
+    }
+
+    pub fn with_arrivals(mut self, arrivals: ArrivalProcess) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
+    pub fn with_slo_scale(mut self, slo_scale: f64) -> Self {
+        assert!(slo_scale > 0.0, "slo_scale must be positive");
+        self.slo_scale = slo_scale;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// One online request: payload plus arrival time and SLOs (seconds).
+#[derive(Clone, Debug)]
+pub struct OnlineRequest {
+    pub request: Request,
+    pub arrival: f64,
+    pub ttft_slo: f64,
+    pub tpot_slo: f64,
+}
+
+/// A generated online stream, arrivals non-decreasing.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineWorkload {
+    pub name: String,
+    pub requests: Vec<OnlineRequest>,
+}
+
+impl OnlineWorkload {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Timestamp of the last arrival (0 for an empty stream).
+    pub fn horizon(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+
+    /// Σ input+output tokens over the stream.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| r.request.input_len() as u64 + r.request.output_len as u64)
+            .sum()
+    }
+
+    /// The payloads as a plain [`Workload`] (arrival/SLO metadata dropped);
+    /// used for tree statistics and tests.
+    pub fn as_workload(&self) -> Workload {
+        Workload::new(
+            &self.name,
+            self.requests.iter().map(|r| r.request.clone()).collect(),
+        )
+    }
+}
+
+/// A representative fully-loaded engine step: a default-sized (2048-token)
+/// prefill chunk overlapped with a full-KV decode sweep.  Under continuous
+/// batching every output token shares its step with the whole batch, so
+/// this — not the request's isolated decode time — is the honest latency
+/// floor for co-located serving.
+fn loaded_step_time(pm: &PerfModel) -> f64 {
+    let t_comp = pm.comp_tokens(2048);
+    let t_mem = pm.mem_kv_load(pm.kv_capacity_tokens());
+    t_comp.max(t_mem) * (1.0 + pm.hw.interference)
+}
+
+/// Baseline latencies `(ttft, tpot)` for a request of shape `(p, d)`:
+/// TTFT = the prompt's own prefill compute plus two loaded steps (one of
+/// admission alignment, one to surface the first token); TPOT = one
+/// loaded step per token.  `slo_scale = 1` therefore means "no worse than
+/// a fully-loaded blended step", and larger scales relax from there.
+pub fn baseline_latency(pm: &PerfModel, p: usize, _d: usize) -> (f64, f64) {
+    let step = loaded_step_time(pm);
+    let ttft = pm.comp_tokens(p) + pm.comp_prefill_attn(p, p) + 2.0 * step;
+    (ttft, step)
+}
+
+/// Generate an online stream from the spec.  Deterministic for a given
+/// `(spec.trace, spec.seed)`: arrivals, lengths, prompts and SLOs replay
+/// exactly.  Token pools are shared with the *offline* generator for the
+/// same trace, so online requests participate in prefix sharing (system
+/// prompts, MMLU stems) exactly like their offline siblings.
+pub fn generate_online(spec: &OnlineSpec, pm: &PerfModel) -> OnlineWorkload {
+    let tspec: TraceSpec = spec_for(spec.trace);
+    let payloads = super::generators::generate(&tspec, spec.n_requests, spec.seed ^ 0x0a11e);
+
+    let mut rng = DetRng::new(spec.seed).child("online-arrivals");
+    let mut clock = 0.0f64;
+    // Bursty-phase state: start calm, flip on exponential phase ends.
+    let (mut in_burst, mut phase_end) = (false, f64::INFINITY);
+    if let ArrivalProcess::Bursty { phase_secs, .. } = spec.arrivals {
+        phase_end = exp_draw(&mut rng, 1.0 / phase_secs.max(1e-9));
+    }
+
+    let mut requests = Vec::with_capacity(payloads.len());
+    for r in payloads.requests.into_iter() {
+        match spec.arrivals {
+            ArrivalProcess::Poisson { rate } => clock += exp_draw(&mut rng, rate),
+            ArrivalProcess::Bursty { rate, burst_factor, phase_secs } => {
+                // Phase-aware gap: a draw that crosses a phase boundary is
+                // restarted from the boundary at the new phase's rate
+                // (valid by exponential memorylessness).  Drawing the whole
+                // gap at the start-of-gap rate would let long calm gaps
+                // swallow entire bursts and undershoot the long-run mean.
+                if rate <= 0.0 {
+                    clock = f64::INFINITY; // degenerate spec: no arrivals
+                }
+                while clock.is_finite() {
+                    let rate_now = if in_burst { rate * burst_factor } else { rate };
+                    let gap = exp_draw(&mut rng, rate_now);
+                    if clock + gap <= phase_end {
+                        clock += gap;
+                        break;
+                    }
+                    clock = phase_end;
+                    in_burst = !in_burst;
+                    phase_end += exp_draw(&mut rng, 1.0 / phase_secs.max(1e-9));
+                }
+            }
+        };
+        let (ttft_base, tpot_base) =
+            baseline_latency(pm, r.input_len(), r.output_len as usize);
+        requests.push(OnlineRequest {
+            arrival: clock,
+            ttft_slo: ttft_base * spec.slo_scale,
+            tpot_slo: tpot_base * spec.slo_scale,
+            request: r,
+        });
+    }
+    OnlineWorkload {
+        name: format!("online-{}-{}", spec.trace.name(), spec.n_requests),
+        requests,
+    }
+}
+
+/// Exponential inter-arrival draw with the given rate (1/mean).
+fn exp_draw(rng: &mut DetRng, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = OnlineSpec::new(TraceKind::ShareGpt, 2.0, 200).with_seed(9);
+        let a = generate_online(&spec, &pm());
+        let b = generate_online(&spec, &pm());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.ttft_slo, y.ttft_slo);
+        }
+        let c = generate_online(&spec.clone().with_seed(10), &pm());
+        assert_ne!(a.requests[0].arrival, c.requests[0].arrival);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_rate_matches() {
+        let rate = 4.0;
+        let spec = OnlineSpec::new(TraceKind::BurstGpt, rate, 2000).with_seed(3);
+        let w = generate_online(&spec, &pm());
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].arrival <= pair[1].arrival);
+        }
+        // Mean inter-arrival ≈ 1/rate over 2000 draws (±15%).
+        let achieved = w.len() as f64 / w.horizon();
+        assert!(
+            (achieved - rate).abs() / rate < 0.15,
+            "achieved rate {achieved} vs target {rate}"
+        );
+    }
+
+    #[test]
+    fn bursty_process_has_heavier_tail_than_poisson() {
+        let n = 3000;
+        let poisson = generate_online(
+            &OnlineSpec::new(TraceKind::ShareGpt, 2.0, n).with_seed(5),
+            &pm(),
+        );
+        let bursty = generate_online(
+            &OnlineSpec::new(TraceKind::ShareGpt, 2.0, n)
+                .with_arrivals(ArrivalProcess::Bursty {
+                    rate: 2.0,
+                    burst_factor: 8.0,
+                    phase_secs: 20.0,
+                })
+                .with_seed(5),
+            &pm(),
+        );
+        // Compare coefficient of variation of arrivals-per-window counts:
+        // the MMPP must be overdispersed relative to Poisson.
+        let cv = |w: &OnlineWorkload| {
+            let win = w.horizon() / 50.0;
+            let mut counts = vec![0.0f64; 51];
+            for r in &w.requests {
+                counts[(r.arrival / win) as usize] += 1.0;
+            }
+            crate::util::stats::stddev(&counts) / crate::util::stats::mean(&counts)
+        };
+        assert!(
+            cv(&bursty) > cv(&poisson) * 1.5,
+            "bursty cv {} vs poisson cv {}",
+            cv(&bursty),
+            cv(&poisson)
+        );
+    }
+
+    #[test]
+    fn slo_scale_scales_deadlines() {
+        let tight = generate_online(
+            &OnlineSpec::new(TraceKind::ShareGpt, 1.0, 50).with_slo_scale(1.0),
+            &pm(),
+        );
+        let loose = generate_online(
+            &OnlineSpec::new(TraceKind::ShareGpt, 1.0, 50).with_slo_scale(10.0),
+            &pm(),
+        );
+        for (a, b) in tight.requests.iter().zip(&loose.requests) {
+            assert!((b.ttft_slo / a.ttft_slo - 10.0).abs() < 1e-9);
+            assert!((b.tpot_slo / a.tpot_slo - 10.0).abs() < 1e-9);
+            assert!(a.ttft_slo > 0.0 && a.tpot_slo > 0.0);
+        }
+    }
+
+    #[test]
+    fn online_prompts_share_pools_with_offline_trace() {
+        // The online WildChat stream must share the dataset-wide system
+        // prompt with the offline WildChat trace so prefix sharing spans
+        // the online/offline boundary.
+        let online = generate_online(&OnlineSpec::new(TraceKind::WildChat, 1.0, 20), &pm());
+        let offline = super::super::generators::generate_kind(TraceKind::WildChat, 20, 3);
+        let sys_len = super::super::generators::wildchat().sys_prompt_len;
+        assert_eq!(
+            &online.requests[0].request.prompt[..sys_len],
+            &offline.requests[0].prompt[..sys_len]
+        );
+    }
+
+    #[test]
+    fn mean_rate_of_processes() {
+        assert_eq!(ArrivalProcess::Poisson { rate: 3.0 }.mean_rate(), 3.0);
+        let b = ArrivalProcess::Bursty { rate: 2.0, burst_factor: 5.0, phase_secs: 10.0 };
+        assert_eq!(b.mean_rate(), 6.0);
+    }
+
+    #[test]
+    fn as_workload_preserves_payloads() {
+        let w = generate_online(&OnlineSpec::new(TraceKind::ShareGpt, 2.0, 30), &pm());
+        let plain = w.as_workload();
+        assert_eq!(plain.len(), 30);
+        assert_eq!(plain.total_tokens(), w.total_tokens());
+    }
+}

