@@ -22,9 +22,8 @@ fn main() {
     b.run("radix_cache/insert+release 2k prompts", || {
         let mut c = RadixCache::new(200_000);
         for r in &w.requests {
-            let hit = c.lookup(&r.prompt);
-            let (_, pinned) = c.insert_pinned(&r.prompt, r.prompt.len());
-            c.release(&r.prompt, pinned);
+            let (hit, _new, pin) = c.lookup_insert_pinned(&r.prompt);
+            c.release(pin);
             black_box(hit);
         }
         black_box(c.hit_ratio())
@@ -32,8 +31,8 @@ fn main() {
     b.run("radix_cache/thrashing (cap 10k)", || {
         let mut c = RadixCache::new(10_000);
         for r in &w.requests {
-            let (_, pinned) = c.insert_pinned(&r.prompt, r.prompt.len());
-            c.release(&r.prompt, pinned);
+            let (_, pin) = c.insert_pinned(&r.prompt, r.prompt.len());
+            c.release(pin);
         }
         black_box(c.evicted_tokens)
     });

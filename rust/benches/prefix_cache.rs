@@ -1,0 +1,172 @@
+//! Prefix-cache microbenchmarks: token-granular baseline (the retained
+//! reference implementation) vs the segment-granular production cache,
+//! over three workload shapes:
+//!
+//! - `shared_prefix` — the BlendServe regime (§2.2): many prompts over a
+//!   few long stems, DFS-ordered, so almost every admission is a long
+//!   segment match.  This is the acceptance workload: the segment cache
+//!   must beat the baseline ≥ 5× on median ns/token.
+//! - `disjoint`     — zero sharing: pure insert/evict churn, measures
+//!   allocation + eviction overhead without any matching win.
+//! - `adversarial_split` — prompts engineered to fork every few tokens,
+//!   driving segment length toward 1 (the path-compressed structure's
+//!   worst case, where it degrades toward the token-granular baseline).
+//!
+//! Emits `BENCH_prefix_cache.json` (median ns/token per workload and the
+//! shared-prefix speedup) for the perf-trajectory record.  `--smoke`
+//! bounds iterations and shrinks workloads for CI; results are still
+//! written, tagged `"mode": "smoke"`.
+
+#[path = "../tests/common/token_cache.rs"]
+mod token_cache;
+
+use blendserve::engine::RadixCache;
+use blendserve::util::bench::{black_box, Bench};
+use blendserve::util::json::Json;
+use blendserve::util::rng::DetRng;
+use std::sync::Arc;
+use std::time::Duration;
+use token_cache::TokenRadixCache;
+
+/// G stems of `stem` tokens, `per` prompts each with a short unique tail,
+/// DFS-ordered (stem-major) like the dual scanner emits them.
+fn shared_prefix_pool(groups: usize, per: usize, stem: usize, tail: usize) -> Vec<Arc<Vec<u32>>> {
+    let mut pool = Vec::with_capacity(groups * per);
+    for g in 0..groups {
+        let stem_toks: Vec<u32> = (0..stem).map(|k| (g * 100_000 + k) as u32).collect();
+        for i in 0..per {
+            let mut q = stem_toks.clone();
+            q.extend((0..tail).map(|k| (900_000_000 + (g * per + i) * 1000 + k) as u32));
+            pool.push(Arc::new(q));
+        }
+    }
+    pool
+}
+
+/// Fully unique prompts: no token is ever shared.
+fn disjoint_pool(n: usize, len: usize) -> Vec<Arc<Vec<u32>>> {
+    (0..n)
+        .map(|i| Arc::new((0..len).map(|k| (i * len + k) as u32).collect::<Vec<u32>>()))
+        .collect()
+}
+
+/// Random walks over a 3-token alphabet: prompts diverge every ~1.6
+/// tokens on average, forcing the segment cache to split constantly.
+fn adversarial_pool(n: usize, len: usize, seed: u64) -> Vec<Arc<Vec<u32>>> {
+    let mut rng = DetRng::new(seed);
+    (0..n)
+        .map(|_| Arc::new((0..len).map(|_| rng.range(0, 2) as u32).collect::<Vec<u32>>()))
+        .collect()
+}
+
+/// One admission round over the pool on the baseline: the engine's old
+/// per-admission sequence (separate lookup + insert walks, token-wise
+/// release re-walk).
+fn drive_baseline(pool: &[Arc<Vec<u32>>], capacity: u64) -> u64 {
+    let mut c = TokenRadixCache::new(capacity);
+    for p in pool {
+        let hit = c.lookup(p);
+        let (_, pinned) = c.insert_pinned(p, p.len());
+        c.release(p, pinned);
+        black_box(hit);
+    }
+    c.hits_tokens + c.evicted_tokens
+}
+
+/// One admission round on the segment cache: the engine's new combined
+/// walk + O(path) handle release.
+fn drive_segment(pool: &[Arc<Vec<u32>>], capacity: u64) -> u64 {
+    let mut c = RadixCache::new(capacity);
+    for p in pool {
+        let (hit, _new, pin) = c.lookup_insert_pinned(p);
+        c.release(pin);
+        black_box(hit);
+    }
+    c.hits_tokens + c.evicted_tokens
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke {
+        Duration::from_millis(60)
+    } else {
+        Duration::from_secs(2)
+    };
+    let scale = if smoke { 1usize } else { 8 };
+    let mut b = Bench::new().with_budget(budget);
+    println!(
+        "# prefix_cache — token-granular baseline vs segment radix cache{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // (name, pool, capacity).  Capacities hold the shared/adversarial
+    // working sets; the disjoint pool deliberately overflows to include
+    // eviction churn in the measurement.
+    let workloads: Vec<(&str, Vec<Arc<Vec<u32>>>, u64)> = vec![
+        (
+            "shared_prefix",
+            shared_prefix_pool(4 * scale, 16, 2048, 16),
+            (4 * scale * (2048 + 16 * 16)) as u64 * 2,
+        ),
+        ("disjoint", disjoint_pool(64 * scale, 256), (64 * scale * 256) as u64 / 2),
+        (
+            "adversarial_split",
+            adversarial_pool(64 * scale, 128, 7),
+            (64 * scale * 128) as u64 * 2,
+        ),
+    ];
+
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    let mut shared_speedup = 0.0f64;
+    for (name, pool, capacity) in &workloads {
+        let tokens: u64 = pool.iter().map(|p| p.len() as u64).sum();
+        // Checksum equality doubles as a cheap cross-validation run.
+        assert_eq!(
+            drive_baseline(pool, *capacity),
+            drive_segment(pool, *capacity),
+            "baseline/segment accounting diverged on {name}"
+        );
+        let base = b.run(&format!("{name}/baseline ({tokens} tok)"), || {
+            drive_baseline(pool, *capacity)
+        });
+        let base_ns = base.median.as_nanos() as f64;
+        let seg = b.run(&format!("{name}/segment  ({tokens} tok)"), || {
+            drive_segment(pool, *capacity)
+        });
+        let seg_ns = seg.median.as_nanos() as f64;
+        let speedup = base_ns / seg_ns.max(1.0);
+        if *name == "shared_prefix" {
+            shared_speedup = speedup;
+        }
+        println!("  -> {name}: {speedup:.2}x median speedup");
+        rows.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("tokens_per_iter", Json::from(tokens as f64)),
+                ("baseline_median_ns", Json::from(base_ns)),
+                ("segment_median_ns", Json::from(seg_ns)),
+                ("baseline_ns_per_token", Json::from(base_ns / tokens as f64)),
+                ("segment_ns_per_token", Json::from(seg_ns / tokens as f64)),
+                ("speedup", Json::from(speedup)),
+            ]),
+        ));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::from("prefix_cache")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("workloads", Json::Obj(rows.into_iter().collect())),
+        (
+            "acceptance",
+            Json::obj(vec![
+                ("metric", Json::from("shared_prefix lookup+insert median speedup")),
+                ("required", Json::from(5.0)),
+                ("achieved", Json::from(shared_speedup)),
+                ("pass", Json::from(shared_speedup >= 5.0)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_prefix_cache.json";
+    std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+    println!("wrote {path} (shared_prefix speedup {shared_speedup:.2}x)");
+}

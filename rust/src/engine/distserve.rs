@@ -48,9 +48,10 @@ pub fn simulate_disagg(
     let mut ready: Vec<(f64, u32)> = Vec::with_capacity(order.len());
     for &id in order {
         let r = &requests[by_id[&id]];
-        let hit = cache.lookup(&r.prompt);
-        cache.insert_pinned(&r.prompt, r.prompt.len());
-        cache.release(&r.prompt, r.prompt.len());
+        // Combined walk: the route-by-prefix admission is the same hot
+        // path the colocated engine runs.
+        let (hit, _new, pin) = cache.lookup_insert_pinned(&r.prompt);
+        cache.release(pin);
         let new_tokens = r.input_len() - hit;
         let t = (pm.comp_tokens(new_tokens)
             + pm.comp_prefill_attn(new_tokens, r.input_len()))

@@ -20,7 +20,7 @@ pub mod distserve;
 pub mod prefix_cache;
 pub mod sim;
 
-pub use prefix_cache::RadixCache;
+pub use prefix_cache::{PinHandle, RadixCache};
 pub use sim::{
     Admitter, EngineView, RequestTiming, SimEngine, SimRequest, SimResult, StaticOrder,
     StepSample,

@@ -1,42 +1,113 @@
 //! Runtime radix prefix cache (§2.2 "prefix sharing", §A.2 "runtime prefix
-//! tree"): a token-granular trie over *computed* prompt prefixes, with
-//! reference counting for active requests and leaf-first LRU eviction.
+//! tree"): a **path-compressed, segment-granular** trie over *computed*
+//! prompt prefixes, with reference counting for active requests and
+//! leaf-first LRU eviction (DESIGN.md §Runtime-Prefix-Cache).
 //!
 //! Semantics follow SGLang's RadixAttention: all prompt KV lives in the
 //! trie (a shared prefix is stored once); each resident trie token charges
 //! one KV slot; eviction removes unreferenced leaf tokens in LRU order.
 //! Decode-phase tokens are *not* cached here — they are private to the
 //! request and accounted by the engine.
+//!
+//! Unlike a token-granular trie (one arena node + one hash probe per
+//! token), nodes here own `(Arc<Vec<u32>>, start, len)` slices into the
+//! immutable prompts — the same zero-copy representation as
+//! [`crate::tree`] — and children are keyed by first token only.  Matching
+//! walks whole segments with a slice compare, so a lookup costs
+//! O(#shared segments) hash probes instead of O(tokens).  Three operations
+//! keep token-exact semantics at segment granularity:
+//!
+//! - **split on partial match**: an op that touches only the head of a
+//!   segment splits it, so LRU clocks and pin refcounts stay per-token
+//!   exact (the untouched tail keeps its older clock / refcount);
+//! - **segment-tail eviction**: the LRU leaf sheds exactly as many tail
+//!   tokens as needed, splitting the segment rather than overshooting;
+//! - **[`PinHandle`]**: `insert_pinned` returns the deepest pinned node,
+//!   so `release` walks O(path nodes) parent links instead of re-matching
+//!   the prompt token by token.
+//!
+//! All externally observable accounting (`size`, `pinned`, `hits_tokens`,
+//! `lookup_tokens`, `evicted_tokens`, LRU eviction order) is equivalent
+//! bit-for-bit to the token-granular implementation; the randomized oracle
+//! test `rust/tests/prefix_cache_oracle.rs` pins that equivalence against
+//! the retained reference implementation.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 type Id = u32;
 const NIL: Id = u32::MAX;
 
+/// Opaque receipt for a pinned prompt prefix, returned by
+/// [`RadixCache::insert_pinned`] / [`RadixCache::lookup_insert_pinned`]
+/// and consumed by [`RadixCache::release`].
+///
+/// Internally it names the deepest pinned node plus the pinned token
+/// count, so release is an O(path nodes) parent walk.  The handle stays
+/// valid across later node splits (a split keeps the original id on the
+/// deep half) and its path can never be evicted while the pin is live.
+#[must_use = "dropping a PinHandle without `release` leaks pinned KV tokens"]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PinHandle {
+    node: Id,
+    len: u32,
+}
+
+impl PinHandle {
+    /// The no-op handle: releasing it does nothing.  Returned when
+    /// nothing could be pinned (zero-capacity cache, empty prompt).
+    pub const EMPTY: PinHandle = PinHandle { node: NIL, len: 0 };
+
+    /// Pinned prefix length in tokens.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for PinHandle {
+    fn default() -> Self {
+        PinHandle::EMPTY
+    }
+}
+
 #[derive(Clone, Debug)]
 struct CNode {
     parent: Id,
-    token: u32,
+    /// Zero-copy token segment: `tokens[start .. start + len]`.
+    tokens: Arc<Vec<u32>>,
+    start: u32,
+    len: u32,
     n_children: u32,
+    /// Active pins whose path passes through this node.  Every token of
+    /// the segment carries exactly this refcount (splits keep it exact).
     refs: u32,
     last_use: u64,
-    /// Free-list linkage when the slot is recycled.
+    /// Slot is recycled (on the free list).
     free: bool,
 }
 
-/// Token-granular radix cache with LRU leaf eviction.
+/// Path-compressed segment radix cache with token-exact LRU eviction.
 #[derive(Debug)]
 pub struct RadixCache {
     nodes: Vec<CNode>,
+    /// Child index keyed by `(parent, first token of child segment)`;
+    /// one probe per *segment*, not per token.
     children: HashMap<(Id, u32), Id>,
     free_list: Vec<Id>,
     /// Lazy min-heap of eviction candidates `(last_use, id)`.  Entries are
-    /// validated on pop (a node may have been touched, re-pinned or grown
-    /// children since being pushed); a full-scan fallback guards against
-    /// leaked candidates.
+    /// validated on pop (a node may have been touched, re-pinned, split or
+    /// grown children since being pushed); a full-scan fallback guards
+    /// against leaked candidates.
     evict_heap: BinaryHeap<Reverse<(u64, Id)>>,
-    /// Resident tokens (= live nodes).
+    /// Shared empty buffer installed into freed slots so their `Arc`
+    /// references to prompt storage drop promptly.
+    empty: Arc<Vec<u32>>,
+    /// Resident tokens (Σ len over live nodes).
     size: u64,
     /// Tokens currently pinned (refs > 0); maintained incrementally.
     pinned: u64,
@@ -50,6 +121,26 @@ pub struct RadixCache {
     pub evicted_tokens: u64,
 }
 
+/// Length of the common prefix of two equal-length slices; a single
+/// `memcmp`-style compare in the (common) full-match case.
+fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    if a == b {
+        return a.len();
+    }
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// One segment-match step shared by the lookup and insert walks: the
+/// child of `cur` starting with `prompt[depth]`, how many of its tokens
+/// match (capped at `bound - depth`), and whether the whole segment
+/// matched.
+struct SegMatch {
+    child: Id,
+    matched: usize,
+    full: bool,
+}
+
 impl RadixCache {
     pub fn new(capacity: u64) -> Self {
         RadixCache {
@@ -57,6 +148,7 @@ impl RadixCache {
             children: HashMap::new(),
             free_list: Vec::new(),
             evict_heap: BinaryHeap::new(),
+            empty: Arc::new(Vec::new()),
             size: 0,
             pinned: 0,
             capacity,
@@ -75,20 +167,38 @@ impl RadixCache {
         self.capacity
     }
 
-    /// Longest cached prefix of `prompt`, in tokens; bumps LRU clocks along
-    /// the path and counts hit statistics.
+    fn match_child(&self, cur: Id, prompt: &[u32], depth: usize, bound: usize) -> Option<SegMatch> {
+        let child = self.children.get(&(cur, prompt[depth])).copied()?;
+        let n = &self.nodes[child as usize];
+        let max_m = (n.len as usize).min(bound - depth);
+        let s = n.start as usize;
+        let matched = common_prefix(&n.tokens[s..s + max_m], &prompt[depth..depth + max_m]);
+        Some(SegMatch { child, matched, full: matched == n.len as usize })
+    }
+
+    /// Longest cached prefix of `prompt`, in tokens; bumps LRU clocks
+    /// along the path and counts hit statistics.  A partial segment match
+    /// splits the node so only the touched head gets the fresh clock.
     pub fn lookup(&mut self, prompt: &[u32]) -> usize {
         self.clock += 1;
         let mut cur = NIL;
         let mut depth = 0usize;
-        for &t in prompt {
-            match self.children.get(&(cur, t)).copied() {
-                Some(next) => {
-                    self.nodes[next as usize].last_use = self.clock;
-                    cur = next;
-                    depth += 1;
-                }
+        while depth < prompt.len() {
+            let sm = match self.match_child(cur, prompt, depth, prompt.len()) {
+                Some(sm) => sm,
                 None => break,
+            };
+            if sm.full {
+                self.nodes[sm.child as usize].last_use = self.clock;
+                cur = sm.child;
+                depth += sm.matched;
+            } else {
+                // Partial: split so the untouched tail keeps its old clock.
+                let p = self.split(sm.child, sm.matched);
+                self.nodes[p as usize].last_use = self.clock;
+                cur = p;
+                depth += sm.matched;
+                break;
             }
         }
         if cur != NIL {
@@ -100,72 +210,163 @@ impl RadixCache {
     }
 
     /// Insert (pin) the first `len` tokens of `prompt`, reference-counting
-    /// the path for an active request.  Returns `(new_tokens, pinned_len)`:
-    /// the number of tokens newly materialized and the prefix length that
-    /// is now resident + pinned.  May evict unreferenced tokens; if
-    /// capacity is exhausted by pinned tokens the insert truncates and only
-    /// the reached prefix is pinned (`pinned_len < len`) — the caller must
-    /// `release(prompt, pinned_len)` with the same length when done.
-    pub fn insert_pinned(&mut self, prompt: &[u32], len: usize) -> (usize, usize) {
+    /// the path for an active request.  Returns `(new_tokens, handle)`:
+    /// the number of tokens newly materialized and a [`PinHandle`] whose
+    /// `len()` is the prefix length now resident + pinned.  May evict
+    /// unreferenced tokens; if capacity is exhausted by pinned tokens the
+    /// insert truncates (`handle.len() < len`) — the caller must
+    /// [`release`](Self::release) the handle when done either way.
+    pub fn insert_pinned(&mut self, prompt: &Arc<Vec<u32>>, len: usize) -> (usize, PinHandle) {
+        let (_, new_tokens, handle) = self.walk_insert(prompt, len, false);
+        (new_tokens, handle)
+    }
+
+    /// The per-admission hot path: one combined walk doing what
+    /// `lookup(prompt)` followed by `insert_pinned(prompt, prompt.len())`
+    /// did in two.  Returns `(hit_tokens, new_tokens, handle)`; hit and
+    /// lookup statistics are counted exactly as a plain `lookup` would.
+    pub fn lookup_insert_pinned(&mut self, prompt: &Arc<Vec<u32>>) -> (usize, usize, PinHandle) {
+        self.walk_insert(prompt, prompt.len(), true)
+    }
+
+    fn walk_insert(
+        &mut self,
+        prompt: &Arc<Vec<u32>>,
+        len: usize,
+        count_lookup: bool,
+    ) -> (usize, usize, PinHandle) {
         self.clock += 1;
         let len = len.min(prompt.len());
         let mut cur = NIL;
-        let mut new_tokens = 0usize;
         let mut depth = 0usize;
-        for &t in prompt.iter().take(len) {
-            let next = match self.children.get(&(cur, t)).copied() {
-                Some(n) => n,
-                None => {
-                    if self.size >= self.capacity && !self.evict_one() {
-                        break; // truncate: pin what we reached
-                    }
-                    let id = self.alloc(cur, t);
-                    self.children.insert((cur, t), id);
-                    self.size += 1;
-                    new_tokens += 1;
-                    id
-                }
-            };
-            // Pin incrementally so the in-progress path can never be
-            // chosen as an eviction victim by the `evict_one` above.
-            if self.nodes[next as usize].refs == 0 {
-                self.pinned += 1;
-            }
-            self.nodes[next as usize].refs += 1;
-            self.nodes[next as usize].last_use = self.clock;
-            cur = next;
-            depth += 1;
-        }
-        (new_tokens, depth)
-    }
-
-    /// Drop one reference along the first `len` tokens of `prompt`
-    /// (request finished or retracted).  The tokens stay cached until
-    /// evicted.
-    pub fn release(&mut self, prompt: &[u32], len: usize) {
-        let mut cur = NIL;
-        for &t in prompt.iter().take(len) {
-            match self.children.get(&(cur, t)).copied() {
-                Some(next) => cur = next,
+        // ---- match phase: walk/split/pin existing segments ----
+        while depth < len {
+            let sm = match self.match_child(cur, prompt, depth, len) {
+                Some(sm) => sm,
                 None => break,
+            };
+            // A divergence or the `len` bound mid-segment splits the node
+            // so the pin covers whole segments only.
+            let node = if sm.full {
+                sm.child
+            } else {
+                self.split(sm.child, sm.matched)
+            };
+            self.pin_node(node);
+            cur = node;
+            depth += sm.matched;
+            if !sm.full {
+                break;
             }
         }
-        self.unref_path(cur);
+        let hit = depth;
+        // ---- alloc phase: materialize the missing tail as one segment ----
+        let mut new_tokens = 0usize;
+        if depth < len {
+            let want = (len - depth) as u64;
+            // Make room.  Pinned paths (including the one just walked) are
+            // never candidates, so this cannot evict the matched prefix;
+            // when nothing more is evictable the insert truncates below.
+            self.evict_to(self.capacity.saturating_sub(want));
+            let take = want.min(self.capacity.saturating_sub(self.size)) as usize;
+            if take > 0 {
+                let id = self.alloc(CNode {
+                    parent: cur,
+                    tokens: prompt.clone(),
+                    start: depth as u32,
+                    len: take as u32,
+                    n_children: 0,
+                    refs: 1,
+                    last_use: self.clock,
+                });
+                if cur != NIL {
+                    self.nodes[cur as usize].n_children += 1;
+                }
+                self.children.insert((cur, prompt[depth]), id);
+                self.size += take as u64;
+                self.pinned += take as u64;
+                new_tokens = take;
+                depth += take;
+                cur = id;
+            }
+        }
+        if count_lookup {
+            self.hits_tokens += hit as u64;
+            self.lookup_tokens += prompt.len() as u64;
+        }
+        let handle = if depth == 0 {
+            PinHandle::EMPTY
+        } else {
+            PinHandle { node: cur, len: depth as u32 }
+        };
+        (hit, new_tokens, handle)
     }
 
-    fn unref_path(&mut self, mut cur: Id) {
+    /// Drop one reference along the pinned path (request finished or
+    /// retracted).  O(path nodes): walks parent links from the handle's
+    /// deepest node.  The tokens stay cached until evicted.
+    pub fn release(&mut self, handle: PinHandle) {
+        let mut cur = handle.node;
+        let mut walked = 0u64;
         while cur != NIL {
-            let n = &mut self.nodes[cur as usize];
-            debug_assert!(n.refs > 0, "unref below zero");
-            n.refs = n.refs.saturating_sub(1);
-            if n.refs == 0 {
-                self.pinned = self.pinned.saturating_sub(1);
+            let (len, parent, now_unpinned) = {
+                let n = &mut self.nodes[cur as usize];
+                debug_assert!(n.refs > 0, "release below zero");
+                n.refs = n.refs.saturating_sub(1);
+                (n.len as u64, n.parent, n.refs == 0)
+            };
+            if now_unpinned {
+                self.pinned = self.pinned.saturating_sub(len);
             }
-            let n = &self.nodes[cur as usize];
-            let parent = n.parent;
+            walked += len;
             self.push_candidate(cur);
             cur = parent;
         }
+        debug_assert_eq!(walked, handle.len as u64, "pin path length drifted");
+    }
+
+    /// Pin one node, maintaining the pinned-token count.
+    fn pin_node(&mut self, id: Id) {
+        let len = self.nodes[id as usize].len as u64;
+        let n = &mut self.nodes[id as usize];
+        if n.refs == 0 {
+            self.pinned += len;
+        }
+        n.refs += 1;
+        n.last_use = self.clock;
+    }
+
+    /// Split node `id` at `m` tokens (0 < m < len): a new *prefix* node
+    /// splices in above it; `id` keeps the tail so outstanding
+    /// [`PinHandle`]s (which always name the deep end of their path)
+    /// remain valid.  Refcounts are inherited by both halves — a pin
+    /// through the whole segment covers both — so per-token refs and the
+    /// pinned total are unchanged.
+    fn split(&mut self, id: Id, m: usize) -> Id {
+        let (parent, tokens, start, len, refs, last_use) = {
+            let n = &self.nodes[id as usize];
+            (n.parent, n.tokens.clone(), n.start, n.len, n.refs, n.last_use)
+        };
+        debug_assert!(0 < m && m < len as usize, "split out of range");
+        let m = m as u32;
+        let p = self.alloc(CNode {
+            parent,
+            tokens: tokens.clone(),
+            start,
+            len: m,
+            n_children: 1,
+            refs,
+            last_use,
+        });
+        self.children.insert((parent, tokens[start as usize]), p);
+        {
+            let n = &mut self.nodes[id as usize];
+            n.parent = p;
+            n.start = start + m;
+            n.len = len - m;
+        }
+        self.children.insert((p, tokens[(start + m) as usize]), id);
+        p
     }
 
     /// Push `id` into the eviction heap if it currently looks evictable.
@@ -176,19 +377,38 @@ impl RadixCache {
         }
     }
 
-    /// Evict the LRU unreferenced leaf token.  Returns false if nothing is
-    /// evictable.  Amortized O(log n): pops lazily-invalidated heap entries;
-    /// a one-shot full scan rebuilds the heap if it runs dry while
-    /// evictable nodes still exist.
-    fn evict_one(&mut self) -> bool {
+    /// Evict up to `max` tokens from the LRU unreferenced leaf segment:
+    /// the whole segment when it fits, otherwise exactly `max` tail
+    /// tokens (segment-tail split eviction) so callers stay token-exact.
+    /// Returns tokens evicted (0 = nothing evictable).  Amortized
+    /// O(log n): pops lazily-invalidated heap entries; a one-shot full
+    /// scan rebuilds the heap if it runs dry while evictable nodes exist.
+    fn evict_lru(&mut self, max: u64) -> u64 {
+        if max == 0 {
+            return 0;
+        }
         for _attempt in 0..2 {
             while let Some(Reverse((lu, id))) = self.evict_heap.pop() {
-                let n = &self.nodes[id as usize];
-                if !n.free && n.refs == 0 && n.n_children == 0 && n.last_use == lu {
-                    self.remove_leaf(id);
-                    return true;
+                let valid = {
+                    let n = &self.nodes[id as usize];
+                    !n.free && n.refs == 0 && n.n_children == 0 && n.last_use == lu
+                };
+                if !valid {
+                    continue; // stale entry (touched / re-pinned / grew children)
                 }
-                // Stale entry (touched / re-pinned / grew children): skip.
+                let nlen = self.nodes[id as usize].len as u64;
+                if nlen <= max {
+                    self.remove_leaf(id);
+                    return nlen;
+                }
+                // Tail split: shed only the newest `max` tokens of the
+                // segment; the surviving head keeps its clock and stays
+                // an eviction candidate.
+                self.nodes[id as usize].len -= max as u32;
+                self.size -= max;
+                self.evicted_tokens += max;
+                self.evict_heap.push(Reverse((lu, id)));
+                return max;
             }
             // Heap dry: rebuild from a full scan once.
             let mut found = false;
@@ -200,54 +420,49 @@ impl RadixCache {
                 }
             }
             if !found {
-                return false;
+                return 0;
             }
         }
-        false
+        0
     }
 
     /// Evict until at most `target` tokens remain (or nothing evictable).
-    /// Returns tokens evicted.
+    /// Token-exact: a final partial segment is tail-split rather than
+    /// overshooting.  Returns tokens evicted.
     pub fn evict_to(&mut self, target: u64) -> u64 {
         let mut freed = 0;
         while self.size > target {
-            if !self.evict_one() {
+            let f = self.evict_lru(self.size - target);
+            if f == 0 {
                 break;
             }
-            freed += 1;
+            freed += f;
         }
         freed
     }
 
     fn remove_leaf(&mut self, id: Id) {
-        let (parent, token) = {
+        let (parent, tok0, nlen) = {
             let n = &self.nodes[id as usize];
             debug_assert!(n.refs == 0 && n.n_children == 0 && !n.free);
-            (n.parent, n.token)
+            (n.parent, n.tokens[n.start as usize], n.len as u64)
         };
-        self.children.remove(&(parent, token));
-        self.nodes[id as usize].free = true;
+        self.children.remove(&(parent, tok0));
+        {
+            let n = &mut self.nodes[id as usize];
+            n.free = true;
+            n.tokens = self.empty.clone();
+        }
         self.free_list.push(id);
         if parent != NIL {
             self.nodes[parent as usize].n_children -= 1;
             self.push_candidate(parent);
         }
-        self.size -= 1;
-        self.evicted_tokens += 1;
+        self.size -= nlen;
+        self.evicted_tokens += nlen;
     }
 
-    fn alloc(&mut self, parent: Id, token: u32) -> Id {
-        if parent != NIL {
-            self.nodes[parent as usize].n_children += 1;
-        }
-        let node = CNode {
-            parent,
-            token,
-            n_children: 0,
-            refs: 0,
-            last_use: self.clock,
-            free: false,
-        };
+    fn alloc(&mut self, node: CNode) -> Id {
         match self.free_list.pop() {
             Some(id) => {
                 self.nodes[id as usize] = node;
@@ -275,17 +490,28 @@ impl RadixCache {
     pub fn pinned_tokens(&self) -> u64 {
         self.pinned
     }
+
+    /// Live trie nodes (diagnostic: segment granularity means this is
+    /// O(#branch points), not O(tokens)).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - self.free_list.len()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn p(tokens: &[u32]) -> Arc<Vec<u32>> {
+        Arc::new(tokens.to_vec())
+    }
+
     #[test]
     fn lookup_miss_then_hit() {
         let mut c = RadixCache::new(100);
         assert_eq!(c.lookup(&[1, 2, 3]), 0);
-        assert_eq!(c.insert_pinned(&[1, 2, 3], 3), (3, 3));
+        let (new, h) = c.insert_pinned(&p(&[1, 2, 3]), 3);
+        assert_eq!((new, h.len()), (3, 3));
         assert_eq!(c.lookup(&[1, 2, 3]), 3);
         assert_eq!(c.lookup(&[1, 2, 9]), 2);
         assert_eq!(c.size_tokens(), 3);
@@ -294,19 +520,20 @@ mod tests {
     #[test]
     fn shared_prefix_stored_once() {
         let mut c = RadixCache::new(100);
-        c.insert_pinned(&[1, 2, 3], 3);
-        let (new, pinned) = c.insert_pinned(&[1, 2, 4], 3);
-        assert_eq!((new, pinned), (1, 3));
+        let _pin = c.insert_pinned(&p(&[1, 2, 3]), 3);
+        let (new, h) = c.insert_pinned(&p(&[1, 2, 4]), 3);
+        assert_eq!((new, h.len()), (1, 3));
         assert_eq!(c.size_tokens(), 4);
     }
 
     #[test]
     fn pinned_tokens_not_evicted() {
         let mut c = RadixCache::new(3);
-        c.insert_pinned(&[1, 2, 3], 3);
+        let _pin = c.insert_pinned(&p(&[1, 2, 3]), 3);
         // Full of pinned tokens: new insert cannot make room.
-        let (new, pinned) = c.insert_pinned(&[9, 8, 7], 3);
-        assert_eq!((new, pinned), (0, 0));
+        let (new, h) = c.insert_pinned(&p(&[9, 8, 7]), 3);
+        assert_eq!((new, h.len()), (0, 0));
+        assert_eq!(h, PinHandle::EMPTY);
         assert_eq!(c.size_tokens(), 3);
         assert_eq!(c.lookup(&[1, 2, 3]), 3);
     }
@@ -314,9 +541,9 @@ mod tests {
     #[test]
     fn release_allows_eviction() {
         let mut c = RadixCache::new(3);
-        c.insert_pinned(&[1, 2, 3], 3);
-        c.release(&[1, 2, 3], 3);
-        let (new, _) = c.insert_pinned(&[9, 8, 7], 3);
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3]), 3);
+        c.release(h);
+        let (new, _) = c.insert_pinned(&p(&[9, 8, 7]), 3);
         assert_eq!(new, 3);
         assert_eq!(c.size_tokens(), 3);
         assert_eq!(c.lookup(&[1, 2, 3]), 0); // evicted
@@ -325,13 +552,13 @@ mod tests {
     #[test]
     fn lru_evicts_oldest_first() {
         let mut c = RadixCache::new(4);
-        c.insert_pinned(&[1, 1], 2);
-        c.release(&[1, 1], 2);
-        c.insert_pinned(&[2, 2], 2);
-        c.release(&[2, 2], 2);
+        let (_, h) = c.insert_pinned(&p(&[1, 1]), 2);
+        c.release(h);
+        let (_, h) = c.insert_pinned(&p(&[2, 2]), 2);
+        c.release(h);
         // Touch [1,1] so [2,2] is LRU.
         c.lookup(&[1, 1]);
-        c.insert_pinned(&[3, 3], 2);
+        let _pin = c.insert_pinned(&p(&[3, 3]), 2);
         assert_eq!(c.lookup(&[1, 1]), 2);
         assert_eq!(c.lookup(&[2, 2]), 0);
     }
@@ -339,9 +566,9 @@ mod tests {
     #[test]
     fn leaf_first_eviction_keeps_prefix_valid() {
         let mut c = RadixCache::new(4);
-        c.insert_pinned(&[1, 2, 3, 4], 4);
-        c.release(&[1, 2, 3, 4], 4);
-        // Evict 2 tokens: must be [4] then [3] (leaves first).
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
+        c.release(h);
+        // Evict 2 tokens: must be the segment tail (tokens 4 then 3).
         c.evict_to(2);
         assert_eq!(c.lookup(&[1, 2, 3, 4]), 2);
         assert_eq!(c.size_tokens(), 2);
@@ -350,19 +577,19 @@ mod tests {
     #[test]
     fn refcounts_stack() {
         let mut c = RadixCache::new(10);
-        c.insert_pinned(&[1, 2], 2);
-        c.insert_pinned(&[1, 2], 2); // second request, same prompt
-        c.release(&[1, 2], 2);
+        let (_, h1) = c.insert_pinned(&p(&[1, 2]), 2);
+        let (_, h2) = c.insert_pinned(&p(&[1, 2]), 2); // second request, same prompt
+        c.release(h1);
         // Still pinned by the second request.
         assert_eq!(c.evict_to(0), 0);
-        c.release(&[1, 2], 2);
+        c.release(h2);
         assert_eq!(c.evict_to(0), 2);
     }
 
     #[test]
     fn hit_ratio_accumulates() {
         let mut c = RadixCache::new(100);
-        c.insert_pinned(&[1, 2, 3, 4], 4);
+        let _pin = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
         c.lookup(&[1, 2, 3, 4]); // 4 hits / 4 looked up
         c.lookup(&[5, 6, 7, 8]); // 0 hits / 4 looked up
         assert!((c.hit_ratio() - 0.5).abs() < 1e-9);
@@ -371,13 +598,110 @@ mod tests {
     #[test]
     fn truncated_insert_reports_partial() {
         let mut c = RadixCache::new(2);
-        let (new, pinned) = c.insert_pinned(&[1, 2, 3, 4], 4);
-        assert_eq!((new, pinned), (2, 2));
+        let (new, h) = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
+        assert_eq!((new, h.len()), (2, 2));
         assert_eq!(c.size_tokens(), 2);
         // The partial path is pinned until released.
         assert_eq!(c.evict_to(0), 0);
-        c.release(&[1, 2, 3, 4], pinned);
+        c.release(h);
         assert_eq!(c.evict_to(0), 2);
+    }
+
+    #[test]
+    fn combined_pass_matches_separate_lookup_insert() {
+        let base = p(&(0..100u32).collect::<Vec<_>>());
+        let fork = p(&(0..60u32).chain(900..940).collect::<Vec<_>>());
+        let mut a = RadixCache::new(1000);
+        let mut b = RadixCache::new(1000);
+        for q in [&base, &fork, &base] {
+            let hit_a = a.lookup(q);
+            let (new_a, ha) = a.insert_pinned(q, q.len());
+            let (hit_b, new_b, hb) = b.lookup_insert_pinned(q);
+            assert_eq!((hit_a, new_a, ha.len()), (hit_b, new_b, hb.len()));
+            a.release(ha);
+            b.release(hb);
+        }
+        assert_eq!(a.hits_tokens, b.hits_tokens);
+        assert_eq!(a.lookup_tokens, b.lookup_tokens);
+        assert_eq!(a.size_tokens(), b.size_tokens());
+    }
+
+    #[test]
+    fn split_on_partial_match_keeps_tail_lru() {
+        // One 6-token segment; a partial lookup must freshen only the
+        // touched head, leaving the tail the LRU eviction victim.
+        let mut c = RadixCache::new(100);
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3, 4, 5, 6]), 6);
+        c.release(h);
+        let (_, h) = c.insert_pinned(&p(&[7, 8]), 2);
+        c.release(h); // newer than the [1..6] segment as a whole
+        assert_eq!(c.lookup(&[1, 2, 3, 9]), 3); // splits [1,2,3|4,5,6], bumps head
+        // Evict 3: the stale tail [4,5,6] must go before the newer [7,8].
+        assert_eq!(c.evict_to(c.size_tokens() - 3), 3);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 3);
+        assert_eq!(c.lookup(&[7, 8]), 2);
+    }
+
+    #[test]
+    fn split_on_partial_evict_rematerializes_tail_only() {
+        let mut c = RadixCache::new(100);
+        let q = p(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let (_, h) = c.insert_pinned(&q, 8);
+        c.release(h);
+        assert_eq!(c.evict_to(5), 3); // token-exact tail split
+        assert_eq!(c.evicted_tokens, 3);
+        assert_eq!(c.lookup(&[1, 2, 3, 4, 5, 6, 7, 8]), 5);
+        // Re-insert: only the evicted tail is materialized again.
+        let (new, h) = c.insert_pinned(&q, 8);
+        assert_eq!((new, h.len()), (3, 8));
+        assert_eq!(c.size_tokens(), 8);
+        c.release(h);
+    }
+
+    #[test]
+    fn pin_ending_mid_segment_splits_at_the_boundary() {
+        let mut c = RadixCache::new(100);
+        let q = p(&[1, 2, 3, 4]);
+        let (_, h_all) = c.insert_pinned(&q, 4);
+        c.release(h_all);
+        let (new, h_head) = c.insert_pinned(&q, 2); // pin only [1,2]
+        assert_eq!((new, h_head.len()), (0, 2));
+        assert_eq!(c.pinned_tokens(), 2);
+        // Only the unpinned tail [3,4] is evictable.
+        assert_eq!(c.evict_to(0), 2);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 2);
+        c.release(h_head);
+        assert_eq!(c.evict_to(0), 2);
+        assert_eq!(c.size_tokens(), 0);
+    }
+
+    #[test]
+    fn handle_survives_later_splits_of_its_path() {
+        let mut c = RadixCache::new(100);
+        let (_, h_a) = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
+        // Diverging insert splits A's segment at depth 2 while A is pinned.
+        let (_, h_b) = c.insert_pinned(&p(&[1, 2, 9]), 3);
+        assert_eq!(c.pinned_tokens(), 5);
+        c.release(h_a);
+        assert_eq!(c.pinned_tokens(), 3); // [1,2] + [9] still pinned by B
+        c.release(h_b);
+        assert_eq!(c.pinned_tokens(), 0);
+        assert_eq!(c.evict_to(0), 5);
+    }
+
+    #[test]
+    fn path_compression_uses_few_nodes() {
+        let mut c = RadixCache::new(1_000_000);
+        // 16 prompts sharing a 4000-token stem: 1 stem node + 16 tails.
+        let stem: Vec<u32> = (0..4000).collect();
+        for i in 0..16u32 {
+            let mut q = stem.clone();
+            q.extend((0..8).map(|k| 100_000 + i * 10 + k));
+            let (_, h) = c.insert_pinned(&Arc::new(q), 4008);
+            c.release(h);
+        }
+        assert!(c.node_count() <= 2 * 16 + 2, "nodes {}", c.node_count());
+        assert_eq!(c.size_tokens(), 4000 + 16 * 8);
     }
 
     #[test]
@@ -388,19 +712,17 @@ mod tests {
         let groups = 20usize;
         let per = 6usize;
         let stem = 30usize;
-        let prompt = |g: usize, i: usize| -> Vec<u32> {
-            let mut p: Vec<u32> = (0..stem).map(|k| (g * 1000 + k) as u32).collect();
-            p.push((900_000 + g * 100 + i) as u32);
-            p
+        let prompt = |g: usize, i: usize| -> Arc<Vec<u32>> {
+            let mut q: Vec<u32> = (0..stem).map(|k| (g * 1000 + k) as u32).collect();
+            q.push((900_000 + g * 100 + i) as u32);
+            Arc::new(q)
         };
         let run = |order: Vec<(usize, usize)>| -> f64 {
             let mut c = RadixCache::new(3 * (stem as u64 + per as u64));
             for (g, i) in order {
-                let p = prompt(g, i);
-                let hit = c.lookup(&p);
-                c.insert_pinned(&p, p.len());
-                let _ = hit;
-                c.release(&p, p.len());
+                let q = prompt(g, i);
+                let (_, _, h) = c.lookup_insert_pinned(&q);
+                c.release(h);
             }
             c.hit_ratio()
         };

@@ -3,12 +3,12 @@
 //! (request-ordering policy — FCFS/DFS/Random or BlendServe's dual
 //! scanner).
 
-use super::prefix_cache::RadixCache;
+use super::prefix_cache::{PinHandle, RadixCache};
 use super::overlap_time;
 use crate::config::{EngineConfig, SchedulerConfig};
 use crate::perfmodel::PerfModel;
 use crate::trace::Workload;
-use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Which memory partition a request was admitted into (§5.3).
@@ -275,8 +275,11 @@ impl SimResult {
 struct Active {
     req: u32,
     side: Side,
-    /// Prompt tokens pinned in the prefix cache (≤ input_len on truncation).
-    pinned_len: usize,
+    /// Receipt for the prompt prefix pinned in the prefix cache
+    /// (`pin.len()` ≤ input_len on truncation; empty when caching is
+    /// off).  Consumed by `RadixCache::release` on finish/retraction —
+    /// an O(path nodes) walk instead of re-matching the prompt.
+    pin: PinHandle,
     /// Prompt tokens NOT resident in the cache (charged privately).
     private_prompt: f64,
     /// Prefill progress (starts at the cache hit length).
@@ -299,21 +302,19 @@ fn retract_one(
     i: usize,
     active: &mut Vec<Active>,
     requests: &[SimRequest],
-    by_id: &HashMap<u32, usize>,
+    by_id: &[usize],
     cache: &mut RadixCache,
-    use_cache: bool,
     decode_ctx_sum: &mut f64,
     private_tokens: &mut f64,
     used_left: &mut f64,
     used_right: &mut f64,
-    retract_queue: &mut Vec<u32>,
+    retract_queue: &mut VecDeque<u32>,
 ) {
     let a = active.remove(i);
-    let idx = by_id[&a.req];
+    let idx = by_id[a.req as usize];
     let r = &requests[idx];
-    if use_cache {
-        cache.release(&r.prompt, a.pinned_len);
-    }
+    // No-op for the empty handle (prefix cache disabled).
+    cache.release(a.pin);
     if a.decoding {
         *decode_ctx_sum -= (r.input_len() + a.decoded as usize) as f64;
     }
@@ -322,7 +323,7 @@ fn retract_one(
         Side::Left => *used_left -= a.charge,
         Side::Right => *used_right -= a.charge,
     }
-    retract_queue.push(a.req);
+    retract_queue.push_back(a.req);
 }
 
 /// The step simulator.
@@ -333,7 +334,11 @@ pub struct SimEngine {
     pub kv_capacity: f64,
     cache: RadixCache,
     requests: Vec<SimRequest>,
-    by_id: HashMap<u32, usize>,
+    /// Dense request-id → index map (ids are dense per Workload; sparse
+    /// hand-built ids cost only `max_id` slots).  Probed on every
+    /// admission, retraction and phase scan — a Vec index beats a
+    /// HashMap probe on this hot path.
+    by_id: Vec<usize>,
 }
 
 impl SimEngine {
@@ -349,7 +354,11 @@ impl SimEngine {
         } else {
             0
         };
-        let by_id = requests.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+        let max_id = requests.iter().map(|r| r.id as usize).max().unwrap_or(0);
+        let mut by_id = vec![usize::MAX; max_id + 1];
+        for (i, r) in requests.iter().enumerate() {
+            by_id[r.id as usize] = i;
+        }
         SimEngine {
             pm,
             cfg,
@@ -365,8 +374,9 @@ impl SimEngine {
     pub fn run(&mut self, admitter: &mut dyn Admitter) -> SimResult {
         let mut result = SimResult::default();
         let mut active: Vec<Active> = Vec::new();
-        // Queue of retracted requests: re-admitted with priority.
-        let mut retract_queue: Vec<u32> = Vec::new();
+        // Queue of retracted requests: re-admitted with priority (FIFO;
+        // VecDeque so readmission pops are O(1), not a Vec::remove shift).
+        let mut retract_queue: VecDeque<u32> = VecDeque::new();
         let mut timings: Vec<RequestTiming> = self
             .requests
             .iter()
@@ -440,13 +450,13 @@ impl SimEngine {
                 } else {
                     match admitter.peek(&view) {
                         Some((r, s)) => (r, s, false),
-                        None => match retract_queue.first() {
+                        None => match retract_queue.front() {
                             Some(&r) => (r, Side::Left, true),
                             None => break,
                         },
                     }
                 };
-                let idx = self.by_id[&req];
+                let idx = self.by_id[req as usize];
                 let est = self.requests[idx].est_kv_tokens();
                 if committed + est > self.kv_capacity && !active.is_empty() {
                     // SLO-critical admission under memory pressure:
@@ -456,7 +466,7 @@ impl SimEngine {
                     if urgent && !readmission {
                         let victim = active
                             .iter()
-                            .rposition(|a| !self.requests[self.by_id[&a.req]].is_online);
+                            .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online);
                         match victim {
                             Some(v) if active.len() > 1 => {
                                 retract_one(
@@ -465,7 +475,6 @@ impl SimEngine {
                                     &self.requests,
                                     &self.by_id,
                                     &mut self.cache,
-                                    self.cfg.prefix_cache,
                                     &mut decode_ctx_sum,
                                     &mut private_tokens,
                                     &mut used_left,
@@ -481,7 +490,7 @@ impl SimEngine {
                     break; // wait for memory
                 }
                 if readmission {
-                    retract_queue.remove(0);
+                    retract_queue.pop_front();
                 } else {
                     admitter.pop();
                 }
@@ -489,17 +498,15 @@ impl SimEngine {
                     timings[idx].admit = clock;
                 }
                 let prompt = self.requests[idx].prompt.clone();
-                let hit = if self.cfg.prefix_cache {
-                    self.cache.lookup(&prompt)
+                // Single combined radix walk instead of a lookup followed
+                // by an insert re-walking the same path.
+                let (hit, pin) = if self.cfg.prefix_cache {
+                    let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
+                    (hit, pin)
                 } else {
-                    0
+                    (0, PinHandle::EMPTY)
                 };
-                let (_, pinned_len) = if self.cfg.prefix_cache {
-                    self.cache.insert_pinned(&prompt, prompt.len())
-                } else {
-                    (0, 0)
-                };
-                let private_prompt = (prompt.len() - pinned_len) as f64;
+                let private_prompt = (prompt.len() - pin.len()) as f64;
                 private_tokens += private_prompt;
                 match side {
                     Side::Left => used_left += est,
@@ -512,7 +519,7 @@ impl SimEngine {
                 active.push(Active {
                     req,
                     side,
-                    pinned_len,
+                    pin,
                     private_prompt,
                     prefill_pos: hit,
                     decoded: 0,
@@ -529,9 +536,8 @@ impl SimEngine {
                 if finished >= n_total {
                     break;
                 }
-                let (req, side) = if let Some(&r) = retract_queue.first() {
-                    retract_queue.remove(0);
-                    (r, Side::Left)
+                let (req, side, readmission) = if let Some(r) = retract_queue.pop_front() {
+                    (r, Side::Left, true)
                 } else {
                     let view = EngineView {
                         step,
@@ -545,7 +551,7 @@ impl SimEngine {
                     match admitter.peek(&view) {
                         Some((r, s)) => {
                             admitter.pop();
-                            (r, s)
+                            (r, s, false)
                         }
                         None => {
                             // Time-gated admitter, nothing arrived yet:
@@ -561,30 +567,34 @@ impl SimEngine {
                         }
                     }
                 };
-                let idx = self.by_id[&req];
+                let idx = self.by_id[req as usize];
                 if timings[idx].admit.is_nan() {
                     timings[idx].admit = clock;
                 }
                 let prompt = self.requests[idx].prompt.clone();
-                let hit = if self.cfg.prefix_cache { self.cache.lookup(&prompt) } else { 0 };
-                let (_, pinned_len) = if self.cfg.prefix_cache {
-                    self.cache.insert_pinned(&prompt, prompt.len())
+                let (hit, pin) = if self.cfg.prefix_cache {
+                    let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
+                    (hit, pin)
                 } else {
-                    (0, 0)
+                    (0, PinHandle::EMPTY)
                 };
-                let private_prompt = (prompt.len() - pinned_len) as f64;
+                let private_prompt = (prompt.len() - pin.len()) as f64;
                 private_tokens += private_prompt;
                 let est = self.requests[idx].est_kv_tokens();
                 match side {
                     Side::Left => used_left += est,
                     Side::Right => used_right += est,
                 }
-                result.prompt_tokens += prompt.len() as u64;
-                result.hit_tokens += hit as u64;
+                // Same accounting rule as the main admission loop:
+                // retraction re-admissions don't recount prompt/hit stats.
+                if !readmission {
+                    result.prompt_tokens += prompt.len() as u64;
+                    result.hit_tokens += hit as u64;
+                }
                 active.push(Active {
                     req,
                     side,
-                    pinned_len,
+                    pin,
                     private_prompt,
                     prefill_pos: hit,
                     decoded: 0,
@@ -596,7 +606,7 @@ impl SimEngine {
 
             // ---- phase transitions (at step start) ----
             for a in active.iter_mut() {
-                let p = self.requests[self.by_id[&a.req]].input_len();
+                let p = self.requests[self.by_id[a.req as usize]].input_len();
                 if !a.decoding && a.prefill_pos >= p {
                     a.decoding = true;
                     decode_ctx_sum += (p + a.decoded as usize) as f64;
@@ -640,7 +650,7 @@ impl SimEngine {
                     if a.decoding || chunk_left == 0 {
                         continue;
                     }
-                    let req = &self.requests[self.by_id[&a.req]];
+                    let req = &self.requests[self.by_id[a.req as usize]];
                     if (pass == 0) != req.is_online {
                         continue;
                     }
@@ -673,7 +683,7 @@ impl SimEngine {
             // ---- decode progress & finishes ----
             let mut i = 0;
             while i < active.len() {
-                let idx = self.by_id[&active[i].req];
+                let idx = self.by_id[active[i].req as usize];
                 let p = self.requests[idx].input_len();
                 if active[i].decoding {
                     active[i].decoded += 1;
@@ -698,9 +708,7 @@ impl SimEngine {
                         // Finished: release pins, free private tokens.
                         let a = active.swap_remove(i);
                         let r = &self.requests[idx];
-                        if self.cfg.prefix_cache {
-                            self.cache.release(&r.prompt, a.pinned_len);
-                        }
+                        self.cache.release(a.pin);
                         decode_ctx_sum -= (p + a.decoded as usize) as f64;
                         private_tokens -= a.private_prompt + a.decoded as f64;
                         match a.side {
@@ -734,7 +742,7 @@ impl SimEngine {
                     // newest, exactly as before.
                     let victim = active
                         .iter()
-                        .rposition(|a| !self.requests[self.by_id[&a.req]].is_online)
+                        .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online)
                         .unwrap_or(active.len() - 1);
                     retract_one(
                         victim,
@@ -742,7 +750,6 @@ impl SimEngine {
                         &self.requests,
                         &self.by_id,
                         &mut self.cache,
-                        self.cfg.prefix_cache,
                         &mut decode_ctx_sum,
                         &mut private_tokens,
                         &mut used_left,

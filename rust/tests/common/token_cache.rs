@@ -1,0 +1,258 @@
+//! The original *token-granular* radix cache, retained verbatim as the
+//! behavioral reference for the segment-granular rewrite in
+//! `rust/src/engine/prefix_cache.rs`.
+//!
+//! Test/bench-only: `rust/tests/prefix_cache_oracle.rs` checks that the
+//! production cache reproduces this implementation's `hits_tokens` /
+//! `evicted_tokens` / `pinned_tokens` / `size` accounting op-for-op over
+//! randomized workloads, and `rust/benches/prefix_cache.rs` uses it as
+//! the speedup baseline.  Do not "optimize" this file — its value is
+//! being the unoptimized semantic ground truth.
+#![allow(dead_code)]
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+type Id = u32;
+const NIL: Id = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct CNode {
+    parent: Id,
+    token: u32,
+    n_children: u32,
+    refs: u32,
+    last_use: u64,
+    /// Free-list linkage when the slot is recycled.
+    free: bool,
+}
+
+/// Token-granular radix cache with LRU leaf eviction (one arena node and
+/// one hash probe per resident token).
+#[derive(Debug)]
+pub struct TokenRadixCache {
+    nodes: Vec<CNode>,
+    children: HashMap<(Id, u32), Id>,
+    free_list: Vec<Id>,
+    /// Lazy min-heap of eviction candidates `(last_use, id)`.
+    evict_heap: BinaryHeap<Reverse<(u64, Id)>>,
+    /// Resident tokens (= live nodes).
+    size: u64,
+    /// Tokens currently pinned (refs > 0); maintained incrementally.
+    pinned: u64,
+    capacity: u64,
+    clock: u64,
+    // ---- statistics ----
+    pub hits_tokens: u64,
+    pub lookup_tokens: u64,
+    pub evicted_tokens: u64,
+}
+
+impl TokenRadixCache {
+    pub fn new(capacity: u64) -> Self {
+        TokenRadixCache {
+            nodes: Vec::new(),
+            children: HashMap::new(),
+            free_list: Vec::new(),
+            evict_heap: BinaryHeap::new(),
+            size: 0,
+            pinned: 0,
+            capacity,
+            clock: 0,
+            hits_tokens: 0,
+            lookup_tokens: 0,
+            evicted_tokens: 0,
+        }
+    }
+
+    pub fn size_tokens(&self) -> u64 {
+        self.size
+    }
+
+    pub fn capacity_tokens(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Longest cached prefix of `prompt`, in tokens; bumps LRU clocks
+    /// along the path and counts hit statistics.
+    pub fn lookup(&mut self, prompt: &[u32]) -> usize {
+        self.clock += 1;
+        let mut cur = NIL;
+        let mut depth = 0usize;
+        for &t in prompt {
+            match self.children.get(&(cur, t)).copied() {
+                Some(next) => {
+                    self.nodes[next as usize].last_use = self.clock;
+                    cur = next;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if cur != NIL {
+            self.push_candidate(cur);
+        }
+        self.hits_tokens += depth as u64;
+        self.lookup_tokens += prompt.len() as u64;
+        depth
+    }
+
+    /// Insert (pin) the first `len` tokens of `prompt`.  Returns
+    /// `(new_tokens, pinned_len)`; the caller must `release(prompt,
+    /// pinned_len)` with the same length when done.
+    pub fn insert_pinned(&mut self, prompt: &[u32], len: usize) -> (usize, usize) {
+        self.clock += 1;
+        let len = len.min(prompt.len());
+        let mut cur = NIL;
+        let mut new_tokens = 0usize;
+        let mut depth = 0usize;
+        for &t in prompt.iter().take(len) {
+            let next = match self.children.get(&(cur, t)).copied() {
+                Some(n) => n,
+                None => {
+                    if self.size >= self.capacity && !self.evict_one() {
+                        break; // truncate: pin what we reached
+                    }
+                    let id = self.alloc(cur, t);
+                    self.children.insert((cur, t), id);
+                    self.size += 1;
+                    new_tokens += 1;
+                    id
+                }
+            };
+            if self.nodes[next as usize].refs == 0 {
+                self.pinned += 1;
+            }
+            self.nodes[next as usize].refs += 1;
+            self.nodes[next as usize].last_use = self.clock;
+            cur = next;
+            depth += 1;
+        }
+        (new_tokens, depth)
+    }
+
+    /// Drop one reference along the first `len` tokens of `prompt`.
+    /// O(len): re-walks the trie token by token.
+    pub fn release(&mut self, prompt: &[u32], len: usize) {
+        let mut cur = NIL;
+        for &t in prompt.iter().take(len) {
+            match self.children.get(&(cur, t)).copied() {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        self.unref_path(cur);
+    }
+
+    fn unref_path(&mut self, mut cur: Id) {
+        while cur != NIL {
+            let n = &mut self.nodes[cur as usize];
+            debug_assert!(n.refs > 0, "unref below zero");
+            n.refs = n.refs.saturating_sub(1);
+            if n.refs == 0 {
+                self.pinned = self.pinned.saturating_sub(1);
+            }
+            let n = &self.nodes[cur as usize];
+            let parent = n.parent;
+            self.push_candidate(cur);
+            cur = parent;
+        }
+    }
+
+    fn push_candidate(&mut self, id: Id) {
+        let n = &self.nodes[id as usize];
+        if !n.free && n.refs == 0 && n.n_children == 0 {
+            self.evict_heap.push(Reverse((n.last_use, id)));
+        }
+    }
+
+    /// Evict the LRU unreferenced leaf token.
+    fn evict_one(&mut self) -> bool {
+        for _attempt in 0..2 {
+            while let Some(Reverse((lu, id))) = self.evict_heap.pop() {
+                let n = &self.nodes[id as usize];
+                if !n.free && n.refs == 0 && n.n_children == 0 && n.last_use == lu {
+                    self.remove_leaf(id);
+                    return true;
+                }
+            }
+            let mut found = false;
+            for i in 0..self.nodes.len() {
+                let n = &self.nodes[i];
+                if !n.free && n.refs == 0 && n.n_children == 0 {
+                    self.evict_heap.push(Reverse((n.last_use, i as Id)));
+                    found = true;
+                }
+            }
+            if !found {
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Evict until at most `target` tokens remain.  Returns tokens evicted.
+    pub fn evict_to(&mut self, target: u64) -> u64 {
+        let mut freed = 0;
+        while self.size > target {
+            if !self.evict_one() {
+                break;
+            }
+            freed += 1;
+        }
+        freed
+    }
+
+    fn remove_leaf(&mut self, id: Id) {
+        let (parent, token) = {
+            let n = &self.nodes[id as usize];
+            debug_assert!(n.refs == 0 && n.n_children == 0 && !n.free);
+            (n.parent, n.token)
+        };
+        self.children.remove(&(parent, token));
+        self.nodes[id as usize].free = true;
+        self.free_list.push(id);
+        if parent != NIL {
+            self.nodes[parent as usize].n_children -= 1;
+            self.push_candidate(parent);
+        }
+        self.size -= 1;
+        self.evicted_tokens += 1;
+    }
+
+    fn alloc(&mut self, parent: Id, token: u32) -> Id {
+        if parent != NIL {
+            self.nodes[parent as usize].n_children += 1;
+        }
+        let node = CNode {
+            parent,
+            token,
+            n_children: 0,
+            refs: 0,
+            last_use: self.clock,
+            free: false,
+        };
+        match self.free_list.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as Id
+            }
+        }
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hits_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+
+    pub fn pinned_tokens(&self) -> u64 {
+        self.pinned
+    }
+}

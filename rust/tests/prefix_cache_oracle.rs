@@ -1,0 +1,200 @@
+//! Randomized differential oracle: the segment-granular `RadixCache`
+//! must reproduce the retained token-granular reference implementation
+//! (`tests/common/token_cache.rs`) *op for op* — same hit depths, same
+//! truncation, same token-exact `hits_tokens` / `evicted_tokens` /
+//! `pinned_tokens` / `size` accounting, same LRU eviction victims —
+//! across ~10k random lookup / insert / release / evict operations on
+//! prompt pools engineered to hit every split path (shared stems,
+//! mid-stem forks, partial-prefix lookups, pin boundaries inside
+//! segments, capacity-forced truncation).
+
+#[path = "common/token_cache.rs"]
+mod token_cache;
+
+use blendserve::engine::prefix_cache::{PinHandle, RadixCache};
+use blendserve::util::rng::DetRng;
+use std::sync::Arc;
+use token_cache::TokenRadixCache;
+
+/// Prompts with heavy structural sharing: stems, mid-stem forks and
+/// unique tails, so segment matching constantly splits nodes.
+fn build_pool(rng: &mut DetRng) -> Vec<Arc<Vec<u32>>> {
+    let mut pool: Vec<Arc<Vec<u32>>> = Vec::new();
+    let n_stems = 6usize;
+    for s in 0..n_stems {
+        let stem_len = rng.range(8, 40) as usize;
+        let stem: Vec<u32> = (0..stem_len).map(|k| (s * 1000 + k) as u32).collect();
+        let forks = rng.range(2, 5) as usize;
+        for f in 0..forks {
+            let cut = rng.range(1, stem_len as u64 - 1) as usize;
+            let mut q = stem[..cut].to_vec();
+            let tail = rng.range(1, 24) as usize;
+            q.extend((0..tail).map(|k| (500_000 + s * 10_000 + f * 100 + k) as u32));
+            pool.push(Arc::new(q));
+        }
+        pool.push(Arc::new(stem));
+    }
+    pool
+}
+
+struct Oracle {
+    reference: TokenRadixCache,
+    segment: RadixCache,
+    /// Live pins, mirrored: the reference releases by (prompt, len), the
+    /// segment cache by handle.
+    pins: Vec<(usize, usize, PinHandle)>,
+}
+
+impl Oracle {
+    fn new(capacity: u64) -> Self {
+        Oracle {
+            reference: TokenRadixCache::new(capacity),
+            segment: RadixCache::new(capacity),
+            pins: Vec::new(),
+        }
+    }
+
+    fn assert_state(&self, op: usize, what: &str) {
+        assert_eq!(
+            self.reference.size_tokens(),
+            self.segment.size_tokens(),
+            "size diverged after op {op} ({what})"
+        );
+        assert_eq!(
+            self.reference.pinned_tokens(),
+            self.segment.pinned_tokens(),
+            "pinned diverged after op {op} ({what})"
+        );
+        assert_eq!(
+            self.reference.hits_tokens, self.segment.hits_tokens,
+            "hits_tokens diverged after op {op} ({what})"
+        );
+        assert_eq!(
+            self.reference.lookup_tokens, self.segment.lookup_tokens,
+            "lookup_tokens diverged after op {op} ({what})"
+        );
+        assert_eq!(
+            self.reference.evicted_tokens, self.segment.evicted_tokens,
+            "evicted_tokens diverged after op {op} ({what})"
+        );
+    }
+}
+
+fn run_oracle(seed: u64, capacity: u64, n_ops: usize) {
+    let mut rng = DetRng::new(seed);
+    let pool = build_pool(&mut rng);
+    let mut o = Oracle::new(capacity);
+
+    for op in 0..n_ops {
+        let idx = rng.range(0, pool.len() as u64 - 1) as usize;
+        let prompt = &pool[idx];
+        match rng.range(0, 99) {
+            // ---- lookup, often of a partial prefix (forces splits) ----
+            0..=29 => {
+                let len = if rng.chance(0.5) {
+                    prompt.len()
+                } else {
+                    rng.range(1, prompt.len() as u64) as usize
+                };
+                let a = o.reference.lookup(&prompt[..len]);
+                let b = o.segment.lookup(&prompt[..len]);
+                assert_eq!(a, b, "lookup depth diverged at op {op}");
+                o.assert_state(op, "lookup");
+            }
+            // ---- insert_pinned with an arbitrary pin length ----
+            30..=54 => {
+                let len = if rng.chance(0.7) {
+                    prompt.len()
+                } else {
+                    rng.range(1, prompt.len() as u64) as usize
+                };
+                let (new_a, plen_a) = o.reference.insert_pinned(prompt, len);
+                let (new_b, handle) = o.segment.insert_pinned(prompt, len);
+                assert_eq!(
+                    (new_a, plen_a),
+                    (new_b, handle.len()),
+                    "insert diverged at op {op}"
+                );
+                o.pins.push((idx, plen_a, handle));
+                o.assert_state(op, "insert");
+            }
+            // ---- the engine's combined hot path ----
+            55..=69 => {
+                let hit_a = o.reference.lookup(prompt);
+                let (new_a, plen_a) = o.reference.insert_pinned(prompt, prompt.len());
+                let (hit_b, new_b, handle) = o.segment.lookup_insert_pinned(prompt);
+                assert_eq!(
+                    (hit_a, new_a, plen_a),
+                    (hit_b, new_b, handle.len()),
+                    "combined lookup+insert diverged at op {op}"
+                );
+                o.pins.push((idx, plen_a, handle));
+                o.assert_state(op, "lookup_insert");
+            }
+            // ---- release a random live pin ----
+            70..=89 => {
+                if !o.pins.is_empty() {
+                    let i = rng.range(0, o.pins.len() as u64 - 1) as usize;
+                    let (pidx, plen, handle) = o.pins.swap_remove(i);
+                    o.reference.release(&pool[pidx], plen);
+                    o.segment.release(handle);
+                    o.assert_state(op, "release");
+                }
+            }
+            // ---- evict toward a random target ----
+            _ => {
+                let size = o.reference.size_tokens();
+                let target = if size == 0 { 0 } else { rng.range(0, size) };
+                let a = o.reference.evict_to(target);
+                let b = o.segment.evict_to(target);
+                assert_eq!(a, b, "evict_to({target}) freed diverged at op {op}");
+                o.assert_state(op, "evict_to");
+            }
+        }
+    }
+
+    // Drain: release everything, evict everything, then verify the final
+    // resident structure is identical via full-pool lookups.
+    while let Some((pidx, plen, handle)) = o.pins.pop() {
+        o.reference.release(&pool[pidx], plen);
+        o.segment.release(handle);
+    }
+    o.assert_state(n_ops, "final release");
+    assert_eq!(o.reference.evict_to(0), o.segment.evict_to(0), "final evict");
+    assert_eq!(o.segment.size_tokens(), 0, "cache not empty after drain");
+    o.assert_state(n_ops, "final evict");
+    for p in &pool {
+        assert_eq!(o.reference.lookup(p), 0);
+        assert_eq!(o.segment.lookup(p), 0);
+    }
+}
+
+#[test]
+fn oracle_10k_ops_tight_capacity() {
+    // Capacity well below the working set: constant eviction, frequent
+    // truncated inserts, pinned-token back-pressure.
+    run_oracle(0xB1E7D5, 300, 10_000);
+}
+
+#[test]
+fn oracle_10k_ops_loose_capacity() {
+    // Capacity above the working set: exercises pure sharing/split logic
+    // with eviction only via explicit evict_to ops.
+    run_oracle(0x5EED, 5_000, 10_000);
+}
+
+#[test]
+fn oracle_many_seeds_short() {
+    // Breadth over depth: 20 different pool shapes and op interleavings.
+    for seed in 0..20u64 {
+        run_oracle(1000 + seed, 120 + seed * 37, 800);
+    }
+}
+
+#[test]
+fn oracle_zero_and_tiny_capacity() {
+    // Degenerate capacities: everything truncates (0) or single-segment
+    // thrash (8).  The accounting must still agree token-for-token.
+    run_oracle(0xDEAD, 0, 500);
+    run_oracle(0xBEEF, 8, 2_000);
+}
