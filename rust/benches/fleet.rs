@@ -1,0 +1,132 @@
+//! Fleet benchmarks: static §5.5 fork-join vs the work-stealing fleet at
+//! dp=4 on two trace shapes:
+//!
+//! - `balanced`     — a well-mixed BurstGPT synthesis with perfect output
+//!   estimates (sample_prob = 1): the static partition is already tight,
+//!   so stealing must stay within noise of it.
+//! - `adversarial`  — the HyGen regime: a third of the prompt groups carry
+//!   ~3x under-estimated output lengths (sparse §5.1 sampling), so the
+//!   est-balanced partition strands one replica with a multiple of its
+//!   target while the others idle.  Stealing must strictly beat static.
+//!
+//! The measured quantity is *simulated* makespan (the sim is
+//! deterministic, so one run per config suffices); host wall time is
+//! recorded for the perf-trajectory log.  Emits `BENCH_fleet.json`;
+//! `--smoke` shrinks workloads for CI and tags `"mode": "smoke"`.
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::config::SystemConfig;
+use blendserve::perfmodel::PerfModel;
+use blendserve::server::serve_fleet;
+use blendserve::trace::synth::{adversarial_skew, synthesize, SynthSpec};
+use blendserve::trace::TraceKind;
+use blendserve::util::json::Json;
+use std::time::Instant;
+
+fn fleet_cfg(skewed: bool) -> SystemConfig {
+    let mut cfg = baselines::blendserve();
+    cfg.dp_replicas = 4;
+    if skewed {
+        // Tight KV (~3.4k tokens): each shard's prompt footprint exceeds
+        // it, so admission pauses mid-shard and scanners retain pending
+        // whole units (the steal-eligible pool); sparse sampling
+        // under-estimates the liar groups.
+        cfg.hardware.memory_bytes = 20.5e9;
+        cfg.scheduler.sample_prob = 0.02;
+    } else {
+        cfg.scheduler.sample_prob = 1.0;
+    }
+    cfg
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_balanced, honest, liars, per) =
+        if smoke { (800, 20, 10, 8) } else { (4000, 40, 20, 12) };
+    println!(
+        "# fleet — static fork-join vs work stealing at dp=4{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+    let balanced = synthesize(
+        &SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n_balanced),
+        &pm,
+    );
+    let skewed = adversarial_skew(honest, liars, per);
+
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    let mut skew_speedup = 0.0f64;
+    let mut balanced_ratio = 0.0f64;
+    let mut skew_sharing_ok = false;
+    for (name, w, is_skewed) in
+        [("balanced", &balanced, false), ("adversarial", &skewed, true)]
+    {
+        let cfg = fleet_cfg(is_skewed);
+        let t0 = Instant::now();
+        let rep = serve_fleet(&cfg, w);
+        let wall = t0.elapsed();
+        assert_eq!(rep.total_tokens, w.total_tokens(), "{name}: tokens lost");
+        println!(
+            "{name:<12} {:>7} req | makespan {:>8.2}s vs static {:>8.2}s \
+             (speedup {:.2}x) | {} steals | idle {:.1}% | sharing {:.3}/{:.3} \
+             | host {:.2?}",
+            w.len(),
+            rep.makespan,
+            rep.static_makespan,
+            rep.speedup_vs_static,
+            rep.steals,
+            rep.mean_idle_frac * 100.0,
+            rep.sharing_achieved,
+            rep.static_sharing,
+            wall,
+        );
+        if is_skewed {
+            skew_speedup = rep.speedup_vs_static;
+            skew_sharing_ok = rep.sharing_achieved >= rep.static_sharing * 0.9;
+        } else {
+            balanced_ratio = rep.makespan / rep.static_makespan.max(1e-12);
+        }
+        let mut doc = rep.to_json();
+        if let Json::Obj(ref mut kv) = doc {
+            kv.insert("n_requests".to_string(), Json::from(w.len()));
+            kv.insert("host_wall_s".to_string(), Json::Num(wall.as_secs_f64()));
+        }
+        rows.push((name.to_string(), doc));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::from("fleet")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("dp", Json::from(4usize)),
+        ("workloads", Json::Obj(rows.into_iter().collect())),
+        (
+            "acceptance",
+            Json::obj(vec![
+                (
+                    "metric",
+                    Json::from(
+                        "adversarial-trace stealing speedup vs static partition_dp",
+                    ),
+                ),
+                ("required", Json::from(1.0)),
+                ("achieved", Json::from(skew_speedup)),
+                ("balanced_makespan_ratio", Json::from(balanced_ratio)),
+                (
+                    "pass",
+                    Json::from(
+                        skew_speedup > 1.0 && balanced_ratio < 1.05 && skew_sharing_ok,
+                    ),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_fleet.json";
+    std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+    println!("wrote {path} (adversarial speedup {skew_speedup:.2}x)");
+    assert!(
+        skew_speedup > 1.0,
+        "stealing fleet no faster than static fork-join on the adversarial trace"
+    );
+}

@@ -242,6 +242,71 @@ impl Default for ColocateConfig {
     }
 }
 
+/// Work-stealing fleet knobs (`server::fleet`).  The default is a
+/// homogeneous stealing-enabled fleet; `steal = false` reproduces the
+/// static §5.5 fork-join schedule exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Enable work stealing: a drained replica pulls whole scheduling
+    /// units from the memory end of the straggler's pending queue.
+    pub steal: bool,
+    /// Fraction of the victim's steal-eligible estimated work taken per
+    /// steal event, in (0, 1].
+    pub steal_ratio: f64,
+    /// Per-replica GPU counts for heterogeneous fleets; replicas beyond
+    /// the list (or an empty list) use `gpus_per_replica`.
+    pub gpus: Vec<usize>,
+    /// Per-replica hardware preset names (see
+    /// [`presets::hardware_by_name`]); replicas beyond the list (or an
+    /// empty list) use the top-level `hardware`.
+    pub hardware: Vec<String>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            steal: true,
+            steal_ratio: 0.5,
+            gpus: Vec::new(),
+            hardware: Vec::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Semantic validation shared by the TOML and CLI construction paths
+    /// (one source of truth, so the two cannot drift).
+    pub fn validate(&self, dp_replicas: usize) -> Result<(), String> {
+        if !(self.steal_ratio > 0.0 && self.steal_ratio <= 1.0) {
+            return Err(format!(
+                "steal_ratio must be in (0, 1], got {}",
+                self.steal_ratio
+            ));
+        }
+        if self.gpus.iter().any(|&g| g == 0) {
+            return Err("gpus entries must be >= 1".to_string());
+        }
+        if self.gpus.len() > dp_replicas {
+            return Err(format!(
+                "gpus lists {} replicas but dp_replicas is {dp_replicas}",
+                self.gpus.len()
+            ));
+        }
+        if self.hardware.len() > dp_replicas {
+            return Err(format!(
+                "hardware lists {} replicas but dp_replicas is {dp_replicas}",
+                self.hardware.len()
+            ));
+        }
+        for name in &self.hardware {
+            if presets::hardware_by_name(name).is_none() {
+                return Err(format!("unknown hardware preset '{name}'"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Scheduler knobs (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -320,6 +385,8 @@ pub struct SystemConfig {
     pub engine: EngineConfig,
     /// Online/offline co-location knobs (inert at `online_rate = 0`).
     pub colocate: ColocateConfig,
+    /// Work-stealing fleet knobs (`server::fleet`).
+    pub fleet: FleetConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -335,6 +402,7 @@ impl SystemConfig {
             scheduler: SchedulerConfig::default(),
             engine: EngineConfig::default(),
             colocate: ColocateConfig::default(),
+            fleet: FleetConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -399,6 +467,18 @@ impl SystemConfig {
         d.set_num("colocate", "urgency", self.colocate.urgency);
         d.set_num("colocate", "burst_factor", self.colocate.burst_factor);
         d.set_num("colocate", "phase_secs", self.colocate.phase_secs);
+
+        d.set_bool("fleet", "steal", self.fleet.steal);
+        d.set_num("fleet", "steal_ratio", self.fleet.steal_ratio);
+        let gpus_csv = self
+            .fleet
+            .gpus
+            .iter()
+            .map(|g| g.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        d.set_str("fleet", "gpus", &gpus_csv);
+        d.set_str("fleet", "hardware", &self.fleet.hardware.join(","));
         d.to_string_pretty()
     }
 
@@ -507,14 +587,62 @@ impl SystemConfig {
         check((0.0..=1.0).contains(&colocate.urgency), "urgency must be in [0, 1]")?;
         check(colocate.burst_factor >= 1.0, "burst_factor must be >= 1 (1 = Poisson)")?;
         check(colocate.phase_secs > 0.0, "phase_secs must be > 0")?;
+
+        // The [fleet] section is likewise optional (older config files
+        // predate the work-stealing fleet); absent keys use the default.
+        let fdef = FleetConfig::default();
+        let steal = match d.get("fleet", "steal") {
+            None => fdef.steal,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| TomlError("[fleet] steal: expected bool".into()))?,
+        };
+        let steal_ratio = match d.get("fleet", "steal_ratio") {
+            None => fdef.steal_ratio,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| TomlError("[fleet] steal_ratio: expected number".into()))?,
+        };
+        let fleet_csv = |key: &str| -> Result<Vec<String>, TomlError> {
+            match d.get("fleet", key) {
+                None => Ok(Vec::new()),
+                Some(v) => Ok(v
+                    .as_str()
+                    .ok_or_else(|| TomlError(format!("[fleet] {key}: expected string")))?
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()),
+            }
+        };
+        let mut gpus = Vec::new();
+        for s in fleet_csv("gpus")? {
+            let g: usize = s
+                .parse()
+                .map_err(|_| TomlError(format!("[fleet] gpus: '{s}' is not an integer")))?;
+            gpus.push(g);
+        }
+        let fleet = FleetConfig {
+            steal,
+            steal_ratio,
+            gpus,
+            hardware: fleet_csv("hardware")?,
+        };
+        let gpus_per_replica = n("", "gpus_per_replica")? as usize;
+        let dp_replicas = n("", "dp_replicas")? as usize;
+        fleet
+            .validate(dp_replicas)
+            .map_err(|e| TomlError(format!("[fleet] {e}")))?;
         Ok(SystemConfig {
             model,
             hardware,
             scheduler,
             engine,
             colocate,
-            gpus_per_replica: n("", "gpus_per_replica")? as usize,
-            dp_replicas: n("", "dp_replicas")? as usize,
+            fleet,
+            gpus_per_replica,
+            dp_replicas,
         })
     }
 
@@ -633,6 +761,59 @@ mod tests {
         assert!(SystemConfig::from_toml(&text).is_err());
         let text = cfg.to_toml().replace("slo_scale = 5", "slo_scale = 0");
         assert!(SystemConfig::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn fleet_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.dp_replicas = 3;
+        cfg.fleet.steal = false;
+        cfg.fleet.steal_ratio = 0.25;
+        cfg.fleet.gpus = vec![1, 1, 2];
+        cfg.fleet.hardware =
+            vec!["a100-80gb-sxm".to_string(), "h100-80gb-sxm".to_string()];
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating the fleet (no [fleet] section) must parse
+        // with the inert default.
+        let mut stripped = String::new();
+        let mut in_fleet = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[fleet]" {
+                in_fleet = true;
+                continue;
+            }
+            if in_fleet && line.trim().starts_with('[') {
+                in_fleet = false;
+            }
+            if !in_fleet {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.fleet, FleetConfig::default());
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_fleet_values() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("steal_ratio = 0.5", "steal_ratio = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("steal_ratio = 0.5", "steal_ratio = 1.5");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("hardware = \"\"", "hardware = \"gpu-from-the-future\"");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("gpus = \"\"", "gpus = \"1,0\"");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        // Per-replica lists longer than dp_replicas are a misconfiguration
+        // (the tail would be silently ignored), not a truncation.
+        let text = cfg.to_toml().replace("gpus = \"\"", "gpus = \"1,1\"");
+        assert!(SystemConfig::from_toml(&text).is_err(), "dp=1 with 2 gpu entries");
+        assert!(cfg.fleet.validate(cfg.dp_replicas).is_ok());
     }
 
     #[test]

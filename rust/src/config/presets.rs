@@ -59,6 +59,21 @@ pub fn a100_80gb() -> HardwareSpec {
     }
 }
 
+/// NVIDIA H100-80GB SXM: 989 TFLOPS dense FP16 tensor, 3.35 TB/s HBM3.
+///
+/// Same interference model as the A100 (NanoFlow-style spatial sharing);
+/// used by heterogeneous `server::fleet` deployments (mixed A100/H100).
+pub fn h100_80gb() -> HardwareSpec {
+    HardwareSpec {
+        name: "h100-80gb-sxm".to_string(),
+        compute_flops: 989e12,
+        bandwidth: 3.35e12,
+        memory_bytes: 80e9,
+        interference: 0.15,
+        reserve_bytes: 4e9,
+    }
+}
+
 /// The host CPU as PJRT sees it — used only by the real-model runtime's
 /// perf accounting; numbers are order-of-magnitude (single socket).
 pub fn cpu_host() -> HardwareSpec {
@@ -82,6 +97,16 @@ pub fn model_by_name(name: &str) -> Option<ModelSpec> {
         "qwen-2.5-72b" => Some(qwen25_72b()),
         "deepseek-67b" => Some(deepseek_67b()),
         "tiny-cpu" => Some(tiny_cpu()),
+        _ => None,
+    }
+}
+
+/// GPU hardware presets keyed by name (heterogeneous fleet specs).
+pub fn hardware_by_name(name: &str) -> Option<HardwareSpec> {
+    match name {
+        "a100-80gb-sxm" => Some(a100_80gb()),
+        "h100-80gb-sxm" => Some(h100_80gb()),
+        "cpu-host" => Some(cpu_host()),
         _ => None,
     }
 }
@@ -122,5 +147,20 @@ mod tests {
         let hw = a100_80gb();
         assert_eq!(hw.compute_flops, 312e12);
         assert_eq!(hw.bandwidth, 2.039e12);
+    }
+
+    #[test]
+    fn hardware_resolvable_by_name() {
+        for name in ["a100-80gb-sxm", "h100-80gb-sxm", "cpu-host"] {
+            let hw = hardware_by_name(name).unwrap();
+            assert_eq!(hw.name, name);
+            assert!(hw.compute_flops > 0.0 && hw.bandwidth > 0.0);
+        }
+        assert!(hardware_by_name("tpu-v9").is_none());
+        // H100 strictly dominates A100 on both axes (fleet weighting
+        // assumes capability ordering is meaningful).
+        let (a, h) = (a100_80gb(), h100_80gb());
+        assert!(h.compute_flops > a.compute_flops);
+        assert!(h.bandwidth > a.bandwidth);
     }
 }

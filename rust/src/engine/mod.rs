@@ -22,8 +22,8 @@ pub mod sim;
 
 pub use prefix_cache::{PinHandle, RadixCache};
 pub use sim::{
-    Admitter, EngineView, RequestTiming, SimEngine, SimRequest, SimResult, StaticOrder,
-    StepSample,
+    Admitter, EngineView, RequestTiming, RunState, SimEngine, SimRequest, SimResult,
+    StaticOrder, StepOutcome, StepSample,
 };
 
 use crate::config::OverlapMode;

@@ -2,6 +2,12 @@
 //! + prefix cache + retraction, driven by a pluggable [`Admitter`]
 //! (request-ordering policy — FCFS/DFS/Random or BlendServe's dual
 //! scanner).
+//!
+//! Runs are resumable: [`SimEngine::begin`] / [`SimEngine::step_once`] /
+//! [`SimEngine::finalize`] expose the loop one step at a time so a fleet
+//! coordinator can pause a replica at queue-empty ([`StepOutcome::Starved`]),
+//! feed it stolen work ([`SimEngine::feed_requests`]) and resume.
+//! [`SimEngine::run`] is the classic run-to-completion wrapper.
 
 use super::prefix_cache::{PinHandle, RadixCache};
 use super::overlap_time;
@@ -326,6 +332,61 @@ fn retract_one(
     retract_queue.push_back(a.req);
 }
 
+/// Outcome of one engine step (the incremental-feed driver protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Work was performed (or the clock idle-skipped); step again.
+    Progress,
+    /// Nothing is active and the admitter has nothing to offer: the engine
+    /// is paused at queue-empty.  A fleet coordinator may
+    /// [`SimEngine::feed_requests`] and resume stepping; [`SimEngine::run`]
+    /// treats it as termination (the defensive bail of a mis-fed admitter).
+    Starved,
+    /// Every request has finished.
+    Done,
+}
+
+/// Resumable state of one engine run.  Produced by [`SimEngine::begin`],
+/// advanced by [`SimEngine::step_once`], consumed by
+/// [`SimEngine::finalize`].
+pub struct RunState {
+    result: SimResult,
+    active: Vec<Active>,
+    /// Queue of retracted requests: re-admitted with priority (FIFO;
+    /// VecDeque so readmission pops are O(1), not a Vec::remove shift).
+    retract_queue: VecDeque<u32>,
+    timings: Vec<RequestTiming>,
+    clock: f64,
+    step: u64,
+    used_left: f64,
+    used_right: f64,
+    /// Decode context running sum (tokens to stream per decode step).
+    decode_ctx_sum: f64,
+    /// Non-cached prompt + decoded tokens.
+    private_tokens: f64,
+    finished: usize,
+    /// Alg. 3 balanced chunking: remaining compute/memory work estimates.
+    rem_comp: f64,
+    rem_mem: f64,
+}
+
+impl RunState {
+    /// Simulated seconds since batch start.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Requests that have completed so far.
+    pub fn finished(&self) -> usize {
+        self.finished
+    }
+
+    /// Requests currently in the running batch.
+    pub fn active_requests(&self) -> usize {
+        self.active.len()
+    }
+}
+
 /// The step simulator.
 pub struct SimEngine {
     pm: PerfModel,
@@ -370,14 +431,28 @@ impl SimEngine {
         }
     }
 
-    /// Run to completion under the given admission policy.
-    pub fn run(&mut self, admitter: &mut dyn Admitter) -> SimResult {
-        let mut result = SimResult::default();
-        let mut active: Vec<Active> = Vec::new();
-        // Queue of retracted requests: re-admitted with priority (FIFO;
-        // VecDeque so readmission pops are O(1), not a Vec::remove shift).
-        let mut retract_queue: VecDeque<u32> = VecDeque::new();
-        let mut timings: Vec<RequestTiming> = self
+    /// Number of requests currently known to the engine.
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Estimated remaining compute/memory work one request contributes to
+    /// the Alg. 3 chunk pacer.
+    fn pacer_work(&self, r: &SimRequest, sharing: f64) -> (f64, f64) {
+        let p = r.input_len();
+        let d = r.est_output as usize;
+        let prefill = self.pm.comp_tokens(p) + self.pm.comp_prefill_attn(p, p);
+        (
+            (1.0 - sharing) * prefill + self.pm.comp_tokens(d),
+            self.pm.mem_request(p, d),
+        )
+    }
+
+    /// Start a run: build the per-request bookkeeping for the current
+    /// request set.  Drive with [`Self::step_once`], then
+    /// [`Self::finalize`].
+    pub fn begin(&self) -> RunState {
+        let timings: Vec<RequestTiming> = self
             .requests
             .iter()
             .map(|r| RequestTiming {
@@ -389,17 +464,6 @@ impl SimEngine {
                 is_online: r.is_online,
             })
             .collect();
-        // Requests currently prefilling, FIFO (indices into `active`).
-        let mut clock = 0.0f64;
-        let mut step = 0u64;
-        let mut used_left = 0.0f64;
-        let mut used_right = 0.0f64;
-        // Decode context running sum (tokens to stream per decode step).
-        let mut decode_ctx_sum = 0.0f64;
-        let mut private_tokens = 0.0f64; // non-cached prompt + decoded tokens
-        let mut finished = 0usize;
-        let n_total = self.requests.len();
-        let series_cap = 400_000usize;
         // Alg. 3 balanced chunking: remaining compute/memory work estimates
         // (est_output-based) steer the per-step prefill budget so compute
         // spreads across decode steps instead of front-loading.
@@ -411,390 +475,510 @@ impl SimEngine {
             // compute and leave a memory-only tail.
             let s = self.sched.expected_sharing.clamp(0.0, 1.0);
             for r in &self.requests {
-                let p = r.input_len();
-                let d = r.est_output as usize;
-                let prefill =
-                    self.pm.comp_tokens(p) + self.pm.comp_prefill_attn(p, p);
-                rem_comp += (1.0 - s) * prefill + self.pm.comp_tokens(d);
-                rem_mem += self.pm.mem_request(p, d);
+                let (c, m) = self.pacer_work(r, s);
+                rem_comp += c;
+                rem_mem += m;
             }
         }
+        RunState {
+            result: SimResult::default(),
+            active: Vec::new(),
+            retract_queue: VecDeque::new(),
+            timings,
+            clock: 0.0,
+            step: 0,
+            used_left: 0.0,
+            used_right: 0.0,
+            decode_ctx_sum: 0.0,
+            private_tokens: 0.0,
+            finished: 0,
+            rem_comp,
+            rem_mem,
+        }
+    }
 
-        while finished < n_total {
-            step += 1;
-
-            // ---- admission ----
-            loop {
-                if active.len() >= self.sched.max_batch_requests {
-                    break;
-                }
-                // Unpinned cache tokens are reclaimable on demand (LRU
-                // eviction), so admission gates on *committed* memory only:
-                // private tokens + pinned cache.  Gating on resident cache
-                // would let stale prefixes strangle batch concurrency.
-                let committed = private_tokens + self.cache.pinned_tokens() as f64;
-                let view = EngineView {
-                    step,
-                    now: clock,
-                    kv_capacity: self.kv_capacity,
-                    kv_used: committed,
-                    active_requests: active.len(),
-                    used_left,
-                    used_right,
-                };
-                // An SLO-critical online candidate jumps even the
-                // retraction queue; otherwise retracted requests first.
-                let urgent = admitter.urgent(&view);
-                let (req, side, readmission) = if !urgent && !retract_queue.is_empty() {
-                    (retract_queue[0], Side::Left, true)
-                } else {
-                    match admitter.peek(&view) {
-                        Some((r, s)) => (r, s, false),
-                        None => match retract_queue.front() {
-                            Some(&r) => (r, Side::Left, true),
-                            None => break,
-                        },
-                    }
-                };
-                let idx = self.by_id[req as usize];
-                let est = self.requests[idx].est_kv_tokens();
-                if committed + est > self.kv_capacity && !active.is_empty() {
-                    // SLO-critical admission under memory pressure:
-                    // retract the newest *offline* request to make room
-                    // (its progress is cheap to redo; the online TTFT
-                    // deadline is not).
-                    if urgent && !readmission {
-                        let victim = active
-                            .iter()
-                            .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online);
-                        match victim {
-                            Some(v) if active.len() > 1 => {
-                                retract_one(
-                                    v,
-                                    &mut active,
-                                    &self.requests,
-                                    &self.by_id,
-                                    &mut self.cache,
-                                    &mut decode_ctx_sum,
-                                    &mut private_tokens,
-                                    &mut used_left,
-                                    &mut used_right,
-                                    &mut retract_queue,
-                                );
-                                result.retractions += 1;
-                                continue; // re-evaluate with freed memory
-                            }
-                            _ => break, // nothing preemptible
-                        }
-                    }
-                    break; // wait for memory
-                }
-                if readmission {
-                    retract_queue.pop_front();
-                } else {
-                    admitter.pop();
-                }
-                if timings[idx].admit.is_nan() {
-                    timings[idx].admit = clock;
-                }
-                let prompt = self.requests[idx].prompt.clone();
-                // Single combined radix walk instead of a lookup followed
-                // by an insert re-walking the same path.
-                let (hit, pin) = if self.cfg.prefix_cache {
-                    let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
-                    (hit, pin)
-                } else {
-                    (0, PinHandle::EMPTY)
-                };
-                let private_prompt = (prompt.len() - pin.len()) as f64;
-                private_tokens += private_prompt;
-                match side {
-                    Side::Left => used_left += est,
-                    Side::Right => used_right += est,
-                }
-                if !readmission {
-                    result.prompt_tokens += prompt.len() as u64;
-                    result.hit_tokens += hit as u64;
-                }
-                active.push(Active {
-                    req,
-                    side,
-                    pin,
-                    private_prompt,
-                    prefill_pos: hit,
-                    decoded: 0,
-                    charge: est,
-                    decoding: false,
-                    relocated: false,
-                });
+    /// Add requests to a paused run (work-stealing refill).  The matching
+    /// units must be fed to the admitter separately.  A request this
+    /// engine already knows (a unit stolen away earlier and now stolen
+    /// back) is *re-armed* rather than re-added: its request/timing slots
+    /// still exist from the original shard, so only its pacer share —
+    /// removed by [`Self::unfeed_requests`] at the original steal — is
+    /// restored.
+    pub fn feed_requests(&mut self, st: &mut RunState, new: Vec<SimRequest>) {
+        let s = self.sched.expected_sharing.clamp(0.0, 1.0);
+        for r in new {
+            let id = r.id as usize;
+            if id >= self.by_id.len() {
+                self.by_id.resize(id + 1, usize::MAX);
             }
-
-            if active.is_empty() {
-                // Nothing admitted and nothing running: either done or the
-                // next request alone exceeds memory — admit it anyway to
-                // guarantee progress (single-request mode).
-                if finished >= n_total {
-                    break;
+            if self.by_id[id] != usize::MAX {
+                // Stolen back: only whole never-issued units can be
+                // stolen, so the request cannot have been admitted here.
+                let idx = self.by_id[id];
+                debug_assert!(
+                    st.timings[idx].admit.is_nan(),
+                    "stolen-back request {id} was already admitted"
+                );
+                if self.sched.balanced_chunk {
+                    let (c, m) = self.pacer_work(&self.requests[idx], s);
+                    st.rem_comp += c;
+                    st.rem_mem += m;
                 }
-                let (req, side, readmission) = if let Some(r) = retract_queue.pop_front() {
-                    (r, Side::Left, true)
-                } else {
-                    let view = EngineView {
-                        step,
-                        now: clock,
-                        kv_capacity: self.kv_capacity,
-                        kv_used: private_tokens + self.cache.pinned_tokens() as f64,
-                        active_requests: 0,
-                        used_left,
-                        used_right,
-                    };
-                    match admitter.peek(&view) {
-                        Some((r, s)) => {
-                            admitter.pop();
-                            (r, s, false)
-                        }
-                        None => {
-                            // Time-gated admitter, nothing arrived yet:
-                            // idle-skip the clock to the next arrival and
-                            // retry admission.
-                            if let Some(t) = admitter.next_arrival() {
-                                if t.is_finite() && t > clock {
-                                    clock = t;
-                                    continue;
-                                }
-                            }
-                            break; // admitter empty but requests missing: bail
-                        }
-                    }
-                };
-                let idx = self.by_id[req as usize];
-                if timings[idx].admit.is_nan() {
-                    timings[idx].admit = clock;
-                }
-                let prompt = self.requests[idx].prompt.clone();
-                let (hit, pin) = if self.cfg.prefix_cache {
-                    let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
-                    (hit, pin)
-                } else {
-                    (0, PinHandle::EMPTY)
-                };
-                let private_prompt = (prompt.len() - pin.len()) as f64;
-                private_tokens += private_prompt;
-                let est = self.requests[idx].est_kv_tokens();
-                match side {
-                    Side::Left => used_left += est,
-                    Side::Right => used_right += est,
-                }
-                // Same accounting rule as the main admission loop:
-                // retraction re-admissions don't recount prompt/hit stats.
-                if !readmission {
-                    result.prompt_tokens += prompt.len() as u64;
-                    result.hit_tokens += hit as u64;
-                }
-                active.push(Active {
-                    req,
-                    side,
-                    pin,
-                    private_prompt,
-                    prefill_pos: hit,
-                    decoded: 0,
-                    charge: est,
-                    decoding: false,
-                    relocated: false,
-                });
+                continue;
             }
-
-            // ---- phase transitions (at step start) ----
-            for a in active.iter_mut() {
-                let p = self.requests[self.by_id[a.req as usize]].input_len();
-                if !a.decoding && a.prefill_pos >= p {
-                    a.decoding = true;
-                    decode_ctx_sum += (p + a.decoded as usize) as f64;
-                }
-            }
-
-            // ---- assemble the step ----
-            let mut chunk_left = self.sched.chunk_tokens;
+            let idx = self.requests.len();
+            self.by_id[id] = idx;
+            st.timings.push(RequestTiming {
+                id: r.id,
+                arrival: r.arrival,
+                admit: f64::NAN,
+                first_token: f64::NAN,
+                finish: f64::NAN,
+                is_online: r.is_online,
+            });
             if self.sched.balanced_chunk {
-                // Alg. 3 pacing: when the remaining work is compute-bound
-                // (rem_comp >= rem_mem) compute is the critical path — run
-                // the full chunk, memory hides beneath it.  When memory-
-                // bound, cap this step's compute at its memory time: the
-                // compute rides along for free and stretches across every
-                // decode step instead of front-loading.
-                let ratio = if rem_mem > 1e-9 {
-                    rem_comp / rem_mem
-                } else {
-                    f64::INFINITY
-                };
-                if ratio < 1.0 {
-                    let t_mem_exp = self.pm.mem_kv_load(decode_ctx_sum);
-                    let per_token = self.pm.comp_tokens(1);
-                    let n_dec_now =
-                        active.iter().filter(|a| a.decoding).count() as f64;
-                    let c = ((t_mem_exp / per_token.max(1e-18)) - n_dec_now)
-                        .max(0.0) as usize;
-                    // Floor keeps prefill progressing when no decodes run.
-                    chunk_left = c.clamp(64, self.sched.chunk_tokens);
-                }
+                let (c, m) = self.pacer_work(&r, s);
+                st.rem_comp += c;
+                st.rem_mem += m;
             }
-            let mut prefill_tokens = 0usize;
-            let mut t_comp_attn = 0.0f64;
-            let decode_tokens = active.iter().filter(|a| a.decoding).count();
-            // Online (latency-critical) prefills consume the chunk budget
-            // first; offline prefills backfill whatever remains.  With no
-            // online requests pass 0 matches nothing and the schedule is
-            // identical to the plain single-pass loop.
-            for pass in 0..2 {
-                for a in active.iter_mut() {
-                    if a.decoding || chunk_left == 0 {
-                        continue;
-                    }
-                    let req = &self.requests[self.by_id[a.req as usize]];
-                    if (pass == 0) != req.is_online {
-                        continue;
-                    }
-                    let p = req.input_len();
-                    let take = (p - a.prefill_pos).min(chunk_left);
-                    t_comp_attn += self.pm.comp_prefill_attn(take, a.prefill_pos + take);
-                    a.prefill_pos += take;
-                    chunk_left -= take;
-                    prefill_tokens += take;
-                }
-            }
+            self.requests.push(r);
+        }
+    }
 
-            // ---- step time ----
-            let t_comp = self.pm.comp_tokens(prefill_tokens + decode_tokens) + t_comp_attn;
-            let t_mem = if decode_tokens == 0 {
-                0.0
-            } else {
-                self.pm.mem_kv_load(decode_ctx_sum)
-            };
-            let step_time =
-                overlap_time(self.cfg.overlap, self.pm.hw.interference, t_comp, t_mem);
-            clock += step_time;
-            result.total_comp += t_comp;
-            result.total_mem += t_mem;
-            if self.sched.balanced_chunk {
-                rem_comp = (rem_comp - t_comp).max(0.0);
-                rem_mem = (rem_mem - t_mem).max(0.0);
-            }
-
-            // ---- decode progress & finishes ----
-            let mut i = 0;
-            while i < active.len() {
-                let idx = self.by_id[active[i].req as usize];
-                let p = self.requests[idx].input_len();
-                if active[i].decoding {
-                    active[i].decoded += 1;
-                    decode_ctx_sum += 1.0;
-                    private_tokens += 1.0;
-                    if active[i].decoded == 1 && timings[idx].first_token.is_nan() {
-                        timings[idx].first_token = clock;
-                    }
-                    // §5.4 online adaptation: underestimated output length
-                    // relocates the request's charge Left -> Right.
-                    if self.sched.online_adapt
-                        && !active[i].relocated
-                        && active[i].side == Side::Left
-                        && active[i].decoded > self.requests[idx].est_output
-                    {
-                        used_left -= active[i].charge;
-                        used_right += active[i].charge;
-                        active[i].side = Side::Right;
-                        active[i].relocated = true;
-                    }
-                    if active[i].decoded >= self.requests[idx].true_output {
-                        // Finished: release pins, free private tokens.
-                        let a = active.swap_remove(i);
-                        let r = &self.requests[idx];
-                        self.cache.release(a.pin);
-                        decode_ctx_sum -= (p + a.decoded as usize) as f64;
-                        private_tokens -= a.private_prompt + a.decoded as f64;
-                        match a.side {
-                            Side::Left => used_left -= a.charge,
-                            Side::Right => used_right -= a.charge,
-                        }
-                        result.total_tokens += (p as u64) + r.true_output as u64;
-                        if !r.is_online {
-                            result.offline_tokens += (p as u64) + r.true_output as u64;
-                        }
-                        timings[idx].finish = clock;
-                        finished += 1;
-                        continue;
-                    }
-                }
-                i += 1;
-            }
-
-            // ---- memory pressure: evict, then retract ----
-            let committed = private_tokens + self.cache.pinned_tokens() as f64;
-            result.peak_kv_used = result.peak_kv_used.max(committed);
-            if committed > self.kv_capacity {
-                // Evict unreferenced cache down to what fits.
-                let target = (self.kv_capacity - private_tokens).max(0.0) as u64;
-                self.cache.evict_to(target.max(self.cache.pinned_tokens()));
-                let committed = private_tokens + self.cache.pinned_tokens() as f64;
-                if committed > self.kv_capacity && active.len() > 1 {
-                    // Retract the newest request (vLLM-style preemption),
-                    // preferring offline work so online SLOs survive
-                    // memory pressure.  All-offline batches pick the very
-                    // newest, exactly as before.
-                    let victim = active
-                        .iter()
-                        .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online)
-                        .unwrap_or(active.len() - 1);
-                    retract_one(
-                        victim,
-                        &mut active,
-                        &self.requests,
-                        &self.by_id,
-                        &mut self.cache,
-                        &mut decode_ctx_sum,
-                        &mut private_tokens,
-                        &mut used_left,
-                        &mut used_right,
-                        &mut retract_queue,
-                    );
-                    result.retractions += 1;
-                }
-            }
-
-            if result.series.len() < series_cap {
-                result.series.push(StepSample {
-                    step,
-                    step_time,
-                    t_comp,
-                    t_mem,
-                    prefill_tokens: prefill_tokens as u32,
-                    decode_tokens: decode_tokens as u32,
-                    kv_used: committed,
-                });
-            }
-
-            // Defensive: a stuck step (no work, nothing finished) would
-            // loop forever — cannot happen (admission guarantees ≥1 active,
-            // and actives always progress), but guard in debug builds.
+    /// The donor side of a steal: remove never-admitted requests'
+    /// balanced-chunk pacer contribution from a paused run, so the donor
+    /// stops pacing against work it no longer owns (mirror of
+    /// [`Self::feed_requests`]).  The requests stay registered with the
+    /// engine — they simply never get issued by its admitter again
+    /// (unless stolen back).
+    pub fn unfeed_requests(&self, st: &mut RunState, ids: &[u32]) {
+        if !self.sched.balanced_chunk {
+            return;
+        }
+        let s = self.sched.expected_sharing.clamp(0.0, 1.0);
+        for &id in ids {
+            let idx = self.by_id[id as usize];
             debug_assert!(
-                prefill_tokens > 0 || decode_tokens > 0,
-                "stalled at step {step}"
+                st.timings[idx].admit.is_nan(),
+                "stolen request {id} was already admitted"
             );
+            let (c, m) = self.pacer_work(&self.requests[idx], s);
+            st.rem_comp = (st.rem_comp - c).max(0.0);
+            st.rem_mem = (st.rem_mem - m).max(0.0);
+        }
+    }
+
+    /// Run to completion under the given admission policy.
+    pub fn run(&mut self, admitter: &mut dyn Admitter) -> SimResult {
+        let mut st = self.begin();
+        while self.step_once(&mut st, admitter) == StepOutcome::Progress {}
+        self.finalize(st)
+    }
+
+    /// Execute one engine step: admit, assemble the chunk, advance the
+    /// clock, decode, handle memory pressure.
+    pub fn step_once(
+        &mut self,
+        st: &mut RunState,
+        admitter: &mut dyn Admitter,
+    ) -> StepOutcome {
+        const SERIES_CAP: usize = 400_000;
+        if st.finished >= self.requests.len() {
+            return StepOutcome::Done;
+        }
+        st.step += 1;
+
+        // ---- admission ----
+        loop {
+            if st.active.len() >= self.sched.max_batch_requests {
+                break;
+            }
+            // Unpinned cache tokens are reclaimable on demand (LRU
+            // eviction), so admission gates on *committed* memory only:
+            // private tokens + pinned cache.  Gating on resident cache
+            // would let stale prefixes strangle batch concurrency.
+            let committed = st.private_tokens + self.cache.pinned_tokens() as f64;
+            let view = EngineView {
+                step: st.step,
+                now: st.clock,
+                kv_capacity: self.kv_capacity,
+                kv_used: committed,
+                active_requests: st.active.len(),
+                used_left: st.used_left,
+                used_right: st.used_right,
+            };
+            // An SLO-critical online candidate jumps even the
+            // retraction queue; otherwise retracted requests first.
+            let urgent = admitter.urgent(&view);
+            let (req, side, readmission) = if !urgent && !st.retract_queue.is_empty() {
+                (st.retract_queue[0], Side::Left, true)
+            } else {
+                match admitter.peek(&view) {
+                    Some((r, s)) => (r, s, false),
+                    None => match st.retract_queue.front() {
+                        Some(&r) => (r, Side::Left, true),
+                        None => break,
+                    },
+                }
+            };
+            let idx = self.by_id[req as usize];
+            let est = self.requests[idx].est_kv_tokens();
+            if committed + est > self.kv_capacity && !st.active.is_empty() {
+                // SLO-critical admission under memory pressure:
+                // retract the newest *offline* request to make room
+                // (its progress is cheap to redo; the online TTFT
+                // deadline is not).
+                if urgent && !readmission {
+                    let victim = st
+                        .active
+                        .iter()
+                        .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online);
+                    match victim {
+                        Some(v) if st.active.len() > 1 => {
+                            retract_one(
+                                v,
+                                &mut st.active,
+                                &self.requests,
+                                &self.by_id,
+                                &mut self.cache,
+                                &mut st.decode_ctx_sum,
+                                &mut st.private_tokens,
+                                &mut st.used_left,
+                                &mut st.used_right,
+                                &mut st.retract_queue,
+                            );
+                            st.result.retractions += 1;
+                            continue; // re-evaluate with freed memory
+                        }
+                        _ => break, // nothing preemptible
+                    }
+                }
+                break; // wait for memory
+            }
+            if readmission {
+                st.retract_queue.pop_front();
+            } else {
+                admitter.pop();
+            }
+            if st.timings[idx].admit.is_nan() {
+                st.timings[idx].admit = st.clock;
+            }
+            let prompt = self.requests[idx].prompt.clone();
+            // Single combined radix walk instead of a lookup followed
+            // by an insert re-walking the same path.
+            let (hit, pin) = if self.cfg.prefix_cache {
+                let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
+                (hit, pin)
+            } else {
+                (0, PinHandle::EMPTY)
+            };
+            let private_prompt = (prompt.len() - pin.len()) as f64;
+            st.private_tokens += private_prompt;
+            match side {
+                Side::Left => st.used_left += est,
+                Side::Right => st.used_right += est,
+            }
+            if !readmission {
+                st.result.prompt_tokens += prompt.len() as u64;
+                st.result.hit_tokens += hit as u64;
+            }
+            st.active.push(Active {
+                req,
+                side,
+                pin,
+                private_prompt,
+                prefill_pos: hit,
+                decoded: 0,
+                charge: est,
+                decoding: false,
+                relocated: false,
+            });
         }
 
-        result.steps = step;
-        result.total_time = clock;
-        result.throughput = if clock > 0.0 {
-            result.total_tokens as f64 / clock
+        if st.active.is_empty() {
+            // Nothing admitted and nothing running: either done or the
+            // next request alone exceeds memory — admit it anyway to
+            // guarantee progress (single-request mode).
+            if st.finished >= self.requests.len() {
+                return StepOutcome::Done;
+            }
+            let (req, side, readmission) = if let Some(r) = st.retract_queue.pop_front() {
+                (r, Side::Left, true)
+            } else {
+                let view = EngineView {
+                    step: st.step,
+                    now: st.clock,
+                    kv_capacity: self.kv_capacity,
+                    kv_used: st.private_tokens + self.cache.pinned_tokens() as f64,
+                    active_requests: 0,
+                    used_left: st.used_left,
+                    used_right: st.used_right,
+                };
+                match admitter.peek(&view) {
+                    Some((r, s)) => {
+                        admitter.pop();
+                        (r, s, false)
+                    }
+                    None => {
+                        // Time-gated admitter, nothing arrived yet:
+                        // idle-skip the clock to the next arrival and
+                        // retry admission.
+                        if let Some(t) = admitter.next_arrival() {
+                            if t.is_finite() && t > st.clock {
+                                st.clock = t;
+                                return StepOutcome::Progress;
+                            }
+                        }
+                        // Queue-empty with requests missing: pause.  A
+                        // fleet coordinator feeds stolen work and resumes;
+                        // `run` bails here exactly as before.
+                        return StepOutcome::Starved;
+                    }
+                }
+            };
+            let idx = self.by_id[req as usize];
+            if st.timings[idx].admit.is_nan() {
+                st.timings[idx].admit = st.clock;
+            }
+            let prompt = self.requests[idx].prompt.clone();
+            let (hit, pin) = if self.cfg.prefix_cache {
+                let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
+                (hit, pin)
+            } else {
+                (0, PinHandle::EMPTY)
+            };
+            let private_prompt = (prompt.len() - pin.len()) as f64;
+            st.private_tokens += private_prompt;
+            let est = self.requests[idx].est_kv_tokens();
+            match side {
+                Side::Left => st.used_left += est,
+                Side::Right => st.used_right += est,
+            }
+            // Same accounting rule as the main admission loop:
+            // retraction re-admissions don't recount prompt/hit stats.
+            if !readmission {
+                st.result.prompt_tokens += prompt.len() as u64;
+                st.result.hit_tokens += hit as u64;
+            }
+            st.active.push(Active {
+                req,
+                side,
+                pin,
+                private_prompt,
+                prefill_pos: hit,
+                decoded: 0,
+                charge: est,
+                decoding: false,
+                relocated: false,
+            });
+        }
+
+        // ---- phase transitions (at step start) ----
+        for a in st.active.iter_mut() {
+            let p = self.requests[self.by_id[a.req as usize]].input_len();
+            if !a.decoding && a.prefill_pos >= p {
+                a.decoding = true;
+                st.decode_ctx_sum += (p + a.decoded as usize) as f64;
+            }
+        }
+
+        // ---- assemble the step ----
+        let mut chunk_left = self.sched.chunk_tokens;
+        if self.sched.balanced_chunk {
+            // Alg. 3 pacing: when the remaining work is compute-bound
+            // (rem_comp >= rem_mem) compute is the critical path — run
+            // the full chunk, memory hides beneath it.  When memory-
+            // bound, cap this step's compute at its memory time: the
+            // compute rides along for free and stretches across every
+            // decode step instead of front-loading.
+            let ratio = if st.rem_mem > 1e-9 {
+                st.rem_comp / st.rem_mem
+            } else {
+                f64::INFINITY
+            };
+            if ratio < 1.0 {
+                let t_mem_exp = self.pm.mem_kv_load(st.decode_ctx_sum);
+                let per_token = self.pm.comp_tokens(1);
+                let n_dec_now =
+                    st.active.iter().filter(|a| a.decoding).count() as f64;
+                let c = ((t_mem_exp / per_token.max(1e-18)) - n_dec_now)
+                    .max(0.0) as usize;
+                // Floor keeps prefill progressing when no decodes run;
+                // clamped against chunk_tokens so a sub-64-token chunk
+                // budget stays a valid (empty) range instead of a
+                // `min > max` panic.
+                let floor = 64.min(self.sched.chunk_tokens);
+                chunk_left = c.clamp(floor, self.sched.chunk_tokens);
+            }
+        }
+        let mut prefill_tokens = 0usize;
+        let mut t_comp_attn = 0.0f64;
+        let decode_tokens = st.active.iter().filter(|a| a.decoding).count();
+        // Online (latency-critical) prefills consume the chunk budget
+        // first; offline prefills backfill whatever remains.  With no
+        // online requests pass 0 matches nothing and the schedule is
+        // identical to the plain single-pass loop.
+        for pass in 0..2 {
+            for a in st.active.iter_mut() {
+                if a.decoding || chunk_left == 0 {
+                    continue;
+                }
+                let req = &self.requests[self.by_id[a.req as usize]];
+                if (pass == 0) != req.is_online {
+                    continue;
+                }
+                let p = req.input_len();
+                let take = (p - a.prefill_pos).min(chunk_left);
+                t_comp_attn += self.pm.comp_prefill_attn(take, a.prefill_pos + take);
+                a.prefill_pos += take;
+                chunk_left -= take;
+                prefill_tokens += take;
+            }
+        }
+
+        // ---- step time ----
+        let t_comp = self.pm.comp_tokens(prefill_tokens + decode_tokens) + t_comp_attn;
+        let t_mem = if decode_tokens == 0 {
+            0.0
+        } else {
+            self.pm.mem_kv_load(st.decode_ctx_sum)
+        };
+        let step_time =
+            overlap_time(self.cfg.overlap, self.pm.hw.interference, t_comp, t_mem);
+        st.clock += step_time;
+        st.result.total_comp += t_comp;
+        st.result.total_mem += t_mem;
+        if self.sched.balanced_chunk {
+            st.rem_comp = (st.rem_comp - t_comp).max(0.0);
+            st.rem_mem = (st.rem_mem - t_mem).max(0.0);
+        }
+
+        // ---- decode progress & finishes ----
+        let mut i = 0;
+        while i < st.active.len() {
+            let idx = self.by_id[st.active[i].req as usize];
+            let p = self.requests[idx].input_len();
+            if st.active[i].decoding {
+                st.active[i].decoded += 1;
+                st.decode_ctx_sum += 1.0;
+                st.private_tokens += 1.0;
+                if st.active[i].decoded == 1 && st.timings[idx].first_token.is_nan() {
+                    st.timings[idx].first_token = st.clock;
+                }
+                // §5.4 online adaptation: underestimated output length
+                // relocates the request's charge Left -> Right.
+                if self.sched.online_adapt
+                    && !st.active[i].relocated
+                    && st.active[i].side == Side::Left
+                    && st.active[i].decoded > self.requests[idx].est_output
+                {
+                    st.used_left -= st.active[i].charge;
+                    st.used_right += st.active[i].charge;
+                    st.active[i].side = Side::Right;
+                    st.active[i].relocated = true;
+                }
+                if st.active[i].decoded >= self.requests[idx].true_output {
+                    // Finished: release pins, free private tokens.
+                    let a = st.active.swap_remove(i);
+                    let r = &self.requests[idx];
+                    self.cache.release(a.pin);
+                    st.decode_ctx_sum -= (p + a.decoded as usize) as f64;
+                    st.private_tokens -= a.private_prompt + a.decoded as f64;
+                    match a.side {
+                        Side::Left => st.used_left -= a.charge,
+                        Side::Right => st.used_right -= a.charge,
+                    }
+                    st.result.total_tokens += (p as u64) + r.true_output as u64;
+                    if !r.is_online {
+                        st.result.offline_tokens += (p as u64) + r.true_output as u64;
+                    }
+                    st.timings[idx].finish = st.clock;
+                    st.finished += 1;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        // ---- memory pressure: evict, then retract ----
+        let committed = st.private_tokens + self.cache.pinned_tokens() as f64;
+        st.result.peak_kv_used = st.result.peak_kv_used.max(committed);
+        if committed > self.kv_capacity {
+            // Evict unreferenced cache down to what fits.
+            let target = (self.kv_capacity - st.private_tokens).max(0.0) as u64;
+            self.cache.evict_to(target.max(self.cache.pinned_tokens()));
+            let committed = st.private_tokens + self.cache.pinned_tokens() as f64;
+            if committed > self.kv_capacity && st.active.len() > 1 {
+                // Retract the newest request (vLLM-style preemption),
+                // preferring offline work so online SLOs survive
+                // memory pressure.  All-offline batches pick the very
+                // newest, exactly as before.
+                let victim = st
+                    .active
+                    .iter()
+                    .rposition(|a| !self.requests[self.by_id[a.req as usize]].is_online)
+                    .unwrap_or(st.active.len() - 1);
+                retract_one(
+                    victim,
+                    &mut st.active,
+                    &self.requests,
+                    &self.by_id,
+                    &mut self.cache,
+                    &mut st.decode_ctx_sum,
+                    &mut st.private_tokens,
+                    &mut st.used_left,
+                    &mut st.used_right,
+                    &mut st.retract_queue,
+                );
+                st.result.retractions += 1;
+            }
+        }
+
+        if st.result.series.len() < SERIES_CAP {
+            st.result.series.push(StepSample {
+                step: st.step,
+                step_time,
+                t_comp,
+                t_mem,
+                prefill_tokens: prefill_tokens as u32,
+                decode_tokens: decode_tokens as u32,
+                kv_used: committed,
+            });
+        }
+
+        // Defensive: a stuck step (no work, nothing finished) would
+        // loop forever — cannot happen (admission guarantees ≥1 active,
+        // and actives always progress), but guard in debug builds.
+        debug_assert!(
+            prefill_tokens > 0 || decode_tokens > 0,
+            "stalled at step {}",
+            st.step
+        );
+
+        if st.finished >= self.requests.len() {
+            StepOutcome::Done
+        } else {
+            StepOutcome::Progress
+        }
+    }
+
+    /// Close out a run: aggregate throughput, sharing, goodput and online
+    /// SLO attainment from the final state.
+    pub fn finalize(&self, mut st: RunState) -> SimResult {
+        st.result.steps = st.step;
+        st.result.total_time = st.clock;
+        st.result.throughput = if st.clock > 0.0 {
+            st.result.total_tokens as f64 / st.clock
         } else {
             0.0
         };
-        result.sharing_achieved = if result.prompt_tokens > 0 {
-            result.hit_tokens as f64 / result.prompt_tokens as f64
+        st.result.sharing_achieved = if st.result.prompt_tokens > 0 {
+            st.result.hit_tokens as f64 / st.result.prompt_tokens as f64
         } else {
             0.0
         };
-        result.offline_throughput = if clock > 0.0 {
-            result.offline_tokens as f64 / clock
+        st.result.offline_throughput = if st.clock > 0.0 {
+            st.result.offline_tokens as f64 / st.clock
         } else {
             0.0
         };
@@ -804,7 +988,7 @@ impl SimEngine {
         let mut delays = Vec::new();
         let mut attained = 0usize;
         let mut n_online = 0usize;
-        for (i, t) in timings.iter().enumerate() {
+        for (i, t) in st.timings.iter().enumerate() {
             let r = &self.requests[i];
             if !r.is_online {
                 continue;
@@ -826,18 +1010,18 @@ impl SimEngine {
                 attained += 1;
             }
         }
-        result.n_online = n_online;
-        result.slo_attained = attained;
-        result.slo_attainment = if n_online > 0 {
+        st.result.n_online = n_online;
+        st.result.slo_attained = attained;
+        st.result.slo_attainment = if n_online > 0 {
             attained as f64 / n_online as f64
         } else {
             1.0
         };
-        result.mean_ttft = crate::util::stats::mean(&ttfts);
-        result.p99_ttft = crate::util::stats::percentile(&ttfts, 99.0);
-        result.mean_queue_delay = crate::util::stats::mean(&delays);
-        result.timings = timings;
-        result
+        st.result.mean_ttft = crate::util::stats::mean(&ttfts);
+        st.result.p99_ttft = crate::util::stats::percentile(&ttfts, 99.0);
+        st.result.mean_queue_delay = crate::util::stats::mean(&delays);
+        st.result.timings = st.timings;
+        st.result
     }
 }
 
@@ -907,8 +1091,7 @@ mod tests {
         let reqs: Vec<SimRequest> = (0..5)
             .map(|i| SimRequest::offline(i, prompt.clone(), 10, 10))
             .collect();
-        let mut cfg = EngineConfig::default();
-        cfg.prefix_cache = false;
+        let cfg = EngineConfig { prefix_cache: false, ..EngineConfig::default() };
         let mut e = SimEngine::new(pm(), cfg, SchedulerConfig::default(), reqs);
         let mut ad = StaticOrder::new((0..5).collect());
         let r = e.run(&mut ad);
@@ -945,8 +1128,10 @@ mod tests {
     #[test]
     fn overlap_beats_sequential() {
         let reqs = mk_reqs(50, 500, 300, 0);
-        let mut seq_cfg = EngineConfig::default();
-        seq_cfg.overlap = OverlapMode::Sequential;
+        let seq_cfg = EngineConfig {
+            overlap: OverlapMode::Sequential,
+            ..EngineConfig::default()
+        };
         let r_seq = SimEngine::new(pm(), seq_cfg, SchedulerConfig::default(), reqs.clone())
             .run(&mut StaticOrder::new((0..50).collect()));
         let r_ovl = engine(reqs).run(&mut StaticOrder::new((0..50).collect()));
@@ -964,8 +1149,10 @@ mod tests {
         let mut pm = pm();
         pm.hw.memory_bytes = 22e9; // tiny KV after weights+reserve
         let reqs = mk_reqs(40, 200, 2000, 0);
-        let mut sched = SchedulerConfig::default();
-        sched.max_batch_requests = 64;
+        let sched = SchedulerConfig {
+            max_batch_requests: 64,
+            ..SchedulerConfig::default()
+        };
         let mut e = SimEngine::new(pm, EngineConfig::default(), sched, reqs);
         let mut ad = StaticOrder::new((0..40).collect());
         let r = e.run(&mut ad);
@@ -988,6 +1175,24 @@ mod tests {
         let mut e = engine(reqs);
         let r = e.run(&mut StaticOrder::new((0..64).collect()));
         assert!(r.total_comp > r.total_mem * 2.0, "comp={} mem={}", r.total_comp, r.total_mem);
+    }
+
+    #[test]
+    fn tiny_chunk_budget_with_balanced_chunk_does_not_panic() {
+        // Regression: `c.clamp(64, chunk_tokens)` panicked (`min > max`)
+        // whenever chunk_tokens < 64 and the pacer hit its memory-bound
+        // branch.  A decode-heavy workload forces that branch.
+        let sched = SchedulerConfig {
+            chunk_tokens: 32,
+            balanced_chunk: true,
+            expected_sharing: 0.0,
+            ..SchedulerConfig::default()
+        };
+        let reqs = mk_reqs(16, 48, 600, 0);
+        let mut e = SimEngine::new(pm(), EngineConfig::default(), sched, reqs);
+        let r = e.run(&mut StaticOrder::new((0..16).collect()));
+        assert_eq!(r.total_tokens, 16 * (48 + 600));
+        assert!(r.total_time.is_finite() && r.total_time > 0.0);
     }
 
     #[test]
@@ -1112,6 +1317,72 @@ mod tests {
         let r = e.run(&mut LateOne { done: false });
         assert_eq!(r.total_tokens, 55);
         assert!(r.total_time >= 3.0, "idle gap lost: {}", r.total_time);
+    }
+
+    #[test]
+    fn stepwise_drive_matches_run() {
+        // Driving begin/step_once/finalize by hand must be identical to
+        // run() — the fleet coordinator depends on this equivalence.
+        let w = generate_kind(TraceKind::BurstGpt, 150, 5);
+        let est: Vec<u32> = w.requests.iter().map(|r| r.output_len).collect();
+        let reqs = SimRequest::from_workload(&w, &est);
+        let whole = engine(reqs.clone()).run(&mut StaticOrder::new((0..150).collect()));
+        let mut e = engine(reqs);
+        let mut ad = StaticOrder::new((0..150).collect());
+        let mut st = e.begin();
+        loop {
+            match e.step_once(&mut st, &mut ad) {
+                StepOutcome::Progress => {}
+                StepOutcome::Starved => panic!("offline run starved"),
+                StepOutcome::Done => break,
+            }
+        }
+        let stepped = e.finalize(st);
+        assert_eq!(whole.total_time, stepped.total_time);
+        assert_eq!(whole.steps, stepped.steps);
+        assert_eq!(whole.hit_tokens, stepped.hit_tokens);
+        assert_eq!(whole.total_tokens, stepped.total_tokens);
+        assert_eq!(whole.retractions, stepped.retractions);
+    }
+
+    #[test]
+    fn starved_engine_resumes_after_feed() {
+        // An engine whose admitter drains halfway pauses with Starved;
+        // feeding the second half completes the run with all tokens.
+        let reqs = mk_reqs(4, 60, 20, 0);
+        let late = mk_reqs(4, 60, 20, 100_000)
+            .into_iter()
+            .map(|mut r| {
+                r.id += 4;
+                r
+            })
+            .collect::<Vec<_>>();
+        let mut e = engine(reqs);
+        let mut ad = StaticOrder::new((0..4).collect());
+        let mut st = e.begin();
+        loop {
+            match e.step_once(&mut st, &mut ad) {
+                StepOutcome::Progress => {}
+                StepOutcome::Starved => unreachable!("exhausted admitter reports Done first"),
+                StepOutcome::Done => break,
+            }
+        }
+        assert_eq!(st.finished(), 4);
+        // Feed four more requests and a fresh admitter for them: the run
+        // resumes from the paused state.
+        e.feed_requests(&mut st, late);
+        let mut ad2 = StaticOrder::new((4..8).collect());
+        loop {
+            match e.step_once(&mut st, &mut ad2) {
+                StepOutcome::Progress => {}
+                StepOutcome::Starved => panic!("starved after feed"),
+                StepOutcome::Done => break,
+            }
+        }
+        let r = e.finalize(st);
+        assert_eq!(r.total_tokens, 8 * 80);
+        assert_eq!(r.timings.len(), 8);
+        assert!(r.timings.iter().all(|t| t.finish.is_finite()));
     }
 
     #[test]

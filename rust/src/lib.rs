@@ -39,7 +39,8 @@ pub mod util;
 pub mod runtime;
 
 pub use config::{
-    ColocateConfig, ColocationPolicy, HardwareSpec, ModelSpec, SchedulerConfig, SystemConfig,
+    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, ModelSpec, SchedulerConfig,
+    SystemConfig,
 };
 pub use perfmodel::PerfModel;
 pub use trace::{Request, Workload};

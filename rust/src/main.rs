@@ -3,15 +3,17 @@
 //! ```text
 //! blendserve synth    --trace burstgpt --density 1.1 --sharing 0.25 --n 20000 --out pool.jsonl
 //! blendserve simulate --pool pool.jsonl [--system blendserve|nanoflow-dfs|...] [--dp N]
+//! blendserve fleet    --pool pool.jsonl [--dp N] [--no-steal] [--gpus 1,1,2] [--hardware a,b]
 //! blendserve colocate --pool pool.jsonl [--online-rate 4] [--slo-scale 5] [--policy elastic]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
 //!
-//! `simulate` runs the profile-guided A100 simulator; `colocate` blends a
-//! latency-sensitive online stream into the offline schedule (DESIGN.md
-//! §Co-located-Serving); `serve` runs the REAL tiny model through PJRT
-//! (python never on the request path).
+//! `simulate` runs the profile-guided A100 simulator; `fleet` runs the
+//! work-stealing multi-replica cluster engine (DESIGN.md §Fleet);
+//! `colocate` blends a latency-sensitive online stream into the offline
+//! schedule (DESIGN.md §Co-located-Serving); `serve` runs the REAL tiny
+//! model through PJRT (python never on the request path).
 
 use blendserve::baselines;
 use blendserve::config::{presets, ColocationPolicy, SystemConfig};
@@ -19,7 +21,7 @@ use blendserve::perfmodel::PerfModel;
 use blendserve::runtime::serve::zipper_order;
 use blendserve::runtime::RealServer;
 use blendserve::server::pool::{load_jsonl, save_jsonl, save_results};
-use blendserve::server::{online_stream, serve_batch, serve_colocated};
+use blendserve::server::{online_stream, serve_batch, serve_colocated, serve_fleet};
 use blendserve::trace::generators::remap_vocab;
 use blendserve::trace::synth::{synthesize, SynthSpec};
 use blendserve::trace::TraceKind;
@@ -34,13 +36,16 @@ fn usage() -> ! {
 USAGE:
   blendserve synth    --trace <sharegpt|wildchat|azure|burstgpt> --density F --sharing F --n N --out FILE
   blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE]
+  blendserve fleet    --pool FILE [--dp N] [--no-steal] [--steal-ratio F] [--gpus N,N,..]
+                      [--hardware NAME,NAME,..] [--model NAME] [--out FILE]
   blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
                       [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve config   [--preset MODEL]
 
 SYSTEMS:   vllm-dfs sglang-dfs nanoflow-dfs nanoflow-balance blendserve
-MODELS:    llama-3-8b llama-3-70b llama-2-7b qwen-2.5-7b qwen-2.5-72b deepseek-67b"
+MODELS:    llama-3-8b llama-3-70b llama-2-7b qwen-2.5-7b qwen-2.5-72b deepseek-67b
+HARDWARE:  a100-80gb-sxm h100-80gb-sxm (per-replica fleet overrides)"
     );
     std::process::exit(2);
 }
@@ -104,6 +109,7 @@ fn cmd_synth(flags: HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
     let w = load_jsonl(&pool)?;
+    anyhow::ensure!(!w.is_empty(), "pool {} contains no requests", pool.display());
     let sys_name = flags.get("system").cloned().unwrap_or("blendserve".into());
     let mut cfg =
         system_by_name(&sys_name).ok_or_else(|| anyhow::anyhow!("unknown system {sys_name}"))?;
@@ -134,6 +140,80 @@ fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(out) = flags.get("out") {
         save_results(&job.per_replica, Path::new(out))?;
         println!("results -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let w = load_jsonl(&pool)?;
+    anyhow::ensure!(!w.is_empty(), "pool {} contains no requests", pool.display());
+    let mut cfg = baselines::blendserve();
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    if let Some(dp) = flags.get("dp") {
+        cfg.dp_replicas = dp.parse()?;
+    } else {
+        cfg.dp_replicas = 4;
+    }
+    if flags.contains_key("no-steal") {
+        cfg.fleet.steal = false;
+    }
+    if let Some(r) = flags.get("steal-ratio") {
+        cfg.fleet.steal_ratio = r.parse()?;
+    }
+    if let Some(g) = flags.get("gpus") {
+        cfg.fleet.gpus = g
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(h) = flags.get("hardware") {
+        cfg.fleet.hardware = h
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    anyhow::ensure!(cfg.dp_replicas >= 1, "--dp must be >= 1");
+    // Same semantic checks as the [fleet] TOML section (one source of
+    // truth in FleetConfig::validate).
+    cfg.fleet
+        .validate(cfg.dp_replicas)
+        .map_err(|e| anyhow::anyhow!("fleet config: {e}"))?;
+    println!(
+        "fleet: {} requests on {} x DP={} ({})",
+        w.len(),
+        cfg.model.name,
+        cfg.dp_replicas,
+        if cfg.fleet.steal { "work stealing" } else { "static fork-join" },
+    );
+    let rep = serve_fleet(&cfg, &w);
+    for (desc, idle) in rep.replica_desc.iter().zip(&rep.idle_fracs) {
+        println!("  replica {desc}: idle {:.1}%", idle * 100.0);
+    }
+    println!(
+        "makespan {:.1}s (static {:.1}s, speedup {:.2}x) | {:.0} tok/s | \
+         {} steals ({} units, {} requests) | sharing {:.3} (static {:.3}, lost {:.4})",
+        rep.makespan,
+        rep.static_makespan,
+        rep.speedup_vs_static,
+        rep.total_throughput,
+        rep.steals,
+        rep.stolen_units,
+        rep.stolen_requests,
+        rep.sharing_achieved,
+        rep.static_sharing,
+        rep.sharing_lost_to_steals,
+    );
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, format!("{}\n", rep.to_json()))?;
+        println!("report -> {out}");
     }
     Ok(())
 }
@@ -272,6 +352,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "synth" => cmd_synth(flags),
         "simulate" => cmd_simulate(flags),
+        "fleet" => cmd_fleet(flags),
         "colocate" => cmd_colocate(flags),
         "serve" => cmd_serve(flags),
         "config" => cmd_config(flags),

@@ -12,83 +12,109 @@
 //! **TP**: both compute and bandwidth scale with the replica's GPU count
 //! (communication assumed overlappable, as in NanoFlow/Centauri); this is
 //! already captured by `PerfModel::new(model, hw, n_gpus)`.
+//!
+//! The decomposition is exposed at two granularities: [`partition_dp`]
+//! flattens to request ids (the static fork-join used by
+//! `server::serve_batch`), while [`work_units`] + [`assign_units`] keep
+//! whole scheduling units so `server::fleet` can re-assign them at runtime
+//! (work stealing) without shredding intra-unit prefix locality.
 
 use crate::perfmodel::PerfModel;
 use crate::tree::PrefixTree;
 
-/// Result of a DP decomposition: request ids per replica.
+/// One scheduling unit priced for partitioning: the requests of one tree
+/// node plus its estimated resource demand.  Units inherit the transformed
+/// tree's DFS order, so a contiguous slice of a `WorkUnit` list is itself
+/// in dual-scanner (density-descending) order.
 #[derive(Clone, Debug)]
-pub struct DpPartition {
-    pub replicas: Vec<Vec<u32>>,
-    /// Estimated optimal processing time per replica (balance diagnostic).
+pub struct WorkUnit {
+    pub requests: Vec<u32>,
+    /// Sharing-discounted compute density of the unit.
+    pub density: f64,
+    /// Sharing-discounted compute seconds (`density * mem`).
+    pub comp_eff: f64,
+    /// Memory-bound seconds.
+    pub mem: f64,
+}
+
+impl WorkUnit {
+    /// Estimated optimal processing time of the unit in isolation.
+    pub fn est_time(&self) -> f64 {
+        self.comp_eff.max(self.mem)
+    }
+}
+
+/// Price every scheduling unit of a transformed tree (estimated output
+/// lengths must be filled in; aggregates recomputed).
+pub fn work_units(tree: &PrefixTree, pm: &PerfModel) -> Vec<WorkUnit> {
+    tree.scheduling_units()
+        .into_iter()
+        .map(|(id, density)| {
+            let node = &tree.nodes[id];
+            let mut mem = 0.0;
+            for &r in &node.requests {
+                let p = tree.input_len(r);
+                let d = tree.est_output[r as usize].max(1) as usize;
+                mem += pm.mem_request(p, d);
+            }
+            // density = comp_eff / mem  =>  comp_eff = density * mem.
+            let comp_eff = if mem > 0.0 { density * mem } else { 0.0 };
+            WorkUnit { requests: node.requests.clone(), density, comp_eff, mem }
+        })
+        .collect()
+}
+
+/// Unit-granular decomposition: which units go to which replica.
+#[derive(Clone, Debug)]
+pub struct UnitAssignment {
+    /// Unit indices per replica, ascending (global density order), so each
+    /// shard is itself a valid dual-scanner queue.  Only non-empty shards
+    /// are returned: with fewer units than replicas (or a pathologically
+    /// coarse unit), `parts.len() < weights.len()`.
+    pub parts: Vec<Vec<usize>>,
+    /// Estimated optimal processing time per returned shard.
     pub est_times: Vec<f64>,
+    /// Which `weights` slot each returned shard was built for (identity
+    /// mapping unless empty shards were dropped) — heterogeneous fleets
+    /// use it to pair shards with their replica spec.
+    pub owners: Vec<usize>,
 }
 
-impl DpPartition {
-    /// Max/mean imbalance of the estimated replica times.
-    pub fn imbalance(&self) -> f64 {
-        let max = self.est_times.iter().cloned().fold(0.0f64, f64::max);
-        let mean =
-            self.est_times.iter().sum::<f64>() / self.est_times.len().max(1) as f64;
-        if mean <= 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
-    }
-}
-
-/// Decompose a transformed tree into `dp` balanced partitions (§5.5).
-///
-/// The tree must have been `transform`ed (or at least have aggregates
-/// recomputed) so scheduling units carry densities; estimates come from
-/// `est_output`.
-pub fn partition_dp(tree: &PrefixTree, pm: &PerfModel, dp: usize) -> DpPartition {
-    assert!(dp >= 1);
-    let units = tree.scheduling_units();
-    // Per-unit demand (comp discounted by the unit's amortized sharing —
-    // approximated with the unit density which already includes it).
-    struct U {
-        reqs: Vec<u32>,
-        comp_eff: f64,
-        mem: f64,
-    }
-    let mut us: Vec<U> = Vec::with_capacity(units.len());
-    for (id, density) in &units {
-        let node = &tree.nodes[*id];
-        let mut mem = 0.0;
-        for &r in &node.requests {
-            let p = tree.input_len(r);
-            let d = tree.est_output[r as usize].max(1) as usize;
-            mem += pm.mem_request(p, d);
-        }
-        // density = comp_eff / mem  =>  comp_eff = density * mem.
-        let comp_eff = if mem > 0.0 { density * mem } else { 0.0 };
-        us.push(U { reqs: node.requests.clone(), comp_eff, mem });
-    }
-    let rho_root = tree.root_density();
-
-    let mut replicas: Vec<Vec<u32>> = Vec::with_capacity(dp);
+/// Decompose a unit list into at most `weights.len()` shards whose
+/// estimated times are proportional to `weights` (per-replica capability:
+/// equal weights for a homogeneous deployment, relative FLOP/s for a
+/// heterogeneous one).  Reuses the dual-scanner side choice so every open
+/// shard tracks the root density ρ(rt).
+pub fn assign_units(units: &[WorkUnit], rho_root: f64, weights: &[f64]) -> UnitAssignment {
+    let dp = weights.len();
+    assert!(dp >= 1, "need at least one replica weight");
+    assert!(
+        weights.iter().all(|w| *w > 0.0),
+        "replica weights must be positive"
+    );
+    let mut parts: Vec<Vec<usize>> = Vec::with_capacity(dp);
     let mut est_times: Vec<f64> = Vec::with_capacity(dp);
-    let (mut l, mut r) = (0usize, us.len());
+    let mut owners: Vec<usize> = Vec::with_capacity(dp);
+    let (mut l, mut r) = (0usize, units.len());
     let mut remaining_time = {
-        let c: f64 = us.iter().map(|u| u.comp_eff).sum();
-        let m: f64 = us.iter().map(|u| u.mem).sum();
+        let c: f64 = units.iter().map(|u| u.comp_eff).sum();
+        let m: f64 = units.iter().map(|u| u.mem).sum();
         c.max(m)
     };
-    for rep in 0..dp {
-        // Remaining-aware target keeps later partitions from starving when
-        // earlier ones overshoot on a coarse unit.
-        let parts_left = dp - rep;
-        let target = remaining_time / parts_left as f64;
-        let mut reqs = Vec::new();
+    let mut weight_left: f64 = weights.iter().sum();
+    for (rep, &w) in weights.iter().enumerate() {
+        // Remaining-aware, capability-weighted target keeps later shards
+        // from starving when earlier ones overshoot on a coarse unit.
+        let target = remaining_time * w / weight_left;
+        weight_left -= w;
+        let mut idxs = Vec::new();
         let (mut c, mut m) = (0.0f64, 0.0f64);
         let last = rep + 1 == dp;
         while l < r {
             // Density-steered side choice (dual-scanner reuse).
             let take_left = if m <= 0.0 { true } else { (c / m) <= rho_root };
             let u_idx = if take_left { l } else { r - 1 };
-            let u = &us[u_idx];
+            let u = &units[u_idx];
             let after = (c + u.comp_eff).max(m + u.mem);
             if !last && after >= target {
                 // Close before or after this unit, whichever lands nearer
@@ -100,7 +126,7 @@ pub fn partition_dp(tree: &PrefixTree, pm: &PerfModel, dp: usize) -> DpPartition
                     } else {
                         r -= 1;
                     }
-                    reqs.extend_from_slice(&u.reqs);
+                    idxs.push(u_idx);
                     c += u.comp_eff;
                     m += u.mem;
                 }
@@ -111,22 +137,95 @@ pub fn partition_dp(tree: &PrefixTree, pm: &PerfModel, dp: usize) -> DpPartition
             } else {
                 r -= 1;
             }
-            reqs.extend_from_slice(&u.reqs);
+            idxs.push(u_idx);
             c += u.comp_eff;
             m += u.mem;
         }
+        if idxs.is_empty() {
+            // A shard that would start with a unit ≥ 2x its target closes
+            // empty; dropping it (instead of handing run_system an empty
+            // workload) re-targets the leftover weight onto later shards.
+            continue;
+        }
+        idxs.sort_unstable();
         let t = c.max(m);
         remaining_time = (remaining_time - t).max(0.0);
         est_times.push(t);
-        replicas.push(reqs);
+        parts.push(idxs);
+        owners.push(rep);
     }
-    DpPartition { replicas, est_times }
+    UnitAssignment { parts, est_times, owners }
+}
+
+/// Result of a DP decomposition: request ids per replica.  Contains only
+/// non-empty replicas — `replicas.len()` may be smaller than the requested
+/// `dp` when the workload has fewer scheduling units than replicas.
+#[derive(Clone, Debug)]
+pub struct DpPartition {
+    pub replicas: Vec<Vec<u32>>,
+    /// Estimated optimal processing time per replica (balance diagnostic).
+    pub est_times: Vec<f64>,
+}
+
+impl DpPartition {
+    /// Max/mean imbalance of the estimated replica times.  Replicas with
+    /// zero estimated time (degenerate demands) are ignored so they cannot
+    /// deflate the mean.
+    pub fn imbalance(&self) -> f64 {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for &t in &self.est_times {
+            if t > 0.0 {
+                max = max.max(t);
+                sum += t;
+                n += 1;
+            }
+        }
+        if n == 0 || sum <= 0.0 {
+            1.0
+        } else {
+            max / (sum / n as f64)
+        }
+    }
+}
+
+/// Decompose a transformed tree into at most `dp` balanced partitions
+/// (§5.5).
+///
+/// The tree must have been `transform`ed (or at least have aggregates
+/// recomputed) so scheduling units carry densities; estimates come from
+/// `est_output`.
+pub fn partition_dp(tree: &PrefixTree, pm: &PerfModel, dp: usize) -> DpPartition {
+    partition_dp_weighted(tree, pm, &vec![1.0; dp.max(1)])
+}
+
+/// [`partition_dp`] with per-replica capability weights (heterogeneous
+/// fleets: a replica with 2x the FLOP/s gets a 2x share of the work).
+pub fn partition_dp_weighted(
+    tree: &PrefixTree,
+    pm: &PerfModel,
+    weights: &[f64],
+) -> DpPartition {
+    let units = work_units(tree, pm);
+    let assignment = assign_units(&units, tree.root_density(), weights);
+    let replicas = assignment
+        .parts
+        .iter()
+        .map(|idxs| {
+            idxs.iter()
+                .flat_map(|&i| units[i].requests.iter().copied())
+                .collect()
+        })
+        .collect();
+    DpPartition { replicas, est_times: assignment.est_times }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::trace::generators::generate_kind;
     use crate::trace::synth::{synthesize, SynthSpec};
     use crate::trace::TraceKind;
 
@@ -179,6 +278,88 @@ mod tests {
     }
 
     #[test]
+    fn dp_exceeding_units_returns_fewer_nonempty_partitions() {
+        // All requests share one prompt: a single scheduling unit.  Asking
+        // for 8 replicas must yield one non-empty partition, not seven
+        // empty workloads (which run_system would turn into NaN
+        // throughputs), and imbalance must stay well-defined.
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let w = crate::trace::Workload::new(
+            "single-unit",
+            (0..5)
+                .map(|i| {
+                    crate::trace::Request::new(i, TraceKind::Custom, vec![1, 2, 3], 16)
+                })
+                .collect(),
+        );
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(1.0, 3);
+        tree.transform(&pm, 0.99);
+        let part = partition_dp(&tree, &pm, 8);
+        assert_eq!(part.replicas.len(), 1, "only one non-empty shard exists");
+        assert_eq!(part.replicas[0].len(), 5);
+        assert!(part.est_times[0] > 0.0);
+        assert!((part.imbalance() - 1.0).abs() < 1e-9);
+        assert!(part.imbalance().is_finite());
+    }
+
+    #[test]
+    fn imbalance_ignores_empty_and_zero_entries() {
+        let part = DpPartition {
+            replicas: vec![vec![0], vec![1]],
+            est_times: vec![2.0, 0.0],
+        };
+        // The zero entry must not halve the mean.
+        assert!((part.imbalance() - 1.0).abs() < 1e-9);
+        let empty = DpPartition { replicas: vec![], est_times: vec![] };
+        assert_eq!(empty.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn weighted_partition_tracks_capability() {
+        let (tree, pm, _) = setup(2400);
+        let part = partition_dp_weighted(&tree, &pm, &[2.0, 1.0]);
+        assert_eq!(part.replicas.len(), 2);
+        let ratio = part.est_times[0] / part.est_times[1].max(1e-12);
+        // Granularity-limited at test scale; the 2x-capable replica must
+        // still clearly carry more estimated work.
+        assert!(ratio > 1.3 && ratio < 3.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn assign_units_empty_and_singleton() {
+        let a = assign_units(&[], 1.0, &[1.0, 1.0]);
+        assert!(a.parts.is_empty());
+        let unit = WorkUnit {
+            requests: vec![0, 1],
+            density: 1.0,
+            comp_eff: 2.0,
+            mem: 2.0,
+        };
+        let a = assign_units(&[unit], 1.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(a.parts.len(), 1);
+        assert_eq!(a.parts[0], vec![0]);
+        assert_eq!(a.est_times, vec![2.0]);
+    }
+
+    #[test]
+    fn assign_units_preserves_order_within_shards() {
+        let (tree, pm, _) = setup(1500);
+        let units = work_units(&tree, &pm);
+        let a = assign_units(&units, tree.root_density(), &[1.0; 4]);
+        let mut seen = vec![false; units.len()];
+        for part in &a.parts {
+            assert!(!part.is_empty());
+            assert!(part.windows(2).all(|w| w[0] < w[1]), "shard not ascending");
+            for &i in part {
+                assert!(!seen[i], "unit {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unit dropped by assignment");
+    }
+
+    #[test]
     fn partitions_each_contain_blendable_mix() {
         // Every partition should carry both compute- and memory-intensive
         // requests so each replica can blend locally (§5.5).
@@ -196,6 +377,23 @@ mod tests {
                 .iter()
                 .any(|&r| w.requests[r as usize].dataset == TraceKind::BurstGpt);
             assert!(has_video && has_compute, "replica {i} not blendable");
+        }
+    }
+
+    #[test]
+    fn work_units_match_scheduling_units() {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let w = generate_kind(TraceKind::Mmlu, 400, 3);
+        let mut tree = PrefixTree::build(&w);
+        tree.sample_outputs(1.0, 3);
+        tree.transform(&pm, 0.99);
+        let units = work_units(&tree, &pm);
+        let sched = tree.scheduling_units();
+        assert_eq!(units.len(), sched.len());
+        for (u, (id, density)) in units.iter().zip(&sched) {
+            assert_eq!(u.requests, tree.nodes[*id].requests);
+            assert!((u.density - density).abs() < 1e-12);
+            assert!(u.est_time() >= 0.0);
         }
     }
 }

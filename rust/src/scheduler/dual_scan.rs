@@ -23,6 +23,10 @@ use crate::tree::PrefixTree;
 pub struct Unit {
     pub requests: Vec<u32>,
     pub density: f64,
+    /// Estimated processing seconds of the unit in isolation — consulted
+    /// only by the fleet coordinator when sizing steals (0 when the
+    /// scanner was built without a perf model).
+    pub est_cost: f64,
 }
 
 /// Dual-ended admitter over the transformed tree.
@@ -48,19 +52,42 @@ impl DualScanner {
             .map(|(id, density)| Unit {
                 requests: tree.nodes[id].requests.clone(),
                 density,
+                est_cost: 0.0,
             })
             .collect();
+        Self::from_units(units, tree.root_density())
+    }
+
+    /// Build from an explicit unit queue (the fleet path: a shard of the
+    /// global density-sorted unit list, or a stolen slice of one).  The
+    /// list must already be in dual-scanner order (density descending).
+    pub fn from_units(units: Vec<Unit>, rho_root: f64) -> Self {
         let total = units.iter().map(|u| u.requests.len()).sum();
         let n = units.len();
         DualScanner {
             units,
-            rho_root: tree.root_density(),
+            rho_root,
             l: (0, 0),
             r: (n.saturating_sub(1), 0),
             issued: 0,
             total,
             last_side: Side::Left,
         }
+    }
+
+    /// Replace a drained scanner's queue with freshly assigned units
+    /// (work-stealing refill).  Only valid once the scanner is exhausted —
+    /// a thief steals exactly when it has nothing left to issue.
+    pub fn feed(&mut self, units: Vec<Unit>) {
+        assert!(self.exhausted(), "feed is only valid on a drained scanner");
+        let total = units.iter().map(|u| u.requests.len()).sum();
+        let n = units.len();
+        self.units = units;
+        self.l = (0, 0);
+        self.r = (n.saturating_sub(1), 0);
+        self.issued = 0;
+        self.total = total;
+        self.last_side = Side::Left;
     }
 
     pub fn rho_root(&self) -> f64 {
@@ -70,6 +97,82 @@ impl DualScanner {
     /// Number of requests remaining.
     pub fn remaining(&self) -> usize {
         self.total - self.issued
+    }
+
+    /// Index range `[lo, hi)` of whole units neither cursor has touched —
+    /// the only units a coordinator may steal without splitting a unit.
+    fn whole_pending_range(&self) -> (usize, usize) {
+        if self.crossed() {
+            return (0, 0);
+        }
+        let lo = (self.l.0 + usize::from(self.l.1 > 0)).min(self.units.len());
+        let hi = if self.r.0 == usize::MAX {
+            lo
+        } else if self.r.1 > 0 {
+            self.r.0
+        } else {
+            self.r.0 + 1
+        };
+        (lo, hi.max(lo).min(self.units.len()))
+    }
+
+    /// Number of whole (steal-eligible) units still pending.
+    pub fn stealable_units(&self) -> usize {
+        let (lo, hi) = self.whole_pending_range();
+        hi - lo
+    }
+
+    /// Total estimated cost of the steal-eligible units.
+    pub fn remaining_whole_est(&self) -> f64 {
+        let (lo, hi) = self.whole_pending_range();
+        self.units[lo..hi].iter().map(|u| u.est_cost.max(0.0)).sum()
+    }
+
+    /// Remove whole pending units from the memory end (lowest-density end
+    /// of the queue) until their accumulated `est_cost` reaches
+    /// `target_est`, and return them in dual-scanner order.  The donor
+    /// keeps its compute end and both partially-consumed cursor units, so
+    /// its local blend continues undisturbed; each stolen unit keeps its
+    /// internal prefix locality.
+    pub fn steal_from_memory_end(&mut self, target_est: f64) -> Vec<Unit> {
+        if target_est <= 0.0 {
+            return Vec::new();
+        }
+        let (lo, hi) = self.whole_pending_range();
+        if hi <= lo {
+            return Vec::new();
+        }
+        let mut k = 0usize;
+        let mut est = 0.0f64;
+        while k < hi - lo && est < target_est {
+            est += self.units[hi - 1 - k].est_cost.max(0.0);
+            k += 1;
+        }
+        if k == 0 {
+            return Vec::new();
+        }
+        let stolen: Vec<Unit> = self.units.drain(hi - k..hi).collect();
+        let stolen_reqs: usize = stolen.iter().map(|u| u.requests.len()).sum();
+        self.total -= stolen_reqs;
+        if self.r.0 != usize::MAX {
+            if self.r.1 > 0 {
+                // The right cursor's partially-consumed unit sits just past
+                // the stolen range (`r.0 == hi`); the drain shifted it down
+                // by `k`.
+                debug_assert_eq!(self.r.0, hi);
+                self.r.0 -= k;
+            } else {
+                // The right cursor's untouched unit (`r.0 == hi - 1`) was
+                // itself stolen: retarget to the new memory end, or the
+                // exhausted sentinel when nothing remains to its left.
+                debug_assert_eq!(self.r.0 + 1, hi);
+                match (hi - k).checked_sub(1) {
+                    Some(new_r) => self.r = (new_r, 0),
+                    None => self.r = (usize::MAX, 0),
+                }
+            }
+        }
+        stolen
     }
 
     fn left_req(&self) -> Option<u32> {
@@ -334,5 +437,144 @@ mod tests {
             batch_density > rho_root * 0.4 && batch_density < rho_root * 3.0,
             "batch density {batch_density} vs root {rho_root}"
         );
+    }
+
+    // ---- unit-queue API (fleet path) ----
+
+    fn unit(ids: std::ops::Range<u32>, density: f64, est: f64) -> Unit {
+        Unit { requests: ids.collect(), density, est_cost: est }
+    }
+
+    #[test]
+    fn from_units_empty_list_is_exhausted() {
+        let mut s = DualScanner::from_units(vec![], 1.0);
+        assert!(s.exhausted());
+        assert_eq!(s.remaining(), 0);
+        assert_eq!(s.peek(&view(1e6, 0.0, 0.0)), None);
+        assert_eq!(s.stealable_units(), 0);
+        assert_eq!(s.remaining_whole_est(), 0.0);
+        assert!(s.steal_from_memory_end(1e9).is_empty());
+    }
+
+    #[test]
+    fn from_units_singleton_drains_and_steals() {
+        // Untouched singleton: the one unit is steal-eligible.
+        let mut s = DualScanner::from_units(vec![unit(0..3, 2.0, 5.0)], 1.0);
+        assert_eq!(s.stealable_units(), 1);
+        assert!((s.remaining_whole_est() - 5.0).abs() < 1e-12);
+        let stolen = s.steal_from_memory_end(1.0);
+        assert_eq!(stolen.len(), 1);
+        assert_eq!(stolen[0].requests, vec![0, 1, 2]);
+        assert!(s.exhausted(), "donor empty after losing its only unit");
+        assert_eq!(s.peek(&view(1e6, 0.0, 0.0)), None);
+
+        // Touched singleton: nothing whole remains, stealing is refused
+        // and the cursor drains the unit normally.
+        let mut s = DualScanner::from_units(vec![unit(0..3, 2.0, 5.0)], 1.0);
+        assert!(s.peek(&view(1e6, 0.0, 0.0)).is_some());
+        s.pop();
+        assert_eq!(s.stealable_units(), 0);
+        assert!(s.steal_from_memory_end(1e9).is_empty());
+        let mut n = 1;
+        while s.peek(&view(1e6, 0.0, 0.0)).is_some() {
+            s.pop();
+            n += 1;
+        }
+        assert_eq!(n, 3);
+        assert!(s.exhausted());
+    }
+
+    #[test]
+    fn steal_mid_scan_preserves_exactly_once_issue() {
+        let units = vec![
+            unit(0..3, 3.0, 1.0),
+            unit(3..6, 2.0, 1.0),
+            unit(6..9, 1.0, 1.0),
+            unit(9..12, 0.5, 1.0),
+        ];
+        let mut s = DualScanner::from_units(units, 1.5);
+        let mut issued = std::collections::HashSet::new();
+        // Consume two from the compute end and one from the memory end.
+        for _ in 0..2 {
+            let (r, side) = s.peek(&view(1e6, 0.0, 1e9)).unwrap();
+            assert_eq!(side, Side::Left);
+            issued.insert(r);
+            s.pop();
+        }
+        let (r, side) = s.peek(&view(1e6, 1e9, 0.0)).unwrap();
+        assert_eq!(side, Side::Right);
+        issued.insert(r);
+        s.pop();
+        // Whole pending units: 1 and 2 (unit 0 and 3 are cursor-partial).
+        assert_eq!(s.stealable_units(), 2);
+        let stolen = s.steal_from_memory_end(1.5);
+        assert_eq!(stolen.len(), 2, "1.5s target takes both 1s units");
+        let stolen_reqs: Vec<u32> =
+            stolen.iter().flat_map(|u| u.requests.iter().copied()).collect();
+        assert_eq!(stolen_reqs, vec![3, 4, 5, 6, 7, 8], "dual-scanner order kept");
+        // Donor drains the rest of its two partial units.
+        while let Some((r, _)) = s.peek(&view(1e6, 0.0, 0.0)) {
+            assert!(issued.insert(r), "request {r} issued twice");
+            s.pop();
+        }
+        assert!(s.exhausted());
+        let mut all: Vec<u32> = issued.into_iter().collect();
+        all.extend(stolen_reqs);
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<u32>>());
+
+        // The stolen slice drives a thief scanner to completion.
+        let mut thief = DualScanner::from_units(stolen, 1.5);
+        let mut got = Vec::new();
+        while let Some((r, _)) = thief.peek(&view(1e6, 0.0, 0.0)) {
+            got.push(r);
+            thief.pop();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (3..9).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn steal_respects_target_and_leaves_compute_end() {
+        let units: Vec<Unit> =
+            (0..6).map(|i| unit(i * 2..i * 2 + 2, (6 - i) as f64, 2.0)).collect();
+        let mut s = DualScanner::from_units(units, 3.0);
+        // Steal ~half the 12s of whole pending work: 3 memory-end units.
+        let stolen = s.steal_from_memory_end(6.0);
+        assert_eq!(stolen.len(), 3);
+        assert_eq!(stolen[0].requests, vec![6, 7], "compute end stays with donor");
+        assert_eq!(s.stealable_units(), 3);
+        assert_eq!(s.remaining(), 6);
+        let mut got = Vec::new();
+        while let Some((r, _)) = s.peek(&view(1e6, 0.0, 0.0)) {
+            got.push(r);
+            s.pop();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn feed_refills_a_drained_scanner() {
+        let mut s = DualScanner::from_units(vec![unit(0..2, 1.0, 1.0)], 1.0);
+        while s.peek(&view(1e6, 0.0, 0.0)).is_some() {
+            s.pop();
+        }
+        assert!(s.exhausted());
+        s.feed(vec![unit(5..8, 2.0, 1.0), unit(8..10, 0.5, 1.0)]);
+        assert!(!s.exhausted());
+        assert_eq!(s.remaining(), 5);
+        let mut got = Vec::new();
+        while let Some((r, _)) = s.peek(&view(1e6, 0.0, 0.0)) {
+            got.push(r);
+            s.pop();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (5..10).collect::<Vec<u32>>());
+        assert!(s.exhausted());
+        // Feeding an empty batch keeps the scanner exhausted.
+        s.feed(vec![]);
+        assert!(s.exhausted());
+        assert_eq!(s.peek(&view(1e6, 0.0, 0.0)), None);
     }
 }

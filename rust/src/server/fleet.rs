@@ -1,0 +1,587 @@
+//! Work-stealing DP fleet engine.
+//!
+//! `serve_batch` runs the §5.5 decomposition once and forks: each replica
+//! owns a fixed shard until the job ends, so the whole deployment waits on
+//! the slowest replica — any estimate error (§5.1 sampling noise) or unit
+//! coarseness turns directly into idle GPUs.  The fleet engine replaces
+//! that fork-join with an event-driven coordinator over *unit-granular*
+//! shard queues:
+//!
+//! - Every replica runs the normal BlendServe engine + dual scanner over
+//!   its shard ([`SimEngine::step_once`] keeps runs resumable).
+//! - The coordinator always advances the replica with the smallest
+//!   simulated clock (discrete-event order), so a steal can never observe
+//!   the victim's future.
+//! - When a replica drains (scanner exhausted, batch empty) it *steals*
+//!   whole scheduling units from the memory end of the straggler's pending
+//!   queue — the dual-scanner tail — sized to `steal_ratio` of the
+//!   victim's steal-eligible work.  Whole-unit steals keep every stolen
+//!   subtree's internal prefix locality; the donor keeps its compute end,
+//!   so its local blend continues undisturbed (HyGen-style elastic
+//!   reassignment, BatchLLM-style sharing preservation).
+//! - Replicas may be heterogeneous (per-replica GPU counts / hardware
+//!   presets, e.g. mixed A100/H100): the initial decomposition weights
+//!   shard targets by replica FLOP/s and stealing absorbs the residual.
+//!
+//! With `dp_replicas = 1` (or `steal = false`) the fleet reduces exactly
+//! to the static path: one replica, the same prepared tree, the same
+//! scanner — bit-identical to `run_system`.
+
+use crate::config::{presets, SystemConfig};
+use crate::engine::sim::{SimEngine, SimRequest, SimResult, StepOutcome};
+use crate::parallel::{assign_units, work_units, WorkUnit};
+use crate::perfmodel::PerfModel;
+use crate::scheduler::dual_scan::Unit;
+use crate::scheduler::{prepare_blendserve, DualScanner};
+use crate::trace::Workload;
+use crate::tree::PrefixTree;
+use crate::util::Json;
+
+/// Outcome of one fleet job (stealing run + static reference).
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Per-replica engine results, in shard order.
+    pub per_replica: Vec<SimResult>,
+    /// Human-readable replica spec, e.g. `"a100-80gb-sxm x1"`.
+    pub replica_desc: Vec<String>,
+    /// Wall-clock makespan (slowest replica).
+    pub makespan: f64,
+    pub total_tokens: u64,
+    pub total_throughput: f64,
+    /// Per-replica end-of-job idle fraction `1 - t_r / makespan` (a
+    /// stealing replica never idles mid-job: it refills the moment it
+    /// drains or retires for good).
+    pub idle_fracs: Vec<f64>,
+    pub mean_idle_frac: f64,
+    /// Steal events / whole units moved / requests moved.
+    pub steals: usize,
+    pub stolen_units: usize,
+    pub stolen_requests: usize,
+    /// Aggregate achieved prefix sharing (Σ hits / Σ prompts).
+    pub sharing_achieved: f64,
+    /// Static §5.5 fork-join reference on the same decomposition.
+    pub static_makespan: f64,
+    pub static_sharing: f64,
+    /// `static_makespan / makespan` (1.0 when stealing is off).
+    pub speedup_vs_static: f64,
+    /// Cross-unit prefix sharing given up by moving units away from their
+    /// shard (`static_sharing - sharing_achieved`, floored at 0).
+    pub sharing_lost_to_steals: f64,
+}
+
+impl FleetReport {
+    /// JSON document for `BENCH_fleet.json` / `blendserve fleet --out`.
+    pub fn to_json(&self) -> Json {
+        let replicas: Vec<Json> = self
+            .per_replica
+            .iter()
+            .zip(&self.replica_desc)
+            .zip(&self.idle_fracs)
+            .map(|((r, desc), &idle)| {
+                Json::obj(vec![
+                    ("spec", Json::from(desc.as_str())),
+                    ("total_time_s", Json::Num(r.total_time)),
+                    ("total_tokens", Json::from(r.total_tokens as usize)),
+                    ("sharing_achieved", Json::Num(r.sharing_achieved)),
+                    ("retractions", Json::from(r.retractions as usize)),
+                    ("idle_frac", Json::Num(idle)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("makespan_s", Json::Num(self.makespan)),
+            ("total_throughput_tok_s", Json::Num(self.total_throughput)),
+            ("total_tokens", Json::from(self.total_tokens as usize)),
+            ("mean_idle_frac", Json::Num(self.mean_idle_frac)),
+            ("steals", Json::from(self.steals)),
+            ("stolen_units", Json::from(self.stolen_units)),
+            ("stolen_requests", Json::from(self.stolen_requests)),
+            ("sharing_achieved", Json::Num(self.sharing_achieved)),
+            ("static_makespan_s", Json::Num(self.static_makespan)),
+            ("static_sharing", Json::Num(self.static_sharing)),
+            ("speedup_vs_static", Json::Num(self.speedup_vs_static)),
+            ("sharing_lost_to_steals", Json::Num(self.sharing_lost_to_steals)),
+            ("replicas", Json::Arr(replicas)),
+        ])
+    }
+}
+
+/// One replica of the simulated fleet.
+struct Replica {
+    engine: SimEngine,
+    scanner: DualScanner,
+    st: crate::engine::sim::RunState,
+    done: bool,
+    desc: String,
+}
+
+/// Raw outcome of one fleet pass (before the static comparison).
+struct FleetRun {
+    results: Vec<SimResult>,
+    descs: Vec<String>,
+    steals: usize,
+    stolen_units: usize,
+    stolen_requests: usize,
+}
+
+impl FleetRun {
+    fn makespan(&self) -> f64 {
+        self.results.iter().map(|r| r.total_time).fold(0.0, f64::max)
+    }
+
+    fn sharing(&self) -> f64 {
+        let hits: u64 = self.results.iter().map(|r| r.hit_tokens).sum();
+        let prompts: u64 = self.results.iter().map(|r| r.prompt_tokens).sum();
+        if prompts == 0 {
+            0.0
+        } else {
+            hits as f64 / prompts as f64
+        }
+    }
+}
+
+/// Perf model of fleet replica `slot` (heterogeneous overrides fall back
+/// to the homogeneous top-level spec).
+fn replica_pm(cfg: &SystemConfig, slot: usize) -> PerfModel {
+    let hw = cfg
+        .fleet
+        .hardware
+        .get(slot)
+        .map(|name| {
+            presets::hardware_by_name(name)
+                .unwrap_or_else(|| panic!("unknown hardware preset '{name}'"))
+        })
+        .unwrap_or_else(|| cfg.hardware.clone());
+    let gpus = cfg.fleet.gpus.get(slot).copied().unwrap_or(cfg.gpus_per_replica);
+    let mut pm = PerfModel::new(cfg.model.clone(), hw, gpus);
+    pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
+    pm
+}
+
+/// Scanner units (with steal costs) for a set of global unit indices.
+fn scanner_units(units: &[WorkUnit], idxs: &[usize]) -> Vec<Unit> {
+    idxs.iter()
+        .map(|&i| Unit {
+            requests: units[i].requests.clone(),
+            density: units[i].density,
+            est_cost: units[i].est_time(),
+        })
+        .collect()
+}
+
+/// Engine requests for a unit batch, in ascending request-id order (for a
+/// dp=1 fleet this is exactly `SimRequest::from_workload`'s order, which
+/// keeps the single-replica fleet bit-identical to `run_system`).
+fn shard_requests(workload: &Workload, tree: &PrefixTree, us: &[Unit]) -> Vec<SimRequest> {
+    let mut ids: Vec<u32> = us.iter().flat_map(|u| u.requests.iter().copied()).collect();
+    ids.sort_unstable();
+    ids.iter()
+        .map(|&r| {
+            let req = &workload.requests[r as usize];
+            SimRequest::offline(
+                req.id,
+                req.prompt.clone(),
+                req.output_len,
+                tree.est_output[r as usize],
+            )
+        })
+        .collect()
+}
+
+/// The straggler: the non-done replica (other than `thief`) with the most
+/// steal-eligible estimated work.
+fn pick_victim(reps: &[Replica], thief: usize) -> Option<usize> {
+    let mut best: Option<(usize, f64, usize)> = None;
+    for (j, r) in reps.iter().enumerate() {
+        if j == thief || r.done {
+            continue;
+        }
+        let units = r.scanner.stealable_units();
+        if units == 0 {
+            continue;
+        }
+        let est = r.scanner.remaining_whole_est();
+        let better = match best {
+            None => true,
+            Some((_, be, bu)) => est > be || (est == be && units > bu),
+        };
+        if better {
+            best = Some((j, est, units));
+        }
+    }
+    best.map(|(j, _, _)| j)
+}
+
+/// Deterministic global preprocessing shared by the stealing pass and its
+/// static reference (one tree build / sampling / transform / unit pricing
+/// / assignment instead of two identical ones).
+struct PreparedFleet {
+    tree: PrefixTree,
+    sched: crate::config::SchedulerConfig,
+    units: Vec<WorkUnit>,
+    rho_root: f64,
+    pms: Vec<PerfModel>,
+    /// Unit indices per replica slot (empty for slots the assignment gave
+    /// nothing — they start idle and join via stealing).
+    parts_by_slot: Vec<Vec<usize>>,
+}
+
+fn prepare_fleet(cfg: &SystemConfig, workload: &Workload) -> PreparedFleet {
+    let dp = cfg.dp_replicas.max(1);
+    // Global preprocessing, identical to run_system's BlendServe path.
+    let (pm, tree, _n_sampled, _splits) = prepare_blendserve(cfg, workload);
+    let mut sched = cfg.scheduler.clone();
+    sched.expected_sharing = tree.sharing_ratio();
+    let units = work_units(&tree, &pm);
+    let rho_root = tree.root_density();
+    let pms: Vec<PerfModel> = (0..dp).map(|slot| replica_pm(cfg, slot)).collect();
+    let weights: Vec<f64> = pms.iter().map(|p| p.compute()).collect();
+    let assignment = assign_units(&units, rho_root, &weights);
+    let mut parts_by_slot: Vec<Vec<usize>> = vec![Vec::new(); dp];
+    for (idxs, &slot) in assignment.parts.into_iter().zip(&assignment.owners) {
+        parts_by_slot[slot] = idxs;
+    }
+    PreparedFleet { tree, sched, units, rho_root, pms, parts_by_slot }
+}
+
+/// One fleet pass over the workload.  Every configured replica slot is
+/// materialized — a slot whose initial shard came back empty (coarse
+/// units, dp > #units) starts idle and immediately joins via stealing.
+fn run_fleet(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    prep: &PreparedFleet,
+    steal: bool,
+) -> FleetRun {
+    let tree = &prep.tree;
+    let units = &prep.units;
+    let rho_root = prep.rho_root;
+    let mut reps: Vec<Replica> = prep
+        .parts_by_slot
+        .iter()
+        .enumerate()
+        .map(|(slot, idxs)| {
+            let us = scanner_units(units, idxs);
+            let reqs = shard_requests(workload, tree, &us);
+            let engine = SimEngine::new(
+                prep.pms[slot].clone(),
+                cfg.engine.clone(),
+                prep.sched.clone(),
+                reqs,
+            );
+            let st = engine.begin();
+            Replica {
+                engine,
+                scanner: DualScanner::from_units(us, rho_root),
+                st,
+                done: false,
+                desc: format!("{} x{}", prep.pms[slot].hw.name, prep.pms[slot].n_gpus),
+            }
+        })
+        .collect();
+
+    let mut steals = 0usize;
+    let mut stolen_units = 0usize;
+    let mut stolen_requests = 0usize;
+    loop {
+        // Discrete-event order: always advance the earliest replica, so
+        // every steal observes its victim at a clock ≥ the thief's (the
+        // victim's pending set only shrinks over time — causally safe).
+        let Some(i) = (0..reps.len())
+            .filter(|&i| !reps[i].done)
+            .min_by(|&a, &b| {
+                reps[a]
+                    .st
+                    .clock()
+                    .partial_cmp(&reps[b].st.clock())
+                    .expect("replica clocks are finite")
+            })
+        else {
+            break;
+        };
+        let outcome = {
+            let rep = &mut reps[i];
+            rep.engine.step_once(&mut rep.st, &mut rep.scanner)
+        };
+        if outcome == StepOutcome::Progress {
+            continue;
+        }
+        // Done (all local work finished) or Starved (queue empty): try to
+        // refill from the straggler before retiring.
+        let mut refilled = false;
+        if steal {
+            if let Some(v) = pick_victim(&reps, i) {
+                let target =
+                    (reps[v].scanner.remaining_whole_est() * cfg.fleet.steal_ratio)
+                        .max(f64::MIN_POSITIVE);
+                let stolen = reps[v].scanner.steal_from_memory_end(target);
+                if !stolen.is_empty() {
+                    steals += 1;
+                    stolen_units += stolen.len();
+                    let stolen_ids: Vec<u32> = stolen
+                        .iter()
+                        .flat_map(|u| u.requests.iter().copied())
+                        .collect();
+                    stolen_requests += stolen_ids.len();
+                    // The donor stops pacing against the stolen work; the
+                    // thief starts (feed_requests re-arms stolen-back ids).
+                    {
+                        let victim = &mut reps[v];
+                        victim.engine.unfeed_requests(&mut victim.st, &stolen_ids);
+                    }
+                    let reqs = shard_requests(workload, tree, &stolen);
+                    let rep = &mut reps[i];
+                    rep.engine.feed_requests(&mut rep.st, reqs);
+                    rep.scanner.feed(stolen);
+                    refilled = true;
+                }
+            }
+        }
+        if !refilled {
+            reps[i].done = true;
+        }
+    }
+
+    let mut results = Vec::with_capacity(reps.len());
+    let mut descs = Vec::with_capacity(reps.len());
+    for r in reps {
+        descs.push(r.desc);
+        results.push(r.engine.finalize(r.st));
+    }
+    FleetRun { results, descs, steals, stolen_units, stolen_requests }
+}
+
+/// Serve a request pool on the work-stealing fleet.  Runs the stealing
+/// schedule per `cfg.fleet`, plus (at `dp > 1` with stealing on) the
+/// static fork-join reference on the same decomposition for the
+/// speedup/sharing-loss accounting.
+pub fn serve_fleet(cfg: &SystemConfig, workload: &Workload) -> FleetReport {
+    let prep = prepare_fleet(cfg, workload);
+    let run = run_fleet(cfg, workload, &prep, cfg.fleet.steal);
+    let makespan = run.makespan();
+    let sharing = run.sharing();
+    let (static_makespan, static_sharing) =
+        if cfg.fleet.steal && cfg.dp_replicas.max(1) > 1 {
+            let st = run_fleet(cfg, workload, &prep, false);
+            (st.makespan(), st.sharing())
+        } else {
+            (makespan, sharing)
+        };
+
+    let total_tokens: u64 = run.results.iter().map(|r| r.total_tokens).sum();
+    let idle_fracs: Vec<f64> = run
+        .results
+        .iter()
+        .map(|r| (1.0 - r.total_time / makespan.max(1e-12)).max(0.0))
+        .collect();
+    let mean_idle_frac = if idle_fracs.is_empty() {
+        0.0
+    } else {
+        idle_fracs.iter().sum::<f64>() / idle_fracs.len() as f64
+    };
+    FleetReport {
+        makespan,
+        total_tokens,
+        total_throughput: total_tokens as f64 / makespan.max(1e-12),
+        mean_idle_frac,
+        idle_fracs,
+        steals: run.steals,
+        stolen_units: run.stolen_units,
+        stolen_requests: run.stolen_requests,
+        sharing_achieved: sharing,
+        static_makespan,
+        static_sharing,
+        speedup_vs_static: static_makespan / makespan.max(1e-12),
+        sharing_lost_to_steals: (static_sharing - sharing).max(0.0),
+        per_replica: run.results,
+        replica_desc: run.descs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::scheduler::run_system;
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::TraceKind;
+
+    fn balanced_workload(n: usize) -> Workload {
+        let pm = PerfModel::new(
+            presets::llama3_8b(),
+            presets::a100_80gb(),
+            1,
+        );
+        synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.1, 0.25, n), &pm)
+    }
+
+    /// The HyGen-motivated adversary (`trace::synth::adversarial_skew`):
+    /// liar prompt groups whose true output length is ~3x what §5.1
+    /// sampling will estimate for the unsampled majority of them.  The
+    /// static partition balances *estimated* times, so the replica that
+    /// drew the under-estimated memory tail grinds for multiples of its
+    /// target while the others idle — exactly the stranded capacity
+    /// stealing recovers.
+    fn skewed_workload(honest_groups: usize, liar_groups: usize, per: usize) -> Workload {
+        crate::trace::synth::adversarial_skew(honest_groups, liar_groups, per)
+    }
+
+    fn skewed_cfg(dp: usize) -> SystemConfig {
+        let mut cfg = baselines::blendserve();
+        // Tight KV (~3.4k tokens after weights+reserve): each shard's
+        // prompt footprint alone exceeds it, so admission pauses mid-shard
+        // and the scanner retains pending whole units — the steal-eligible
+        // pool.  Sparse sampling under-estimates most liar groups.
+        cfg.hardware.memory_bytes = 20.5e9;
+        cfg.scheduler.sample_prob = 0.02;
+        cfg.dp_replicas = dp;
+        cfg
+    }
+
+    #[test]
+    fn dp1_fleet_bit_identical_to_run_system() {
+        let w = balanced_workload(500);
+        let cfg = baselines::blendserve();
+        let sys = run_system(&cfg, &w);
+        let fleet = serve_fleet(&cfg, &w);
+        assert_eq!(fleet.per_replica.len(), 1);
+        assert_eq!(fleet.steals, 0);
+        let (a, b) = (&sys.result, &fleet.per_replica[0]);
+        assert_eq!(a.total_time, b.total_time, "clock diverged");
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.hit_tokens, b.hit_tokens);
+        assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        assert_eq!(a.retractions, b.retractions);
+        assert_eq!(a.total_comp, b.total_comp);
+        assert_eq!(a.total_mem, b.total_mem);
+        assert_eq!(fleet.speedup_vs_static, 1.0);
+    }
+
+    #[test]
+    fn fleet_conserves_tokens_and_sharing_on_balanced_trace() {
+        let w = balanced_workload(1600);
+        let mut cfg = baselines::blendserve();
+        cfg.scheduler.sample_prob = 1.0; // perfect estimates: no skew
+        cfg.dp_replicas = 4;
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert_eq!(rep.per_replica.len(), 4, "every configured slot materialized");
+        // Within noise of the static schedule on a balanced trace…
+        assert!(
+            rep.makespan <= rep.static_makespan * 1.05,
+            "stealing regressed a balanced trace: {} vs static {}",
+            rep.makespan,
+            rep.static_makespan
+        );
+        // …and no meaningful sharing given up.
+        assert!(
+            rep.sharing_achieved >= rep.static_sharing * 0.9,
+            "sharing {} vs static {}",
+            rep.sharing_achieved,
+            rep.static_sharing
+        );
+    }
+
+    #[test]
+    fn stealing_beats_static_forkjoin_on_skewed_trace() {
+        let w = skewed_workload(32, 16, 10);
+        let cfg = skewed_cfg(4);
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert!(rep.steals > 0, "no steals on an adversarially skewed trace");
+        assert!(
+            rep.makespan < rep.static_makespan,
+            "stealing did not beat static: {} vs {}",
+            rep.makespan,
+            rep.static_makespan
+        );
+        assert!(
+            rep.sharing_achieved >= rep.static_sharing * 0.9,
+            "stealing shredded sharing: {} vs static {}",
+            rep.sharing_achieved,
+            rep.static_sharing
+        );
+        // Stealing replicas only idle after global work runs out.
+        assert!(rep.mean_idle_frac < 0.5, "idle {}", rep.mean_idle_frac);
+    }
+
+    #[test]
+    fn stealing_reduces_tail_idle_on_skewed_trace() {
+        let w = skewed_workload(32, 16, 10);
+        let mut static_cfg = skewed_cfg(4);
+        static_cfg.fleet.steal = false;
+        let st = serve_fleet(&static_cfg, &w);
+        assert_eq!(st.steals, 0);
+        assert_eq!(st.speedup_vs_static, 1.0);
+        let dyn_rep = serve_fleet(&skewed_cfg(4), &w);
+        let static_idle =
+            st.idle_fracs.iter().cloned().fold(0.0f64, f64::max);
+        let steal_idle =
+            dyn_rep.idle_fracs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            steal_idle < static_idle,
+            "worst idle not reduced: {steal_idle} vs {static_idle}"
+        );
+    }
+
+    #[test]
+    fn dp_exceeding_units_materializes_all_replicas() {
+        // A single-unit workload at dp=8: the assignment hands one slot
+        // everything, but all eight replicas exist — the empty ones start
+        // idle and try to steal (nothing is stealable here once the lone
+        // unit is admitted, so they retire cleanly).
+        let w = Workload::new(
+            "single-unit",
+            (0..6)
+                .map(|i| {
+                    crate::trace::Request::new(i, TraceKind::Custom, vec![1, 2, 3], 8)
+                })
+                .collect(),
+        );
+        let mut cfg = baselines::blendserve();
+        cfg.dp_replicas = 8;
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.per_replica.len(), 8);
+        assert_eq!(rep.idle_fracs.len(), 8);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert!(rep.makespan.is_finite() && rep.makespan > 0.0);
+        assert!(rep.total_throughput.is_finite());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_loads_strong_replica_more() {
+        let w = balanced_workload(1600);
+        let mut cfg = baselines::blendserve();
+        cfg.scheduler.sample_prob = 1.0;
+        cfg.dp_replicas = 2;
+        cfg.fleet.gpus = vec![1, 2];
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert_eq!(rep.per_replica.len(), 2);
+        assert_eq!(rep.replica_desc[0], "a100-80gb-sxm x1");
+        assert_eq!(rep.replica_desc[1], "a100-80gb-sxm x2");
+        let (weak, strong) =
+            (rep.per_replica[0].total_tokens, rep.per_replica[1].total_tokens);
+        assert!(
+            strong as f64 > weak as f64 * 1.2,
+            "2x-GPU replica under-loaded: {strong} vs {weak}"
+        );
+    }
+
+    #[test]
+    fn mixed_hardware_fleet_runs_and_reports() {
+        let w = balanced_workload(1200);
+        let mut cfg = baselines::blendserve();
+        cfg.scheduler.sample_prob = 1.0;
+        cfg.dp_replicas = 2;
+        cfg.fleet.hardware =
+            vec!["a100-80gb-sxm".to_string(), "h100-80gb-sxm".to_string()];
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert_eq!(rep.replica_desc[1], "h100-80gb-sxm x1");
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"speedup_vs_static\""));
+        assert!(json.contains("h100-80gb-sxm"));
+    }
+}

@@ -8,9 +8,11 @@
 //! path on top of the same engine (DESIGN.md §Co-located-Serving).
 
 pub mod colocate;
+pub mod fleet;
 pub mod pool;
 
 pub use colocate::{online_stream, serve_colocated, ColocateReport};
+pub use fleet::{serve_fleet, FleetReport};
 pub use pool::{load_jsonl, save_results, JsonlRequest};
 
 use crate::config::SystemConfig;
@@ -35,7 +37,11 @@ pub struct BatchJobResult {
 /// Serve a whole request pool offline.  With `dp_replicas > 1` the
 /// workload is decomposed via the §5.5 dual-scanner partitioning and the
 /// replicas run concurrently (one OS thread each — the simulation is
-/// CPU-bound, mirroring one leader per replica).
+/// CPU-bound, mirroring one leader per replica).  `partition_dp` returns
+/// only non-empty shards, so `per_replica.len()` can be smaller than
+/// `dp_replicas` on degenerate workloads (fewer scheduling units than
+/// replicas).  For elastic (work-stealing) scheduling use
+/// [`fleet::serve_fleet`] instead of this static fork-join.
 pub fn serve_batch(cfg: &SystemConfig, workload: &Workload) -> BatchJobResult {
     let dp = cfg.dp_replicas.max(1);
     let outputs: Vec<RunOutput> = if dp == 1 {
@@ -127,5 +133,32 @@ mod tests {
         let job = serve_batch(&cfg, &w);
         assert_eq!(job.per_replica.len(), 4);
         assert_eq!(job.total_tokens, w.total_tokens());
+    }
+
+    #[test]
+    fn dp_exceeding_units_yields_no_empty_replicas() {
+        // Regression: a single-unit workload at dp_replicas = 8 used to
+        // feed seven empty workloads to run_system (degenerate tree, NaN
+        // throughput).  Now only the non-empty shard runs.
+        use crate::trace::Request;
+        let w = crate::trace::Workload::new(
+            "single-unit",
+            (0..6)
+                .map(|i| {
+                    Request::new(i, crate::trace::TraceKind::Custom, vec![5, 6, 7, 8], 12)
+                })
+                .collect(),
+        );
+        let mut cfg = baselines::blendserve();
+        cfg.dp_replicas = 8;
+        let job = serve_batch(&cfg, &w);
+        assert_eq!(job.per_replica.len(), 1);
+        assert_eq!(job.total_tokens, w.total_tokens());
+        assert!(job.makespan.is_finite() && job.makespan > 0.0);
+        assert!(job.total_throughput.is_finite() && job.total_throughput > 0.0);
+        for out in &job.per_replica {
+            assert!(out.result.throughput.is_finite());
+            assert!(!out.result.throughput.is_nan());
+        }
     }
 }

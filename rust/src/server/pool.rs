@@ -46,19 +46,51 @@ pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
         }
         let j = Json::parse(&line)
             .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
-        let prompt: Vec<u32> = j
+        let prompt_arr = j
             .req("prompt")
             .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("line {}: prompt not an array", lineno + 1))?
-            .iter()
-            .map(|x| x.as_f64().unwrap_or(0.0) as u32)
-            .collect();
+            .ok_or_else(|| anyhow::anyhow!("line {}: prompt not an array", lineno + 1))?;
+        // Reject malformed tokens instead of coercing them to 0: a silent
+        // `unwrap_or(0.0)` corrupts the prompt AND fabricates shared
+        // 0-token prefixes across every malformed request.
+        let mut prompt: Vec<u32> = Vec::with_capacity(prompt_arr.len());
+        for (pos, x) in prompt_arr.iter().enumerate() {
+            let v = x.as_f64().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "line {}: prompt[{pos}] is not a number (got {x})",
+                    lineno + 1
+                )
+            })?;
+            if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                anyhow::bail!(
+                    "line {}: prompt[{pos}] is not a valid token id (got {v})",
+                    lineno + 1
+                );
+            }
+            prompt.push(v as u32);
+        }
         let id = j.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u32;
-        let max_tokens = j
-            .get("max_tokens")
-            .and_then(|x| x.as_f64())
-            .unwrap_or(16.0) as u32;
+        // `max_tokens` may be absent (defaults to 16) but, like prompt
+        // tokens, a present-but-malformed value is an error, not a 16.
+        let max_tokens = match j.get("max_tokens") {
+            None => 16,
+            Some(v) => {
+                let x = v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "line {}: max_tokens is not a number (got {v})",
+                        lineno + 1
+                    )
+                })?;
+                if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                    anyhow::bail!(
+                        "line {}: max_tokens is not a valid token count (got {x})",
+                        lineno + 1
+                    );
+                }
+                x as u32
+            }
+        };
         let dataset = j
             .get("dataset")
             .and_then(|x| x.as_str())
@@ -118,21 +150,64 @@ mod tests {
     use super::*;
     use crate::trace::generators::generate_kind;
 
+    /// Every TraceKind variant — one list for both exhaustive tests below.
+    const ALL_KINDS: [TraceKind; 8] = [
+        TraceKind::ShareGpt,
+        TraceKind::WildChat,
+        TraceKind::AzureTrace,
+        TraceKind::BurstGpt,
+        TraceKind::OpenVid,
+        TraceKind::Mmlu,
+        TraceKind::Limo,
+        TraceKind::Custom,
+    ];
+
     #[test]
-    fn jsonl_roundtrip() {
-        let w = generate_kind(TraceKind::Mmlu, 25, 3);
+    fn jsonl_roundtrip_every_trace_kind() {
+        // Exhaustive TraceKind ⇄ name coverage: every kind must survive
+        // save → load with its dataset tag (and thus `known_output`
+        // semantics) intact.
         let dir = std::env::temp_dir().join("blendserve_pool_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("pool.jsonl");
-        save_jsonl(&w, &path).unwrap();
-        let back = load_jsonl(&path).unwrap();
-        assert_eq!(back.len(), w.len());
-        for (a, b) in w.requests.iter().zip(&back.requests) {
-            assert_eq!(a.prompt, b.prompt);
-            assert_eq!(a.output_len, b.output_len);
-            assert_eq!(a.dataset, b.dataset);
+        for kind in ALL_KINDS {
+            let w = match kind {
+                // No generator for hand-built requests; craft directly.
+                TraceKind::Custom => crate::trace::Workload::new(
+                    "custom",
+                    (0..5)
+                        .map(|i| {
+                            crate::trace::Request::new(
+                                i,
+                                TraceKind::Custom,
+                                vec![i, i + 1, i + 2],
+                                4 + i,
+                            )
+                        })
+                        .collect(),
+                ),
+                k => generate_kind(k, 25, 3),
+            };
+            let path = dir.join(format!("pool_{}.jsonl", kind.name()));
+            save_jsonl(&w, &path).unwrap();
+            let back = load_jsonl(&path).unwrap();
+            assert_eq!(back.len(), w.len(), "{kind}");
+            for (a, b) in w.requests.iter().zip(&back.requests) {
+                assert_eq!(a.prompt, b.prompt, "{kind}");
+                assert_eq!(a.output_len, b.output_len, "{kind}");
+                assert_eq!(a.dataset, b.dataset, "{kind}");
+                assert_eq!(a.known_output, b.known_output, "{kind}");
+            }
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kind_names_roundtrip_through_parser() {
+        for kind in ALL_KINDS {
+            assert_eq!(kind_from_name(kind.name()), kind);
+        }
+        // Unknown tags degrade to Custom rather than erroring.
+        assert_eq!(kind_from_name("SomeFutureTrace"), TraceKind::Custom);
     }
 
     #[test]
@@ -143,6 +218,46 @@ mod tests {
         std::fs::write(&path, "{\"id\": 1}\n").unwrap(); // missing prompt
         assert!(load_jsonl(&path).is_err());
         std::fs::write(&path, "not json\n").unwrap();
+        assert!(load_jsonl(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_prompt_token_with_line_number() {
+        // Regression: a non-numeric token used to be coerced to 0,
+        // silently corrupting the prompt and fabricating a shared 0-token
+        // prefix across every malformed request.
+        let dir = std::env::temp_dir().join("blendserve_pool_badtok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tok.jsonl");
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2,3],\"max_tokens\":4}\n\
+             {\"id\":2,\"prompt\":[4,\"oops\",6],\"max_tokens\":4}\n",
+        )
+        .unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "no line number in: {err}");
+        assert!(err.contains("prompt[1]"), "no token position in: {err}");
+
+        // Negative and fractional ids are equally invalid.
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1,-7],\"max_tokens\":4}\n").unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "no line number in: {err}");
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1.5],\"max_tokens\":4}\n").unwrap();
+        assert!(load_jsonl(&path).is_err());
+
+        // max_tokens: absent defaults, but malformed errors with a line.
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1,2]}\n").unwrap();
+        assert_eq!(load_jsonl(&path).unwrap().requests[0].output_len, 16);
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":\"oops\"}\n",
+        )
+        .unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("max_tokens"), "{err}");
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":-4}\n").unwrap();
         assert!(load_jsonl(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

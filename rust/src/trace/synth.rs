@@ -124,6 +124,36 @@ pub fn achieved(w: &Workload, pm: &PerfModel) -> (f64, f64) {
     (stats::workload_density(w, pm), stats::optimal_sharing_ratio(w))
 }
 
+/// The HyGen-style adversary for the work-stealing fleet (DESIGN.md
+/// §Fleet): `honest_groups` + `liar_groups` shared-stem prompt groups of
+/// `per` requests each (480-token stem, 32-token unique tails).  Honest
+/// groups decode 32 tokens; liar groups decode 800 — lengths that sparse
+/// §5.1 sampling under-estimates ~3x for every liar group without a
+/// sampled member, so `partition_dp`'s est-balanced shards are
+/// adversarially imbalanced in true time.  Shared by the fleet tests,
+/// `benches/fleet.rs` and `examples/fleet_scaling.rs`, so the acceptance
+/// bar ("stealing strictly beats static on the adversarial trace") is
+/// asserted against one and the same trace shape everywhere.
+pub fn adversarial_skew(honest_groups: usize, liar_groups: usize, per: usize) -> Workload {
+    use crate::trace::Request;
+    let mut reqs = Vec::new();
+    let mut mk_group = |stem_base: u32, out: u32| {
+        let stem: Vec<u32> = (0..480u32).map(|k| stem_base + k).collect();
+        for i in 0..per as u32 {
+            let mut p = stem.clone();
+            p.extend((0..32u32).map(|k| stem_base + 1000 + i * 32 + k));
+            reqs.push(Request::new(0, TraceKind::Custom, p, out));
+        }
+    };
+    for g in 0..honest_groups as u32 {
+        mk_group(1_000_000 + g * 10_000, 32);
+    }
+    for g in 0..liar_groups as u32 {
+        mk_group(100_000_000 + g * 10_000, 800);
+    }
+    Workload::new("adversarial-skew", reqs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +233,21 @@ mod tests {
         assert_eq!(traces.len(), 4);
         assert_eq!(traces[0].0, "Trace#1");
         assert_eq!(traces[3].1.sharing, 0.05);
+    }
+
+    #[test]
+    fn adversarial_skew_shape() {
+        let w = adversarial_skew(4, 2, 3);
+        assert_eq!(w.len(), 18);
+        // Every prompt: 480-token stem + 32-token tail, group-unique ids.
+        for r in &w.requests {
+            assert_eq!(r.input_len(), 512);
+        }
+        let honest = w.requests.iter().filter(|r| r.output_len == 32).count();
+        let liars = w.requests.iter().filter(|r| r.output_len == 800).count();
+        assert_eq!((honest, liars), (12, 6));
+        // Stems shared within a group, disjoint across groups.
+        assert_eq!(w.requests[0].prompt[..480], w.requests[1].prompt[..480]);
+        assert_ne!(w.requests[0].prompt[0], w.requests[3].prompt[0]);
     }
 }
