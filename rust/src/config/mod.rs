@@ -82,9 +82,23 @@ pub struct HardwareSpec {
     /// Memory reserved for activations / temp buffers (bytes), in addition
     /// to weights.
     pub reserve_bytes: f64,
+    /// Host-link (PCIe) bandwidth per GPU, GB/s (decimal).  The tiered
+    /// KV manager (`kv` module) swaps retracted requests' KV over this
+    /// link; 0 means no host link (offload disabled regardless of
+    /// `[kv] enabled`).
+    pub pcie_gbps: f64,
+    /// Host (CPU DRAM) bytes available to one replica for offloaded KV.
+    pub host_mem_bytes: f64,
 }
 
 impl HardwareSpec {
+    /// Fallback host-link bandwidth for config files predating KV
+    /// tiering (PCIe 4.0 x16).
+    pub const DEFAULT_PCIE_GBPS: f64 = 32.0;
+    /// Fallback per-replica host memory for config files predating KV
+    /// tiering.
+    pub const DEFAULT_HOST_MEM_BYTES: f64 = 256e9;
+
     /// KV-cache capacity in bytes for a model replica on `n_gpus` GPUs
     /// (weights sharded by TP).
     pub fn kv_capacity_bytes(&self, model: &ModelSpec, n_gpus: usize) -> f64 {
@@ -307,6 +321,58 @@ impl FleetConfig {
     }
 }
 
+/// Tiered KV manager knobs (`kv` module, DESIGN.md §9).  Disabled by
+/// default: retraction then discards KV and re-prefills on re-admission,
+/// bit-identical to the pre-tiering engine (pinned by tests in
+/// `engine/sim.rs` and `rust/benches/kv_offload.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvConfig {
+    /// Master switch for host offload on retraction.
+    pub enabled: bool,
+    /// Swap only when the link round-trip costs at most `swap_margin`
+    /// times the roofline recompute estimate (1.0 = break-even).
+    pub swap_margin: f64,
+    /// Fraction of `hardware.host_mem_bytes` usable for offloaded KV.
+    pub host_mem_frac: f64,
+    /// Stream each swap-in right behind its swap-out on the FIFO link
+    /// (overlapped prefetch) instead of fetching synchronously at
+    /// re-admission.
+    pub prefetch: bool,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            enabled: false,
+            swap_margin: 1.0,
+            host_mem_frac: 1.0,
+            prefetch: true,
+        }
+    }
+}
+
+impl KvConfig {
+    /// Every key the `[kv]` TOML section accepts; anything else is a
+    /// config error naming the offending key (a typo in a policy switch
+    /// must not silently no-op).
+    pub const TOML_KEYS: [&'static str; 4] =
+        ["enabled", "swap_margin", "host_mem_frac", "prefetch"];
+
+    /// Semantic validation shared by the TOML and CLI construction paths.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.swap_margin > 0.0) {
+            return Err(format!("swap_margin must be > 0, got {}", self.swap_margin));
+        }
+        if !(self.host_mem_frac > 0.0 && self.host_mem_frac <= 1.0) {
+            return Err(format!(
+                "host_mem_frac must be in (0, 1], got {}",
+                self.host_mem_frac
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Scheduler knobs (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -387,6 +453,8 @@ pub struct SystemConfig {
     pub colocate: ColocateConfig,
     /// Work-stealing fleet knobs (`server::fleet`).
     pub fleet: FleetConfig,
+    /// Tiered KV manager knobs (inert at `enabled = false`).
+    pub kv: KvConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -403,6 +471,7 @@ impl SystemConfig {
             engine: EngineConfig::default(),
             colocate: ColocateConfig::default(),
             fleet: FleetConfig::default(),
+            kv: KvConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -436,6 +505,8 @@ impl SystemConfig {
         d.set_num("hardware", "memory_bytes", self.hardware.memory_bytes);
         d.set_num("hardware", "interference", self.hardware.interference);
         d.set_num("hardware", "reserve_bytes", self.hardware.reserve_bytes);
+        d.set_num("hardware", "pcie_gbps", self.hardware.pcie_gbps);
+        d.set_num("hardware", "host_mem_bytes", self.hardware.host_mem_bytes);
 
         d.set_str("scheduler", "order", self.scheduler.order.name());
         d.set_num("scheduler", "chunk_tokens", self.scheduler.chunk_tokens as f64);
@@ -479,6 +550,11 @@ impl SystemConfig {
             .join(",");
         d.set_str("fleet", "gpus", &gpus_csv);
         d.set_str("fleet", "hardware", &self.fleet.hardware.join(","));
+
+        d.set_bool("kv", "enabled", self.kv.enabled);
+        d.set_num("kv", "swap_margin", self.kv.swap_margin);
+        d.set_num("kv", "host_mem_frac", self.kv.host_mem_frac);
+        d.set_bool("kv", "prefetch", self.kv.prefetch);
         d.to_string_pretty()
     }
 
@@ -510,6 +586,16 @@ impl SystemConfig {
             kv_bytes_per_token: n("model", "kv_bytes_per_token")?,
             tp_degree: n("model", "tp_degree")? as usize,
         };
+        // The link fields are optional (config files predating KV tiering
+        // carry neither); absent keys use the documented fallbacks.
+        let hnum_opt = |key: &str, def: f64| -> Result<f64, TomlError> {
+            match d.get("hardware", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[hardware] {key}: expected number"))),
+            }
+        };
         let hardware = HardwareSpec {
             name: s("hardware", "name")?,
             compute_flops: n("hardware", "compute_flops")?,
@@ -517,6 +603,8 @@ impl SystemConfig {
             memory_bytes: n("hardware", "memory_bytes")?,
             interference: n("hardware", "interference")?,
             reserve_bytes: n("hardware", "reserve_bytes")?,
+            pcie_gbps: hnum_opt("pcie_gbps", HardwareSpec::DEFAULT_PCIE_GBPS)?,
+            host_mem_bytes: hnum_opt("host_mem_bytes", HardwareSpec::DEFAULT_HOST_MEM_BYTES)?,
         };
         let order_name = s("scheduler", "order")?;
         let scheduler = SchedulerConfig {
@@ -629,6 +717,47 @@ impl SystemConfig {
             gpus,
             hardware: fleet_csv("hardware")?,
         };
+        // The [kv] section is optional (older config files predate KV
+        // tiering; the default is the inert `enabled = false`), but a
+        // *present* section is validated strictly: unknown keys are an
+        // error naming the key, so a typo'd policy switch cannot
+        // silently no-op.
+        if let Some(sec) = d.sections.get("kv") {
+            for key in sec.keys() {
+                if !KvConfig::TOML_KEYS.contains(&key.as_str()) {
+                    return Err(TomlError(format!(
+                        "[kv] unknown key '{key}' (expected one of: {})",
+                        KvConfig::TOML_KEYS.join(", ")
+                    ))
+                    .into());
+                }
+            }
+        }
+        let kdef = KvConfig::default();
+        let kbool = |key: &str, def: bool| -> Result<bool, TomlError> {
+            match d.get("kv", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| TomlError(format!("[kv] {key}: expected bool"))),
+            }
+        };
+        let knum = |key: &str, def: f64| -> Result<f64, TomlError> {
+            match d.get("kv", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[kv] {key}: expected number"))),
+            }
+        };
+        let kv = KvConfig {
+            enabled: kbool("enabled", kdef.enabled)?,
+            swap_margin: knum("swap_margin", kdef.swap_margin)?,
+            host_mem_frac: knum("host_mem_frac", kdef.host_mem_frac)?,
+            prefetch: kbool("prefetch", kdef.prefetch)?,
+        };
+        kv.validate().map_err(|e| TomlError(format!("[kv] {e}")))?;
+
         let gpus_per_replica = n("", "gpus_per_replica")? as usize;
         let dp_replicas = n("", "dp_replicas")? as usize;
         fleet
@@ -641,6 +770,7 @@ impl SystemConfig {
             engine,
             colocate,
             fleet,
+            kv,
             gpus_per_replica,
             dp_replicas,
         })
@@ -814,6 +944,83 @@ mod tests {
         let text = cfg.to_toml().replace("gpus = \"\"", "gpus = \"1,1\"");
         assert!(SystemConfig::from_toml(&text).is_err(), "dp=1 with 2 gpu entries");
         assert!(cfg.fleet.validate(cfg.dp_replicas).is_ok());
+    }
+
+    #[test]
+    fn kv_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.kv.enabled = true;
+        cfg.kv.swap_margin = 0.8;
+        cfg.kv.host_mem_frac = 0.5;
+        cfg.kv.prefetch = false;
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating KV tiering (no [kv] section) must parse
+        // with the inert default — and that default must be *disabled*.
+        let mut stripped = String::new();
+        let mut in_kv = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[kv]" {
+                in_kv = true;
+                continue;
+            }
+            if in_kv && line.trim().starts_with('[') {
+                in_kv = false;
+            }
+            if !in_kv {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.kv, KvConfig::default());
+        assert!(!parsed.kv.enabled, "kv must default to disabled");
+        assert!(!KvConfig::default().enabled);
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_kv_key_by_name() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg
+            .to_toml()
+            .replace("[kv]", "[kv]\nswap_margn = 2.0");
+        let err = SystemConfig::from_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("swap_margn"), "key name missing from: {err}");
+        assert!(err.contains("[kv]"), "section missing from: {err}");
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_kv_values() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("swap_margin = 1", "swap_margin = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("host_mem_frac = 1", "host_mem_frac = 1.5");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("enabled = false", "enabled = 7");
+        assert!(SystemConfig::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn hardware_link_fields_default_when_absent() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let stripped: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| {
+                !l.trim_start().starts_with("pcie_gbps")
+                    && !l.trim_start().starts_with("host_mem_bytes")
+            })
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.hardware.pcie_gbps, HardwareSpec::DEFAULT_PCIE_GBPS);
+        assert_eq!(
+            parsed.hardware.host_mem_bytes,
+            HardwareSpec::DEFAULT_HOST_MEM_BYTES
+        );
     }
 
     #[test]

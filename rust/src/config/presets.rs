@@ -56,6 +56,10 @@ pub fn a100_80gb() -> HardwareSpec {
         memory_bytes: 80e9,
         interference: 0.15,
         reserve_bytes: 4e9,
+        // PCIe 4.0 x16 host link; DGX-A100-class hosts give each GPU a
+        // ~256 GB share of CPU DRAM for KV offload (kv module).
+        pcie_gbps: 32.0,
+        host_mem_bytes: 256e9,
     }
 }
 
@@ -71,6 +75,9 @@ pub fn h100_80gb() -> HardwareSpec {
         memory_bytes: 80e9,
         interference: 0.15,
         reserve_bytes: 4e9,
+        // PCIe 5.0 x16 host link.
+        pcie_gbps: 64.0,
+        host_mem_bytes: 256e9,
     }
 }
 
@@ -84,6 +91,9 @@ pub fn cpu_host() -> HardwareSpec {
         memory_bytes: 16e9,
         interference: 0.0,
         reserve_bytes: 1e9,
+        // The "device" already lives in host memory: no offload tier.
+        pcie_gbps: 0.0,
+        host_mem_bytes: 0.0,
     }
 }
 
@@ -162,5 +172,18 @@ mod tests {
         let (a, h) = (a100_80gb(), h100_80gb());
         assert!(h.compute_flops > a.compute_flops);
         assert!(h.bandwidth > a.bandwidth);
+        // ...and on the host link (PCIe 5 vs 4).
+        assert!(h.pcie_gbps > a.pcie_gbps);
+    }
+
+    #[test]
+    fn gpu_presets_have_host_link_cpu_does_not() {
+        for hw in [a100_80gb(), h100_80gb()] {
+            assert!(hw.pcie_gbps > 0.0, "{}", hw.name);
+            assert!(hw.host_mem_bytes > hw.memory_bytes, "{}", hw.name);
+        }
+        let cpu = cpu_host();
+        assert_eq!(cpu.pcie_gbps, 0.0);
+        assert_eq!(cpu.host_mem_bytes, 0.0);
     }
 }

@@ -11,7 +11,8 @@
 
 use super::prefix_cache::{PinHandle, RadixCache};
 use super::overlap_time;
-use crate::config::{EngineConfig, SchedulerConfig};
+use crate::config::{EngineConfig, KvConfig, SchedulerConfig};
+use crate::kv::{recompute_cost, KvExtent, KvParams, KvRunState, SwapCosts, SwapDecision};
 use crate::perfmodel::PerfModel;
 use crate::trace::Workload;
 use std::collections::VecDeque;
@@ -242,6 +243,22 @@ pub struct SimResult {
     /// Achieved prefix-sharing ratio = hit/prompt.
     pub sharing_achieved: f64,
     pub retractions: u64,
+    /// Tokens re-computed because of retraction: each discard charges
+    /// the victim's lost private progress (non-cached prefill + decode),
+    /// and a swap restore that finds its cached prefix evicted charges
+    /// the extent's prompt part it must regenerate.  Always 0 when no
+    /// retractions occur — the waste the tiered KV manager removes.
+    pub recomputed_tokens: u64,
+    /// Tokens offloaded HBM → host at retraction (`kv.enabled` only).
+    pub swapped_out_tokens: u64,
+    /// Tokens restored host → HBM at re-admission.
+    pub swapped_in_tokens: u64,
+    /// Prefill + decode tokens that restores avoided re-running.
+    pub recompute_saved_tokens: u64,
+    /// Fraction of the run the host link spent moving KV.
+    pub link_busy_frac: f64,
+    /// Seconds the engine idled waiting on unfinished swap-in transfers.
+    pub link_stall_time: f64,
     pub peak_kv_used: f64,
     /// Aggregate compute / memory busy time across all steps.
     pub total_comp: f64,
@@ -303,6 +320,12 @@ struct Active {
 /// Retract `active[i]` (vLLM-style preemption): undo its memory and
 /// side accounting and queue it for priority re-admission.  Shared by the
 /// memory-pressure path and SLO-driven offline preemption.
+///
+/// With the tiered KV manager enabled this is where retraction becomes a
+/// *policy choice* (DESIGN.md §9): the victim's private extent
+/// (non-cached prompt progress + decoded tokens) is swapped to host when
+/// the link round-trip undercuts the roofline recompute estimate, instead
+/// of being discarded and re-prefilled on re-admission.
 #[allow(clippy::too_many_arguments)]
 fn retract_one(
     i: usize,
@@ -315,10 +338,65 @@ fn retract_one(
     used_left: &mut f64,
     used_right: &mut f64,
     retract_queue: &mut VecDeque<u32>,
+    pm: &PerfModel,
+    kv: &KvParams,
+    kvst: &mut KvRunState,
+    clock: f64,
 ) {
     let a = active.remove(i);
     let idx = by_id[a.req as usize];
     let r = &requests[idx];
+    // What the victim actually holds in HBM beyond its pinned cache
+    // prefix: privately-computed prompt KV [pinned, prefill_pos) plus
+    // every decoded token.  This is both the swap extent and, on a
+    // discard, the progress that must be re-run after re-admission.
+    let pinned = a.pin.len();
+    let prefill_priv = a.prefill_pos.saturating_sub(pinned);
+    let extent_tokens = (prefill_priv + a.decoded as usize) as u64;
+    let mut swapped = false;
+    if kv.enabled {
+        let p = r.input_len();
+        // Approximate the re-admission cache hit with the currently
+        // pinned prefix.  Under pressure it can only shrink by eviction,
+        // which raises the recompute side — the swap stays justified.
+        let p_redo = p - pinned;
+        let bytes = extent_tokens as f64 * kv.bytes_per_token;
+        let costs = SwapCosts {
+            recompute_s: recompute_cost(pm, p_redo, p, a.decoded as usize),
+            transfer_s: kvst.link.eta_roundtrip(clock, bytes),
+            extent_bytes: bytes,
+        };
+        if kv.policy.decide(&costs, kvst.ledger.host_free_bytes()) == SwapDecision::Swap {
+            // The swap-out occupies the link now; the swap-in is queued
+            // right behind it (FIFO prefetch) so it streams back under
+            // subsequent steps and is usually resident again before the
+            // retract queue re-admits this request.
+            let out_done = kvst.link.transfer(clock, bytes);
+            let ready_at = if kv.prefetch {
+                kvst.link.transfer(out_done, bytes)
+            } else {
+                f64::INFINITY
+            };
+            let ext = KvExtent {
+                tokens: extent_tokens,
+                prefill_start: pinned as u32,
+                prefill_end: a.prefill_pos as u32,
+                decoded: a.decoded,
+                ready_at,
+            };
+            let ok = kvst.ledger.try_offload(a.req, ext);
+            debug_assert!(ok, "policy approved an offload the ledger rejected");
+            kvst.swapped_out_tokens += extent_tokens;
+            swapped = true;
+        }
+    }
+    if !swapped {
+        // The victim's private progress dies with the discard and will
+        // be re-run token for token after re-admission (KV below the
+        // pinned prefix stays in the cache; losing *that* later is
+        // eviction waste, not retraction waste).
+        kvst.recomputed_tokens += extent_tokens;
+    }
     // No-op for the empty handle (prefix cache disabled).
     cache.release(a.pin);
     if a.decoding {
@@ -368,6 +446,8 @@ pub struct RunState {
     /// Alg. 3 balanced chunking: remaining compute/memory work estimates.
     rem_comp: f64,
     rem_mem: f64,
+    /// Tiered-KV swap state: host ledger, link timeline, counters.
+    kv: KvRunState,
 }
 
 impl RunState {
@@ -385,6 +465,11 @@ impl RunState {
     pub fn active_requests(&self) -> usize {
         self.active.len()
     }
+
+    /// Tokens currently offloaded to host by the tiered KV manager.
+    pub fn host_resident_tokens(&self) -> u64 {
+        self.kv.ledger.resident_tokens()
+    }
 }
 
 /// The step simulator.
@@ -394,6 +479,10 @@ pub struct SimEngine {
     sched: SchedulerConfig,
     pub kv_capacity: f64,
     cache: RadixCache,
+    /// Tiered-KV swap parameters ([`KvParams::disabled`] by default:
+    /// retraction discards and recomputes, the pre-tiering engine
+    /// exactly).
+    kv_params: KvParams,
     requests: Vec<SimRequest>,
     /// Dense request-id → index map (ids are dense per Workload; sparse
     /// hand-built ids cost only `max_id` slots).  Probed on every
@@ -426,14 +515,142 @@ impl SimEngine {
             sched,
             kv_capacity,
             cache: RadixCache::new(cache_cap),
+            kv_params: KvParams::disabled(),
             requests,
             by_id,
         }
     }
 
+    /// Attach tiered-KV (host offload) parameters, resolved against this
+    /// engine's perf model.  Engines built without this call keep the
+    /// inert default, which preserves the discard-and-recompute
+    /// retraction path bit-exactly.
+    pub fn with_kv(mut self, kv: &KvConfig) -> Self {
+        self.kv_params = KvParams::resolve(kv, &self.pm);
+        self
+    }
+
     /// Number of requests currently known to the engine.
     pub fn n_requests(&self) -> usize {
         self.requests.len()
+    }
+
+    /// Admission charge for a request: the from-scratch §5.1 average
+    /// `p + d̂/2`, or — for a swapped re-admission resuming at `decoded`
+    /// tokens — the restored footprint plus average remaining growth
+    /// `p + dd + (d̂ − dd)/2`.  Charging a restored request as if it were
+    /// starting from scratch would under-reserve (its KV is already
+    /// `p + dd` deep) and thrash it straight back into retraction.
+    fn admission_charge(&self, idx: usize, restored_decoded: Option<u32>) -> f64 {
+        let r = &self.requests[idx];
+        match restored_decoded {
+            None => r.est_kv_tokens(),
+            Some(dd) => {
+                let (p, dd, d) = (r.input_len() as f64, dd as f64, r.est_output as f64);
+                p + dd + (d - dd).max(0.0) / 2.0
+            }
+        }
+    }
+
+    /// Consume `req`'s host extent on a retraction re-admission, waiting
+    /// out any unfinished transfer (the stall is idle engine time charged
+    /// to the clock and to `link_stall_time`).  `None` means the
+    /// retraction was discarded — the caller re-prefills exactly as
+    /// before tiering.
+    fn kv_restore(&self, kvst: &mut KvRunState, clock: &mut f64, req: u32) -> Option<KvExtent> {
+        let ext = kvst.ledger.take(req)?;
+        let ready = if ext.ready_at.is_finite() {
+            ext.ready_at
+        } else {
+            // Prefetch disabled: the whole fetch runs synchronously at
+            // re-admission.
+            let bytes = ext.tokens as f64 * self.kv_params.bytes_per_token;
+            kvst.link.transfer(*clock, bytes)
+        };
+        if ready > *clock {
+            kvst.link_stall_time += ready - *clock;
+            *clock = ready;
+        }
+        kvst.swapped_in_tokens += ext.tokens;
+        Some(ext)
+    }
+
+    /// Shared tail of both admission sites: restore any swapped extent,
+    /// walk the radix cache, stitch extent onto hit, account, and
+    /// activate the request.  The caller has already consumed the
+    /// candidate (admitter `pop` / retract-queue `pop_front`).
+    fn admit(&mut self, st: &mut RunState, req: u32, side: Side, readmission: bool) {
+        let idx = self.by_id[req as usize];
+        if st.timings[idx].admit.is_nan() {
+            st.timings[idx].admit = st.clock;
+        }
+        // A swapped retraction resumes instead of recomputing: wait out
+        // any unfinished transfer, then restore the extent.
+        let restored = if readmission {
+            self.kv_restore(&mut st.kv, &mut st.clock, req)
+        } else {
+            None
+        };
+        let prompt = self.requests[idx].prompt.clone();
+        // Single combined radix walk instead of a lookup followed by an
+        // insert re-walking the same path.
+        let (hit, pin) = if self.cfg.prefix_cache {
+            let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
+            (hit, pin)
+        } else {
+            (0, PinHandle::EMPTY)
+        };
+        let private_prompt = (prompt.len() - pin.len()) as f64;
+        st.private_tokens += private_prompt;
+        let (prefill_pos, decoded) = match &restored {
+            Some(ext) => {
+                // Stitch the extent onto the current cache hit: when the
+                // cached prefix still reaches the extent's start, the
+                // prompt KV is contiguous and prefill resumes past the
+                // extent; a shorter (evicted) prefix leaves a hole, so
+                // prefill restarts at the hit and the extent's prompt
+                // part is regenerated by the cursor on its way through
+                // (that regeneration is the only recompute a swap pays
+                // and is charged below) — the restored decode KV resumes
+                // either way once the cursor completes the prompt (the
+                // phase transition gates on prefill_pos).
+                let start = ext.prefill_start as usize;
+                let end = (ext.prefill_end as usize).min(prompt.len());
+                let resume = if start <= hit { hit.max(end) } else { hit };
+                st.kv.recompute_saved_tokens +=
+                    (resume - hit) as u64 + ext.decoded as u64;
+                if resume == hit && end > start {
+                    st.kv.recomputed_tokens += (end - start) as u64;
+                }
+                st.private_tokens += ext.decoded as f64;
+                (resume, ext.decoded)
+            }
+            // Discarded retraction: its lost progress was already
+            // charged to recomputed_tokens at retract_one time.
+            None => (hit, 0),
+        };
+        let est = self.admission_charge(idx, restored.map(|e| e.decoded));
+        match side {
+            Side::Left => st.used_left += est,
+            Side::Right => st.used_right += est,
+        }
+        // Retraction re-admissions don't recount prompt/hit stats
+        // (matching §6.4's accounting).
+        if !readmission {
+            st.result.prompt_tokens += prompt.len() as u64;
+            st.result.hit_tokens += hit as u64;
+        }
+        st.active.push(Active {
+            req,
+            side,
+            pin,
+            private_prompt,
+            prefill_pos,
+            decoded,
+            charge: est,
+            decoding: false,
+            relocated: false,
+        });
     }
 
     /// Estimated remaining compute/memory work one request contributes to
@@ -494,6 +711,7 @@ impl SimEngine {
             finished: 0,
             rem_comp,
             rem_mem,
+            kv: KvRunState::new(&self.kv_params),
         }
     }
 
@@ -622,7 +840,28 @@ impl SimEngine {
                 }
             };
             let idx = self.by_id[req as usize];
-            let est = self.requests[idx].est_kv_tokens();
+            // A prefetch still in flight: keep the running batch decoding
+            // under the transfer instead of freezing the clock — the
+            // fetch hides under GEMM time exactly like the rest of the
+            // blend.  Only an empty engine stalls (fallback below),
+            // preserving the progress guarantee.  Prefetch-off extents
+            // (infinite ready_at) fetch synchronously at re-admission by
+            // design, so they are not deferred.
+            if readmission && !st.active.is_empty() {
+                if let Some(ext) = st.kv.ledger.get(req) {
+                    if ext.ready_at.is_finite() && ext.ready_at > st.clock {
+                        break;
+                    }
+                }
+            }
+            // Swapped re-admissions resume mid-decode: charge their true
+            // footprint + remaining growth, not the from-scratch average.
+            let restored_decoded = if readmission {
+                st.kv.ledger.get(req).map(|e| e.decoded)
+            } else {
+                None
+            };
+            let est = self.admission_charge(idx, restored_decoded);
             if committed + est > self.kv_capacity && !st.active.is_empty() {
                 // SLO-critical admission under memory pressure:
                 // retract the newest *offline* request to make room
@@ -646,6 +885,10 @@ impl SimEngine {
                                 &mut st.used_left,
                                 &mut st.used_right,
                                 &mut st.retract_queue,
+                                &self.pm,
+                                &self.kv_params,
+                                &mut st.kv,
+                                st.clock,
                             );
                             st.result.retractions += 1;
                             continue; // re-evaluate with freed memory
@@ -660,39 +903,7 @@ impl SimEngine {
             } else {
                 admitter.pop();
             }
-            if st.timings[idx].admit.is_nan() {
-                st.timings[idx].admit = st.clock;
-            }
-            let prompt = self.requests[idx].prompt.clone();
-            // Single combined radix walk instead of a lookup followed
-            // by an insert re-walking the same path.
-            let (hit, pin) = if self.cfg.prefix_cache {
-                let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
-                (hit, pin)
-            } else {
-                (0, PinHandle::EMPTY)
-            };
-            let private_prompt = (prompt.len() - pin.len()) as f64;
-            st.private_tokens += private_prompt;
-            match side {
-                Side::Left => st.used_left += est,
-                Side::Right => st.used_right += est,
-            }
-            if !readmission {
-                st.result.prompt_tokens += prompt.len() as u64;
-                st.result.hit_tokens += hit as u64;
-            }
-            st.active.push(Active {
-                req,
-                side,
-                pin,
-                private_prompt,
-                prefill_pos: hit,
-                decoded: 0,
-                charge: est,
-                decoding: false,
-                relocated: false,
-            });
+            self.admit(st, req, side, readmission);
         }
 
         if st.active.is_empty() {
@@ -736,41 +947,7 @@ impl SimEngine {
                     }
                 }
             };
-            let idx = self.by_id[req as usize];
-            if st.timings[idx].admit.is_nan() {
-                st.timings[idx].admit = st.clock;
-            }
-            let prompt = self.requests[idx].prompt.clone();
-            let (hit, pin) = if self.cfg.prefix_cache {
-                let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
-                (hit, pin)
-            } else {
-                (0, PinHandle::EMPTY)
-            };
-            let private_prompt = (prompt.len() - pin.len()) as f64;
-            st.private_tokens += private_prompt;
-            let est = self.requests[idx].est_kv_tokens();
-            match side {
-                Side::Left => st.used_left += est,
-                Side::Right => st.used_right += est,
-            }
-            // Same accounting rule as the main admission loop:
-            // retraction re-admissions don't recount prompt/hit stats.
-            if !readmission {
-                st.result.prompt_tokens += prompt.len() as u64;
-                st.result.hit_tokens += hit as u64;
-            }
-            st.active.push(Active {
-                req,
-                side,
-                pin,
-                private_prompt,
-                prefill_pos: hit,
-                decoded: 0,
-                charge: est,
-                decoding: false,
-                relocated: false,
-            });
+            self.admit(st, req, side, readmission);
         }
 
         // ---- phase transitions (at step start) ----
@@ -929,6 +1106,10 @@ impl SimEngine {
                     &mut st.used_left,
                     &mut st.used_right,
                     &mut st.retract_queue,
+                    &self.pm,
+                    &self.kv_params,
+                    &mut st.kv,
+                    st.clock,
                 );
                 st.result.retractions += 1;
             }
@@ -967,6 +1148,17 @@ impl SimEngine {
     pub fn finalize(&self, mut st: RunState) -> SimResult {
         st.result.steps = st.step;
         st.result.total_time = st.clock;
+        // ---- tiered-KV accounting ----
+        st.result.recomputed_tokens = st.kv.recomputed_tokens;
+        st.result.swapped_out_tokens = st.kv.swapped_out_tokens;
+        st.result.swapped_in_tokens = st.kv.swapped_in_tokens;
+        st.result.recompute_saved_tokens = st.kv.recompute_saved_tokens;
+        st.result.link_stall_time = st.kv.link_stall_time;
+        st.result.link_busy_frac = if st.clock > 0.0 {
+            st.kv.link.busy_time() / st.clock
+        } else {
+            0.0
+        };
         st.result.throughput = if st.clock > 0.0 {
             st.result.total_tokens as f64 / st.clock
         } else {
@@ -1068,6 +1260,12 @@ mod tests {
         assert!(r.total_time > 0.0);
         assert!(r.throughput > 0.0);
         assert_eq!(r.retractions, 0);
+        // No retractions -> nothing was ever re-prefilled or swapped.
+        assert_eq!(r.recomputed_tokens, 0);
+        assert_eq!(r.swapped_out_tokens, 0);
+        assert_eq!(r.swapped_in_tokens, 0);
+        assert_eq!(r.recompute_saved_tokens, 0);
+        assert_eq!(r.link_busy_frac, 0.0);
     }
 
     #[test]
@@ -1159,6 +1357,126 @@ mod tests {
         assert_eq!(r.total_tokens, 40 * 2200);
         // KV never exceeded capacity by more than a transient step.
         assert!(r.peak_kv_used <= e.kv_capacity * 1.1, "{}", r.peak_kv_used);
+        // With tiering off, every retraction is visible as recompute
+        // waste (the quantity the kv module exists to remove).
+        assert!(r.retractions > 0);
+        assert!(r.recomputed_tokens > 0, "retractions left no recompute trace");
+        assert_eq!(r.swapped_out_tokens, 0);
+    }
+
+    /// Retraction-heavy fixture: tiny KV budget + long decodes (the
+    /// `memory_pressure` scenario) with optional tiering.
+    fn pressure_engine(kv: Option<&KvConfig>) -> SimEngine {
+        let mut pm = pm();
+        pm.hw.memory_bytes = 22e9;
+        let sched = SchedulerConfig {
+            max_batch_requests: 64,
+            ..SchedulerConfig::default()
+        };
+        let reqs = mk_reqs(40, 200, 2000, 0);
+        let e = SimEngine::new(pm, EngineConfig::default(), sched, reqs);
+        match kv {
+            Some(c) => e.with_kv(c),
+            None => e,
+        }
+    }
+
+    fn kv_on() -> KvConfig {
+        KvConfig { enabled: true, ..KvConfig::default() }
+    }
+
+    #[test]
+    fn kv_disabled_is_bit_identical_to_default_engine() {
+        // An engine explicitly configured with the disabled [kv] section
+        // must reproduce the default-constructed engine exactly —
+        // retractions, throughput and per-request finish order all equal.
+        let base = pressure_engine(None).run(&mut StaticOrder::new((0..40).collect()));
+        let off = pressure_engine(Some(&KvConfig::default()))
+            .run(&mut StaticOrder::new((0..40).collect()));
+        assert_eq!(base.total_time, off.total_time);
+        assert_eq!(base.steps, off.steps);
+        assert_eq!(base.retractions, off.retractions);
+        assert_eq!(base.total_tokens, off.total_tokens);
+        assert_eq!(base.hit_tokens, off.hit_tokens);
+        assert_eq!(base.recomputed_tokens, off.recomputed_tokens);
+        assert_eq!(base.total_comp, off.total_comp);
+        assert_eq!(base.total_mem, off.total_mem);
+        assert_eq!(off.swapped_out_tokens, 0);
+        assert_eq!(off.link_busy_frac, 0.0);
+        for (a, b) in base.timings.iter().zip(&off.timings) {
+            assert_eq!(a.id, b.id);
+            assert!(a.admit == b.admit || (a.admit.is_nan() && b.admit.is_nan()));
+            assert_eq!(a.finish, b.finish, "finish order diverged at {}", a.id);
+        }
+    }
+
+    #[test]
+    fn swap_enabled_resumes_decode_and_beats_discard() {
+        let off = pressure_engine(None).run(&mut StaticOrder::new((0..40).collect()));
+        let on = pressure_engine(Some(&kv_on()))
+            .run(&mut StaticOrder::new((0..40).collect()));
+        // Same work completed either way.
+        assert_eq!(on.total_tokens, off.total_tokens);
+        assert!(on.retractions > 0, "pressure fixture stopped retracting");
+        // Retractions now swap: extents conserve (everything offloaded
+        // comes back), recompute is saved, and the link saw traffic.
+        assert!(on.swapped_out_tokens > 0, "no swaps under memory pressure");
+        assert_eq!(on.swapped_in_tokens, on.swapped_out_tokens);
+        assert!(on.recompute_saved_tokens > 0);
+        assert!(on.link_busy_frac > 0.0 && on.link_busy_frac <= 1.0);
+        assert!(
+            on.recomputed_tokens < off.recomputed_tokens,
+            "swap did not reduce recompute: {} vs {}",
+            on.recomputed_tokens,
+            off.recomputed_tokens
+        );
+        // The headline: avoided recompute shows up as makespan.
+        assert!(
+            on.total_time < off.total_time,
+            "swap-enabled no faster: {} vs {}",
+            on.total_time,
+            off.total_time
+        );
+    }
+
+    #[test]
+    fn swap_prefetch_hides_transfers() {
+        let order = || StaticOrder::new((0..40).collect());
+        let pre = pressure_engine(Some(&kv_on())).run(&mut order());
+        let sync = pressure_engine(Some(&KvConfig { prefetch: false, ..kv_on() }))
+            .run(&mut order());
+        assert_eq!(pre.total_tokens, sync.total_tokens);
+        assert!(sync.swapped_in_tokens > 0);
+        // Synchronous fetches pay the whole transfer at re-admission;
+        // the FIFO prefetch must not stall more than that.
+        assert!(
+            pre.link_stall_time <= sync.link_stall_time,
+            "prefetch stalled longer than synchronous fetch: {} vs {}",
+            pre.link_stall_time,
+            sync.link_stall_time
+        );
+        assert!(sync.link_stall_time > 0.0, "sync fetch never stalled");
+    }
+
+    #[test]
+    fn host_memory_budget_caps_swapping() {
+        // A host budget too small for any extent degrades to the discard
+        // path (and must still complete with identical token totals).
+        let mut pm2 = pm();
+        pm2.hw.memory_bytes = 22e9;
+        pm2.hw.host_mem_bytes = 1024.0 * 131072.0; // 1024 tokens of host KV
+        let sched = SchedulerConfig {
+            max_batch_requests: 64,
+            ..SchedulerConfig::default()
+        };
+        let reqs = mk_reqs(40, 200, 2000, 0);
+        let mut e = SimEngine::new(pm2, EngineConfig::default(), sched, reqs)
+            .with_kv(&kv_on());
+        let r = e.run(&mut StaticOrder::new((0..40).collect()));
+        assert_eq!(r.total_tokens, 40 * 2200);
+        assert_eq!(r.swapped_in_tokens, r.swapped_out_tokens);
+        // Whatever did swap fit the budget; the rest recomputed.
+        assert!(r.retractions > 0);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Tiered KV manager: HBM ↔ host offload for retracted requests
+//! (DESIGN.md §9).
+//!
+//! BlendServe's thesis is overlapping heterogeneous resource demands;
+//! until this module the simulator left one whole resource idle — the
+//! host link.  Every retraction discarded the victim's KV and paid a
+//! full prompt re-prefill plus a re-decode of every token it had already
+//! produced, even when the GPU was compute-bound and the PCIe link was
+//! doing nothing.  The tiered KV manager turns that retraction into a
+//! *policy choice*:
+//!
+//! - [`KvLedger`] tracks per-request offloaded extents (tokens + decode
+//!   progress) against a host-memory budget, with exact token
+//!   conservation (`tests/kv_ledger_oracle.rs` pins it differentially).
+//! - [`LinkTimeline`] models the PCIe link as a single-server FIFO
+//!   queue in simulated time: swap-outs occupy it at retraction, and the
+//!   matching swap-in is enqueued right behind (the prefetch), so the
+//!   transfer streams back *during* subsequent engine steps — hidden
+//!   under GEMM time whenever the schedule is compute-bound, exactly the
+//!   overlap argument behind `blended_utilization`.  Only the residual
+//!   that is not done by re-admission time surfaces as a stall.
+//! - [`SwapPolicy`] compares the link round-trip (including current
+//!   queue occupancy) against a roofline estimate of the recompute the
+//!   swap avoids, and discards when the link is the slower path or host
+//!   memory is exhausted.
+//!
+//! The engine integration lives in `engine/sim.rs` (`retract_one` makes
+//! the swap decision; the re-admission path restores fetched extents and
+//! resumes decode where it stopped).  With `kv.enabled = false`
+//! (the default) none of this runs and the engine is bit-identical to
+//! the discard-and-recompute path.
+
+pub mod ledger;
+pub mod policy;
+
+pub use ledger::{KvExtent, KvLedger};
+pub use policy::{recompute_cost, SwapCosts, SwapDecision, SwapPolicy};
+
+use crate::config::KvConfig;
+use crate::perfmodel::PerfModel;
+
+/// The PCIe link as a single-server FIFO queue over simulated time.
+///
+/// Transfers are issued at monotonically non-decreasing `now` values (the
+/// engine clock); each occupies the link from `max(busy_until, now)` for
+/// `bytes / bytes_per_s` seconds.  `busy_time` accumulates total occupied
+/// seconds for the `link_busy_frac` report.
+#[derive(Clone, Debug)]
+pub struct LinkTimeline {
+    bytes_per_s: f64,
+    busy_until: f64,
+    busy_time: f64,
+}
+
+impl LinkTimeline {
+    pub fn new(bytes_per_s: f64) -> Self {
+        LinkTimeline { bytes_per_s, busy_until: 0.0, busy_time: 0.0 }
+    }
+
+    /// Queue a transfer of `bytes` at time `now`; returns its completion
+    /// time.
+    pub fn transfer(&mut self, now: f64, bytes: f64) -> f64 {
+        debug_assert!(self.bytes_per_s > 0.0, "transfer on a zero-bandwidth link");
+        let dt = bytes / self.bytes_per_s;
+        self.busy_until = self.busy_until.max(now) + dt;
+        self.busy_time += dt;
+        self.busy_until
+    }
+
+    /// Time a round-trip (offload + fetch) queued at `now` would take to
+    /// complete, including the wait for the link to drain — the policy's
+    /// link-budget-aware cost probe.  Does not mutate the timeline.
+    pub fn eta_roundtrip(&self, now: f64, bytes: f64) -> f64 {
+        if self.bytes_per_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        (self.busy_until - now).max(0.0) + 2.0 * bytes / self.bytes_per_s
+    }
+
+    /// Total seconds the link has been occupied.
+    pub fn busy_time(&self) -> f64 {
+        self.busy_time
+    }
+
+    /// Time at which the link next goes idle.
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+}
+
+/// [`KvConfig`] resolved against one replica's perf model: the constants
+/// the engine's swap path needs per decision, precomputed once.
+#[derive(Clone, Debug)]
+pub struct KvParams {
+    /// Swapping active.  False when the config disables it, the hardware
+    /// has no host link (`pcie_gbps = 0`), or no host memory is budgeted
+    /// — any of which make swap-out pointless.
+    pub enabled: bool,
+    pub policy: SwapPolicy,
+    /// Stream each swap-in right behind its swap-out (FIFO prefetch)
+    /// instead of fetching synchronously at re-admission.
+    pub prefetch: bool,
+    /// Host bytes usable for offloaded KV
+    /// (`host_mem_bytes * host_mem_frac`).
+    pub host_capacity_bytes: f64,
+    /// KV bytes per cached token (model constant).
+    pub bytes_per_token: f64,
+    /// Host link bandwidth of the replica, bytes/s.
+    pub link_bytes_per_s: f64,
+}
+
+impl KvParams {
+    /// The inert default: retraction discards, exactly the pre-tiering
+    /// engine.
+    pub fn disabled() -> Self {
+        KvParams {
+            enabled: false,
+            policy: SwapPolicy::new(1.0),
+            prefetch: true,
+            host_capacity_bytes: 0.0,
+            bytes_per_token: 1.0,
+            link_bytes_per_s: 0.0,
+        }
+    }
+
+    /// Resolve `cfg` against a replica's perf model.
+    pub fn resolve(cfg: &KvConfig, pm: &PerfModel) -> Self {
+        let host_capacity_bytes = pm.hw.host_mem_bytes * cfg.host_mem_frac;
+        let link_bytes_per_s = pm.link_bandwidth();
+        KvParams {
+            enabled: cfg.enabled && link_bytes_per_s > 0.0 && host_capacity_bytes > 0.0,
+            policy: SwapPolicy::new(cfg.swap_margin),
+            prefetch: cfg.prefetch,
+            host_capacity_bytes,
+            bytes_per_token: pm.model.kv_bytes_per_token,
+            link_bytes_per_s,
+        }
+    }
+}
+
+/// Per-run mutable swap state, owned by the engine's `RunState` so
+/// resumable runs (fleet replicas) carry it across pauses.
+#[derive(Clone, Debug)]
+pub struct KvRunState {
+    pub ledger: KvLedger,
+    pub link: LinkTimeline,
+    /// Tokens moved HBM → host at retraction.
+    pub swapped_out_tokens: u64,
+    /// Tokens restored host → HBM at re-admission.
+    pub swapped_in_tokens: u64,
+    /// Prefill + decode tokens a restore avoided re-running.
+    pub recompute_saved_tokens: u64,
+    /// Prompt tokens re-prefilled because a retraction discarded KV
+    /// (counted whether or not swapping is enabled).
+    pub recomputed_tokens: u64,
+    /// Seconds the engine waited on unfinished swap-in transfers.
+    pub link_stall_time: f64,
+}
+
+impl KvRunState {
+    pub fn new(params: &KvParams) -> Self {
+        KvRunState {
+            ledger: KvLedger::new(params.host_capacity_bytes, params.bytes_per_token),
+            link: LinkTimeline::new(params.link_bytes_per_s),
+            swapped_out_tokens: 0,
+            swapped_in_tokens: 0,
+            recompute_saved_tokens: 0,
+            recomputed_tokens: 0,
+            link_stall_time: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn link_timeline_fifo_and_busy_accounting() {
+        let mut link = LinkTimeline::new(10.0); // 10 bytes/s
+        // First transfer at t=0: 20 bytes -> done at 2.
+        assert_eq!(link.transfer(0.0, 20.0), 2.0);
+        // Queued behind it even though issued at t=1: done at 3.
+        assert_eq!(link.transfer(1.0, 10.0), 3.0);
+        // Issued after the queue drained: starts at now.
+        assert_eq!(link.transfer(10.0, 10.0), 11.0);
+        assert_eq!(link.busy_time(), 4.0);
+        assert_eq!(link.busy_until(), 11.0);
+    }
+
+    #[test]
+    fn eta_roundtrip_includes_queue_delay() {
+        let mut link = LinkTimeline::new(10.0);
+        link.transfer(0.0, 50.0); // busy until 5
+        // At t=1 a 10-byte round-trip waits 4s then moves 2x1s.
+        assert_eq!(link.eta_roundtrip(1.0, 10.0), 6.0);
+        // After the queue drains only the transfer time remains.
+        assert_eq!(link.eta_roundtrip(9.0, 10.0), 2.0);
+        let idle = LinkTimeline::new(0.0);
+        assert!(idle.eta_roundtrip(0.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn resolve_disables_without_link_or_host_memory() {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let cfg = KvConfig { enabled: true, ..KvConfig::default() };
+        assert!(KvParams::resolve(&cfg, &pm).enabled);
+
+        let mut no_link = pm.clone();
+        no_link.hw.pcie_gbps = 0.0;
+        assert!(!KvParams::resolve(&cfg, &no_link).enabled);
+
+        let mut no_host = pm.clone();
+        no_host.hw.host_mem_bytes = 0.0;
+        assert!(!KvParams::resolve(&cfg, &no_host).enabled);
+
+        // Disabled config stays disabled on capable hardware.
+        assert!(!KvParams::resolve(&KvConfig::default(), &pm).enabled);
+    }
+
+    #[test]
+    fn resolve_applies_host_mem_frac() {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let cfg = KvConfig { enabled: true, host_mem_frac: 0.25, ..KvConfig::default() };
+        let p = KvParams::resolve(&cfg, &pm);
+        assert!((p.host_capacity_bytes - pm.hw.host_mem_bytes * 0.25).abs() < 1.0);
+        assert_eq!(p.bytes_per_token, pm.model.kv_bytes_per_token);
+    }
+}

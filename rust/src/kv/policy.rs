@@ -1,0 +1,139 @@
+//! Swap-out vs discard: the per-retraction policy choice.
+//!
+//! A retraction victim holds `p_done - hit` privately-cached prompt
+//! tokens plus `d_done` decoded tokens.  Discarding (the pre-tiering
+//! path) re-prefills the prompt tail and re-runs every decode step on
+//! re-admission; swapping moves the extent over the host link twice
+//! (out now, back before re-admission).  The policy swaps when the
+//! link round-trip — *including the wait for transfers already queued
+//! on the link* — undercuts a roofline estimate of that recompute by
+//! the configured margin, and host memory has room.
+
+use crate::perfmodel::PerfModel;
+
+/// The two costs a retraction weighs, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct SwapCosts {
+    /// Roofline estimate of the recompute a discard would pay.
+    pub recompute_s: f64,
+    /// Link round-trip for the extent, including current queue delay.
+    pub transfer_s: f64,
+    /// Host bytes the extent occupies.
+    pub extent_bytes: f64,
+}
+
+/// Outcome of one retraction decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapDecision {
+    /// Offload the extent to host and prefetch it back.
+    Swap,
+    /// Discard and recompute on re-admission (pre-tiering behaviour).
+    Discard,
+}
+
+/// The margin-based swap policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SwapPolicy {
+    /// Swap only when `transfer_s <= margin * recompute_s`.  1.0 is
+    /// break-even; < 1 demands the link win by that factor (conservative
+    /// against estimate error); > 1 prefers the link even when slightly
+    /// slower (frees compute for other requests).
+    pub margin: f64,
+}
+
+impl SwapPolicy {
+    pub fn new(margin: f64) -> Self {
+        assert!(margin > 0.0, "swap margin {margin}");
+        SwapPolicy { margin }
+    }
+
+    /// Decide one retraction.  `host_free_bytes` is the ledger's
+    /// remaining budget.
+    pub fn decide(&self, costs: &SwapCosts, host_free_bytes: f64) -> SwapDecision {
+        if costs.extent_bytes <= 0.0 || costs.extent_bytes > host_free_bytes {
+            return SwapDecision::Discard;
+        }
+        if costs.transfer_s <= self.margin * costs.recompute_s {
+            SwapDecision::Swap
+        } else {
+            SwapDecision::Discard
+        }
+    }
+}
+
+/// Roofline estimate of the recompute a discarded retraction pays on
+/// re-admission: re-prefilling `p_redo` prompt tokens (GEMM + quadratic
+/// prefill attention ending at context `p_total`) plus re-running
+/// `d_redo` decode steps (GEMM compute overlapped with streaming the
+/// request's KV context each step) — the same `max(comp, mem)` shape as
+/// the §4 request model.
+pub fn recompute_cost(pm: &PerfModel, p_redo: usize, p_total: usize, d_redo: usize) -> f64 {
+    let comp = pm.comp_tokens(p_redo + d_redo) + pm.comp_prefill_attn(p_redo, p_total);
+    let mem = pm.mem_request(p_total, d_redo);
+    comp.max(mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    #[test]
+    fn decide_compares_costs_with_margin() {
+        let p = SwapPolicy::new(1.0);
+        let costs =
+            SwapCosts { recompute_s: 1.0, transfer_s: 0.5, extent_bytes: 10.0 };
+        assert_eq!(p.decide(&costs, 100.0), SwapDecision::Swap);
+        let slow = SwapCosts { transfer_s: 1.5, ..costs };
+        assert_eq!(p.decide(&slow, 100.0), SwapDecision::Discard);
+        // A 2x margin tolerates a link up to twice the recompute cost.
+        assert_eq!(SwapPolicy::new(2.0).decide(&slow, 100.0), SwapDecision::Swap);
+    }
+
+    #[test]
+    fn decide_respects_host_budget() {
+        let p = SwapPolicy::new(1.0);
+        let costs =
+            SwapCosts { recompute_s: 1.0, transfer_s: 0.1, extent_bytes: 10.0 };
+        assert_eq!(p.decide(&costs, 9.0), SwapDecision::Discard);
+        assert_eq!(p.decide(&costs, 10.0), SwapDecision::Swap);
+        let empty = SwapCosts { extent_bytes: 0.0, ..costs };
+        assert_eq!(p.decide(&empty, 100.0), SwapDecision::Discard);
+    }
+
+    #[test]
+    fn recompute_cost_grows_with_lost_progress() {
+        let pm = pm();
+        let small = recompute_cost(&pm, 100, 500, 10);
+        let more_prefill = recompute_cost(&pm, 400, 500, 10);
+        let more_decode = recompute_cost(&pm, 100, 500, 400);
+        assert!(more_prefill > small);
+        assert!(more_decode > small);
+        assert_eq!(recompute_cost(&pm, 0, 500, 0), 0.0);
+    }
+
+    #[test]
+    fn long_decode_redo_is_memory_bound() {
+        // Re-running thousands of decode steps streams the KV context
+        // every step: the §4 memory term dominates, which is exactly why
+        // a PCIe round-trip (one pass over the bytes instead of d_redo
+        // passes) wins for decode-heavy victims.
+        let pm = pm();
+        let d_redo = 2000;
+        let mem = pm.mem_request(200, d_redo);
+        let comp = pm.comp_tokens(200 + d_redo) + pm.comp_prefill_attn(200, 200);
+        assert!(mem > comp, "mem {mem} comp {comp}");
+        let cost = recompute_cost(&pm, 200, 200, d_redo);
+        assert_eq!(cost, mem);
+        // The link round-trip for the same extent is far cheaper.
+        let roundtrip = pm.link_kv_roundtrip(2200.0);
+        assert!(
+            roundtrip < cost,
+            "roundtrip {roundtrip} not cheaper than recompute {cost}"
+        );
+    }
+}

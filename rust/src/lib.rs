@@ -6,7 +6,8 @@
 //!
 //! - **L3 (this crate)** — the paper's contribution: a resource-aware prefix
 //!   tree ([`tree`]), the dual-scanner request scheduler ([`scheduler`]), a
-//!   NanoFlow-style overlapping execution engine ([`engine`]), workload
+//!   NanoFlow-style overlapping execution engine ([`engine`]) with a tiered
+//!   HBM ↔ host KV manager ([`kv`], DESIGN.md §9), workload
 //!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
 //!   tensor parallel deployment ([`parallel`]) and the serving frontends
 //!   ([`server`]) — the offline batch API plus online/offline co-located
@@ -26,6 +27,7 @@
 pub mod baselines;
 pub mod config;
 pub mod engine;
+pub mod kv;
 pub mod parallel;
 pub mod perfmodel;
 pub mod scheduler;
@@ -39,8 +41,8 @@ pub mod util;
 pub mod runtime;
 
 pub use config::{
-    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, ModelSpec, SchedulerConfig,
-    SystemConfig,
+    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, KvConfig, ModelSpec,
+    SchedulerConfig, SystemConfig,
 };
 pub use perfmodel::PerfModel;
 pub use trace::{Request, Workload};

@@ -5,6 +5,7 @@
 //! blendserve simulate --pool pool.jsonl [--system blendserve|nanoflow-dfs|...] [--dp N]
 //! blendserve fleet    --pool pool.jsonl [--dp N] [--no-steal] [--gpus 1,1,2] [--hardware a,b]
 //! blendserve colocate --pool pool.jsonl [--online-rate 4] [--slo-scale 5] [--policy elastic]
+//! blendserve kv       --pool pool.jsonl [--memory-gb 22] [--margins 0.5,1,2] [--out kv.json]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
@@ -12,8 +13,10 @@
 //! `simulate` runs the profile-guided A100 simulator; `fleet` runs the
 //! work-stealing multi-replica cluster engine (DESIGN.md §Fleet);
 //! `colocate` blends a latency-sensitive online stream into the offline
-//! schedule (DESIGN.md §Co-located-Serving); `serve` runs the REAL tiny
-//! model through PJRT (python never on the request path).
+//! schedule (DESIGN.md §Co-located-Serving); `kv` sweeps the tiered KV
+//! manager's swap policy against the discard baseline (DESIGN.md §9);
+//! `serve` runs the REAL tiny model through PJRT (python never on the
+//! request path).
 
 use blendserve::baselines;
 use blendserve::config::{presets, ColocationPolicy, SystemConfig};
@@ -40,6 +43,8 @@ USAGE:
                       [--hardware NAME,NAME,..] [--model NAME] [--out FILE]
   blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
                       [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
+  blendserve kv       --pool FILE [--memory-gb F] [--margins F,F,..] [--host-gb F] [--no-prefetch]
+                      [--model NAME] [--out FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve config   [--preset MODEL]
 
@@ -297,6 +302,126 @@ fn cmd_colocate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `blendserve kv`: sweep the tiered KV manager's swap margin against the
+/// discard baseline on one pool (DESIGN.md §9).  `--memory-gb` shrinks
+/// device memory to provoke retractions; the baseline row is always the
+/// kv-disabled engine on the same config.
+fn cmd_kv(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    use blendserve::scheduler::run_system;
+    use blendserve::util::Json;
+
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let w = load_jsonl(&pool)?;
+    anyhow::ensure!(!w.is_empty(), "pool {} contains no requests", pool.display());
+    let mut cfg = baselines::blendserve();
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    if let Some(gb) = flags.get("memory-gb") {
+        cfg.hardware.memory_bytes = gb.parse::<f64>()? * 1e9;
+    }
+    if let Some(gb) = flags.get("host-gb") {
+        cfg.hardware.host_mem_bytes = gb.parse::<f64>()? * 1e9;
+    }
+    if flags.contains_key("no-prefetch") {
+        cfg.kv.prefetch = false;
+    }
+    let margins: Vec<f64> = match flags.get("margins") {
+        None => vec![1.0],
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|m| !m.is_empty())
+            .map(|m| m.parse::<f64>())
+            .collect::<Result<_, _>>()?,
+    };
+    for &m in &margins {
+        cfg.kv.swap_margin = m;
+        cfg.kv
+            .validate()
+            .map_err(|e| anyhow::anyhow!("kv config: {e}"))?;
+    }
+
+    println!(
+        "kv sweep: {} requests on {} ({:.0} GB HBM, {:.0} GB host @ {:.0} GB/s link)",
+        w.len(),
+        cfg.model.name,
+        cfg.hardware.memory_bytes / 1e9,
+        cfg.hardware.host_mem_bytes / 1e9,
+        cfg.hardware.pcie_gbps,
+    );
+    cfg.kv.enabled = false;
+    let base = run_system(&cfg, &w);
+    println!(
+        "{:<14} makespan {:>8.2}s | {} retractions | {:>9} recomputed tok",
+        "discard", base.result.total_time, base.result.retractions,
+        base.result.recomputed_tokens,
+    );
+    let mut rows: Vec<(String, Json)> = vec![(
+        "discard".to_string(),
+        Json::obj(vec![
+            ("makespan_s", Json::Num(base.result.total_time)),
+            ("retractions", Json::from(base.result.retractions as usize)),
+            (
+                "recomputed_tokens",
+                Json::from(base.result.recomputed_tokens as usize),
+            ),
+        ]),
+    )];
+    cfg.kv.enabled = true;
+    for &m in &margins {
+        cfg.kv.swap_margin = m;
+        let out = run_system(&cfg, &w);
+        let r = &out.result;
+        let speedup = base.result.total_time / r.total_time.max(1e-12);
+        println!(
+            "{:<14} makespan {:>8.2}s ({speedup:.3}x) | {} retractions | \
+             {:>9} recomputed | {:>9} swapped | {:>9} saved | link {:>5.1}% \
+             (stall {:.2}s)",
+            format!("swap x{m}"),
+            r.total_time,
+            r.retractions,
+            r.recomputed_tokens,
+            r.swapped_out_tokens,
+            r.recompute_saved_tokens,
+            r.link_busy_frac * 100.0,
+            r.link_stall_time,
+        );
+        rows.push((
+            format!("margin_{m}"),
+            Json::obj(vec![
+                ("makespan_s", Json::Num(r.total_time)),
+                ("speedup_vs_discard", Json::Num(speedup)),
+                ("retractions", Json::from(r.retractions as usize)),
+                ("recomputed_tokens", Json::from(r.recomputed_tokens as usize)),
+                ("swapped_out_tokens", Json::from(r.swapped_out_tokens as usize)),
+                ("swapped_in_tokens", Json::from(r.swapped_in_tokens as usize)),
+                (
+                    "recompute_saved_tokens",
+                    Json::from(r.recompute_saved_tokens as usize),
+                ),
+                ("link_busy_frac", Json::Num(r.link_busy_frac)),
+                ("link_stall_s", Json::Num(r.link_stall_time)),
+            ]),
+        ));
+    }
+    if let Some(out) = flags.get("out") {
+        let doc = Json::obj(vec![
+            ("pool", Json::from(pool.display().to_string().as_str())),
+            ("n_requests", Json::from(w.len())),
+            ("model", Json::from(cfg.model.name.as_str())),
+            ("memory_bytes", Json::Num(cfg.hardware.memory_bytes)),
+            ("pcie_gbps", Json::Num(cfg.hardware.pcie_gbps)),
+            ("sweep", Json::Obj(rows.into_iter().collect())),
+        ]);
+        std::fs::write(out, format!("{doc}\n"))?;
+        println!("report -> {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
     let dir = flags
@@ -354,6 +479,7 @@ fn main() -> anyhow::Result<()> {
         "simulate" => cmd_simulate(flags),
         "fleet" => cmd_fleet(flags),
         "colocate" => cmd_colocate(flags),
+        "kv" => cmd_kv(flags),
         "serve" => cmd_serve(flags),
         "config" => cmd_config(flags),
         _ => usage(),

@@ -142,6 +142,32 @@ impl PerfModel {
         ctx_tokens * self.model.kv_bytes_per_token / self.bandwidth()
     }
 
+    // ---- host-link level (kv module, DESIGN.md §9) ----
+
+    /// Host-link (PCIe) bandwidth of the replica, bytes/s.  Each GPU owns
+    /// its own link, so like `compute`/`bandwidth` it scales with the
+    /// replica's GPU count.
+    pub fn link_bandwidth(&self) -> f64 {
+        self.hw.pcie_gbps * 1e9 * self.n_gpus as f64
+    }
+
+    /// Time to move `tokens` of KV one way across the host link
+    /// (infinite when the hardware has no link — offload then never
+    /// pays off).
+    pub fn link_kv_time(&self, tokens: f64) -> f64 {
+        let bw = self.link_bandwidth();
+        if bw <= 0.0 {
+            f64::INFINITY
+        } else {
+            tokens * self.model.kv_bytes_per_token / bw
+        }
+    }
+
+    /// Round-trip (swap-out now + swap-in later) link time for `tokens`.
+    pub fn link_kv_roundtrip(&self, tokens: f64) -> f64 {
+        2.0 * self.link_kv_time(tokens)
+    }
+
     // ---- set level (§5.1) ----
 
     /// Sharing-discounted density of a request set: (1-s)·ΣComp / ΣMem.
@@ -305,6 +331,29 @@ mod tests {
         assert!(with > without);
         // At p=4096 the quadratic term is noticeable but not dominant.
         assert!(with / without < 2.0);
+    }
+
+    #[test]
+    fn link_time_scales_with_tokens_and_gpus() {
+        let one = pm();
+        // A100 x1: 32 GB/s; 1000 tokens x 131072 B = 131 MB -> ~4.1 ms.
+        let t = one.link_kv_time(1000.0);
+        assert!((t - 1000.0 * 131072.0 / 32e9).abs() < 1e-12);
+        assert_eq!(one.link_kv_roundtrip(1000.0), 2.0 * t);
+        // Each GPU owns a link: 8 GPUs move the same tokens 8x faster.
+        let eight = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 8);
+        assert!((eight.link_kv_time(1000.0) - t / 8.0).abs() < 1e-15);
+        // The host link is far slower than HBM: streaming the same
+        // tokens over PCIe costs ~64x the HBM pass on the A100.
+        assert!(one.link_kv_time(1000.0) > one.mem_kv_load(1000.0) * 10.0);
+    }
+
+    #[test]
+    fn linkless_hardware_has_infinite_link_time() {
+        let pm = PerfModel::new(presets::tiny_cpu(), presets::cpu_host(), 1);
+        assert_eq!(pm.link_bandwidth(), 0.0);
+        assert!(pm.link_kv_time(1.0).is_infinite());
+        assert!(pm.link_kv_roundtrip(1.0).is_infinite());
     }
 
     #[test]

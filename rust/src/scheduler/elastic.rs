@@ -19,7 +19,12 @@
 //! 3. **SLO-risk preemption** — when the TTFT slack of the
 //!    head-of-line online request falls below `urgency · ttft_slo`, the
 //!    admitter reports *urgent* and the engine retracts the newest
-//!    offline request to make room (engine/sim.rs).
+//!    offline request to make room (engine/sim.rs).  When the tiered KV
+//!    manager is active ([`ElasticAdmitter::with_cheap_preemption`]),
+//!    a preempted offline request swaps to host instead of losing its
+//!    progress, so the admitter widens the urgency window by
+//!    [`CHEAP_PREEMPT_BOOST`] — it can afford to preempt earlier because
+//!    being wrong no longer costs a full recompute.
 //!
 //! When the online load ebbs, 1-3 all go quiescent and the dual scanner's
 //! schedule flows through verbatim — offline backfill costs nothing in
@@ -28,6 +33,11 @@
 use super::dual_scan::DualScanner;
 use crate::engine::sim::{Admitter, EngineView, Side};
 use crate::trace::online::OnlineWorkload;
+
+/// Factor applied to the urgency threshold when offline preemption is
+/// cheap (tiered KV swap active): the TTFT-slack window that triggers
+/// preemption widens by this much, capped at the full SLO.
+pub const CHEAP_PREEMPT_BOOST: f64 = 1.5;
 
 /// One online request as the admitter tracks it.
 #[derive(Clone, Copy, Debug)]
@@ -79,6 +89,17 @@ impl ElasticAdmitter {
             urgency,
             last: LastQueue::Offline,
         }
+    }
+
+    /// Widen the urgency window when offline preemption is cheap (the
+    /// engine swaps the victim's KV to host instead of discarding it).
+    /// With `cheap = false` this is the identity, so a kv-disabled
+    /// co-located run stays bit-identical to the pre-tiering admitter.
+    pub fn with_cheap_preemption(mut self, cheap: bool) -> Self {
+        if cheap {
+            self.urgency = (self.urgency * CHEAP_PREEMPT_BOOST).min(1.0);
+        }
+        self
     }
 
     /// Convenience: build the online side from a generated stream whose
@@ -284,6 +305,32 @@ mod tests {
         let online = vec![item(10_000, 10.0, 2.0)];
         let mut off = ElasticAdmitter::new(scanner(10), online, 0.2, 0.0);
         assert!(!off.urgent(&view(11.9, 1e6, 0.0, 0)));
+    }
+
+    #[test]
+    fn cheap_preemption_widens_urgency_window() {
+        // Request arrives at 10 with a 2 s TTFT SLO (deadline 12).  At
+        // urgency 0.5 the urgent window opens at slack < 1.0; with the
+        // 1.5x cheap-preemption boost it opens at slack < 1.5.
+        let mk = |cheap: bool| {
+            ElasticAdmitter::new(scanner(10), vec![item(10_000, 10.0, 2.0)], 0.2, 0.5)
+                .with_cheap_preemption(cheap)
+        };
+        // Slack 1.2: inside the boosted window only.
+        let v = view(10.8, 1e6, 0.0, 0);
+        assert!(!mk(false).urgent(&v));
+        assert!(mk(true).urgent(&v));
+        // Slack 0.8: urgent either way.
+        let v = view(11.2, 1e6, 0.0, 0);
+        assert!(mk(false).urgent(&v));
+        assert!(mk(true).urgent(&v));
+        // The boost saturates at the full SLO.
+        let saturated =
+            ElasticAdmitter::new(scanner(10), vec![item(10_000, 10.0, 2.0)], 0.2, 0.9)
+                .with_cheap_preemption(true);
+        assert_eq!(saturated.urgency, 1.0);
+        // Identity when preemption is not cheap.
+        assert_eq!(mk(false).urgency, 0.5);
     }
 
     #[test]

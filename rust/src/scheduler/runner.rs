@@ -80,7 +80,8 @@ pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
     let mut sched = cfg.scheduler.clone();
     // The chunk pacer discounts shared prefill compute (§5.3 C_L/C_R).
     sched.expected_sharing = tree.sharing_ratio();
-    let mut engine = SimEngine::new(pm.clone(), cfg.engine.clone(), sched, requests);
+    let mut engine = SimEngine::new(pm.clone(), cfg.engine.clone(), sched, requests)
+        .with_kv(&cfg.kv);
 
     let result = match cfg.scheduler.order {
         OrderPolicy::BlendServe => {

@@ -17,6 +17,7 @@
 
 use crate::config::{ColocationPolicy, SystemConfig};
 use crate::engine::sim::{SimEngine, SimRequest, SimResult};
+use crate::kv::KvParams;
 use crate::perfmodel::PerfModel;
 use crate::scheduler::{prepare_blendserve, DualScanner, ElasticAdmitter};
 use crate::trace::online::{generate_online, ArrivalProcess, OnlineSpec, OnlineWorkload};
@@ -35,6 +36,13 @@ pub struct ColocateReport {
     pub mean_ttft: f64,
     pub p99_ttft: f64,
     pub mean_queue_delay: f64,
+    /// Tiered-KV traffic: tokens swapped to host across all preemptions
+    /// and retractions (0 with `kv.enabled = false`).
+    pub swapped_out_tokens: u64,
+    /// Prefill + decode tokens that swap restores avoided re-running.
+    pub recompute_saved_tokens: u64,
+    /// Fraction of the run the host link spent moving KV.
+    pub link_busy_frac: f64,
 }
 
 /// Build the online stream described by `cfg.colocate`: `n_requests`
@@ -103,14 +111,24 @@ pub fn serve_colocated(
 
     let mut sched = cfg.scheduler.clone();
     sched.expected_sharing = tree.sharing_ratio();
-    let mut engine = SimEngine::new(pm, cfg.engine.clone(), sched, requests);
+    // Resolve the KV config against this replica's hardware *before*
+    // handing the perf model to the engine: the urgency boost below must
+    // key on whether swapping is actually possible (a `[kv] enabled`
+    // flag on link-less hardware resolves to inert), not on the raw flag.
+    let preemption_cheap = KvParams::resolve(&cfg.kv, &pm).enabled;
+    let mut engine =
+        SimEngine::new(pm, cfg.engine.clone(), sched, requests).with_kv(&cfg.kv);
 
     let (reserve, urgency) = match cfg.colocate.policy {
         ColocationPolicy::Elastic => (cfg.colocate.online_reserve, cfg.colocate.urgency),
         ColocationPolicy::BestEffort => (0.0, 0.0),
     };
     let items = ElasticAdmitter::online_items(online, id_base);
-    let mut admitter = ElasticAdmitter::new(DualScanner::new(&tree), items, reserve, urgency);
+    // With KV tiering active, SLO-driven preemption swaps the offline
+    // victim instead of discarding its progress — preempting earlier is
+    // cheap, so the admitter widens its urgency window.
+    let mut admitter = ElasticAdmitter::new(DualScanner::new(&tree), items, reserve, urgency)
+        .with_cheap_preemption(preemption_cheap);
     let result = engine.run(&mut admitter);
 
     ColocateReport {
@@ -121,6 +139,9 @@ pub fn serve_colocated(
         mean_ttft: result.mean_ttft,
         p99_ttft: result.p99_ttft,
         mean_queue_delay: result.mean_queue_delay,
+        swapped_out_tokens: result.swapped_out_tokens,
+        recompute_saved_tokens: result.recompute_saved_tokens,
+        link_busy_frac: result.link_busy_frac,
         result,
     }
 }
@@ -259,6 +280,34 @@ mod tests {
             elastic.slo_attainment,
             best_effort.slo_attainment
         );
+    }
+
+    #[test]
+    fn kv_tiering_reports_and_conserves_under_bursty_preemption() {
+        // A bursty stream on a small-KV replica forces SLO preemptions;
+        // with tiering on, the preempted offline work swaps instead of
+        // recomputing.  Both configurations must serve every token.
+        let w = offline_pool(400);
+        let mut cfg = cfg_with_rate(20.0);
+        cfg.hardware.memory_bytes = 22e9;
+        cfg.colocate.burst_factor = 6.0;
+        cfg.colocate.phase_secs = 1.0;
+        cfg.colocate.slo_scale = 3.0;
+        let online = online_stream(&cfg, TraceKind::ShareGpt, 40, 5);
+        let off = serve_colocated(&cfg, &w, &online);
+        cfg.kv.enabled = true;
+        let on = serve_colocated(&cfg, &w, &online);
+        assert_eq!(on.result.total_tokens, off.result.total_tokens);
+        assert_eq!(off.swapped_out_tokens, 0);
+        assert_eq!(off.link_busy_frac, 0.0);
+        // Extents conserve exactly whether or not any retraction chose
+        // to swap (a fresh victim with no progress discards).
+        assert_eq!(on.result.swapped_in_tokens, on.result.swapped_out_tokens);
+        assert_eq!(on.swapped_out_tokens, on.result.swapped_out_tokens);
+        assert_eq!(on.recompute_saved_tokens, on.result.recompute_saved_tokens);
+        if on.swapped_out_tokens > 0 {
+            assert!(on.link_busy_frac > 0.0);
+        }
     }
 
     #[test]

@@ -67,6 +67,15 @@ pub struct FleetReport {
     /// Cross-unit prefix sharing given up by moving units away from their
     /// shard (`static_sharing - sharing_achieved`, floored at 0).
     pub sharing_lost_to_steals: f64,
+    /// Tiered-KV traffic summed over replicas: tokens swapped to host at
+    /// retraction (0 with `kv.enabled = false`).
+    pub swapped_out_tokens: u64,
+    /// Prefill + decode tokens swap restores avoided re-running, summed
+    /// over replicas.
+    pub recompute_saved_tokens: u64,
+    /// Tokens re-computed because retractions discarded KV, summed over
+    /// replicas.
+    pub recomputed_tokens: u64,
 }
 
 impl FleetReport {
@@ -85,6 +94,9 @@ impl FleetReport {
                     ("sharing_achieved", Json::Num(r.sharing_achieved)),
                     ("retractions", Json::from(r.retractions as usize)),
                     ("idle_frac", Json::Num(idle)),
+                    ("swapped_out_tokens", Json::from(r.swapped_out_tokens as usize)),
+                    ("recomputed_tokens", Json::from(r.recomputed_tokens as usize)),
+                    ("link_busy_frac", Json::Num(r.link_busy_frac)),
                 ])
             })
             .collect();
@@ -101,6 +113,12 @@ impl FleetReport {
             ("static_sharing", Json::Num(self.static_sharing)),
             ("speedup_vs_static", Json::Num(self.speedup_vs_static)),
             ("sharing_lost_to_steals", Json::Num(self.sharing_lost_to_steals)),
+            ("swapped_out_tokens", Json::from(self.swapped_out_tokens as usize)),
+            (
+                "recompute_saved_tokens",
+                Json::from(self.recompute_saved_tokens as usize),
+            ),
+            ("recomputed_tokens", Json::from(self.recomputed_tokens as usize)),
             ("replicas", Json::Arr(replicas)),
         ])
     }
@@ -268,7 +286,8 @@ fn run_fleet(
                 cfg.engine.clone(),
                 prep.sched.clone(),
                 reqs,
-            );
+            )
+            .with_kv(&cfg.kv);
             let st = engine.begin();
             Replica {
                 engine,
@@ -393,6 +412,13 @@ pub fn serve_fleet(cfg: &SystemConfig, workload: &Workload) -> FleetReport {
         static_sharing,
         speedup_vs_static: static_makespan / makespan.max(1e-12),
         sharing_lost_to_steals: (static_sharing - sharing).max(0.0),
+        swapped_out_tokens: run.results.iter().map(|r| r.swapped_out_tokens).sum(),
+        recompute_saved_tokens: run
+            .results
+            .iter()
+            .map(|r| r.recompute_saved_tokens)
+            .sum(),
+        recomputed_tokens: run.results.iter().map(|r| r.recomputed_tokens).sum(),
         per_replica: run.results,
         replica_desc: run.descs,
     }
@@ -547,6 +573,30 @@ mod tests {
         assert_eq!(rep.total_tokens, w.total_tokens());
         assert!(rep.makespan.is_finite() && rep.makespan > 0.0);
         assert!(rep.total_throughput.is_finite());
+    }
+
+    #[test]
+    fn kv_tiering_threads_through_fleet_replicas() {
+        // The KV-constrained skewed config retracts on at least one
+        // replica; with tiering on the fleet must conserve both request
+        // tokens and swap extents, and surface the traffic in its report.
+        let w = skewed_workload(32, 16, 10);
+        let mut cfg = skewed_cfg(4);
+        cfg.kv.enabled = true;
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        let (swapped_in, swapped_out) = rep
+            .per_replica
+            .iter()
+            .fold((0u64, 0u64), |acc, r| {
+                (acc.0 + r.swapped_in_tokens, acc.1 + r.swapped_out_tokens)
+            });
+        assert_eq!(swapped_in, swapped_out, "extents lost across the fleet");
+        assert_eq!(rep.swapped_out_tokens, swapped_out);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"swapped_out_tokens\""));
+        assert!(json.contains("\"recompute_saved_tokens\""));
+        assert!(json.contains("\"link_busy_frac\""));
     }
 
     #[test]

@@ -137,6 +137,19 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
                 ("optimal_sharing", Json::Num(o.optimal_sharing)),
                 ("optimal_fraction", Json::Num(o.optimal_fraction)),
                 ("retractions", Json::from(o.result.retractions as usize)),
+                (
+                    "recomputed_tokens",
+                    Json::from(o.result.recomputed_tokens as usize),
+                ),
+                (
+                    "swapped_out_tokens",
+                    Json::from(o.result.swapped_out_tokens as usize),
+                ),
+                (
+                    "recompute_saved_tokens",
+                    Json::from(o.result.recompute_saved_tokens as usize),
+                ),
+                ("link_busy_frac", Json::Num(o.result.link_busy_frac)),
             ])
         })
         .collect();

@@ -1,0 +1,178 @@
+//! Randomized differential oracle for the swap ledger
+//! (`kv::ledger::KvLedger`): thousands of offload / fetch / discard
+//! episodes across multiple seeds and host capacities, checked op-for-op
+//! against a naive reference model.
+//!
+//! Invariants pinned after every operation:
+//! - **conservation** — `offloaded == fetched + resident`, token-exact;
+//! - **budget** — host bytes never exceed `host_mem_bytes`, and an
+//!   offload that would overflow is rejected atomically (nothing
+//!   changes);
+//! - **byte accounting** — `host_used_bytes == resident_tokens ×
+//!   bytes_per_token` exactly;
+//! - **exactly-once restore** — every accepted extent comes back once,
+//!   identical to what went in; double-fetch returns `None`.
+
+use blendserve::kv::{KvExtent, KvLedger};
+use blendserve::util::rng::DetRng;
+use std::collections::HashMap;
+
+/// Naive reference: a map plus explicit token sums, no byte caching.
+struct RefLedger {
+    capacity_bytes: f64,
+    bytes_per_token: f64,
+    extents: HashMap<u32, KvExtent>,
+    offloaded: u64,
+    fetched: u64,
+}
+
+impl RefLedger {
+    fn new(capacity_bytes: f64, bytes_per_token: f64) -> Self {
+        RefLedger {
+            capacity_bytes,
+            bytes_per_token,
+            extents: HashMap::new(),
+            offloaded: 0,
+            fetched: 0,
+        }
+    }
+
+    fn resident(&self) -> u64 {
+        self.extents.values().map(|e| e.tokens).sum()
+    }
+
+    fn try_offload(&mut self, req: u32, ext: KvExtent) -> bool {
+        if ext.tokens == 0 || self.extents.contains_key(&req) {
+            return false;
+        }
+        let would = (self.resident() + ext.tokens) as f64 * self.bytes_per_token;
+        if would > self.capacity_bytes {
+            return false;
+        }
+        self.offloaded += ext.tokens;
+        self.extents.insert(req, ext);
+        true
+    }
+
+    fn take(&mut self, req: u32) -> Option<KvExtent> {
+        let e = self.extents.remove(&req)?;
+        self.fetched += e.tokens;
+        Some(e)
+    }
+}
+
+fn random_extent(rng: &mut DetRng) -> KvExtent {
+    let prefill_start = rng.range(0, 200) as u32;
+    let prefill_end = prefill_start + rng.range(0, 400) as u32;
+    let decoded = rng.range(0, 600) as u32;
+    KvExtent {
+        tokens: (prefill_end - prefill_start) as u64 + decoded as u64,
+        prefill_start,
+        prefill_end,
+        decoded,
+        ready_at: rng.f64() * 100.0,
+    }
+}
+
+fn check(op: usize, what: &str, l: &KvLedger, r: &RefLedger) {
+    assert_eq!(l.resident_tokens(), r.resident(), "resident diverged at op {op} ({what})");
+    assert_eq!(l.offloaded_tokens, r.offloaded, "offloaded diverged at op {op} ({what})");
+    assert_eq!(l.fetched_tokens, r.fetched, "fetched diverged at op {op} ({what})");
+    assert_eq!(l.len(), r.extents.len(), "extent count diverged at op {op} ({what})");
+    // Conservation: every token ever offloaded is either back or resident.
+    assert_eq!(
+        l.offloaded_tokens,
+        l.fetched_tokens + l.resident_tokens(),
+        "tokens leaked at op {op} ({what})"
+    );
+    // Exact byte accounting and the hard budget.
+    let expect_bytes = l.resident_tokens() as f64 * r.bytes_per_token;
+    assert_eq!(l.host_used_bytes(), expect_bytes, "byte drift at op {op} ({what})");
+    assert!(
+        l.host_used_bytes() <= r.capacity_bytes,
+        "host budget exceeded at op {op} ({what}): {} > {}",
+        l.host_used_bytes(),
+        r.capacity_bytes
+    );
+}
+
+fn run_episode(seed: u64, capacity_tokens: u64, ops: usize) {
+    let bytes_per_token = 8.0;
+    let capacity_bytes = capacity_tokens as f64 * bytes_per_token;
+    let mut rng = DetRng::new(seed);
+    let mut ledger = KvLedger::new(capacity_bytes, bytes_per_token);
+    let mut reference = RefLedger::new(capacity_bytes, bytes_per_token);
+    let mut live: Vec<u32> = Vec::new();
+    let mut next_req: u32 = 0;
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+
+    for op in 0..ops {
+        let roll = rng.f64();
+        if roll < 0.55 || live.is_empty() {
+            // Offload a fresh request (sometimes a deliberate duplicate).
+            let duplicate = !live.is_empty() && rng.chance(0.1);
+            let req = if duplicate {
+                live[rng.range(0, live.len() as u64 - 1) as usize]
+            } else {
+                next_req += 1;
+                next_req
+            };
+            let ext = random_extent(&mut rng);
+            let a = ledger.try_offload(req, ext);
+            let b = reference.try_offload(req, ext);
+            assert_eq!(a, b, "accept/reject diverged at op {op} (req {req})");
+            if a {
+                accepted += 1;
+                live.push(req);
+            } else {
+                rejected += 1;
+            }
+            check(op, "offload", &ledger, &reference);
+        } else {
+            // Fetch a live extent (sometimes a deliberate double-fetch).
+            let i = rng.range(0, live.len() as u64 - 1) as usize;
+            let req = if rng.chance(0.1) { next_req + 10_000 } else { live.swap_remove(i) };
+            let a = ledger.take(req);
+            let b = reference.take(req);
+            assert_eq!(a, b, "fetched extent diverged at op {op} (req {req})");
+            check(op, "take", &ledger, &reference);
+        }
+    }
+    // Drain: everything still resident restores exactly once.
+    for req in live.drain(..) {
+        let a = ledger.take(req);
+        let b = reference.take(req);
+        assert_eq!(a, b);
+        assert!(a.is_some(), "live extent {req} vanished");
+    }
+    assert!(ledger.is_empty());
+    assert_eq!(ledger.host_used_bytes(), 0.0);
+    assert_eq!(ledger.offloaded_tokens, ledger.fetched_tokens);
+    assert!(accepted > 0, "episode seed {seed} never offloaded");
+    // Tight budgets must actually exercise the rejection path.
+    if capacity_tokens < 2_000 {
+        assert!(rejected > 0, "tight budget (cap {capacity_tokens}) never rejected");
+    }
+}
+
+#[test]
+fn differential_oracle_many_seeds_and_capacities() {
+    for seed in [1, 7, 42, 1337] {
+        // From starvation-tight to effectively unbounded host budgets.
+        for capacity_tokens in [300, 1_500, 20_000, u64::MAX / 1_000_000] {
+            run_episode(seed, capacity_tokens, 2_500);
+        }
+    }
+}
+
+#[test]
+fn zero_capacity_rejects_everything() {
+    let mut ledger = KvLedger::new(0.0, 4.0);
+    let mut rng = DetRng::new(3);
+    for req in 0..100 {
+        assert!(!ledger.try_offload(req, random_extent(&mut rng)));
+    }
+    assert!(ledger.is_empty());
+    assert_eq!(ledger.offloaded_tokens, 0);
+}
