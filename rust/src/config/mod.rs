@@ -373,6 +373,81 @@ impl KvConfig {
     }
 }
 
+/// Multi-modal subsystem knobs (`modality` module, DESIGN.md §10).
+///
+/// `enabled` gates *scheduler awareness only*: whether tree / dual-scan
+/// densities include the vision-encoder compute term.  The engine always
+/// simulates the physics of whatever attachments a workload carries
+/// (encoder passes, embedding dedup cache), so attachment-free workloads
+/// are bit-identical to the pre-modality engine regardless of this
+/// section (pinned by tests in `engine/sim.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModalityConfig {
+    /// Include encoder compute in scheduling densities (modality-aware
+    /// ordering).  Off = modality-blind: the scheduler prices attachments
+    /// at zero, the ablation baseline.
+    pub enabled: bool,
+    /// Vision-encoder parameter count (FLOPs/token = 2·params).  The
+    /// default is a video-capable ~2B tower (EVA/ViT-bigG scale); set
+    /// ~3.0e8 for a ViT-L/14 image-chat-only deployment.
+    pub encoder_params: f64,
+    /// Fraction of the replica's KV-capacity bytes carved out for the
+    /// embedding dedup cache (applied only when the workload carries
+    /// attachments).
+    pub embed_cache_frac: f64,
+    /// Bytes one cached embedding token occupies (hidden · 2 for FP16;
+    /// 8192 matches a 4096-wide projector).
+    pub embed_bytes_per_token: f64,
+}
+
+impl Default for ModalityConfig {
+    fn default() -> Self {
+        ModalityConfig {
+            enabled: false,
+            encoder_params: Self::DEFAULT_ENCODER_PARAMS,
+            embed_cache_frac: 0.05,
+            embed_bytes_per_token: 8192.0,
+        }
+    }
+}
+
+impl ModalityConfig {
+    /// Default vision-encoder size (video-capable ~2B tower).
+    pub const DEFAULT_ENCODER_PARAMS: f64 = 2e9;
+
+    /// Every key the `[modality]` TOML section accepts; anything else is
+    /// a config error naming the offending key (same policy as `[kv]`).
+    pub const TOML_KEYS: [&'static str; 4] = [
+        "enabled",
+        "encoder_params",
+        "embed_cache_frac",
+        "embed_bytes_per_token",
+    ];
+
+    /// Semantic validation shared by the TOML and CLI construction paths.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.encoder_params > 0.0) {
+            return Err(format!(
+                "encoder_params must be > 0, got {}",
+                self.encoder_params
+            ));
+        }
+        if !(self.embed_cache_frac >= 0.0 && self.embed_cache_frac < 1.0) {
+            return Err(format!(
+                "embed_cache_frac must be in [0, 1), got {}",
+                self.embed_cache_frac
+            ));
+        }
+        if !(self.embed_bytes_per_token > 0.0) {
+            return Err(format!(
+                "embed_bytes_per_token must be > 0, got {}",
+                self.embed_bytes_per_token
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Scheduler knobs (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -455,6 +530,8 @@ pub struct SystemConfig {
     pub fleet: FleetConfig,
     /// Tiered KV manager knobs (inert at `enabled = false`).
     pub kv: KvConfig,
+    /// Multi-modal subsystem knobs (scheduler awareness + embed cache).
+    pub modality: ModalityConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -472,6 +549,7 @@ impl SystemConfig {
             colocate: ColocateConfig::default(),
             fleet: FleetConfig::default(),
             kv: KvConfig::default(),
+            modality: ModalityConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -555,6 +633,15 @@ impl SystemConfig {
         d.set_num("kv", "swap_margin", self.kv.swap_margin);
         d.set_num("kv", "host_mem_frac", self.kv.host_mem_frac);
         d.set_bool("kv", "prefetch", self.kv.prefetch);
+
+        d.set_bool("modality", "enabled", self.modality.enabled);
+        d.set_num("modality", "encoder_params", self.modality.encoder_params);
+        d.set_num("modality", "embed_cache_frac", self.modality.embed_cache_frac);
+        d.set_num(
+            "modality",
+            "embed_bytes_per_token",
+            self.modality.embed_bytes_per_token,
+        );
         d.to_string_pretty()
     }
 
@@ -758,6 +845,51 @@ impl SystemConfig {
         };
         kv.validate().map_err(|e| TomlError(format!("[kv] {e}")))?;
 
+        // The [modality] section is optional (older config files predate
+        // the multi-modal subsystem; the default is the modality-blind
+        // scheduler), with the same strictness policy as [kv]: a present
+        // section rejects unknown keys by name.
+        if let Some(sec) = d.sections.get("modality") {
+            for key in sec.keys() {
+                if !ModalityConfig::TOML_KEYS.contains(&key.as_str()) {
+                    return Err(TomlError(format!(
+                        "[modality] unknown key '{key}' (expected one of: {})",
+                        ModalityConfig::TOML_KEYS.join(", ")
+                    ))
+                    .into());
+                }
+            }
+        }
+        let mdef = ModalityConfig::default();
+        let mbool = |key: &str, def: bool| -> Result<bool, TomlError> {
+            match d.get("modality", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| TomlError(format!("[modality] {key}: expected bool"))),
+            }
+        };
+        let mnum = |key: &str, def: f64| -> Result<f64, TomlError> {
+            match d.get("modality", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[modality] {key}: expected number"))),
+            }
+        };
+        let modality = ModalityConfig {
+            enabled: mbool("enabled", mdef.enabled)?,
+            encoder_params: mnum("encoder_params", mdef.encoder_params)?,
+            embed_cache_frac: mnum("embed_cache_frac", mdef.embed_cache_frac)?,
+            embed_bytes_per_token: mnum(
+                "embed_bytes_per_token",
+                mdef.embed_bytes_per_token,
+            )?,
+        };
+        modality
+            .validate()
+            .map_err(|e| TomlError(format!("[modality] {e}")))?;
+
         let gpus_per_replica = n("", "gpus_per_replica")? as usize;
         let dp_replicas = n("", "dp_replicas")? as usize;
         fleet
@@ -771,6 +903,7 @@ impl SystemConfig {
             colocate,
             fleet,
             kv,
+            modality,
             gpus_per_replica,
             dp_replicas,
         })
@@ -977,6 +1110,67 @@ mod tests {
         assert_eq!(parsed.kv, KvConfig::default());
         assert!(!parsed.kv.enabled, "kv must default to disabled");
         assert!(!KvConfig::default().enabled);
+    }
+
+    #[test]
+    fn modality_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.modality.enabled = true;
+        cfg.modality.encoder_params = 3.04e8;
+        cfg.modality.embed_cache_frac = 0.1;
+        cfg.modality.embed_bytes_per_token = 2048.0;
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating the multi-modal subsystem (no [modality]
+        // section) must parse with the modality-blind default.
+        let mut stripped = String::new();
+        let mut in_mm = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[modality]" {
+                in_mm = true;
+                continue;
+            }
+            if in_mm && line.trim().starts_with('[') {
+                in_mm = false;
+            }
+            if !in_mm {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.modality, ModalityConfig::default());
+        assert!(!parsed.modality.enabled, "modality must default to blind");
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_modality_key_by_name() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg
+            .to_toml()
+            .replace("[modality]", "[modality]\nencodr_params = 1e9");
+        let err = SystemConfig::from_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("encodr_params"), "key name missing from: {err}");
+        assert!(err.contains("[modality]"), "section missing from: {err}");
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_modality_values() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg
+            .to_toml()
+            .replace("encoder_params = 2000000000", "encoder_params = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("embed_cache_frac = 0.05", "embed_cache_frac = 1");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("embed_bytes_per_token = 8192", "embed_bytes_per_token = -1");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        assert!(ModalityConfig::default().validate().is_ok());
     }
 
     #[test]

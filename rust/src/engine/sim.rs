@@ -11,8 +11,9 @@
 
 use super::prefix_cache::{PinHandle, RadixCache};
 use super::overlap_time;
-use crate::config::{EngineConfig, KvConfig, SchedulerConfig};
+use crate::config::{EngineConfig, KvConfig, ModalityConfig, OverlapMode, SchedulerConfig};
 use crate::kv::{recompute_cost, KvExtent, KvParams, KvRunState, SwapCosts, SwapDecision};
+use crate::modality::{Acquire, Attachment, EncoderCache, ModalityParams};
 use crate::perfmodel::PerfModel;
 use crate::trace::Workload;
 use std::collections::VecDeque;
@@ -46,6 +47,14 @@ pub struct SimRequest {
     /// Latency-sensitive online request: its prefill chunks take priority
     /// over offline prefills and it is exempt from SLO-driven preemption.
     pub is_online: bool,
+    /// Image/video attachments (DESIGN.md §10).  Each expands to a
+    /// vision-encoder pass, deduplicated through the engine's
+    /// [`EncoderCache`], that gates this request's prefill — except that
+    /// a duplicate acquirer of content already resident or in flight is
+    /// not re-gated (the pass is charged once, to its first owner; §10
+    /// documents the simplification).  Empty for text-only requests —
+    /// every modality code path is then inert.
+    pub attachments: Vec<Attachment>,
 }
 
 impl SimRequest {
@@ -60,7 +69,14 @@ impl SimRequest {
             ttft_slo: f64::INFINITY,
             tpot_slo: f64::INFINITY,
             is_online: false,
+            attachments: Vec::new(),
         }
+    }
+
+    /// Attach media to this request (builder style).
+    pub fn with_attachments(mut self, attachments: Vec<Attachment>) -> Self {
+        self.attachments = attachments;
+        self
     }
 
     /// A latency-sensitive online request with per-request SLOs.
@@ -82,6 +98,7 @@ impl SimRequest {
             ttft_slo,
             tpot_slo,
             is_online: true,
+            attachments: Vec::new(),
         }
     }
 
@@ -101,7 +118,10 @@ impl SimRequest {
         w.requests
             .iter()
             .zip(est)
-            .map(|(r, &e)| SimRequest::offline(r.id, r.prompt.clone(), r.output_len, e))
+            .map(|(r, &e)| {
+                SimRequest::offline(r.id, r.prompt.clone(), r.output_len, e)
+                    .with_attachments(r.modality.attachments.clone())
+            })
             .collect()
     }
 }
@@ -259,6 +279,17 @@ pub struct SimResult {
     pub link_busy_frac: f64,
     /// Seconds the engine idled waiting on unfinished swap-in transfers.
     pub link_stall_time: f64,
+    /// Vision-encoder seconds executed (DESIGN.md §10): attachments of
+    /// admitted requests, after embedding-cache dedup.  0 on text-only
+    /// workloads.
+    pub encode_time: f64,
+    /// Fraction of `encode_time` hidden in the compute headroom of
+    /// memory-bound steps (the rest ran as dedicated encoder passes that
+    /// extended the step).
+    pub encode_overlap_frac: f64,
+    /// Encoder tokens served from the embedding dedup cache instead of
+    /// re-running the encoder (duplicate attachments).
+    pub embed_cache_hit_tokens: u64,
     pub peak_kv_used: f64,
     /// Aggregate compute / memory busy time across all steps.
     pub total_comp: f64,
@@ -315,6 +346,31 @@ struct Active {
     decoding: bool,
     /// §5.4 online adaptation: moved Left→Right after underestimation.
     relocated: bool,
+    /// Encoder seconds still owed before prefill may start (DESIGN.md
+    /// §10).  0.0 for text-only requests and for cache-hit attachments.
+    encode_left: f64,
+    /// Content hashes this request pinned in the embedding cache
+    /// (transient misses pin nothing); released on finish/retraction.
+    att_pins: Vec<u64>,
+}
+
+/// Per-run modality accounting (DESIGN.md §10).  The embedding cache
+/// itself lives on the engine, like the radix cache; this tracks the
+/// encoder-work flow of one run.
+#[derive(Clone, Debug, Default)]
+struct MmRunState {
+    /// Number of actives with `encode_left > 0` — the cheap gate that
+    /// keeps the encode path entirely off the text-only hot path.  An
+    /// exact integer on purpose: a float running sum of `encode_left`
+    /// can drift to zero while a request still holds a ~1e-18 residual,
+    /// deadlocking its prefill gate.
+    waiting: usize,
+    /// Encoder seconds executed so far (headroom + dedicated).
+    encode_time: f64,
+    /// Seconds of `encode_time` hidden in compute headroom.
+    overlapped: f64,
+    /// Encoder tokens served from the embedding dedup cache.
+    hit_tokens: u64,
 }
 
 /// Retract `active[i]` (vLLM-style preemption): undo its memory and
@@ -341,9 +397,21 @@ fn retract_one(
     pm: &PerfModel,
     kv: &KvParams,
     kvst: &mut KvRunState,
+    ecache: &mut EncoderCache,
+    mm: &mut MmRunState,
     clock: f64,
 ) {
     let a = active.remove(i);
+    // Modality teardown: unpin the victim's embeddings (they stay
+    // resident for the re-admission to hit) and forfeit any unfinished
+    // encoder residual — the in-flight pass is assumed to complete off
+    // the critical path (DESIGN.md §10 documents this simplification).
+    for &h in &a.att_pins {
+        ecache.release(h);
+    }
+    if a.encode_left > 0.0 {
+        mm.waiting -= 1;
+    }
     let idx = by_id[a.req as usize];
     let r = &requests[idx];
     // What the victim actually holds in HBM beyond its pinned cache
@@ -448,6 +516,8 @@ pub struct RunState {
     rem_mem: f64,
     /// Tiered-KV swap state: host ledger, link timeline, counters.
     kv: KvRunState,
+    /// Modality state: pending encoder work + overlap counters.
+    mm: MmRunState,
 }
 
 impl RunState {
@@ -478,11 +548,21 @@ pub struct SimEngine {
     cfg: EngineConfig,
     sched: SchedulerConfig,
     pub kv_capacity: f64,
+    /// KV capacity before the embedding-cache carve (restored when
+    /// `with_modality` re-resolves).
+    base_kv_capacity: f64,
     cache: RadixCache,
     /// Tiered-KV swap parameters ([`KvParams::disabled`] by default:
     /// retraction discards and recomputes, the pre-tiering engine
     /// exactly).
     kv_params: KvParams,
+    /// Modality parameters (embedding-cache sizing), resolved from the
+    /// default `[modality]` section unless [`Self::with_modality`] is
+    /// called.  Consulted only when the request set carries attachments.
+    mm_params: ModalityParams,
+    /// Embedding dedup cache (zero-capacity on text-only request sets —
+    /// no KV is carved unless attachments exist).
+    ecache: EncoderCache,
     requests: Vec<SimRequest>,
     /// Dense request-id → index map (ids are dense per Workload; sparse
     /// hand-built ids cost only `max_id` slots).  Probed on every
@@ -509,16 +589,22 @@ impl SimEngine {
         for (i, r) in requests.iter().enumerate() {
             by_id[r.id as usize] = i;
         }
-        SimEngine {
+        let mm_params = ModalityParams::resolve(&ModalityConfig::default(), &pm);
+        let mut e = SimEngine {
             pm,
             cfg,
             sched,
             kv_capacity,
+            base_kv_capacity: kv_capacity,
             cache: RadixCache::new(cache_cap),
             kv_params: KvParams::disabled(),
+            mm_params,
+            ecache: EncoderCache::new(0, 1.0),
             requests,
             by_id,
-        }
+        };
+        e.apply_modality_carve();
+        e
     }
 
     /// Attach tiered-KV (host offload) parameters, resolved against this
@@ -528,6 +614,52 @@ impl SimEngine {
     pub fn with_kv(mut self, kv: &KvConfig) -> Self {
         self.kv_params = KvParams::resolve(kv, &self.pm);
         self
+    }
+
+    /// Attach `[modality]` parameters (embedding-cache sizing), resolved
+    /// against this engine's perf model.  Engines built without this call
+    /// use the default section.  Note the scheduler-awareness half of the
+    /// config lives on the *perf model* (`PerfModel::set_modality`), not
+    /// here — the engine simulates attachment physics unconditionally.
+    pub fn with_modality(mut self, m: &ModalityConfig) -> Self {
+        self.mm_params = ModalityParams::resolve(m, &self.pm);
+        self.apply_modality_carve();
+        self
+    }
+
+    /// Carve the embedding cache out of KV memory — only when the request
+    /// set actually carries attachments, so text-only runs keep their full
+    /// KV capacity and stay bit-identical to the pre-modality engine.
+    /// The carve is capped at half the KV budget, and the cache is sized
+    /// to the carve *actually taken* — a cache larger than the memory it
+    /// displaced would model HBM that does not exist.
+    fn apply_modality_carve(&mut self) {
+        let has_atts = self.requests.iter().any(|r| !r.attachments.is_empty());
+        if has_atts && self.mm_params.cache_bytes > 0.0 {
+            let bpt = self.pm.model.kv_bytes_per_token;
+            let cache_bytes = self
+                .mm_params
+                .cache_bytes
+                .min(0.5 * self.base_kv_capacity * bpt);
+            self.kv_capacity = self.base_kv_capacity - cache_bytes / bpt;
+            self.ecache = EncoderCache::new(
+                cache_bytes as u64,
+                self.mm_params.embed_bytes_per_token,
+            );
+        } else {
+            self.kv_capacity = self.base_kv_capacity;
+            self.ecache = EncoderCache::new(0, 1.0);
+        }
+        // The radix prefix cache's residency ceiling must track the
+        // carved budget too (it was sized at construction against the
+        // pre-carve capacity).  Only called before a run starts, so
+        // rebuilding the empty cache is safe.
+        let cache_cap = if self.cfg.prefix_cache {
+            self.kv_capacity as u64
+        } else {
+            0
+        };
+        self.cache = RadixCache::new(cache_cap);
     }
 
     /// Number of requests currently known to the engine.
@@ -629,6 +761,7 @@ impl SimEngine {
             // charged to recomputed_tokens at retract_one time.
             None => (hit, 0),
         };
+        let was_restored = restored.is_some();
         let est = self.admission_charge(idx, restored.map(|e| e.decoded));
         match side {
             Side::Left => st.used_left += est,
@@ -640,6 +773,52 @@ impl SimEngine {
             st.result.prompt_tokens += prompt.len() as u64;
             st.result.hit_tokens += hit as u64;
         }
+        // ---- modality: acquire attachments through the dedup cache ----
+        // A hit serves the embedding from cache (no encoder pass); a miss
+        // owes one pass, gating this request's prefill.  Duplicate
+        // hashes acquired while the first owner is still encoding share
+        // that single pass (in-flight dedup).  A *discarded* retraction
+        // re-acquires on re-admission — its prefill restarts, so the
+        // embeddings are genuinely consumed again (a surviving cache
+        // entry makes that free).  A *swap-restored* re-admission skips
+        // the whole block: its prompt KV came back over the link, the
+        // embeddings were already consumed by the completed prefill, and
+        // re-encoding would both double-bill encode_time and block the
+        // resumed decode on a physically unnecessary pass.
+        let mut encode_left = 0.0f64;
+        let mut att_pins = Vec::new();
+        if !was_restored && !self.requests[idx].attachments.is_empty() {
+            // Hashes this request already owes a pass for: the same
+            // medium attached twice is encoded once (a second-touch
+            // transient-then-cached pair must not double-bill).
+            let mut charged: Vec<u64> = Vec::new();
+            for att in &self.requests[idx].attachments {
+                match self.ecache.acquire(att.content_hash, att.enc_tokens) {
+                    Acquire::Hit => {
+                        if !readmission {
+                            st.mm.hit_tokens += att.enc_tokens as u64;
+                        }
+                        att_pins.push(att.content_hash);
+                    }
+                    Acquire::MissCached => {
+                        if !charged.contains(&att.content_hash) {
+                            encode_left += self.pm.encode_time(att.enc_tokens as f64);
+                            charged.push(att.content_hash);
+                        }
+                        att_pins.push(att.content_hash);
+                    }
+                    Acquire::MissTransient => {
+                        if !charged.contains(&att.content_hash) {
+                            encode_left += self.pm.encode_time(att.enc_tokens as f64);
+                            charged.push(att.content_hash);
+                        }
+                    }
+                }
+            }
+            if encode_left > 0.0 {
+                st.mm.waiting += 1;
+            }
+        }
         st.active.push(Active {
             req,
             side,
@@ -650,6 +829,8 @@ impl SimEngine {
             charge: est,
             decoding: false,
             relocated: false,
+            encode_left,
+            att_pins,
         });
     }
 
@@ -712,11 +893,20 @@ impl SimEngine {
             rem_comp,
             rem_mem,
             kv: KvRunState::new(&self.kv_params),
+            mm: MmRunState::default(),
         }
     }
 
     /// Add requests to a paused run (work-stealing refill).  The matching
-    /// units must be fed to the admitter separately.  A request this
+    /// units must be fed to the admitter separately.
+    ///
+    /// Modality limitation: the embed-cache carve is frozen at `begin`
+    /// time — re-carving mid-run would resize KV under live actives and
+    /// drop pinned embeddings.  A replica whose *initial* shard was
+    /// text-only therefore runs stolen attachment units with a
+    /// zero-capacity embed cache (every acquire transient: encodes still
+    /// paid, dedup foregone) — conservative, never optimistic
+    /// (DESIGN.md §10).  A request this
     /// engine already knows (a unit stolen away earlier and now stolen
     /// back) is *re-armed* rather than re-added: its request/timing slots
     /// still exist from the original shard, so only its pacer share —
@@ -888,6 +1078,8 @@ impl SimEngine {
                                 &self.pm,
                                 &self.kv_params,
                                 &mut st.kv,
+                                &mut self.ecache,
+                                &mut st.mm,
                                 st.clock,
                             );
                             st.result.retractions += 1;
@@ -951,9 +1143,11 @@ impl SimEngine {
         }
 
         // ---- phase transitions (at step start) ----
+        // An unfinished encoder pass gates the whole request: a full-hit
+        // prompt still cannot decode before its embeddings exist.
         for a in st.active.iter_mut() {
             let p = self.requests[self.by_id[a.req as usize]].input_len();
-            if !a.decoding && a.prefill_pos >= p {
+            if !a.decoding && a.prefill_pos >= p && a.encode_left <= 0.0 {
                 a.decoding = true;
                 st.decode_ctx_sum += (p + a.decoded as usize) as f64;
             }
@@ -1000,6 +1194,11 @@ impl SimEngine {
                 if a.decoding || chunk_left == 0 {
                     continue;
                 }
+                // Still encoding: embeddings are prefill inputs, so no
+                // prompt tokens may run yet.
+                if a.encode_left > 0.0 {
+                    continue;
+                }
                 let req = &self.requests[self.by_id[a.req as usize]];
                 if (pass == 0) != req.is_online {
                     continue;
@@ -1020,8 +1219,55 @@ impl SimEngine {
         } else {
             self.pm.mem_kv_load(st.decode_ctx_sum)
         };
+        // ---- encoder scheduling (DESIGN.md §10) ----
+        // Pending encoder passes drain into the compute *headroom* of
+        // memory-bound steps: under operator overlap the encoder kernels
+        // ride the idle SMs beneath the KV streaming, for free — the
+        // paper's resource overlapping with a third demand source.  Only
+        // when the engine would otherwise idle entirely (nothing to
+        // prefill, nothing decoding — the batch is blocked on encoders)
+        // does the oldest gated request's residual run as a *dedicated*
+        // pass appended to the step, guaranteeing progress on any
+        // schedule.  Text-only steps skip all of this (`pending == 0`),
+        // leaving step time bit-identical.
+        let mut enc_dedicated = 0.0f64;
+        if st.mm.waiting > 0 {
+            let mut budget = match self.cfg.overlap {
+                OverlapMode::Overlapped => (t_mem - t_comp).max(0.0),
+                OverlapMode::Sequential => 0.0,
+            };
+            let mut drained = 0.0f64;
+            for a in st.active.iter_mut() {
+                if budget <= 0.0 || st.mm.waiting == 0 {
+                    break;
+                }
+                if a.encode_left > 0.0 {
+                    let take = a.encode_left.min(budget);
+                    // `x - x == 0.0` exactly in IEEE, so a fully-drained
+                    // request leaves the waiting set deterministically.
+                    a.encode_left -= take;
+                    budget -= take;
+                    drained += take;
+                    if a.encode_left <= 0.0 {
+                        a.encode_left = 0.0;
+                        st.mm.waiting -= 1;
+                    }
+                }
+            }
+            st.mm.overlapped += drained;
+            st.mm.encode_time += drained;
+            if prefill_tokens == 0 && decode_tokens == 0 && st.mm.waiting > 0 {
+                if let Some(a) = st.active.iter_mut().find(|a| a.encode_left > 0.0) {
+                    enc_dedicated = a.encode_left;
+                    a.encode_left = 0.0;
+                    st.mm.waiting -= 1;
+                    st.mm.encode_time += enc_dedicated;
+                }
+            }
+        }
         let step_time =
-            overlap_time(self.cfg.overlap, self.pm.hw.interference, t_comp, t_mem);
+            overlap_time(self.cfg.overlap, self.pm.hw.interference, t_comp, t_mem)
+                + enc_dedicated;
         st.clock += step_time;
         st.result.total_comp += t_comp;
         st.result.total_mem += t_mem;
@@ -1059,6 +1305,15 @@ impl SimEngine {
                     let a = st.active.swap_remove(i);
                     let r = &self.requests[idx];
                     self.cache.release(a.pin);
+                    // Unpin embeddings; they stay LRU-resident for dedup.
+                    for &h in &a.att_pins {
+                        self.ecache.release(h);
+                    }
+                    debug_assert_eq!(
+                        a.encode_left, 0.0,
+                        "request {} decoded before encoding finished",
+                        a.req
+                    );
                     st.decode_ctx_sum -= (p + a.decoded as usize) as f64;
                     st.private_tokens -= a.private_prompt + a.decoded as f64;
                     match a.side {
@@ -1109,6 +1364,8 @@ impl SimEngine {
                     &self.pm,
                     &self.kv_params,
                     &mut st.kv,
+                    &mut self.ecache,
+                    &mut st.mm,
                     st.clock,
                 );
                 st.result.retractions += 1;
@@ -1131,7 +1388,7 @@ impl SimEngine {
         // loop forever — cannot happen (admission guarantees ≥1 active,
         // and actives always progress), but guard in debug builds.
         debug_assert!(
-            prefill_tokens > 0 || decode_tokens > 0,
+            prefill_tokens > 0 || decode_tokens > 0 || enc_dedicated > 0.0,
             "stalled at step {}",
             st.step
         );
@@ -1159,6 +1416,14 @@ impl SimEngine {
         } else {
             0.0
         };
+        // ---- modality accounting ----
+        st.result.encode_time = st.mm.encode_time;
+        st.result.encode_overlap_frac = if st.mm.encode_time > 0.0 {
+            st.mm.overlapped / st.mm.encode_time
+        } else {
+            0.0
+        };
+        st.result.embed_cache_hit_tokens = st.mm.hit_tokens;
         st.result.throughput = if st.clock > 0.0 {
             st.result.total_tokens as f64 / st.clock
         } else {
@@ -1477,6 +1742,177 @@ mod tests {
         assert_eq!(r.swapped_in_tokens, r.swapped_out_tokens);
         // Whatever did swap fit the budget; the rest recomputed.
         assert!(r.retractions > 0);
+    }
+
+    // ---- modality: encoder scheduling + embedding dedup ----
+
+    fn with_att(mut reqs: Vec<SimRequest>, tokens: u32, shared: bool) -> Vec<SimRequest> {
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let hash = if shared { 7 } else { 100 + i as u64 };
+            r.attachments = vec![Attachment::new(hash, tokens)];
+        }
+        reqs
+    }
+
+    #[test]
+    fn modality_free_workload_is_bit_identical_to_default_engine() {
+        // An engine explicitly configured with a (non-default) [modality]
+        // section must reproduce the default engine exactly on an
+        // attachment-free workload: no carve, no encode, same step times
+        // and per-request finish order (same pattern as
+        // kv_disabled_is_bit_identical_to_default_engine).
+        let mk = || {
+            let mut pm = pm();
+            pm.hw.memory_bytes = 22e9; // include the retraction path
+            let sched = SchedulerConfig {
+                max_batch_requests: 64,
+                ..SchedulerConfig::default()
+            };
+            SimEngine::new(pm, EngineConfig::default(), sched, mk_reqs(40, 200, 2000, 0))
+        };
+        let base = mk().run(&mut StaticOrder::new((0..40).collect()));
+        let mm_cfg = ModalityConfig {
+            enabled: true,
+            embed_cache_frac: 0.3,
+            ..ModalityConfig::default()
+        };
+        let mut e2 = mk().with_modality(&mm_cfg);
+        assert_eq!(e2.kv_capacity, mk().kv_capacity, "carve applied without attachments");
+        let off = e2.run(&mut StaticOrder::new((0..40).collect()));
+        assert_eq!(base.total_time, off.total_time);
+        assert_eq!(base.steps, off.steps);
+        assert_eq!(base.retractions, off.retractions);
+        assert_eq!(base.total_tokens, off.total_tokens);
+        assert_eq!(base.total_comp, off.total_comp);
+        assert_eq!(base.total_mem, off.total_mem);
+        assert_eq!(off.encode_time, 0.0);
+        assert_eq!(off.encode_overlap_frac, 0.0);
+        assert_eq!(off.embed_cache_hit_tokens, 0);
+        for (a, b) in base.timings.iter().zip(&off.timings) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish, b.finish, "finish order diverged at {}", a.id);
+        }
+    }
+
+    #[test]
+    fn encode_gates_prefill_and_charges_time() {
+        // Single request: no batch to hide under, so the whole encoder
+        // pass runs dedicated and the makespan is exactly text + encode.
+        let text = vec![SimRequest::offline(0, Arc::new((0..300).collect()), 40, 40)];
+        let plain = engine(text.clone()).run(&mut StaticOrder::new(vec![0]));
+        let att = with_att(text, 8192, false);
+        let mut e = engine(att);
+        let enc_s = 8192.0 * e.pm.enc_flops_per_token / e.pm.compute();
+        let r = e.run(&mut StaticOrder::new(vec![0]));
+        assert!(r.encode_time > 0.0);
+        assert!((r.encode_time - enc_s).abs() < 1e-12);
+        assert_eq!(r.encode_overlap_frac, 0.0, "nothing to overlap with");
+        assert!(
+            (r.total_time - (plain.total_time + enc_s)).abs() < 1e-9,
+            "att {} vs text {} + enc {enc_s}",
+            r.total_time,
+            plain.total_time
+        );
+        // First token cannot precede the encoder pass.
+        assert!(r.timings[0].first_token > enc_s);
+    }
+
+    #[test]
+    fn encode_overlaps_into_memory_bound_steps() {
+        // Decode-heavy actives keep steps memory-bound; a late wave of
+        // attachment-carrying requests encodes inside that headroom.
+        let mut reqs = mk_reqs(24, 32, 3000, 0);
+        let extra = with_att(
+            mk_reqs(8, 64, 400, 1_000_000)
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut r)| {
+                    r.id = 24 + i as u32;
+                    r
+                })
+                .collect(),
+            4096,
+            false,
+        );
+        reqs.extend(extra);
+        let mut e = engine(reqs);
+        let r = e.run(&mut StaticOrder::new((0..32).collect()));
+        assert!(r.encode_time > 0.0);
+        assert!(
+            r.encode_overlap_frac > 0.0,
+            "no encoder work hidden under decode headroom"
+        );
+        assert!(r.encode_overlap_frac <= 1.0);
+        assert_eq!(r.total_tokens, 24 * 3032 + 8 * 464);
+    }
+
+    #[test]
+    fn duplicate_attachments_dedup_through_embed_cache() {
+        let uniq = with_att(mk_reqs(12, 100, 60, 0), 4096, false);
+        let shared = with_att(mk_reqs(12, 100, 60, 0), 4096, true);
+        let ru = engine(uniq).run(&mut StaticOrder::new((0..12).collect()));
+        let rs = engine(shared).run(&mut StaticOrder::new((0..12).collect()));
+        assert_eq!(ru.embed_cache_hit_tokens, 0, "unique content cannot hit");
+        assert!(
+            rs.embed_cache_hit_tokens > 0,
+            "duplicate attachments never hit the dedup cache"
+        );
+        // Second-touch admission: acquire #1 transient, #2 caches, #3-12
+        // hit — ten of twelve served from the dedup cache, two passes run.
+        assert_eq!(rs.embed_cache_hit_tokens, 10 * 4096);
+        assert!(
+            rs.encode_time < ru.encode_time / 5.0,
+            "dedup saved no encoder work: {} vs {}",
+            rs.encode_time,
+            ru.encode_time
+        );
+        assert!(rs.total_time <= ru.total_time + 1e-12);
+    }
+
+    #[test]
+    fn same_hash_twice_in_one_request_bills_one_pass() {
+        // Regression: a second-touch transient-then-cached pair inside
+        // one request used to charge the encoder twice for one medium.
+        let mut reqs = mk_reqs(1, 50, 10, 0);
+        reqs[0].attachments = vec![Attachment::new(9, 1000), Attachment::new(9, 1000)];
+        let mut e = engine(reqs);
+        let enc_s = e.pm.encode_time(1000.0);
+        let r = e.run(&mut StaticOrder::new(vec![0]));
+        assert!(
+            (r.encode_time - enc_s).abs() < 1e-15,
+            "duplicate in-request hash double-billed: {} vs one pass {enc_s}",
+            r.encode_time
+        );
+        // The first acquire was transient (second-touch filter), the
+        // second cached-and-pinned; neither counts as a dedup hit.
+        assert_eq!(r.embed_cache_hit_tokens, 0);
+    }
+
+    #[test]
+    fn attachments_carve_embed_cache_from_kv() {
+        let plain = engine(mk_reqs(4, 50, 10, 0));
+        let att = engine(with_att(mk_reqs(4, 50, 10, 0), 576, false));
+        assert!(
+            att.kv_capacity < plain.kv_capacity,
+            "attachment workload did not carve the embed cache"
+        );
+        // Default carve: 5% of KV bytes.
+        let want = plain.kv_capacity * 0.95;
+        assert!((att.kv_capacity - want).abs() / want < 1e-9);
+        // An extreme embed_cache_frac is capped at half the KV budget,
+        // and the cache is sized to the carve actually taken — the
+        // modeled memory must stay physical.
+        let big = ModalityConfig { embed_cache_frac: 0.9, ..ModalityConfig::default() };
+        let capped =
+            engine(with_att(mk_reqs(4, 50, 10, 0), 576, false)).with_modality(&big);
+        let half = plain.kv_capacity * 0.5;
+        assert!((capped.kv_capacity - half).abs() / half < 1e-9);
+        let bpt = capped.pm.model.kv_bytes_per_token;
+        let cache_bytes = capped.ecache.capacity_bytes() as f64;
+        assert!(
+            (cache_bytes / bpt - half).abs() / half < 1e-6,
+            "cache sized beyond the carve: {cache_bytes} bytes vs carve {half} tokens"
+        );
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! - **L3 (this crate)** — the paper's contribution: a resource-aware prefix
 //!   tree ([`tree`]), the dual-scanner request scheduler ([`scheduler`]), a
 //!   NanoFlow-style overlapping execution engine ([`engine`]) with a tiered
-//!   HBM ↔ host KV manager ([`kv`], DESIGN.md §9), workload
+//!   HBM ↔ host KV manager ([`kv`], DESIGN.md §9) and a multi-modal
+//!   request subsystem — vision-encoder demand, embedding dedup cache and
+//!   encode/decode overlap ([`modality`], DESIGN.md §10) — workload
 //!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
 //!   tensor parallel deployment ([`parallel`]) and the serving frontends
 //!   ([`server`]) — the offline batch API plus online/offline co-located
@@ -28,6 +30,7 @@ pub mod baselines;
 pub mod config;
 pub mod engine;
 pub mod kv;
+pub mod modality;
 pub mod parallel;
 pub mod perfmodel;
 pub mod scheduler;
@@ -41,8 +44,8 @@ pub mod util;
 pub mod runtime;
 
 pub use config::{
-    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, KvConfig, ModelSpec,
-    SchedulerConfig, SystemConfig,
+    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, KvConfig,
+    ModalityConfig, ModelSpec, SchedulerConfig, SystemConfig,
 };
 pub use perfmodel::PerfModel;
 pub use trace::{Request, Workload};

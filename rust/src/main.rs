@@ -6,6 +6,7 @@
 //! blendserve fleet    --pool pool.jsonl [--dp N] [--no-steal] [--gpus 1,1,2] [--hardware a,b]
 //! blendserve colocate --pool pool.jsonl [--online-rate 4] [--slo-scale 5] [--policy elastic]
 //! blendserve kv       --pool pool.jsonl [--memory-gb 22] [--margins 0.5,1,2] [--out kv.json]
+//! blendserve modality [--n 1200] [--dup 0.4] [--encoder-params 2e9] [--out mm.json]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
@@ -44,6 +45,8 @@ USAGE:
   blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
                       [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
   blendserve kv       --pool FILE [--memory-gb F] [--margins F,F,..] [--host-gb F] [--no-prefetch]
+                      [--model NAME] [--out FILE]
+  blendserve modality [--pool FILE] [--n N] [--dup F] [--encoder-params F] [--cache-frac F]
                       [--model NAME] [--out FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve config   [--preset MODEL]
@@ -302,6 +305,113 @@ fn cmd_colocate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `blendserve modality`: modality-aware vs modality-blind BlendServe on
+/// a mixed image-chat + video-gen + text workload (DESIGN.md §10).  With
+/// `--pool` the comparison runs on an existing (attachment-carrying)
+/// pool; without it the canonical `mixed_modal` trace is generated.
+fn cmd_modality(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    use blendserve::scheduler::run_system;
+    use blendserve::trace::synth::mixed_modal;
+    use blendserve::util::Json;
+
+    let mut cfg = baselines::blendserve();
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    if let Some(p) = flags.get("encoder-params") {
+        cfg.modality.encoder_params = p.parse()?;
+    }
+    if let Some(f) = flags.get("cache-frac") {
+        cfg.modality.embed_cache_frac = f.parse()?;
+    }
+    cfg.modality
+        .validate()
+        .map_err(|e| anyhow::anyhow!("modality config: {e}"))?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(1200);
+    let dup: f64 = flags.get("dup").map(|s| s.parse()).transpose()?.unwrap_or(0.4);
+    anyhow::ensure!((0.0..=1.0).contains(&dup), "--dup must be in [0, 1], got {dup}");
+    // (source, workload): --n/--dup shape only the generated trace; a
+    // --pool run must not report them as if they described the pool.
+    let (source, w) = match flags.get("pool") {
+        Some(p) => {
+            let w = load_jsonl(Path::new(p))?;
+            anyhow::ensure!(!w.is_empty(), "pool {p} contains no requests");
+            anyhow::ensure!(
+                !flags.contains_key("n") && !flags.contains_key("dup"),
+                "--n/--dup shape the generated trace and conflict with --pool"
+            );
+            (p.clone(), w)
+        }
+        // Canonical §10 mix: 60% text / 25% image chat / 15% video gen.
+        None => (
+            "generated".to_string(),
+            mixed_modal(n * 60 / 100, n * 25 / 100, n * 15 / 100, dup, 7),
+        ),
+    };
+    println!(
+        "modality sweep: {} requests ({} with media, {:.1}M encoder tokens) on {}",
+        w.len(),
+        w.requests.iter().filter(|r| !r.modality.is_empty()).count(),
+        w.total_encoder_tokens() as f64 / 1e6,
+        cfg.model.name,
+    );
+    cfg.modality.enabled = false;
+    let blind = run_system(&cfg, &w);
+    cfg.modality.enabled = true;
+    let aware = run_system(&cfg, &w);
+    let speedup =
+        aware.result.throughput / blind.result.throughput.max(1e-12);
+    for (name, out) in [("blind", &blind), ("aware", &aware)] {
+        let r = &out.result;
+        println!(
+            "{name:<6} makespan {:>8.2}s | {:>8.0} tok/s | encode {:>7.2}s \
+             (overlap {:>5.1}%) | embed hits {:>8} tok | sharing {:.3}",
+            r.total_time,
+            r.throughput,
+            r.encode_time,
+            r.encode_overlap_frac * 100.0,
+            r.embed_cache_hit_tokens,
+            r.sharing_achieved,
+        );
+    }
+    println!("modality-aware speedup {speedup:.3}x over blind ordering");
+    if let Some(out) = flags.get("out") {
+        let row = |o: &blendserve::scheduler::RunOutput| {
+            let r = &o.result;
+            Json::obj(vec![
+                ("makespan_s", Json::Num(r.total_time)),
+                ("throughput_tok_s", Json::Num(r.throughput)),
+                ("encode_time_s", Json::Num(r.encode_time)),
+                ("encode_overlap_frac", Json::Num(r.encode_overlap_frac)),
+                (
+                    "embed_cache_hit_tokens",
+                    Json::from(r.embed_cache_hit_tokens as usize),
+                ),
+                ("sharing_achieved", Json::Num(r.sharing_achieved)),
+            ])
+        };
+        let mut fields = vec![
+            ("source", Json::from(source.as_str())),
+            ("n_requests", Json::from(w.len())),
+            ("encoder_params", Json::Num(cfg.modality.encoder_params)),
+        ];
+        if source == "generated" {
+            fields.push(("dup_frac", Json::Num(dup)));
+        }
+        fields.extend([
+            ("blind", row(&blind)),
+            ("aware", row(&aware)),
+            ("aware_speedup", Json::Num(speedup)),
+        ]);
+        let doc = Json::obj(fields);
+        std::fs::write(out, format!("{doc}\n"))?;
+        println!("report -> {out}");
+    }
+    Ok(())
+}
+
 /// `blendserve kv`: sweep the tiered KV manager's swap margin against the
 /// discard baseline on one pool (DESIGN.md §9).  `--memory-gb` shrinks
 /// device memory to provoke retractions; the baseline row is always the
@@ -480,6 +590,7 @@ fn main() -> anyhow::Result<()> {
         "fleet" => cmd_fleet(flags),
         "colocate" => cmd_colocate(flags),
         "kv" => cmd_kv(flags),
+        "modality" => cmd_modality(flags),
         "serve" => cmd_serve(flags),
         "config" => cmd_config(flags),
         _ => usage(),

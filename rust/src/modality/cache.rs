@@ -1,0 +1,294 @@
+//! The embedding dedup cache (DESIGN.md §10): content-hash → encoder
+//! embedding, refcounted against live requests, LRU-evicted under a byte
+//! budget.
+//!
+//! This is the multi-modal analog of the runtime prefix cache: where the
+//! radix cache deduplicates *token-sequence* prefixes, the encoder cache
+//! deduplicates *media* — a popular image attached to many chat requests,
+//! a conditioning clip reused across video-generation requests — so the
+//! vision encoder runs once per distinct content hash instead of once per
+//! attachment.
+//!
+//! Semantics (pinned by `tests/encoder_cache_oracle.rs` against a naive
+//! reference):
+//!
+//! - [`EncoderCache::acquire`] looks up a content hash.  A **hit** pins
+//!   the entry (refcount +1) and costs no encoder work.  A miss is
+//!   cached-and-pinned only past two admission filters (below); otherwise
+//!   it is **transient** — encoded but never cached (nor released).
+//! - **Second-touch admission** (TinyLFU-style): the first sighting of a
+//!   hash is never cached.  A dedup cache exists for *shared* content;
+//!   one-off media — above all large unique video conditioning clips —
+//!   would otherwise pin-starve and evict the reusable image embeddings.
+//! - **Oversize bypass**: an entry larger than capacity/8 is never
+//!   cached, bounding what any single medium can claim.
+//! - [`EncoderCache::release`] unpins one reference; the entry stays
+//!   resident (ordinary LRU candidate) until capacity pressure evicts it.
+//! - Eviction strictly observes refcounts: a pinned entry is never
+//!   evicted, exactly like the radix cache's pinned prefixes.
+//!
+//! Determinism: eviction picks the minimum `last_use` tick, and ticks are
+//! unique (one per touch), so the iteration order of the backing map
+//! never influences behaviour.
+
+use std::collections::{HashMap, HashSet};
+
+/// Outcome of one [`EncoderCache::acquire`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acquire {
+    /// Embedding already resident: no encoder work, entry pinned.
+    Hit,
+    /// Not resident; inserted and pinned.  The caller owes one encoder
+    /// pass (shared with any concurrent acquirer of the same hash).
+    MissCached,
+    /// Not resident and does not fit (pinned entries block eviction).
+    /// The caller owes an encoder pass and must NOT release afterwards.
+    MissTransient,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    tokens: u32,
+    refs: u32,
+    last_use: u64,
+}
+
+/// Content-hash dedup cache for encoder embeddings.
+#[derive(Clone, Debug)]
+pub struct EncoderCache {
+    capacity_bytes: u64,
+    bytes_per_token: f64,
+    entries: HashMap<u64, Entry>,
+    /// Hashes sighted at least once — the second-touch admission filter.
+    seen: HashSet<u64>,
+    used_bytes: u64,
+    tick: u64,
+    hit_tokens: u64,
+    evictions: u64,
+}
+
+impl EncoderCache {
+    /// Cache-admission bypass: an entry larger than `capacity / 8` is
+    /// never cached.  One oversized one-off (a video conditioning clip)
+    /// would otherwise pin-starve or evict dozens of small *reusable*
+    /// embeddings — dedup targets shared content, and shared content is
+    /// small and frequent.
+    pub const OVERSIZED_DIVISOR: u64 = 8;
+
+    pub fn new(capacity_bytes: u64, bytes_per_token: f64) -> Self {
+        assert!(bytes_per_token > 0.0, "embed bytes/token must be positive");
+        EncoderCache {
+            capacity_bytes,
+            bytes_per_token,
+            entries: HashMap::new(),
+            seen: HashSet::new(),
+            used_bytes: 0,
+            tick: 0,
+            hit_tokens: 0,
+            evictions: 0,
+        }
+    }
+
+    fn entry_bytes(&self, tokens: u32) -> u64 {
+        (tokens as f64 * self.bytes_per_token).ceil() as u64
+    }
+
+    /// Look up `content_hash`, pinning on hit or cacheable miss.
+    pub fn acquire(&mut self, content_hash: u64, tokens: u32) -> Acquire {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&content_hash) {
+            debug_assert_eq!(
+                e.tokens, tokens,
+                "content hash {content_hash} reused with a different token count"
+            );
+            e.refs += 1;
+            e.last_use = self.tick;
+            self.hit_tokens += e.tokens as u64;
+            return Acquire::Hit;
+        }
+        let need = self.entry_bytes(tokens);
+        if need > self.capacity_bytes / Self::OVERSIZED_DIVISOR {
+            return Acquire::MissTransient;
+        }
+        if self.seen.insert(content_hash) {
+            // First touch: encoded but not cached.  Only content that
+            // proves shared (a second sighting) earns residency.
+            return Acquire::MissTransient;
+        }
+        // Evict unreferenced LRU entries until the new entry fits.
+        while self.used_bytes + need > self.capacity_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refs == 0)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&h, _)| h);
+            match victim {
+                Some(h) => {
+                    let e = self.entries.remove(&h).expect("victim present");
+                    self.used_bytes -= self.entry_bytes(e.tokens);
+                    self.evictions += 1;
+                }
+                // Everything resident is pinned: the embedding is
+                // computed for this request but never cached.
+                None => return Acquire::MissTransient,
+            }
+        }
+        self.used_bytes += need;
+        self.entries
+            .insert(content_hash, Entry { tokens, refs: 1, last_use: self.tick });
+        Acquire::MissCached
+    }
+
+    /// Unpin one reference on `content_hash`.  Panics (debug) on an
+    /// unknown hash or a refcount underflow — callers track which
+    /// attachments they actually pinned (`Acquire::MissTransient` pins
+    /// nothing).
+    pub fn release(&mut self, content_hash: u64) {
+        let e = self
+            .entries
+            .get_mut(&content_hash)
+            .expect("release of an attachment that was never pinned");
+        assert!(e.refs > 0, "encoder cache refcount underflow");
+        e.refs -= 1;
+    }
+
+    /// Bytes currently resident (pinned + reclaimable).
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Tokens held by pinned (refcount > 0) entries.
+    pub fn pinned_tokens(&self) -> u64 {
+        self.entries
+            .values()
+            .filter(|e| e.refs > 0)
+            .map(|e| e.tokens as u64)
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Encoder tokens served from cache over the cache's lifetime.
+    pub fn hit_tokens(&self) -> u64 {
+        self.hit_tokens
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(cap_tokens: u64) -> EncoderCache {
+        // 1 byte per token keeps the arithmetic readable.
+        EncoderCache::new(cap_tokens, 1.0)
+    }
+
+    /// First sighting of a hash: transient by the second-touch filter.
+    fn prime(c: &mut EncoderCache, h: u64, tok: u32) {
+        assert_eq!(c.acquire(h, tok), Acquire::MissTransient, "first touch cached");
+    }
+
+    #[test]
+    fn second_touch_then_hit_then_dedup() {
+        let mut c = cache(1000);
+        prime(&mut c, 7, 100);
+        assert!(c.is_empty(), "first touch must not cache");
+        assert_eq!(c.acquire(7, 100), Acquire::MissCached);
+        assert_eq!(c.acquire(7, 100), Acquire::Hit);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 100);
+        assert_eq!(c.hit_tokens(), 100);
+        assert_eq!(c.pinned_tokens(), 100); // two pins, one entry
+        c.release(7);
+        c.release(7);
+        assert_eq!(c.pinned_tokens(), 0);
+        assert_eq!(c.used_bytes(), 100); // stays resident for reuse
+    }
+
+    #[test]
+    fn lru_eviction_spares_pinned() {
+        // Capacity 800 fits eight 100-token entries (each exactly at the
+        // oversize threshold of cap/8).
+        let mut c = cache(800);
+        for h in 1..=8u64 {
+            prime(&mut c, h, 100);
+            assert_eq!(c.acquire(h, 100), Acquire::MissCached);
+        }
+        c.release(2); // entry 2 unreferenced, LRU among unreferenced
+        c.release(5);
+        // Full: inserting 9 (primed) evicts the LRU unreferenced victim.
+        prime(&mut c, 9, 100);
+        assert_eq!(c.acquire(9, 100), Acquire::MissCached);
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.acquire(1, 100), Acquire::Hit, "pinned entry evicted");
+        assert_eq!(c.acquire(5, 100), Acquire::Hit, "MRU evicted before LRU");
+        // The evicted victim is already `seen`, so its next acquire is a
+        // (re-)insert attempt — blocked because everything is pinned.
+        assert_eq!(c.acquire(2, 100), Acquire::MissTransient, "victim resident");
+    }
+
+    #[test]
+    fn transient_when_pins_block() {
+        let mut c = cache(800);
+        for h in 1..=8u64 {
+            prime(&mut c, h, 100);
+            assert_eq!(c.acquire(h, 100), Acquire::MissCached); // all pinned
+        }
+        prime(&mut c, 99, 100);
+        assert_eq!(c.acquire(99, 100), Acquire::MissTransient);
+        assert_eq!(c.len(), 8);
+        c.release(3);
+        assert_eq!(c.acquire(99, 100), Acquire::MissCached); // 3 evictable
+        assert_eq!(c.acquire(3, 100), Acquire::MissTransient);
+    }
+
+    #[test]
+    fn oversized_entries_bypass_the_cache() {
+        // Larger than capacity / OVERSIZED_DIVISOR: never cached — even
+        // on repeated touches — so a huge conditioning clip cannot starve
+        // reusable image embeds.
+        let mut c = cache(800);
+        assert_eq!(c.acquire(9, 101), Acquire::MissTransient);
+        assert_eq!(c.acquire(9, 101), Acquire::MissTransient);
+        assert!(c.is_empty());
+        // At-threshold content follows the normal second-touch path.
+        prime(&mut c, 8, 100);
+        assert_eq!(c.acquire(8, 100), Acquire::MissCached);
+        // Zero-capacity cache (modality cache disabled): everything
+        // transient, nothing resident.
+        let mut z = cache(0);
+        assert_eq!(z.acquire(1, 1), Acquire::MissTransient);
+        assert_eq!(z.acquire(1, 1), Acquire::MissTransient);
+        assert_eq!(z.used_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "never pinned")]
+    fn release_unknown_hash_panics() {
+        cache(10).release(42);
+    }
+
+    #[test]
+    fn fractional_bytes_round_up() {
+        let mut c = EncoderCache::new(80, 1.5);
+        prime(&mut c, 1, 3);
+        assert_eq!(c.acquire(1, 3), Acquire::MissCached); // ceil(4.5) = 5
+        assert_eq!(c.used_bytes(), 5);
+        assert_eq!(c.acquire(2, 7), Acquire::MissTransient); // ceil(10.5) > 80/8
+    }
+}

@@ -1,0 +1,147 @@
+//! Multi-modal request subsystem (DESIGN.md §10): vision-encoder demand
+//! modeling and the embedding dedup cache.
+//!
+//! BlendServe's premise is that modality diversity widens the compute /
+//! memory demand spread the dual scanner blends over (§1, §6).  Until this
+//! module every request was a bare token list; here a request may carry
+//! image/video [`Attachment`]s that expand into *encoder* work:
+//!
+//! - **Demand**: an encoder pass is pure compute — patch/frame embeddings
+//!   are produced once and occupy no KV cache — so attachments add a
+//!   compute-only term to the §4 demand model
+//!   ([`crate::perfmodel::Demand::enc`]).  A video-generation request that
+//!   is deeply memory-bound on the LM side can be compute-bound overall
+//!   once its conditioning frames are priced in, which is precisely the
+//!   density spread the scanner partitions (§5.3).
+//! - **Dedup**: shared media (a popular image, a re-used conditioning
+//!   clip) is the multi-modal analog of prefix sharing.  [`EncoderCache`]
+//!   deduplicates embeddings by content hash with a byte budget carved
+//!   from device memory, refcounted against live requests and LRU-evicted
+//!   (BatchLLM-style global dedup of shared content).
+//! - **Overlap**: the engine (`engine/sim.rs`) schedules pending encoder
+//!   passes into the compute headroom of memory-bound decode steps — the
+//!   paper's resource overlapping with a third demand source.
+//!
+//! The `[modality]` config section controls *scheduler awareness* (whether
+//! tree / dual-scan densities include the encoder term) and the cache
+//! sizing; the engine always simulates the physics of whatever attachments
+//! a workload carries, so attachment-free workloads are bit-identical to
+//! the pre-modality engine no matter the config.
+
+pub mod cache;
+
+pub use cache::{Acquire, EncoderCache};
+
+use crate::config::ModalityConfig;
+use crate::perfmodel::PerfModel;
+
+/// One image or video attached to a request, as the scheduler sees it:
+/// a content identity plus the encoder-token count it expands to.
+///
+/// The patch/frame → token mapping is the *generator's* job (a ViT
+/// tokenizes an image into its patch count; a video into
+/// frames × patches-per-frame); the scheduler and engine only ever see
+/// the resulting encoder-token count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Attachment {
+    /// Content hash of the raw media — the dedup key.  Two attachments
+    /// with equal hashes share one encoder pass and one cached embedding.
+    /// Kept ≤ 2^53 so it survives the JSONL number representation.
+    pub content_hash: u64,
+    /// Encoder tokens this attachment expands to (image: patches; video:
+    /// frames × patches per frame).
+    pub enc_tokens: u32,
+}
+
+impl Attachment {
+    pub fn new(content_hash: u64, enc_tokens: u32) -> Self {
+        Attachment { content_hash, enc_tokens }
+    }
+}
+
+/// Modality profile of one request: its media attachments.  Empty for
+/// text-only requests (the default), which keeps every pre-modality code
+/// path untouched.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModalityProfile {
+    pub attachments: Vec<Attachment>,
+}
+
+impl ModalityProfile {
+    pub const EMPTY: ModalityProfile = ModalityProfile { attachments: Vec::new() };
+
+    pub fn new(attachments: Vec<Attachment>) -> Self {
+        ModalityProfile { attachments }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attachments.is_empty()
+    }
+
+    /// Total encoder tokens over all attachments (before dedup — the
+    /// scheduler prices the worst case; the cache only makes it cheaper).
+    pub fn encoder_tokens(&self) -> u64 {
+        self.attachments.iter().map(|a| a.enc_tokens as u64).sum()
+    }
+}
+
+/// [`ModalityConfig`] resolved against one replica's perf model: the
+/// constants the engine's encode path needs, precomputed once.
+#[derive(Clone, Debug)]
+pub struct ModalityParams {
+    /// Embedding-cache capacity in bytes, carved from the replica's KV
+    /// budget (`embed_cache_frac` × KV-capacity bytes).  The carve is
+    /// only applied when the workload actually carries attachments
+    /// (`SimEngine` checks), so text-only runs keep their full KV.
+    pub cache_bytes: f64,
+    /// Bytes one cached embedding token occupies.
+    pub embed_bytes_per_token: f64,
+}
+
+impl ModalityParams {
+    /// Resolve `cfg` against a replica's perf model.
+    pub fn resolve(cfg: &ModalityConfig, pm: &PerfModel) -> Self {
+        let kv_bytes = pm.kv_capacity_tokens() * pm.model.kv_bytes_per_token;
+        ModalityParams {
+            cache_bytes: cfg.embed_cache_frac * kv_bytes,
+            embed_bytes_per_token: cfg.embed_bytes_per_token,
+        }
+    }
+
+    /// KV tokens the embedding cache displaces on this model.
+    pub fn carve_tokens(&self, kv_bytes_per_token: f64) -> f64 {
+        self.cache_bytes / kv_bytes_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn profile_token_accounting() {
+        let p = ModalityProfile::new(vec![
+            Attachment::new(1, 576),
+            Attachment::new(2, 1152),
+            Attachment::new(1, 576), // duplicate content still billed here
+        ]);
+        assert_eq!(p.encoder_tokens(), 576 + 1152 + 576);
+        assert!(!p.is_empty());
+        assert!(ModalityProfile::default().is_empty());
+        assert_eq!(ModalityProfile::default().encoder_tokens(), 0);
+    }
+
+    #[test]
+    fn resolve_carves_fraction_of_kv() {
+        let pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let cfg = ModalityConfig { embed_cache_frac: 0.1, ..ModalityConfig::default() };
+        let p = ModalityParams::resolve(&cfg, &pm);
+        let kv_bytes = pm.kv_capacity_tokens() * pm.model.kv_bytes_per_token;
+        assert!((p.cache_bytes - 0.1 * kv_bytes).abs() < 1.0);
+        // Carving the cache back out displaces exactly its byte budget.
+        let carved = p.carve_tokens(pm.model.kv_bytes_per_token);
+        assert!((carved * pm.model.kv_bytes_per_token - p.cache_bytes).abs() < 1.0);
+        assert!(carved < pm.kv_capacity_tokens());
+    }
+}

@@ -18,34 +18,48 @@
 
 pub mod roofline;
 
-use crate::config::{HardwareSpec, ModelSpec};
+use crate::config::{HardwareSpec, ModalityConfig, ModelSpec};
 
-/// Per-request resource demand (compute seconds, memory seconds).
+/// Per-request resource demand (compute seconds, memory seconds, encoder
+/// seconds).
+///
+/// `enc` is the multi-modal vision-encoder term (DESIGN.md §10): pure
+/// compute with no KV bytes, so it raises density without touching `mem`.
+/// It is populated only by [`PerfModel::demand_mm`] on a modality-aware
+/// model; every pre-modality path keeps it at exactly 0.0.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Demand {
     pub comp: f64,
     pub mem: f64,
+    pub enc: f64,
 }
 
 impl Demand {
-    pub const ZERO: Demand = Demand { comp: 0.0, mem: 0.0 };
+    pub const ZERO: Demand = Demand { comp: 0.0, mem: 0.0, enc: 0.0 };
+
+    /// Total compute-side seconds (LM GEMMs + encoder passes).
+    pub fn comp_total(&self) -> f64 {
+        self.comp + self.enc
+    }
 
     pub fn density(&self) -> f64 {
         if self.mem <= 0.0 {
             f64::INFINITY
         } else {
-            self.comp / self.mem
+            self.comp_total() / self.mem
         }
     }
 
     pub fn add(&mut self, other: Demand) {
         self.comp += other.comp;
         self.mem += other.mem;
+        self.enc += other.enc;
     }
 
     pub fn sub(&mut self, other: Demand) {
         self.comp -= other.comp;
         self.mem -= other.mem;
+        self.enc -= other.enc;
     }
 }
 
@@ -61,12 +75,36 @@ pub struct PerfModel {
     pub n_gpus: usize,
     /// Include the 4 p² H L prefill-attention FLOPs term.
     pub prefill_attn_flops: bool,
+    /// Vision-encoder FLOPs per encoder token (2 · P_encoder; linear-term
+    /// roofline, like `comp_tokens`).  Set from `[modality]
+    /// encoder_params`; the default matches
+    /// [`ModalityConfig::default`].
+    pub enc_flops_per_token: f64,
+    /// Include the encoder term in [`Self::demand_mm`] (and therefore in
+    /// tree/scanner densities).  Mirrors `[modality] enabled`; the
+    /// engine's *physics* (`encode_time`) is not gated by this — only
+    /// what the scheduler gets to see.
+    pub modality_aware: bool,
 }
 
 impl PerfModel {
     pub fn new(model: ModelSpec, hw: HardwareSpec, n_gpus: usize) -> Self {
         assert!(n_gpus >= 1);
-        PerfModel { model, hw, n_gpus, prefill_attn_flops: true }
+        PerfModel {
+            model,
+            hw,
+            n_gpus,
+            prefill_attn_flops: true,
+            enc_flops_per_token: 2.0 * ModalityConfig::DEFAULT_ENCODER_PARAMS,
+            modality_aware: false,
+        }
+    }
+
+    /// Apply the `[modality]` section: encoder sizing always (it is the
+    /// physics constant), density awareness per `enabled`.
+    pub fn set_modality(&mut self, m: &ModalityConfig) {
+        self.enc_flops_per_token = 2.0 * m.encoder_params;
+        self.modality_aware = m.enabled;
     }
 
     /// Effective FLOP/s of the replica.
@@ -106,12 +144,34 @@ impl PerfModel {
     }
 
     pub fn demand(&self, p: usize, d: usize) -> Demand {
-        Demand { comp: self.comp_request(p, d), mem: self.mem_request(p, d) }
+        Demand { comp: self.comp_request(p, d), mem: self.mem_request(p, d), enc: 0.0 }
+    }
+
+    /// Multi-modal demand: text demand plus the encoder-compute term for
+    /// `enc_tokens` of attached media — included only when this model is
+    /// `modality_aware` (so a modality-blind scheduler prices the same
+    /// request as pure text).
+    pub fn demand_mm(&self, p: usize, d: usize, enc_tokens: u64) -> Demand {
+        let mut dem = self.demand(p, d);
+        if self.modality_aware && enc_tokens > 0 {
+            dem.enc = self.encode_time(enc_tokens as f64);
+        }
+        dem
     }
 
     /// Request-level compute density ρ(r).
     pub fn density(&self, p: usize, d: usize) -> f64 {
         self.demand(p, d).density()
+    }
+
+    // ---- encoder level (modality module, DESIGN.md §10) ----
+
+    /// Vision-encoder pass time for `enc_tokens` patch/frame tokens.
+    /// Compute-only (no KV bytes): the engine overlaps it into the
+    /// compute headroom of memory-bound steps.  NOT gated by
+    /// `modality_aware` — this is physics, not scheduler knowledge.
+    pub fn encode_time(&self, enc_tokens: f64) -> f64 {
+        enc_tokens * self.enc_flops_per_token / self.compute()
     }
 
     // ---- incremental step-level quantities used by the engine ----
@@ -170,20 +230,24 @@ impl PerfModel {
 
     // ---- set level (§5.1) ----
 
-    /// Sharing-discounted density of a request set: (1-s)·ΣComp / ΣMem.
+    /// Sharing-discounted density of a request set:
+    /// ((1-s)·ΣComp + ΣEnc) / ΣMem.  The encoder term is not discounted —
+    /// prefix sharing eliminates shared *prefill*, not encoder passes
+    /// (media dedup is the EncoderCache's job, priced separately).
     pub fn set_density(&self, demands: &Demand, sharing: f64) -> f64 {
         assert!((0.0..=1.0).contains(&sharing), "s={sharing}");
         if demands.mem <= 0.0 {
             return f64::INFINITY;
         }
-        (1.0 - sharing) * demands.comp / demands.mem
+        ((1.0 - sharing) * demands.comp + demands.enc) / demands.mem
     }
 
     // ---- workload level (§3.3) ----
 
-    /// Idealized optimal execution time T_o = max((1-s)·T_comp, T_mem).
+    /// Idealized optimal execution time
+    /// T_o = max((1-s)·T_comp + T_enc, T_mem).
     pub fn optimal_time(&self, total: Demand, sharing: f64) -> f64 {
-        ((1.0 - sharing) * total.comp).max(total.mem)
+        ((1.0 - sharing) * total.comp + total.enc).max(total.mem)
     }
 
     /// Practical optimal: idealized T_o inflated by the profiled spatial-
@@ -292,7 +356,7 @@ mod tests {
     #[test]
     fn optimal_time_is_max() {
         let pm = pm();
-        let total = Demand { comp: 10.0, mem: 4.0 };
+        let total = Demand { comp: 10.0, mem: 4.0, enc: 0.0 };
         assert_eq!(pm.optimal_time(total, 0.0), 10.0);
         assert_eq!(pm.optimal_time(total, 0.7), 4.0); // 3.0 comp < 4.0 mem
         let practical = pm.practical_optimal_time(total, 0.0);
@@ -354,6 +418,58 @@ mod tests {
         assert_eq!(pm.link_bandwidth(), 0.0);
         assert!(pm.link_kv_time(1.0).is_infinite());
         assert!(pm.link_kv_roundtrip(1.0).is_infinite());
+    }
+
+    #[test]
+    fn encoder_term_raises_density_only_when_aware() {
+        let mut pm = pm();
+        // Memory-bound text request; heavy conditioning attachment.
+        let blind = pm.demand_mm(120, 2048, 8192);
+        assert_eq!(blind.enc, 0.0, "blind model must not price the encoder");
+        assert_eq!(blind, pm.demand(120, 2048));
+        pm.modality_aware = true;
+        let aware = pm.demand_mm(120, 2048, 8192);
+        assert!((aware.enc - pm.encode_time(8192.0)).abs() < 1e-18);
+        assert_eq!(aware.comp, blind.comp);
+        assert_eq!(aware.mem, blind.mem);
+        assert!(
+            aware.density() > blind.density() * 1.5,
+            "aware {} vs blind {}",
+            aware.density(),
+            blind.density()
+        );
+        // No attachments -> identical even when aware.
+        assert_eq!(pm.demand_mm(120, 2048, 0), blind);
+    }
+
+    #[test]
+    fn encode_time_is_linear_and_tp_scaled() {
+        let mut pm = pm();
+        pm.enc_flops_per_token = 4e9; // 2B-param encoder
+        let t1 = pm.encode_time(1000.0);
+        assert!((t1 - 1000.0 * 4e9 / pm.compute()).abs() < 1e-18);
+        assert_eq!(pm.encode_time(2000.0), 2.0 * t1);
+        let mut eight = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 8);
+        eight.enc_flops_per_token = 4e9;
+        assert!((eight.encode_time(1000.0) - t1 / 8.0).abs() < 1e-18);
+    }
+
+    #[test]
+    fn encoder_term_in_set_density_and_bounds_undiscounted() {
+        let pm = pm();
+        let d = Demand { comp: 6.0, mem: 4.0, enc: 2.0 };
+        // Sharing discounts comp only: ((1-0.5)·6 + 2) / 4 = 1.25.
+        assert!((pm.set_density(&d, 0.5) - 1.25).abs() < 1e-12);
+        // T_o = max((1-s)·comp + enc, mem).
+        assert_eq!(pm.optimal_time(d, 0.5), 5.0);
+        assert_eq!(pm.optimal_time(d, 0.0), 8.0);
+        let mut acc = Demand::ZERO;
+        acc.add(d);
+        acc.add(d);
+        assert_eq!(acc.enc, 4.0);
+        acc.sub(d);
+        assert_eq!(acc, d);
+        assert!((d.density() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -47,6 +47,9 @@ pub fn prepare_blendserve(
         cfg.gpus_per_replica,
     );
     pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
+    // Modality awareness (encoder term in densities) keys on [modality];
+    // with `enabled = false` the scheduler stays attachment-blind.
+    pm.set_modality(&cfg.modality);
     let mut tree = PrefixTree::build(workload);
     let n = tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
     let stats = tree.transform(&pm, cfg.scheduler.split_sharing_floor);
@@ -66,6 +69,7 @@ pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
                 cfg.gpus_per_replica,
             );
             pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
+            pm.set_modality(&cfg.modality);
             let mut tree = PrefixTree::build(workload);
             // Baselines still need *some* estimate for admission
             // accounting; use the same sampling mechanism (they all run
@@ -81,7 +85,8 @@ pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
     // The chunk pacer discounts shared prefill compute (§5.3 C_L/C_R).
     sched.expected_sharing = tree.sharing_ratio();
     let mut engine = SimEngine::new(pm.clone(), cfg.engine.clone(), sched, requests)
-        .with_kv(&cfg.kv);
+        .with_kv(&cfg.kv)
+        .with_modality(&cfg.modality);
 
     let result = match cfg.scheduler.order {
         OrderPolicy::BlendServe => {
@@ -188,6 +193,51 @@ mod tests {
             dfs.result.sharing_achieved,
             bal.result.sharing_achieved
         );
+    }
+
+    #[test]
+    fn modality_pipeline_end_to_end() {
+        // The full aware pipeline on the canonical mixed-modal trace:
+        // every request completes, encoder work runs and overlaps into
+        // decode headroom, and duplicate attachments dedup through the
+        // embedding cache.  (The aware-vs-blind throughput comparison is
+        // asserted in benches/modality.rs, where the pressure fixture
+        // and seed aggregation control the margin.)
+        use crate::trace::synth::mixed_modal;
+        let w = mixed_modal(160, 80, 60, 0.5, 7);
+        let mut cfg = baselines::blendserve();
+        cfg.modality.enabled = true;
+        let aware = run_system(&cfg, &w);
+        assert_eq!(aware.result.total_tokens, w.total_tokens());
+        assert!(aware.result.encode_time > 0.0, "no encoder work simulated");
+        assert!(
+            aware.result.encode_overlap_frac > 0.0,
+            "no encoder work hidden under decode headroom"
+        );
+        assert!(aware.result.encode_overlap_frac <= 1.0);
+        assert!(
+            aware.result.embed_cache_hit_tokens > 0,
+            "duplicate attachments never hit the dedup cache"
+        );
+        // Blind run: same physics (encode still happens), blind pricing.
+        cfg.modality.enabled = false;
+        let blind = run_system(&cfg, &w);
+        assert_eq!(blind.result.total_tokens, w.total_tokens());
+        assert!(blind.result.encode_time > 0.0);
+        // The encoder term must widen the scheduler's view of the
+        // workload: the aware bound prices more compute.
+        let mut pm_blind =
+            PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+        pm_blind.set_modality(&cfg.modality);
+        cfg.modality.enabled = true;
+        let mut pm_aware =
+            PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+        pm_aware.set_modality(&cfg.modality);
+        let db = stats::total_demand(&w, &pm_blind);
+        let da = stats::total_demand(&w, &pm_aware);
+        assert_eq!(db.enc, 0.0);
+        assert!(da.enc > 0.0);
+        assert!(da.density() > db.density());
     }
 
     #[test]

@@ -98,15 +98,20 @@ pub fn serve_colocated(
     // id -> index map).
     let id_base = requests.iter().map(|r| r.id).max().map_or(0, |m| m + 1);
     for (i, r) in online.requests.iter().enumerate() {
-        requests.push(SimRequest::online(
-            id_base + i as u32,
-            r.request.prompt.clone(),
-            r.request.output_len,
-            r.request.output_len,
-            r.arrival,
-            r.ttft_slo,
-            r.tpot_slo,
-        ));
+        requests.push(
+            SimRequest::online(
+                id_base + i as u32,
+                r.request.prompt.clone(),
+                r.request.output_len,
+                r.request.output_len,
+                r.arrival,
+                r.ttft_slo,
+                r.tpot_slo,
+            )
+            // Online media rides along: a multi-modal online stream must
+            // pay its encoder passes like the offline pool does.
+            .with_attachments(r.request.modality.attachments.clone()),
+        );
     }
 
     let mut sched = cfg.scheduler.clone();
@@ -116,8 +121,9 @@ pub fn serve_colocated(
     // key on whether swapping is actually possible (a `[kv] enabled`
     // flag on link-less hardware resolves to inert), not on the raw flag.
     let preemption_cheap = KvParams::resolve(&cfg.kv, &pm).enabled;
-    let mut engine =
-        SimEngine::new(pm, cfg.engine.clone(), sched, requests).with_kv(&cfg.kv);
+    let mut engine = SimEngine::new(pm, cfg.engine.clone(), sched, requests)
+        .with_kv(&cfg.kv)
+        .with_modality(&cfg.modality);
 
     let (reserve, urgency) = match cfg.colocate.policy {
         ColocationPolicy::Elastic => (cfg.colocate.online_reserve, cfg.colocate.urgency),

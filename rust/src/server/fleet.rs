@@ -173,6 +173,7 @@ fn replica_pm(cfg: &SystemConfig, slot: usize) -> PerfModel {
     let gpus = cfg.fleet.gpus.get(slot).copied().unwrap_or(cfg.gpus_per_replica);
     let mut pm = PerfModel::new(cfg.model.clone(), hw, gpus);
     pm.prefill_attn_flops = cfg.engine.prefill_attn_flops;
+    pm.set_modality(&cfg.modality);
     pm
 }
 
@@ -202,6 +203,7 @@ fn shard_requests(workload: &Workload, tree: &PrefixTree, us: &[Unit]) -> Vec<Si
                 req.output_len,
                 tree.est_output[r as usize],
             )
+            .with_attachments(req.modality.attachments.clone())
         })
         .collect()
 }
@@ -287,7 +289,8 @@ fn run_fleet(
                 prep.sched.clone(),
                 reqs,
             )
-            .with_kv(&cfg.kv);
+            .with_kv(&cfg.kv)
+            .with_modality(&cfg.modality);
             let st = engine.begin();
             Replica {
                 engine,

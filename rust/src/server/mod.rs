@@ -48,7 +48,9 @@ pub fn serve_batch(cfg: &SystemConfig, workload: &Workload) -> BatchJobResult {
         vec![run_system(cfg, workload)]
     } else {
         // Decompose on the centralized tree.
-        let pm = PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+        let mut pm =
+            PerfModel::new(cfg.model.clone(), cfg.hardware.clone(), cfg.gpus_per_replica);
+        pm.set_modality(&cfg.modality);
         let mut tree = PrefixTree::build(workload);
         tree.sample_outputs(cfg.scheduler.sample_prob, cfg.scheduler.seed);
         tree.recompute_aggregates(&pm);

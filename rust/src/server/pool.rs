@@ -3,9 +3,18 @@
 //! One request per line:
 //! `{"id": 7, "prompt": [1,2,3], "max_tokens": 64, "dataset": "Custom"}`
 //!
+//! Optional fields: `"known_output": true` marks a predefined output
+//! length on any dataset tag (absent → the historical
+//! `dataset == "OpenVid"` derivation), and
+//! `"attachments": [{"hash": 42, "tokens": 576}, ...]` carries the
+//! multi-modal profile (DESIGN.md §10).  Old pool files parse unchanged;
+//! a *present-but-malformed* optional field is an error naming the line
+//! and position, never a silent drop.
+//!
 //! Results are written back as JSONL with scheduling metadata so runs are
 //! auditable.
 
+use crate::modality::Attachment;
 use crate::scheduler::RunOutput;
 use crate::trace::{Request, TraceKind, Workload};
 use crate::util::Json;
@@ -30,8 +39,52 @@ fn kind_from_name(name: &str) -> TraceKind {
         "OpenVid" => TraceKind::OpenVid,
         "MMLU" => TraceKind::Mmlu,
         "LIMO" => TraceKind::Limo,
+        "VisionArena" => TraceKind::VisionArena,
         _ => TraceKind::Custom,
     }
+}
+
+/// Largest integer exactly representable in the JSON number channel.
+const MAX_JSON_INT: f64 = 9e15;
+
+/// Parse the optional `attachments` field of one pool line.  Returns an
+/// empty vec when absent; malformed entries error with line + attachment
+/// index + field (the `load_jsonl` hardening policy — PR 3).
+fn parse_attachments(j: &Json, lineno: usize) -> anyhow::Result<Vec<Attachment>> {
+    let Some(v) = j.get("attachments") else {
+        return Ok(Vec::new());
+    };
+    let arr = v.as_arr().ok_or_else(|| {
+        anyhow::anyhow!("line {lineno}: attachments is not an array (got {v})")
+    })?;
+    let mut atts = Vec::with_capacity(arr.len());
+    for (pos, item) in arr.iter().enumerate() {
+        let int_field = |key: &str, min: f64| -> anyhow::Result<f64> {
+            let f = item.req(key).map_err(|_| {
+                anyhow::anyhow!("line {lineno}: attachments[{pos}] missing '{key}'")
+            })?;
+            let x = f.as_f64().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "line {lineno}: attachments[{pos}].{key} is not a number (got {f})"
+                )
+            })?;
+            if x < min || x.fract() != 0.0 || x > MAX_JSON_INT {
+                anyhow::bail!(
+                    "line {lineno}: attachments[{pos}].{key} is not a valid count (got {x})"
+                );
+            }
+            Ok(x)
+        };
+        let hash = int_field("hash", 0.0)?;
+        let tokens = int_field("tokens", 1.0)?;
+        if tokens > u32::MAX as f64 {
+            anyhow::bail!(
+                "line {lineno}: attachments[{pos}].tokens exceeds u32 (got {tokens})"
+            );
+        }
+        atts.push(Attachment::new(hash as u64, tokens as u32));
+    }
+    Ok(atts)
 }
 
 /// Load a JSONL pool file into a workload.
@@ -39,6 +92,11 @@ pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
     let file = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(file);
     let mut requests = Vec::new();
+    // A content hash IS the content: one hash must map to one embedding
+    // size across the whole pool (the EncoderCache dedups by hash and
+    // would otherwise serve a wrong-sized embedding on the conflict).
+    let mut att_sizes: std::collections::HashMap<u64, (u32, usize)> =
+        std::collections::HashMap::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         if line.trim().is_empty() {
@@ -96,7 +154,40 @@ pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
             .and_then(|x| x.as_str())
             .unwrap_or("Custom")
             .to_string();
-        requests.push(Request::new(id, kind_from_name(&dataset), prompt, max_tokens));
+        let kind = kind_from_name(&dataset);
+        // `known_output` may be absent (compat: derived from the dataset
+        // tag) but a present non-bool is an error, not a default.
+        let known_output = match j.get("known_output") {
+            None => kind.default_known_output(),
+            Some(v) => v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "line {}: known_output is not a bool (got {v})",
+                    lineno + 1
+                )
+            })?,
+        };
+        let attachments = parse_attachments(&j, lineno + 1)?;
+        for (pos, a) in attachments.iter().enumerate() {
+            match att_sizes.get(&a.content_hash) {
+                Some(&(tokens, first_line)) if tokens != a.enc_tokens => {
+                    anyhow::bail!(
+                        "line {}: attachments[{pos}].tokens ({}) conflicts with hash {} \
+                         first seen at line {first_line} with {tokens} tokens",
+                        lineno + 1,
+                        a.enc_tokens,
+                        a.content_hash
+                    );
+                }
+                Some(_) => {}
+                None => {
+                    att_sizes.insert(a.content_hash, (a.enc_tokens, lineno + 1));
+                }
+            }
+        }
+        requests.push(
+            Request::with_known_output(id, kind, prompt, max_tokens, known_output)
+                .with_attachments(attachments),
+        );
     }
     Ok(Workload::new(
         path.file_stem().and_then(|s| s.to_str()).unwrap_or("pool"),
@@ -109,7 +200,7 @@ pub fn save_jsonl(w: &Workload, path: &Path) -> anyhow::Result<()> {
     let file = std::fs::File::create(path)?;
     let mut out = BufWriter::new(file);
     for r in &w.requests {
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::from(r.id as usize)),
             (
                 "prompt",
@@ -117,7 +208,34 @@ pub fn save_jsonl(w: &Workload, path: &Path) -> anyhow::Result<()> {
             ),
             ("max_tokens", Json::from(r.output_len as usize)),
             ("dataset", Json::from(r.dataset.name())),
-        ]);
+        ];
+        // Written only when they deviate from the parse-time defaults, so
+        // text-only pools from older sessions stay byte-stable.
+        if r.known_output != r.dataset.default_known_output() {
+            fields.push(("known_output", Json::from(r.known_output)));
+        }
+        if !r.modality.is_empty() {
+            let mut atts = Vec::with_capacity(r.modality.attachments.len());
+            for a in &r.modality.attachments {
+                // The JSON number channel is exact only to 2^53; a real
+                // 64-bit hash would round-trip corrupted (and could
+                // collapse distinct media onto one rounded hash).
+                if a.content_hash as f64 > MAX_JSON_INT {
+                    anyhow::bail!(
+                        "request {}: content hash {} exceeds the JSONL-exact range \
+                         (<= 9e15); fold your hasher output, e.g. `h % (1 << 53)`",
+                        r.id,
+                        a.content_hash
+                    );
+                }
+                atts.push(Json::obj(vec![
+                    ("hash", Json::from(a.content_hash as usize)),
+                    ("tokens", Json::from(a.enc_tokens as usize)),
+                ]));
+            }
+            fields.push(("attachments", Json::Arr(atts)));
+        }
+        let j = Json::obj(fields);
         writeln!(out, "{j}")?;
     }
     Ok(())
@@ -150,6 +268,15 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
                     Json::from(o.result.recompute_saved_tokens as usize),
                 ),
                 ("link_busy_frac", Json::Num(o.result.link_busy_frac)),
+                ("encode_time_s", Json::Num(o.result.encode_time)),
+                (
+                    "encode_overlap_frac",
+                    Json::Num(o.result.encode_overlap_frac),
+                ),
+                (
+                    "embed_cache_hit_tokens",
+                    Json::from(o.result.embed_cache_hit_tokens as usize),
+                ),
             ])
         })
         .collect();
@@ -164,7 +291,7 @@ mod tests {
     use crate::trace::generators::generate_kind;
 
     /// Every TraceKind variant — one list for both exhaustive tests below.
-    const ALL_KINDS: [TraceKind; 8] = [
+    const ALL_KINDS: [TraceKind; 9] = [
         TraceKind::ShareGpt,
         TraceKind::WildChat,
         TraceKind::AzureTrace,
@@ -172,22 +299,25 @@ mod tests {
         TraceKind::OpenVid,
         TraceKind::Mmlu,
         TraceKind::Limo,
+        TraceKind::VisionArena,
         TraceKind::Custom,
     ];
 
     #[test]
     fn jsonl_roundtrip_every_trace_kind() {
         // Exhaustive TraceKind ⇄ name coverage: every kind must survive
-        // save → load with its dataset tag (and thus `known_output`
-        // semantics) intact.
+        // save → load with its dataset tag, `known_output` semantics and
+        // modality profile intact.  VisionArena rides with attachments;
+        // Custom covers both hand-built text and the video-gen generator
+        // (Custom tag + explicit known_output + conditioning clip).
         let dir = std::env::temp_dir().join("blendserve_pool_test");
         std::fs::create_dir_all(&dir).unwrap();
         for kind in ALL_KINDS {
             let w = match kind {
-                // No generator for hand-built requests; craft directly.
-                TraceKind::Custom => crate::trace::Workload::new(
-                    "custom",
-                    (0..5)
+                // Hand-built text plus generated video-gen (the
+                // known_output-on-Custom case).
+                TraceKind::Custom => {
+                    let mut reqs: Vec<crate::trace::Request> = (0..5)
                         .map(|i| {
                             crate::trace::Request::new(
                                 i,
@@ -196,8 +326,15 @@ mod tests {
                                 4 + i,
                             )
                         })
-                        .collect(),
-                ),
+                        .collect();
+                    reqs.extend(
+                        crate::trace::generators::generate_video_gen(10, 3).requests,
+                    );
+                    crate::trace::Workload::new("custom", reqs)
+                }
+                TraceKind::VisionArena => {
+                    crate::trace::generators::generate_vision_arena(25, 3, 0.3)
+                }
                 k => generate_kind(k, 25, 3),
             };
             let path = dir.join(format!("pool_{}.jsonl", kind.name()));
@@ -209,6 +346,7 @@ mod tests {
                 assert_eq!(a.output_len, b.output_len, "{kind}");
                 assert_eq!(a.dataset, b.dataset, "{kind}");
                 assert_eq!(a.known_output, b.known_output, "{kind}");
+                assert_eq!(a.modality, b.modality, "{kind}");
             }
         }
         std::fs::remove_dir_all(&dir).ok();
@@ -272,6 +410,107 @@ mod tests {
         assert!(err.contains("line 1") && err.contains("max_tokens"), "{err}");
         std::fs::write(&path, "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":-4}\n").unwrap();
         assert!(load_jsonl(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn attachments_absent_present_and_malformed() {
+        let dir = std::env::temp_dir().join("blendserve_pool_att");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("att.jsonl");
+
+        // Absent: old-format lines parse to an empty modality profile.
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4}\n").unwrap();
+        let w = load_jsonl(&path).unwrap();
+        assert!(w.requests[0].modality.is_empty());
+
+        // Present: parsed into the profile, hash/tokens intact.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4,\
+             \"attachments\":[{\"hash\":42,\"tokens\":576},{\"hash\":7,\"tokens\":144}]}\n",
+        )
+        .unwrap();
+        let w = load_jsonl(&path).unwrap();
+        assert_eq!(
+            w.requests[0].modality.attachments,
+            vec![Attachment::new(42, 576), Attachment::new(7, 144)]
+        );
+
+        // Malformed must error with line + attachment position, never
+        // silently drop (the load_jsonl hardening policy).
+        let cases = [
+            // not an array
+            ("{\"id\":1,\"prompt\":[1],\"attachments\":7}\n", "attachments"),
+            // element missing a field
+            (
+                "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":1}]}\n",
+                "attachments[0]",
+            ),
+            // non-numeric tokens, second element
+            (
+                "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":1,\"tokens\":2},\
+                 {\"hash\":2,\"tokens\":\"oops\"}]}\n",
+                "attachments[1].tokens",
+            ),
+            // negative hash
+            (
+                "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":-3,\"tokens\":2}]}\n",
+                "attachments[0].hash",
+            ),
+            // fractional tokens
+            (
+                "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":3,\"tokens\":1.5}]}\n",
+                "attachments[0].tokens",
+            ),
+            // zero tokens (min 1)
+            (
+                "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":3,\"tokens\":0}]}\n",
+                "attachments[0].tokens",
+            ),
+        ];
+        for (text, want) in cases {
+            std::fs::write(&path, text).unwrap();
+            let err = load_jsonl(&path).unwrap_err().to_string();
+            assert!(err.contains("line 1"), "no line number in: {err}");
+            assert!(err.contains(want), "no position '{want}' in: {err}");
+        }
+
+        // Cross-line hash/size conflict: the same content hash cannot
+        // carry two embedding sizes (the dedup cache would serve the
+        // wrong one); the error names both lines.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":5,\"tokens\":100}]}\n\
+             {\"id\":2,\"prompt\":[2],\"attachments\":[{\"hash\":5,\"tokens\":200}]}\n",
+        )
+        .unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("line 1"), "{err}");
+        assert!(err.contains("conflicts"), "{err}");
+        // Consistent repeats of one hash are the dedup case and load fine.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1],\"attachments\":[{\"hash\":5,\"tokens\":100}]}\n\
+             {\"id\":2,\"prompt\":[2],\"attachments\":[{\"hash\":5,\"tokens\":100}]}\n",
+        )
+        .unwrap();
+        assert_eq!(load_jsonl(&path).unwrap().len(), 2);
+
+        // known_output: absent derives from the tag; malformed errors.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1],\"dataset\":\"OpenVid\"}\n\
+             {\"id\":2,\"prompt\":[2],\"dataset\":\"Custom\",\"known_output\":true}\n",
+        )
+        .unwrap();
+        let w = load_jsonl(&path).unwrap();
+        assert!(w.requests[0].known_output, "OpenVid compat derivation lost");
+        assert!(w.requests[1].known_output, "explicit known_output dropped");
+        std::fs::write(&path, "{\"id\":1,\"prompt\":[1],\"known_output\":\"yes\"}\n")
+            .unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("known_output"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,6 +12,7 @@
 //! `expected_density_class` tests and `trace::stats`.
 
 use super::{Request, TraceKind, Workload};
+use crate::modality::Attachment;
 use crate::util::DetRng;
 
 /// Distribution + prefix-structure description of one dataset.
@@ -35,6 +36,10 @@ pub struct TraceSpec {
     pub max_input: usize,
     pub min_output: usize,
     pub max_output: usize,
+    /// §5.4: outputs predefined by generation parameters (video/image
+    /// generation traces).  Set explicitly per spec so the generator —
+    /// not the dataset tag — decides what the scheduler may read.
+    pub known_output: bool,
 }
 
 impl TraceSpec {
@@ -69,6 +74,7 @@ pub fn sharegpt() -> TraceSpec {
         max_input: 4096,
         min_output: 4,
         max_output: 4096,
+        known_output: false,
     }
 }
 
@@ -88,6 +94,7 @@ pub fn wildchat() -> TraceSpec {
         max_input: 4096,
         min_output: 4,
         max_output: 8192,
+        known_output: false,
     }
 }
 
@@ -106,6 +113,7 @@ pub fn azure_trace() -> TraceSpec {
         max_input: 8192,
         min_output: 2,
         max_output: 256,
+        known_output: false,
     }
 }
 
@@ -124,6 +132,7 @@ pub fn burstgpt() -> TraceSpec {
         max_input: 4096,
         min_output: 2,
         max_output: 512,
+        known_output: false,
     }
 }
 
@@ -144,6 +153,7 @@ pub fn openvid() -> TraceSpec {
         max_input: 1024,
         min_output: 2048,
         max_output: 45056,
+        known_output: true,
     }
 }
 
@@ -163,6 +173,7 @@ pub fn mmlu() -> TraceSpec {
         max_input: 1024,
         min_output: 2,
         max_output: 64,
+        known_output: false,
     }
 }
 
@@ -182,6 +193,29 @@ pub fn limo() -> TraceSpec {
         max_input: 2048,
         min_output: 256,
         max_output: 16384,
+        known_output: false,
+    }
+}
+
+/// VisionArena: multi-modal chat (text marginals; attachments are added
+/// by [`generate_vision_arena`]).  Length marginals follow the public
+/// VisionArena-Chat summary: short-to-moderate text prompts, chat-length
+/// outputs, a shared VLM system prompt.
+pub fn vision_arena() -> TraceSpec {
+    TraceSpec {
+        kind: TraceKind::VisionArena,
+        input_mean: 60.0,
+        input_sigma: 0.9,
+        output_mean: 320.0,
+        output_sigma: 0.8,
+        sys_prompt_len: 24,
+        n_groups: 0,
+        group_prefix_len: 0,
+        min_input: 25,
+        max_input: 2048,
+        min_output: 4,
+        max_output: 4096,
+        known_output: false,
     }
 }
 
@@ -194,6 +228,7 @@ pub fn spec_for(kind: TraceKind) -> TraceSpec {
         TraceKind::OpenVid => openvid(),
         TraceKind::Mmlu => mmlu(),
         TraceKind::Limo => limo(),
+        TraceKind::VisionArena => vision_arena(),
         TraceKind::Custom => panic!("no spec for Custom"),
     }
 }
@@ -213,6 +248,7 @@ fn dataset_base(kind: TraceKind) -> u32 {
         TraceKind::Mmlu => 6,
         TraceKind::Limo => 7,
         TraceKind::Custom => 8,
+        TraceKind::VisionArena => 9,
     };
     idx * DATASET_STRIDE
 }
@@ -255,7 +291,15 @@ pub fn generate(spec: &TraceSpec, n: usize, seed: u64) -> Workload {
             prompt.push((1 << 31) | (rng.u64() as u32 & 0x7fff_ffff));
         }
         prompt.truncate(p.max(spec.sys_prompt_len + 1));
-        requests.push(Request::new(i as u32, spec.kind, prompt, d));
+        // known_output comes from the spec, not the dataset tag: a
+        // generator of predefined-output requests says so explicitly.
+        requests.push(Request::with_known_output(
+            i as u32,
+            spec.kind,
+            prompt,
+            d,
+            spec.known_output,
+        ));
     }
     Workload::new(&format!("{}-{}", spec.kind.name(), n), requests)
 }
@@ -263,6 +307,79 @@ pub fn generate(spec: &TraceSpec, n: usize, seed: u64) -> Workload {
 /// Convenience: generate a paper trace by kind.
 pub fn generate_kind(kind: TraceKind, n: usize, seed: u64) -> Workload {
     generate(&spec_for(kind), n, seed)
+}
+
+/// Encoder tokens of one 336×336 image under a /14 patcher (24² = 576) —
+/// the ViT-L/14 class constant the image-chat generator uses.
+pub const IMAGE_ENC_TOKENS: u32 = 576;
+
+/// Encoder tokens per video frame (spatially pooled 12² patches).
+pub const FRAME_ENC_TOKENS: u32 = 144;
+
+/// VisionArena-style image chat: text marginals from [`vision_arena`],
+/// plus 1–2 image attachments per request.  With probability `dup_frac`
+/// an attachment references one of a small pool of *popular* images
+/// (shared content hashes — the embedding dedup cache's hit source);
+/// otherwise it is unique.  Deterministic for a given (n, seed,
+/// dup_frac).
+pub fn generate_vision_arena(n: usize, seed: u64, dup_frac: f64) -> Workload {
+    assert!((0.0..=1.0).contains(&dup_frac), "dup_frac={dup_frac}");
+    let mut w = generate(&vision_arena(), n, seed);
+    let mut rng = DetRng::new(seed ^ 0x5157_0a11);
+    // Popular-image pool: hashes disjoint from the unique range.
+    const POPULAR: u64 = 8;
+    for (i, r) in w.requests.iter_mut().enumerate() {
+        let n_images = 1 + usize::from(rng.chance(0.3));
+        let atts = (0..n_images)
+            .map(|k| {
+                let hash = if rng.chance(dup_frac) {
+                    1_000 + rng.range(0, POPULAR - 1)
+                } else {
+                    // Unique per (request, slot); < 2^32 for JSONL.
+                    1_000_000 + (i as u64) * 4 + k as u64
+                };
+                Attachment::new(hash, IMAGE_ENC_TOKENS)
+            })
+            .collect();
+        r.modality = crate::modality::ModalityProfile::new(atts);
+    }
+    w
+}
+
+/// Conditioned video generation: short text prompt + a conditioning clip
+/// (reference frames through the vision encoder), with the output length
+/// *predefined* by the requested frame count — `known_output = true` on a
+/// `Custom`-tagged trace, the case the hardcoded
+/// `known_output = dataset == OpenVid` rule mislabeled.
+///
+/// The conditioning-clip length (`frames_in`, encoder side) and the
+/// generated-clip length (`frames_out`, decode side) vary
+/// *independently*: an edit/extend job re-renders a short continuation
+/// of a long input clip (encoder-heavy, modest decode), a text-to-video
+/// job conditions on a few reference frames and decodes a long latent
+/// stream (memory-heavy).  The two axes span the §6 demand spread inside
+/// one trace — a request's true density can sit on either side of ρ = 1,
+/// and only a modality-aware scheduler can tell which.
+pub fn generate_video_gen(n: usize, seed: u64) -> Workload {
+    let mut rng = DetRng::new(seed ^ 0x71de_0_6e4);
+    let base = 10_000_000u64;
+    let requests = (0..n)
+        .map(|i| {
+            let p = rng.range(24, 160) as usize;
+            // Prompt ids from a private pool (no cross-trace collisions).
+            let prompt: Vec<u32> =
+                (0..p).map(|k| 0x3000_0000 + (i * 4096 + k) as u32).collect();
+            let frames_in = rng.range(16, 256) as u32;
+            let frames_out = rng.range(16, 96) as u32;
+            let out = frames_out * 64; // 64 latent tokens per generated frame
+            Request::with_known_output(i as u32, TraceKind::Custom, prompt, out, true)
+                .with_attachments(vec![Attachment::new(
+                    base + i as u64,
+                    frames_in * FRAME_ENC_TOKENS,
+                )])
+        })
+        .collect();
+    Workload::new(&format!("video-gen-{n}"), requests)
 }
 
 /// Remap token ids into a small vocabulary while *preserving the prefix
@@ -285,7 +402,17 @@ pub fn remap_vocab(w: &Workload, vocab: u32) -> Workload {
                     (h as u32) % vocab
                 })
                 .collect();
-            Request::new(r.id, r.dataset, prompt, r.output_len)
+            // Preserve the explicit known_output flag and any media
+            // attachments — remapping touches token ids only.
+            let mut m = Request::with_known_output(
+                r.id,
+                r.dataset,
+                prompt,
+                r.output_len,
+                r.known_output,
+            );
+            m.modality = r.modality.clone();
+            m
         })
         .collect();
     Workload::new(&format!("{}-v{}", w.name, vocab), requests)
@@ -373,6 +500,92 @@ mod tests {
             &w.requests.iter().map(|r| r.input_len() as f64).collect::<Vec<_>>(),
         );
         assert!(p_mean < 100.0, "{p_mean}");
+    }
+
+    #[test]
+    fn vision_arena_attaches_images_with_duplicates() {
+        let w = generate_vision_arena(300, 5, 0.4);
+        assert_eq!(w.len(), 300);
+        assert!(w.has_attachments());
+        let mut counts: std::collections::HashMap<u64, usize> =
+            std::collections::HashMap::new();
+        for r in &w.requests {
+            let n_att = r.modality.attachments.len();
+            assert!((1..=2).contains(&n_att), "{n_att} attachments");
+            for a in &r.modality.attachments {
+                assert_eq!(a.enc_tokens, IMAGE_ENC_TOKENS);
+                assert!(a.content_hash < (1 << 32), "hash too wide for JSONL");
+                *counts.entry(a.content_hash).or_default() += 1;
+            }
+            assert!(!r.known_output, "image chat outputs are not predefined");
+        }
+        // Popular images repeat; unique ones do not.
+        let dup_refs: usize = counts.values().filter(|&&c| c > 1).copied().sum();
+        assert!(dup_refs > 50, "dup_frac=0.4 produced only {dup_refs} dup refs");
+        assert!(counts.values().any(|&c| c == 1), "no unique images at all");
+        // Deterministic; dup_frac=0 means every hash is unique.
+        let a = generate_vision_arena(50, 9, 0.4);
+        let b = generate_vision_arena(50, 9, 0.4);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.modality, y.modality);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        let u = generate_vision_arena(100, 3, 0.0);
+        let hashes: std::collections::HashSet<u64> = u
+            .requests
+            .iter()
+            .flat_map(|r| r.modality.attachments.iter().map(|a| a.content_hash))
+            .collect();
+        let total: usize =
+            u.requests.iter().map(|r| r.modality.attachments.len()).sum();
+        assert_eq!(hashes.len(), total, "dup_frac=0 must not share content");
+    }
+
+    #[test]
+    fn video_gen_is_known_output_custom_with_conditioning_clip() {
+        let w = generate_video_gen(120, 7);
+        assert_eq!(w.len(), 120);
+        for r in &w.requests {
+            // The satellite-fix case: Custom-tagged yet predefined output.
+            assert_eq!(r.dataset, TraceKind::Custom);
+            assert!(r.known_output, "video-gen outputs are predefined");
+            assert_eq!(r.modality.attachments.len(), 1);
+            let a = &r.modality.attachments[0];
+            // Conditioning clip and generated clip vary independently:
+            // enc = frames_in · FRAME_ENC_TOKENS, out = frames_out · 64.
+            let frames_in = a.enc_tokens / FRAME_ENC_TOKENS;
+            assert!((16..=256).contains(&frames_in), "frames_in={frames_in}");
+            assert_eq!(a.enc_tokens % FRAME_ENC_TOKENS, 0);
+            let frames_out = r.output_len / 64;
+            assert!((16..=96).contains(&frames_out), "frames_out={frames_out}");
+            assert_eq!(r.output_len % 64, 0);
+        }
+        // The two axes are genuinely independent (both tails occur).
+        let enc_heavy = w
+            .requests
+            .iter()
+            .filter(|r| {
+                r.modality.attachments[0].enc_tokens > 128 * FRAME_ENC_TOKENS
+                    && r.output_len < 48 * 64
+            })
+            .count();
+        let dec_heavy = w
+            .requests
+            .iter()
+            .filter(|r| {
+                r.modality.attachments[0].enc_tokens < 64 * FRAME_ENC_TOKENS
+                    && r.output_len > 64 * 64
+            })
+            .count();
+        assert!(enc_heavy > 0, "no encoder-heavy edit/extend jobs generated");
+        assert!(dec_heavy > 0, "no decode-heavy t2v jobs generated");
+        // Conditioning clips are per-request unique.
+        let hashes: std::collections::HashSet<u64> = w
+            .requests
+            .iter()
+            .map(|r| r.modality.attachments[0].content_hash)
+            .collect();
+        assert_eq!(hashes.len(), w.len());
     }
 
     #[test]

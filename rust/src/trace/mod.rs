@@ -15,6 +15,7 @@ pub mod online;
 pub mod stats;
 pub mod synth;
 
+use crate::modality::{Attachment, ModalityProfile};
 use std::sync::Arc;
 
 /// Which (synthesized) public trace a request came from.
@@ -27,6 +28,9 @@ pub enum TraceKind {
     OpenVid,
     Mmlu,
     Limo,
+    /// VisionArena-style multi-modal chat: text prompts carrying image
+    /// attachments (DESIGN.md §10 / §Substitutions).
+    VisionArena,
     /// Hand-built requests (tests, the real-model E2E example).
     Custom,
 }
@@ -41,8 +45,17 @@ impl TraceKind {
             TraceKind::OpenVid => "OpenVid",
             TraceKind::Mmlu => "MMLU",
             TraceKind::Limo => "LIMO",
+            TraceKind::VisionArena => "VisionArena",
             TraceKind::Custom => "Custom",
         }
+    }
+
+    /// Historical `known_output` derivation: only OpenVid outputs are
+    /// predefined by frame-count parameters.  Generators now set the flag
+    /// explicitly ([`Request::with_known_output`]); this remains the
+    /// fallback for the compat constructor and attribute-less JSONL.
+    pub fn default_known_output(&self) -> bool {
+        matches!(self, TraceKind::OpenVid)
     }
 
     pub const ALL_PAPER: [TraceKind; 6] = [
@@ -76,17 +89,56 @@ pub struct Request {
     pub output_len: u32,
     /// §5.4: image/video generation outputs are *predefined* by frame
     /// count/quality parameters — the scheduler may read them directly.
+    /// Set explicitly by generators (a custom video-gen trace is
+    /// `Custom` + `known_output = true`); not derivable from `dataset`.
     pub known_output: bool,
+    /// Multi-modal profile: image/video attachments (DESIGN.md §10).
+    /// Empty for text-only requests.
+    pub modality: ModalityProfile,
 }
 
 impl Request {
+    /// Compat constructor: derives `known_output` from the dataset tag
+    /// (the historical `dataset == OpenVid` rule).  Generators of
+    /// predefined-output workloads on other kinds must use
+    /// [`Self::with_known_output`] instead, or the scheduler will treat
+    /// their exact lengths as unsampled estimates.
     pub fn new(id: u32, dataset: TraceKind, prompt: Vec<u32>, output_len: u32) -> Self {
-        let known_output = dataset == TraceKind::OpenVid;
-        Request { id, dataset, prompt: Arc::new(prompt), output_len, known_output }
+        let known = dataset.default_known_output();
+        Self::with_known_output(id, dataset, prompt, output_len, known)
+    }
+
+    /// Full constructor with an explicit `known_output`.
+    pub fn with_known_output(
+        id: u32,
+        dataset: TraceKind,
+        prompt: Vec<u32>,
+        output_len: u32,
+        known_output: bool,
+    ) -> Self {
+        Request {
+            id,
+            dataset,
+            prompt: Arc::new(prompt),
+            output_len,
+            known_output,
+            modality: ModalityProfile::EMPTY,
+        }
+    }
+
+    /// Attach image/video media to this request (builder style).
+    pub fn with_attachments(mut self, attachments: Vec<Attachment>) -> Self {
+        self.modality = ModalityProfile::new(attachments);
+        self
     }
 
     pub fn input_len(&self) -> usize {
         self.prompt.len()
+    }
+
+    /// Encoder tokens this request's attachments expand to (0 for text).
+    pub fn encoder_tokens(&self) -> u64 {
+        self.modality.encoder_tokens()
     }
 }
 
@@ -128,6 +180,16 @@ impl Workload {
     /// input + output tokens; §6.3).
     pub fn total_tokens(&self) -> u64 {
         self.total_input_tokens() + self.total_output_tokens()
+    }
+
+    /// Total encoder tokens over all attachments (pre-dedup).
+    pub fn total_encoder_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.encoder_tokens()).sum()
+    }
+
+    /// Any request carrying media attachments?
+    pub fn has_attachments(&self) -> bool {
+        self.requests.iter().any(|r| !r.modality.is_empty())
     }
 
     /// Concatenate workloads (e.g. Fig. 3's BurstGPT-then-OpenVid).
@@ -185,5 +247,40 @@ mod tests {
         let names: std::collections::HashSet<_> =
             TraceKind::ALL_PAPER.iter().map(|k| k.name()).collect();
         assert_eq!(names.len(), TraceKind::ALL_PAPER.len());
+    }
+
+    #[test]
+    fn known_output_is_explicit_not_dataset_derived() {
+        // Regression: `Request::new` used to hardcode
+        // `known_output = dataset == OpenVid`, so a custom video-gen
+        // trace (predefined frame counts, Custom kind) was mislabeled as
+        // sampled.  The explicit constructor must win over the tag.
+        let custom_video =
+            Request::with_known_output(0, TraceKind::Custom, vec![1, 2], 2048, true);
+        assert!(custom_video.known_output, "custom video-gen mislabeled");
+        let openvid_est =
+            Request::with_known_output(0, TraceKind::OpenVid, vec![1, 2], 2048, false);
+        assert!(!openvid_est.known_output, "explicit false overridden by tag");
+        // The compat constructor keeps the historical derivation.
+        assert!(Request::new(0, TraceKind::OpenVid, vec![1], 4).known_output);
+        assert!(!Request::new(0, TraceKind::Custom, vec![1], 4).known_output);
+        assert!(TraceKind::OpenVid.default_known_output());
+        assert!(!TraceKind::VisionArena.default_known_output());
+    }
+
+    #[test]
+    fn attachments_builder_and_accounting() {
+        use crate::modality::Attachment;
+        let r = Request::new(0, TraceKind::VisionArena, vec![1, 2, 3], 8)
+            .with_attachments(vec![Attachment::new(42, 576), Attachment::new(7, 288)]);
+        assert_eq!(r.encoder_tokens(), 864);
+        let plain = Request::new(1, TraceKind::Custom, vec![4], 8);
+        assert_eq!(plain.encoder_tokens(), 0);
+        let w = Workload::new("w", vec![r, plain]);
+        assert!(w.has_attachments());
+        assert_eq!(w.total_encoder_tokens(), 864);
+        let text = Workload::new("t", vec![Request::new(0, TraceKind::Custom, vec![1], 1)]);
+        assert!(!text.has_attachments());
+        assert_eq!(text.total_encoder_tokens(), 0);
     }
 }

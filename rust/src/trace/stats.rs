@@ -42,11 +42,14 @@ pub fn optimal_sharing_ratio(w: &Workload) -> f64 {
     1.0 - unique_prefix_tokens(w) as f64 / total as f64
 }
 
-/// Aggregate §4 demand of a workload (no sharing discount).
+/// Aggregate §4 demand of a workload (no sharing discount).  On a
+/// modality-aware perf model attached media contributes its encoder
+/// compute (`Demand::enc`); on the default blind model `demand_mm`
+/// degrades to the text-only demand exactly.
 pub fn total_demand(w: &Workload, pm: &PerfModel) -> Demand {
     let mut total = Demand::ZERO;
     for r in &w.requests {
-        total.add(pm.demand(r.input_len(), r.output_len as usize));
+        total.add(pm.demand_mm(r.input_len(), r.output_len as usize, r.encoder_tokens()));
     }
     total
 }

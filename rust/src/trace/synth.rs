@@ -154,6 +154,35 @@ pub fn adversarial_skew(honest_groups: usize, liar_groups: usize, per: usize) ->
     Workload::new("adversarial-skew", reqs)
 }
 
+/// The mixed multi-modal workload of DESIGN.md §10: text (compute-heavy
+/// BurstGPT plus a long-decode LIMO slice, so the memory end holds both
+/// attachment-free and attachment-bearing work) + VisionArena image chat
+/// (duplicate-bearing attachments) + conditioned video generation
+/// (independent encoder/decode axes, predefined outputs).  This is the
+/// §6-style modality-diverse regime the acceptance bar is asserted
+/// against — shared by the modality tests, `benches/modality.rs`,
+/// `examples/multimodal_serving.rs` and the `blendserve modality` CLI,
+/// so they all measure one and the same trace shape.
+pub fn mixed_modal(
+    n_text: usize,
+    n_image: usize,
+    n_video: usize,
+    dup_frac: f64,
+    seed: u64,
+) -> Workload {
+    use crate::trace::generators::{generate_kind, generate_video_gen, generate_vision_arena};
+    // ~1/8 of the text slice is long-decode reasoning: the memory end of
+    // the density order then contains *text* work a blind scheduler must
+    // rank against encoder-bearing video requests — the ranking the
+    // encoder term exists to fix.
+    let n_limo = n_text / 8;
+    let text = generate_kind(TraceKind::BurstGpt, n_text - n_limo, seed);
+    let limo = generate_kind(TraceKind::Limo, n_limo, seed ^ 0xc33);
+    let image = generate_vision_arena(n_image, seed ^ 0xa11, dup_frac);
+    let video = generate_video_gen(n_video, seed ^ 0xb22);
+    Workload::concat("mixed-modal", &[&text, &limo, &image, &video])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +262,26 @@ mod tests {
         assert_eq!(traces.len(), 4);
         assert_eq!(traces[0].0, "Trace#1");
         assert_eq!(traces[3].1.sharing, 0.05);
+    }
+
+    #[test]
+    fn mixed_modal_shape() {
+        let w = mixed_modal(100, 40, 20, 0.5, 3);
+        assert_eq!(w.len(), 160);
+        let with_att = w.requests.iter().filter(|r| !r.modality.is_empty()).count();
+        assert_eq!(with_att, 60, "every image/video request carries media");
+        let known = w.requests.iter().filter(|r| r.known_output).count();
+        assert_eq!(known, 20, "exactly the video-gen requests are predefined");
+        assert!(w.total_encoder_tokens() > 0);
+        // The modality-aware density spread must be wider than the blind
+        // one: encoder compute lifts the video-gen units.
+        let mut pm = PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1);
+        let blind = crate::trace::stats::total_demand(&w, &pm);
+        assert_eq!(blind.enc, 0.0);
+        pm.modality_aware = true;
+        let aware = crate::trace::stats::total_demand(&w, &pm);
+        assert!(aware.enc > 0.0);
+        assert!(aware.density() > blind.density());
     }
 
     #[test]

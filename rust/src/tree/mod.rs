@@ -106,6 +106,10 @@ pub struct PrefixTree {
     /// Requests with predefined output lengths (§5.4: video generation);
     /// always treated as sampled.
     pub known_output: Vec<bool>,
+    /// Encoder tokens of each request's attachments (0 for text-only).
+    /// Priced into densities only by a modality-aware perf model
+    /// (`PerfModel::demand_mm`), so the blind scheduler is unchanged.
+    pub enc_tokens: Vec<u64>,
     /// Perf model snapshot, set by `recompute_aggregates`; used by the
     /// transform pass to price scheduling units without re-threading it.
     pub(crate) pm_cache: Option<PerfModel>,
@@ -122,6 +126,7 @@ impl PrefixTree {
             est_output: vec![0; n],
             sampled: vec![false; n],
             known_output: workload.requests.iter().map(|r| r.known_output).collect(),
+            enc_tokens: workload.requests.iter().map(|r| r.encoder_tokens()).collect(),
             pm_cache: None,
         };
         // Build-phase child index: (node, first token) -> child.
@@ -273,7 +278,7 @@ impl PrefixTree {
                 let req = self.nodes[id].requests[i];
                 let p = self.input_len(req);
                 let d = self.est_output[req as usize].max(1) as usize;
-                demand.add(pm.demand(p, d));
+                demand.add(pm.demand_mm(p, d, self.enc_tokens[req as usize]));
                 prefill += p as u64;
                 n_req += 1;
                 est_sum += d as f64;
@@ -293,9 +298,11 @@ impl PrefixTree {
             node.subtree_unique = unique;
             node.n_requests = n_req;
             node.est_output = if n_req > 0 { est_sum / n_req as f64 } else { 0.0 };
+            // Encoder compute is undiscounted: prefix sharing eliminates
+            // shared prefill, not encoder passes (DESIGN.md §10).
             let s = node.sharing();
             node.density = if demand.mem > 0.0 {
-                (1.0 - s) * demand.comp / demand.mem
+                ((1.0 - s) * demand.comp + demand.enc) / demand.mem
             } else {
                 f64::INFINITY
             };
@@ -533,6 +540,61 @@ mod tests {
                 prev = g;
             }
         }
+    }
+
+    #[test]
+    fn modality_aware_density_prices_encoder_blind_does_not() {
+        use crate::modality::Attachment;
+        // A memory-bound request carrying a heavy conditioning clip.
+        let video = Request::with_known_output(
+            0,
+            TraceKind::Custom,
+            (0..120).collect(),
+            2048,
+            true,
+        )
+        .with_attachments(vec![Attachment::new(1, 6912)]);
+        let text = Request::new(1, TraceKind::Custom, (1000..1400).collect(), 16);
+        let w = Workload::new("mm", vec![video, text]);
+
+        let mut blind = PrefixTree::build(&w);
+        for (i, r) in w.requests.iter().enumerate() {
+            blind.est_output[i] = r.output_len;
+        }
+        let pm_blind = pm();
+        blind.recompute_aggregates(&pm_blind);
+
+        let mut aware = PrefixTree::build(&w);
+        for (i, r) in w.requests.iter().enumerate() {
+            aware.est_output[i] = r.output_len;
+        }
+        let mut pm_aware = pm();
+        pm_aware.modality_aware = true;
+        aware.recompute_aggregates(&pm_aware);
+
+        let node_of = |t: &PrefixTree, req: u32| {
+            t.pre_order()
+                .into_iter()
+                .find(|&n| t.nodes[n].requests.contains(&req))
+                .unwrap()
+        };
+        // Blind: the attachment is priced at zero — same density as the
+        // bare text demand, and ρ(video) is memory-bound.
+        let b = blind.nodes[node_of(&blind, 0)].density;
+        let want_blind = pm_blind.demand(120, 2048).density();
+        assert!((b - want_blind).abs() / want_blind < 1e-9, "{b} vs {want_blind}");
+        assert!(b < 1.0, "blind video density should be memory-bound: {b}");
+        // Aware: the encoder term lifts it, widening the ρ spread.
+        let a = aware.nodes[node_of(&aware, 0)].density;
+        assert!(a > b * 1.5, "aware {a} vs blind {b}");
+        // The text-only request is priced identically either way.
+        let bt = blind.nodes[node_of(&blind, 1)].density;
+        let at = aware.nodes[node_of(&aware, 1)].density;
+        assert_eq!(bt, at);
+        // Root aggregates carry the enc term only when aware.
+        assert_eq!(blind.nodes[ROOT].demand.enc, 0.0);
+        assert!(aware.nodes[ROOT].demand.enc > 0.0);
+        assert!(aware.root_density() > blind.root_density());
     }
 
     #[test]

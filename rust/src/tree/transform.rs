@@ -82,12 +82,14 @@ impl PrefixTree {
         let n_own = node.requests.len().max(1) as f64;
         let mut comp = 0.0;
         let mut mem = 0.0;
+        let mut enc = 0.0;
         let mut prefill = 0u64;
         for &r in &node.requests {
             let p = self.input_len(r);
             let d = self.est_output[r as usize].max(1) as usize;
             comp += self.unit_pm_comp(p, d);
             mem += self.unit_pm_mem(p, d);
+            enc += self.unit_pm_enc(r);
             prefill += p as u64;
         }
         if mem <= 0.0 {
@@ -107,7 +109,9 @@ impl PrefixTree {
         } else {
             (1.0 - unique_eff / prefill as f64).clamp(0.0, 1.0)
         };
-        (1.0 - s) * comp / mem
+        // Encoder compute rides undiscounted, matching the subtree
+        // densities of `recompute_aggregates` (DESIGN.md §10).
+        ((1.0 - s) * comp + enc) / mem
     }
 
     // Transform-time perf model access: stored per-transform (set by
@@ -119,6 +123,18 @@ impl PrefixTree {
     fn unit_pm_mem(&self, p: usize, d: usize) -> f64 {
         let pm = self.pm_cache.as_ref().expect("transform sets pm_cache");
         pm.mem_request(p, d)
+    }
+    /// Encoder seconds of one request's attachments — 0 on a
+    /// modality-blind perf model, so blind unit densities are
+    /// bit-identical to the pre-modality scheduler.
+    fn unit_pm_enc(&self, r: u32) -> f64 {
+        let pm = self.pm_cache.as_ref().expect("transform sets pm_cache");
+        let enc_tokens = self.enc_tokens[r as usize];
+        if pm.modality_aware && enc_tokens > 0 {
+            pm.encode_time(enc_tokens as f64)
+        } else {
+            0.0
+        }
     }
 
     /// Find local density outliers: children (below root level) whose

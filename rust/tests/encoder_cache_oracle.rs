@@ -1,0 +1,169 @@
+//! Randomized differential oracle for the embedding dedup cache
+//! (`modality::EncoderCache`) against a naive reference model
+//! (DESIGN.md §10).
+//!
+//! The reference stores entries in a `Vec` and implements the same
+//! contract by exhaustive scan: second-touch admission (first sighting
+//! of a hash is never cached), oversize bypass (> capacity/8), LRU
+//! eviction strictly over unreferenced entries, refcount pin/unpin.
+//! Thousands of randomized acquire/release episodes must agree on every
+//! observable: acquire outcome, used bytes, pinned tokens, entry count
+//! and cumulative hit tokens.
+
+use blendserve::modality::{Acquire, EncoderCache};
+use blendserve::util::DetRng;
+use std::collections::HashSet;
+
+/// Naive reference: same semantics, O(n) everything.
+struct NaiveCache {
+    cap: u64,
+    bpt: f64,
+    /// (hash, tokens, refs, last_use)
+    entries: Vec<(u64, u32, u32, u64)>,
+    seen: HashSet<u64>,
+    tick: u64,
+    hit_tokens: u64,
+}
+
+impl NaiveCache {
+    fn new(cap: u64, bpt: f64) -> Self {
+        NaiveCache { cap, bpt, entries: Vec::new(), seen: HashSet::new(), tick: 0, hit_tokens: 0 }
+    }
+
+    fn bytes(&self, tokens: u32) -> u64 {
+        (tokens as f64 * self.bpt).ceil() as u64
+    }
+
+    fn used(&self) -> u64 {
+        self.entries.iter().map(|&(_, t, _, _)| self.bytes(t)).sum()
+    }
+
+    fn acquire(&mut self, h: u64, tokens: u32) -> Acquire {
+        self.tick += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == h) {
+            e.2 += 1;
+            e.3 = self.tick;
+            self.hit_tokens += e.1 as u64;
+            return Acquire::Hit;
+        }
+        let need = self.bytes(tokens);
+        if need > self.cap / EncoderCache::OVERSIZED_DIVISOR {
+            return Acquire::MissTransient;
+        }
+        if !self.seen.insert(h) {
+            // seen before: fall through to insert
+        } else {
+            return Acquire::MissTransient; // first touch is never cached
+        }
+        while self.used() + need > self.cap {
+            // LRU among refs == 0 (ticks are unique, no tie-break needed).
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.2 == 0)
+                .min_by_key(|(_, e)| e.3)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.entries.remove(i);
+                }
+                None => return Acquire::MissTransient,
+            }
+        }
+        self.entries.push((h, tokens, 1, self.tick));
+        Acquire::MissCached
+    }
+
+    fn release(&mut self, h: u64) {
+        let e = self.entries.iter_mut().find(|e| e.0 == h).expect("pinned entry");
+        assert!(e.2 > 0);
+        e.2 -= 1;
+    }
+
+    fn pinned_tokens(&self) -> u64 {
+        self.entries.iter().filter(|e| e.2 > 0).map(|e| e.1 as u64).sum()
+    }
+}
+
+/// One randomized episode: interleaved acquires (skewed towards a small
+/// popular set, so hits and evictions both occur) and releases of live
+/// pins, checked observable-by-observable after every operation.
+fn episode(seed: u64, cap: u64, n_ops: usize) {
+    let mut rng = DetRng::new(seed);
+    let mut real = EncoderCache::new(cap, 2.0);
+    let mut naive = NaiveCache::new(cap, 2.0);
+    // Live pins (hash repeated once per pin) eligible for release.
+    let mut pins: Vec<u64> = Vec::new();
+    for op in 0..n_ops {
+        if !pins.is_empty() && rng.chance(0.45) {
+            let i = rng.range(0, pins.len() as u64 - 1) as usize;
+            let h = pins.swap_remove(i);
+            real.release(h);
+            naive.release(h);
+        } else {
+            // 60% popular pool of 12 hashes; 40% cold tail.  Token sizes
+            // span cacheable and oversized.
+            let h = if rng.chance(0.6) {
+                100 + rng.range(0, 11)
+            } else {
+                10_000 + rng.range(0, 400)
+            };
+            // Deterministic per-hash size (a content hash always has one
+            // embedding size); spans cacheable and oversized entries at
+            // the smaller capacities.
+            let tokens = 8 + (h % 97) as u32 * 4;
+            let a = real.acquire(h, tokens);
+            let b = naive.acquire(h, tokens);
+            assert_eq!(a, b, "seed {seed} op {op}: outcome diverged for hash {h}");
+            if a != Acquire::MissTransient {
+                pins.push(h);
+            }
+        }
+        assert_eq!(real.used_bytes(), naive.used(), "seed {seed} op {op}: used bytes");
+        assert_eq!(
+            real.pinned_tokens(),
+            naive.pinned_tokens(),
+            "seed {seed} op {op}: pinned tokens"
+        );
+        assert_eq!(real.len(), naive.entries.len(), "seed {seed} op {op}: entry count");
+        assert_eq!(
+            real.hit_tokens(),
+            naive.hit_tokens,
+            "seed {seed} op {op}: hit tokens"
+        );
+    }
+    // Drain every pin; both models must agree on the quiesced state.
+    for h in pins {
+        real.release(h);
+        naive.release(h);
+    }
+    assert_eq!(real.pinned_tokens(), 0);
+    assert_eq!(naive.pinned_tokens(), 0);
+    assert_eq!(real.used_bytes(), naive.used());
+}
+
+#[test]
+fn encoder_cache_matches_naive_reference() {
+    // 4 seeds x 4 capacities x 2.5k ops, like the kv ledger oracle.
+    for seed in [1, 7, 42, 1234] {
+        for cap in [0, 4_000, 60_000, 4_000_000] {
+            episode(seed, cap, 2_500);
+        }
+    }
+}
+
+#[test]
+fn second_touch_admission_and_dedup_sequence() {
+    // Deterministic micro-sequence documenting the admission contract:
+    // first touch transient, second touch cached, third+ hit.
+    let mut c = EncoderCache::new(1 << 20, 1.0);
+    assert_eq!(c.acquire(5, 100), Acquire::MissTransient);
+    assert_eq!(c.acquire(5, 100), Acquire::MissCached);
+    assert_eq!(c.acquire(5, 100), Acquire::Hit);
+    assert_eq!(c.hit_tokens(), 100);
+    // The transient first touch pinned nothing: two releases drain it.
+    c.release(5);
+    c.release(5);
+    assert_eq!(c.pinned_tokens(), 0);
+}
