@@ -1,0 +1,195 @@
+//! Optimality-gap benchmark (DESIGN.md §11): how far each scheduler's
+//! simulated makespan sits above the planner's resource-area lower
+//! bound, on the canonical synthetic traces.
+//!
+//! The headline number is the dual scanner's gap `makespan /
+//! lower_bound` — the figure the paper's roofline argument promises to
+//! drive toward 1.  The bound is a relaxation (prefix sharing credited
+//! as an infinite cache, chunking and attention overheads dropped), so
+//! gaps stay above 1 by construction; what the bench pins is that every
+//! scheduler respects the bound on every trace and that the exact wave
+//! planner agrees with its brute-force oracle on a tiny trace.  Emits
+//! `BENCH_planner.json`; `--smoke` shrinks the traces for CI.
+
+use blendserve::baselines;
+use blendserve::config::presets;
+use blendserve::perfmodel::PerfModel;
+use blendserve::planner::plan_units;
+use blendserve::scheduler::run_system;
+use blendserve::trace::synth::{mixed_modal, synthesize, SynthSpec};
+use blendserve::trace::{Request, TraceKind, Workload};
+use blendserve::tree::PrefixTree;
+use blendserve::util::json::Json;
+use std::time::Instant;
+
+fn pm() -> PerfModel {
+    PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+}
+
+/// Six-unit shared-prefix fixture for the exact-vs-brute-force section:
+/// three prompt families, two leaves each.
+fn tiny_trace() -> Workload {
+    let mut requests = Vec::new();
+    for fam in 0..3u32 {
+        let stem: Vec<u32> = (0..64).map(|k| fam * 1000 + k).collect();
+        for leaf in 0..2u32 {
+            let mut prompt = stem.clone();
+            prompt.extend((0..32).map(|k| fam * 1000 + 500 + leaf * 100 + k));
+            requests.push(Request::new(
+                (fam * 2 + leaf) as u32,
+                TraceKind::Custom,
+                prompt,
+                40 + leaf,
+            ));
+        }
+    }
+    Workload::new("planner-tiny", requests)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 400 } else { 4000 };
+    let n_mm = if smoke { 300 } else { 1200 };
+    println!(
+        "# planner — scheduler makespans vs the §11 resource-area lower bound{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let model = pm();
+    let traces: Vec<(&str, Workload)> = vec![
+        (
+            "burstgpt",
+            synthesize(&SynthSpec::new(TraceKind::BurstGpt, 1.0, 0.3, n), &model),
+        ),
+        (
+            "sharegpt",
+            synthesize(&SynthSpec::new(TraceKind::ShareGpt, 1.2, 0.4, n), &model),
+        ),
+        (
+            "mixed-modal",
+            mixed_modal(n_mm * 60 / 100, n_mm * 25 / 100, n_mm * 15 / 100, 0.4, 7),
+        ),
+    ];
+    let systems = [
+        ("vllm-dfs", baselines::vllm_dfs()),
+        ("nanoflow-balance", baselines::nanoflow_balance()),
+        ("nanoflow-dfs", baselines::nanoflow_dfs()),
+        ("prefix-aligned", baselines::prefix_aligned()),
+        ("blendserve", baselines::blendserve()),
+    ];
+
+    let mut trace_rows: Vec<(String, Json)> = Vec::new();
+    let mut blend_gaps: Vec<f64> = Vec::new();
+    for (tname, w) in &traces {
+        println!("## {tname}: {} requests", w.len());
+        let mut bound = f64::NAN;
+        let mut sys_rows: Vec<(String, Json)> = Vec::new();
+        for (sname, cfg) in &systems {
+            let t0 = Instant::now();
+            let out = run_system(cfg, w);
+            let wall = t0.elapsed();
+            bound = out.makespan_lower_bound;
+            assert!(
+                bound.is_finite() && bound > 0.0,
+                "{tname}/{sname}: degenerate bound {bound}"
+            );
+            assert!(
+                out.result.total_time >= bound * (1.0 - 1e-9),
+                "{tname}/{sname}: makespan {} beat the lower bound {bound}",
+                out.result.total_time
+            );
+            assert_eq!(
+                out.result.total_tokens,
+                w.total_tokens(),
+                "{tname}/{sname} lost tokens"
+            );
+            println!(
+                "{sname:<18} makespan {:>9.2}s | gap {:.3}x | sharing {:.3} | host {:.2?}",
+                out.result.total_time,
+                out.optimality_gap,
+                out.result.sharing_achieved,
+                wall,
+            );
+            if *sname == "blendserve" {
+                blend_gaps.push(out.optimality_gap);
+            }
+            sys_rows.push((
+                sname.to_string(),
+                Json::obj(vec![
+                    ("makespan_s", Json::Num(out.result.total_time)),
+                    ("optimality_gap", Json::Num(out.optimality_gap)),
+                    ("sharing_achieved", Json::Num(out.result.sharing_achieved)),
+                    ("host_wall_s", Json::Num(wall.as_secs_f64())),
+                ]),
+            ));
+        }
+        println!("{:<18} {bound:>18.2}s (resource-area bound)", "lower-bound");
+        trace_rows.push((
+            tname.to_string(),
+            Json::obj(vec![
+                ("n_requests", Json::from(w.len())),
+                ("lower_bound_s", Json::Num(bound)),
+                ("systems", Json::Obj(sys_rows.into_iter().collect())),
+            ]),
+        ));
+    }
+
+    // ---- exact planner vs brute-force oracle on the tiny fixture ----
+    let tiny = tiny_trace();
+    let tree = PrefixTree::build(&tiny);
+    let units = plan_units(&tree, &tiny, &model);
+    let exact = units.exact().expect("tiny fixture within EXACT_MAX_UNITS");
+    let brute = units.brute_force();
+    let tiny_lb = units.lower_bound();
+    assert!(
+        (exact.makespan - brute).abs() <= 1e-9 * brute.max(1.0),
+        "exact DP {} disagrees with brute force {brute}",
+        exact.makespan
+    );
+    assert!(
+        tiny_lb <= exact.makespan * (1.0 + 1e-9),
+        "bound {tiny_lb} above the exact optimum {}",
+        exact.makespan
+    );
+    println!(
+        "exact check: {} units | DP {:.4}s == brute {brute:.4}s in {} waves | bound {tiny_lb:.4}s",
+        units.len(),
+        exact.makespan,
+        exact.waves.len(),
+    );
+
+    let worst_gap = blend_gaps.iter().cloned().fold(0.0f64, f64::max);
+    let doc = Json::obj(vec![
+        ("bench", Json::from("planner")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        ("traces", Json::Obj(trace_rows.into_iter().collect())),
+        (
+            "exact_check",
+            Json::obj(vec![
+                ("n_units", Json::from(units.len())),
+                ("exact_makespan_s", Json::Num(exact.makespan)),
+                ("brute_force_s", Json::Num(brute)),
+                ("lower_bound_s", Json::Num(tiny_lb)),
+                ("waves", Json::from(exact.waves.len())),
+            ]),
+        ),
+        (
+            "acceptance",
+            Json::obj(vec![
+                (
+                    "metric",
+                    Json::from(
+                        "every scheduler's makespan >= the resource-area lower \
+                         bound on every canonical trace; exact wave DP matches \
+                         the set-partition brute force on the tiny fixture",
+                    ),
+                ),
+                ("blendserve_worst_gap", Json::Num(worst_gap)),
+                ("pass", Json::from(true)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_planner.json";
+    std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+    println!("wrote {path} (blendserve worst gap {worst_gap:.3}x)");
+}

@@ -7,6 +7,7 @@
 //! | SGLang-DFS        | DFS    | sequential  | token radix  |
 //! | NanoFlow-DFS      | DFS    | overlapped  | token radix  |
 //! | NanoFlow-Balance  | random | overlapped  | token radix  |
+//! | Prefix-Aligned    | aligned DFS | overlapped | token radix |
 //! | BlendServe        | dual scanner | overlapped | token radix |
 //!
 //! DistServe (xPyD P/D disaggregation) lives in `engine::distserve`.
@@ -49,6 +50,16 @@ pub fn nanoflow_dfs() -> SystemConfig {
 pub fn nanoflow_balance() -> SystemConfig {
     let mut c = base();
     c.scheduler.order = OrderPolicy::Random;
+    c.engine.overlap = OverlapMode::Overlapped;
+    c
+}
+
+/// AlignedServe-style prefix-aligned static order + overlap: the strong
+/// heuristic baseline of the optimality-gap bench (DESIGN.md §11) —
+/// everything NanoFlow-DFS has, plus sharing-savings-aligned traversal.
+pub fn prefix_aligned() -> SystemConfig {
+    let mut c = base();
+    c.scheduler.order = OrderPolicy::PrefixAligned;
     c.engine.overlap = OverlapMode::Overlapped;
     c
 }

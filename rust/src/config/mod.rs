@@ -155,6 +155,9 @@ pub enum OrderPolicy {
     Dfs,
     /// Uniform random shuffle ("NanoFlow-Balance" in the paper).
     Random,
+    /// AlignedServe-style prefix-aligned DFS: children visited by
+    /// descending sharing savings (`planner::prefix_aligned_order`).
+    PrefixAligned,
     /// BlendServe: density-sorted tree + dual scanner.
     BlendServe,
 }
@@ -165,6 +168,7 @@ impl OrderPolicy {
             OrderPolicy::Fcfs => "fcfs",
             OrderPolicy::Dfs => "dfs",
             OrderPolicy::Random => "random",
+            OrderPolicy::PrefixAligned => "prefix-aligned",
             OrderPolicy::BlendServe => "blendserve",
         }
     }
@@ -173,6 +177,7 @@ impl OrderPolicy {
             "fcfs" => Some(OrderPolicy::Fcfs),
             "dfs" => Some(OrderPolicy::Dfs),
             "random" => Some(OrderPolicy::Random),
+            "prefix-aligned" => Some(OrderPolicy::PrefixAligned),
             "blendserve" => Some(OrderPolicy::BlendServe),
             _ => None,
         }
@@ -505,6 +510,12 @@ pub struct EngineConfig {
     /// Include the quadratic prefill-attention FLOPs term (the paper's
     /// model derives then omits it; we keep it for accuracy).
     pub prefill_attn_flops: bool,
+    /// Force the [`crate::engine::EngineAuditor`] cross-subsystem
+    /// invariant checks on every `step_once` even in release builds.
+    /// Debug builds always audit regardless of this flag (that is how CI's
+    /// test job exercises the auditor); release runs skip it by default so
+    /// the hot path pays nothing.
+    pub audit: bool,
 }
 
 impl Default for EngineConfig {
@@ -513,7 +524,16 @@ impl Default for EngineConfig {
             overlap: OverlapMode::Overlapped,
             prefix_cache: true,
             prefill_attn_flops: true,
+            audit: false,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Whether a run under this config carries the auditor: always in
+    /// debug builds, opt-in (`audit = true`) in release.
+    pub fn audit_enabled(&self) -> bool {
+        self.audit || cfg!(debug_assertions)
     }
 }
 
@@ -608,6 +628,7 @@ impl SystemConfig {
         d.set_str("engine", "overlap", self.engine.overlap.name());
         d.set_bool("engine", "prefix_cache", self.engine.prefix_cache);
         d.set_bool("engine", "prefill_attn_flops", self.engine.prefill_attn_flops);
+        d.set_bool("engine", "audit", self.engine.audit);
 
         d.set_num("colocate", "online_rate", self.colocate.online_rate);
         d.set_num("colocate", "slo_scale", self.colocate.slo_scale);
@@ -708,11 +729,20 @@ impl SystemConfig {
             seed: n("scheduler", "seed")? as u64,
         };
         let overlap_name = s("engine", "overlap")?;
+        // `audit` is optional (config files predating the auditor carry
+        // no such key); absent means the debug-build default.
+        let audit = match d.get("engine", "audit") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| TomlError("[engine] audit: expected bool".into()))?,
+        };
         let engine = EngineConfig {
             overlap: OverlapMode::from_name(&overlap_name)
                 .ok_or_else(|| TomlError(format!("unknown overlap '{overlap_name}'")))?,
             prefix_cache: b("engine", "prefix_cache")?,
             prefill_attn_flops: b("engine", "prefill_attn_flops")?,
+            audit,
         };
         // The [colocate] section is optional (older config files predate
         // co-located serving); absent keys fall back to the inert default.

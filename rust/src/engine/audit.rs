@@ -1,0 +1,369 @@
+//! The engine invariant auditor (DESIGN.md §11): cross-subsystem
+//! conservation laws checked after every [`SimEngine::step_once`].
+//!
+//! Five PRs of engine growth — retraction, the radix prefix cache, the
+//! tiered-KV ledger/link, the encoder cache, fleet stealing — are each
+//! pinned by per-subsystem oracle tests, but nothing watched the *seams*
+//! between them: a retraction that forgets to unpin an embedding, a
+//! restore that double-counts recompute, side accounting that drifts
+//! from the actives actually holding charges.  The auditor recomputes
+//! the engine's running aggregates from first principles each step and
+//! asserts they match, so any future change that breaks a conservation
+//! law fails the first test that exercises it instead of skewing results
+//! silently.
+//!
+//! Gating: debug builds always audit (CI's test job runs the dev
+//! profile, so every existing test doubles as an auditor test); release
+//! builds skip it unless `EngineConfig::audit` opts in — the checks walk
+//! the active set, so the hot path must not pay for them by default.
+//!
+//! Invariants (each `check` call):
+//!
+//! 1. **Progress ≤ demand** — per active: `prefill_pos ≤ input_len`,
+//!    `decoded ≤ true_output`, `encode_left ≥ 0`, and
+//!    `private_prompt = input_len − pin.len()` exactly (admission's
+//!    split of the prompt between cache-pinned and privately-charged
+//!    tokens never drifts).
+//! 2. **Aggregate conservation** — `private_tokens`, `decode_ctx_sum`,
+//!    `used_left`/`used_right` equal their recomputed per-active sums.
+//! 3. **Exactly-once residency** — no request is active twice; the
+//!    retract queue holds no duplicates and no currently-active request.
+//! 4. **KV budget** — `peak_kv_used` is monotone; committed tokens may
+//!    exceed capacity only as a lone oversized request or in a step that
+//!    made retraction progress (the engine retracts one victim per
+//!    step).
+//! 5. **Host ledger** — host bytes within the configured budget;
+//!    `offloaded = fetched + resident` conservation; the run counters
+//!    mirror the ledger; swap counters frozen at zero when tiering is
+//!    disabled.
+//! 6. **Link FIFO causality** — `busy_until` and `busy_time` are
+//!    monotone and `busy_until ≥ busy_time` (transfers are issued at
+//!    non-negative times, FIFO, never retroactively).
+//! 7. **Recompute accounting** — `recomputed_tokens` only grows in steps
+//!    with a retraction or a swap restore; swap-outs only happen in
+//!    retraction steps.
+//! 8. **Cache refcounts** — encoder-cache pinned references equal the
+//!    attachment pins held by actives; prefix-cache pinned tokens are
+//!    bounded by the actives' pin lengths.
+//! 9. **Token conservation at completion** — when a run reaches `Done`,
+//!    the finished timings account for exactly `total_tokens`.
+
+use super::{RunState, SimEngine};
+
+/// Relative slack for float aggregate comparisons.  Every audited sum is
+/// dyadic (token counts and `d̂/2` halves), so f64 accumulation is exact;
+/// the slack only guards against a future non-dyadic term.
+const REL_EPS: f64 = 1e-9;
+
+fn close(what: &str, engine_val: f64, recomputed: f64) {
+    let tol = REL_EPS * engine_val.abs().max(recomputed.abs()).max(1.0);
+    assert!(
+        (engine_val - recomputed).abs() <= tol,
+        "audit: {what} drifted — engine {engine_val} vs recomputed {recomputed}"
+    );
+}
+
+/// Step-over-step auditor state: previous counter values for the
+/// monotonicity and delta-gated checks.
+#[derive(Clone, Debug, Default)]
+pub struct EngineAuditor {
+    prev_clock: f64,
+    prev_peak_kv: f64,
+    prev_retractions: u64,
+    prev_recomputed: u64,
+    prev_swapped_out: u64,
+    prev_swapped_in: u64,
+    prev_link_busy_until: f64,
+    prev_link_busy_time: f64,
+    checks: u64,
+}
+
+impl EngineAuditor {
+    /// The auditor a run under `cfg` carries: present in debug builds or
+    /// when `engine.audit = true`, absent otherwise.
+    pub fn maybe(cfg: &crate::config::EngineConfig) -> Option<Box<EngineAuditor>> {
+        if cfg.audit_enabled() {
+            Some(Box::new(EngineAuditor::default()))
+        } else {
+            None
+        }
+    }
+
+    /// Number of steps audited so far.
+    pub fn checks(&self) -> u64 {
+        self.checks
+    }
+
+    /// Verify every invariant against the post-step state.  Panics with
+    /// the violated law on failure.
+    pub fn check(&mut self, eng: &SimEngine, st: &RunState) {
+        // ---- (1) per-active progress bounds + (2) aggregate sums ----
+        let mut private = 0.0f64;
+        let mut ctx = 0.0f64;
+        let mut left = 0.0f64;
+        let mut right = 0.0f64;
+        let mut waiting = 0usize;
+        let mut att_refs = 0u64;
+        let mut pin_sum = 0u64;
+        let mut ids: Vec<u32> = Vec::with_capacity(st.active.len());
+        for a in &st.active {
+            let idx = eng.by_id[a.req as usize];
+            assert!(idx != usize::MAX, "audit: active request {} unknown to engine", a.req);
+            let r = &eng.requests[idx];
+            let p = r.input_len();
+            assert!(
+                a.prefill_pos <= p,
+                "audit: request {} prefill {} beyond prompt {p}",
+                a.req,
+                a.prefill_pos
+            );
+            assert!(
+                a.decoded <= r.true_output,
+                "audit: request {} decoded {} beyond demand {}",
+                a.req,
+                a.decoded,
+                r.true_output
+            );
+            // Admission sets `private_prompt = prompt − pinned`, and
+            // neither side changes until finish/retraction releases both.
+            assert!(
+                a.private_prompt == (p - a.pin.len()) as f64,
+                "audit: request {} private prompt {} != prompt {p} − pinned {}",
+                a.req,
+                a.private_prompt,
+                a.pin.len()
+            );
+            assert!(
+                a.encode_left >= 0.0 && a.charge >= 0.0,
+                "audit: request {} negative accounting (encode_left {}, charge {})",
+                a.req,
+                a.encode_left,
+                a.charge
+            );
+            private += a.private_prompt + a.decoded as f64;
+            if a.decoding {
+                ctx += (p + a.decoded as usize) as f64;
+            }
+            match a.side {
+                super::Side::Left => left += a.charge,
+                super::Side::Right => right += a.charge,
+            }
+            if a.encode_left > 0.0 {
+                waiting += 1;
+            }
+            att_refs += a.att_pins.len() as u64;
+            pin_sum += a.pin.len() as u64;
+            ids.push(a.req);
+        }
+        close("private_tokens", st.private_tokens, private);
+        close("decode_ctx_sum", st.decode_ctx_sum, ctx);
+        close("used_left", st.used_left, left);
+        close("used_right", st.used_right, right);
+        assert_eq!(
+            st.mm.waiting, waiting,
+            "audit: mm.waiting {} vs {} actives still owing encoder work",
+            st.mm.waiting, waiting
+        );
+        assert!(
+            st.mm.encode_time >= st.mm.overlapped - REL_EPS,
+            "audit: overlapped encoder seconds {} exceed executed {}",
+            st.mm.overlapped,
+            st.mm.encode_time
+        );
+
+        // ---- (3) exactly-once residency ----
+        ids.sort_unstable();
+        for w in ids.windows(2) {
+            assert!(w[0] != w[1], "audit: request {} active twice", w[0]);
+        }
+        let mut rq: Vec<u32> = st.retract_queue.iter().copied().collect();
+        rq.sort_unstable();
+        for w in rq.windows(2) {
+            assert!(w[0] != w[1], "audit: request {} retract-queued twice", w[0]);
+        }
+        for &q in &rq {
+            assert!(
+                ids.binary_search(&q).is_err(),
+                "audit: request {q} both active and retract-queued"
+            );
+        }
+
+        // ---- (8) cache refcount consistency ----
+        assert_eq!(
+            eng.ecache.total_refs(),
+            att_refs,
+            "audit: encoder cache holds {} pinned refs but actives hold {} attachment pins",
+            eng.ecache.total_refs(),
+            att_refs
+        );
+        let pinned = eng.cache.pinned_tokens();
+        assert!(
+            pinned <= pin_sum,
+            "audit: prefix cache pins {pinned} tokens but actives account for only {pin_sum}"
+        );
+
+        // ---- (4) KV budget ----
+        assert!(
+            st.result.peak_kv_used >= self.prev_peak_kv - REL_EPS,
+            "audit: peak_kv_used regressed {} -> {}",
+            self.prev_peak_kv,
+            st.result.peak_kv_used
+        );
+        let committed = st.private_tokens + pinned as f64;
+        if committed > eng.kv_capacity * (1.0 + REL_EPS) {
+            assert!(
+                st.active.len() <= 1 || st.result.retractions > self.prev_retractions,
+                "audit: KV budget exceeded ({committed} > {}) with {} actives and no \
+                 retraction progress this step",
+                eng.kv_capacity,
+                st.active.len()
+            );
+        }
+
+        // ---- (5) host ledger ----
+        let led = &st.kv.ledger;
+        assert!(
+            led.host_used_bytes() <= eng.kv_params.host_capacity_bytes * (1.0 + REL_EPS),
+            "audit: host memory over budget ({} > {})",
+            led.host_used_bytes(),
+            eng.kv_params.host_capacity_bytes
+        );
+        assert_eq!(
+            led.offloaded_tokens,
+            led.fetched_tokens + led.resident_tokens(),
+            "audit: ledger conservation broken (offloaded != fetched + resident)"
+        );
+        assert_eq!(
+            st.kv.swapped_out_tokens, led.offloaded_tokens,
+            "audit: swapped_out_tokens diverged from the ledger"
+        );
+        assert_eq!(
+            st.kv.swapped_in_tokens, led.fetched_tokens,
+            "audit: swapped_in_tokens diverged from the ledger"
+        );
+        if !eng.kv_params.enabled {
+            assert_eq!(
+                st.kv.swapped_out_tokens, 0,
+                "audit: swap activity with tiering disabled"
+            );
+        }
+
+        // ---- (6) link FIFO causality ----
+        let link = &st.kv.link;
+        assert!(
+            link.busy_until() >= self.prev_link_busy_until - REL_EPS,
+            "audit: link busy_until moved backwards"
+        );
+        assert!(
+            link.busy_time() >= self.prev_link_busy_time - REL_EPS,
+            "audit: link busy_time shrank"
+        );
+        assert!(
+            link.busy_until() >= link.busy_time() - REL_EPS,
+            "audit: link busy_until {} below busy_time {} (retroactive transfer)",
+            link.busy_until(),
+            link.busy_time()
+        );
+
+        // ---- (7) monotone counters + recompute accounting ----
+        assert!(st.clock >= self.prev_clock - REL_EPS, "audit: clock went backwards");
+        assert!(st.result.retractions >= self.prev_retractions);
+        assert!(st.kv.recomputed_tokens >= self.prev_recomputed);
+        assert!(st.kv.swapped_out_tokens >= self.prev_swapped_out);
+        assert!(st.kv.swapped_in_tokens >= self.prev_swapped_in);
+        if st.kv.recomputed_tokens > self.prev_recomputed {
+            assert!(
+                st.result.retractions > self.prev_retractions
+                    || st.kv.swapped_in_tokens > self.prev_swapped_in,
+                "audit: recomputed_tokens grew without a retraction or swap restore"
+            );
+        }
+        if st.kv.swapped_out_tokens > self.prev_swapped_out {
+            assert!(
+                st.result.retractions > self.prev_retractions,
+                "audit: tokens swapped out without a retraction"
+            );
+        }
+
+        // ---- (9) token conservation at completion ----
+        if st.finished >= eng.requests.len() {
+            let mut total = 0u64;
+            let mut n_finished = 0usize;
+            for (i, t) in st.timings.iter().enumerate() {
+                if t.finish.is_finite() {
+                    let r = &eng.requests[i];
+                    total += r.input_len() as u64 + r.true_output as u64;
+                    n_finished += 1;
+                }
+            }
+            assert_eq!(
+                n_finished, st.finished,
+                "audit: finished count {} vs {} finite finish timings",
+                st.finished, n_finished
+            );
+            assert_eq!(
+                total, st.result.total_tokens,
+                "audit: total_tokens {} but finished requests sum to {total}",
+                st.result.total_tokens
+            );
+        }
+
+        self.prev_clock = st.clock;
+        self.prev_peak_kv = st.result.peak_kv_used;
+        self.prev_retractions = st.result.retractions;
+        self.prev_recomputed = st.kv.recomputed_tokens;
+        self.prev_swapped_out = st.kv.swapped_out_tokens;
+        self.prev_swapped_in = st.kv.swapped_in_tokens;
+        self.prev_link_busy_until = st.kv.link.busy_until();
+        self.prev_link_busy_time = st.kv.link.busy_time();
+        self.checks += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SimEngine, SimRequest, StaticOrder, StepOutcome};
+    use crate::config::{EngineConfig, SchedulerConfig};
+    use crate::config::presets;
+    use crate::perfmodel::PerfModel;
+    use std::sync::Arc;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    fn reqs(n: usize) -> Vec<SimRequest> {
+        (0..n)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..96).map(|k| (i * 96 + k) as u32).collect();
+                SimRequest::offline(i as u32, Arc::new(prompt), 48, 40)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn auditor_runs_and_passes_on_a_plain_batch() {
+        let n = 24;
+        // Explicit opt-in so the test also exercises the release profile.
+        let cfg = EngineConfig { audit: true, ..EngineConfig::default() };
+        let mut eng = SimEngine::new(pm(), cfg, SchedulerConfig::default(), reqs(n));
+        let mut st = eng.begin();
+        let mut adm = StaticOrder::new((0..n as u32).collect());
+        let mut steps = 0u64;
+        while eng.step_once(&mut st, &mut adm) == StepOutcome::Progress {
+            steps += 1;
+        }
+        let audited = st.audit.as_ref().expect("audit=true carries an auditor").checks();
+        assert!(audited > 0 && audited <= steps + 1, "audited {audited} of {steps} steps");
+        let r = eng.finalize(st);
+        assert_eq!(r.total_tokens, (n * (96 + 48)) as u64);
+    }
+
+    #[test]
+    fn auditor_absent_when_disabled_in_release() {
+        let cfg = EngineConfig::default();
+        let eng = SimEngine::new(pm(), cfg.clone(), SchedulerConfig::default(), reqs(2));
+        let st = eng.begin();
+        assert_eq!(st.audit.is_some(), cfg.audit_enabled());
+    }
+}

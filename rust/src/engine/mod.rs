@@ -21,6 +21,7 @@ pub mod prefix_cache;
 pub mod sim;
 
 pub use prefix_cache::{PinHandle, RadixCache};
+pub use sim::audit::EngineAuditor;
 pub use sim::{
     Admitter, EngineView, RequestTiming, RunState, SimEngine, SimRequest, SimResult,
     StaticOrder, StepOutcome, StepSample,

@@ -19,6 +19,11 @@ use crate::trace::Workload;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+// Child module so the auditor can recompute aggregates straight from the
+// engine's private state (DESIGN.md §11); the file lives beside sim.rs.
+#[path = "audit.rs"]
+pub mod audit;
+
 /// Which memory partition a request was admitted into (§5.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Side {
@@ -518,6 +523,9 @@ pub struct RunState {
     kv: KvRunState,
     /// Modality state: pending encoder work + overlap counters.
     mm: MmRunState,
+    /// Invariant auditor (DESIGN.md §11): present in debug builds or when
+    /// `engine.audit` is set, `None` (zero-cost) otherwise.
+    pub(crate) audit: Option<Box<audit::EngineAuditor>>,
 }
 
 impl RunState {
@@ -894,6 +902,7 @@ impl SimEngine {
             rem_mem,
             kv: KvRunState::new(&self.kv_params),
             mm: MmRunState::default(),
+            audit: audit::EngineAuditor::maybe(&self.cfg),
         }
     }
 
@@ -1392,6 +1401,14 @@ impl SimEngine {
             "stalled at step {}",
             st.step
         );
+
+        // Invariant audit (DESIGN.md §11): recompute the aggregates from
+        // the post-step state and assert every conservation law.  Taken
+        // out and put back so the auditor can borrow `st` immutably.
+        if let Some(mut aud) = st.audit.take() {
+            aud.check(self, st);
+            st.audit = Some(aud);
+        }
 
         if st.finished >= self.requests.len() {
             StepOutcome::Done

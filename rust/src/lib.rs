@@ -33,6 +33,7 @@ pub mod kv;
 pub mod modality;
 pub mod parallel;
 pub mod perfmodel;
+pub mod planner;
 pub mod scheduler;
 pub mod server;
 pub mod trace;

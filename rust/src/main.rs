@@ -7,6 +7,7 @@
 //! blendserve colocate --pool pool.jsonl [--online-rate 4] [--slo-scale 5] [--policy elastic]
 //! blendserve kv       --pool pool.jsonl [--memory-gb 22] [--margins 0.5,1,2] [--out kv.json]
 //! blendserve modality [--n 1200] [--dup 0.4] [--encoder-params 2e9] [--out mm.json]
+//! blendserve plan     --pool pool.jsonl [--systems blendserve,prefix-aligned] [--out plan.json]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
@@ -17,7 +18,8 @@
 //! schedule (DESIGN.md §Co-located-Serving); `kv` sweeps the tiered KV
 //! manager's swap policy against the discard baseline (DESIGN.md §9);
 //! `serve` runs the REAL tiny model through PJRT (python never on the
-//! request path).
+//! request path); `plan` reports each scheduler's optimality gap against
+//! the planner's makespan lower bound (DESIGN.md §11).
 
 use blendserve::baselines;
 use blendserve::config::{presets, ColocationPolicy, SystemConfig};
@@ -48,10 +50,11 @@ USAGE:
                       [--model NAME] [--out FILE]
   blendserve modality [--pool FILE] [--n N] [--dup F] [--encoder-params F] [--cache-frac F]
                       [--model NAME] [--out FILE]
+  blendserve plan     --pool FILE [--systems NAME,NAME,..] [--model NAME] [--out FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve config   [--preset MODEL]
 
-SYSTEMS:   vllm-dfs sglang-dfs nanoflow-dfs nanoflow-balance blendserve
+SYSTEMS:   vllm-dfs sglang-dfs nanoflow-dfs nanoflow-balance prefix-aligned blendserve
 MODELS:    llama-3-8b llama-3-70b llama-2-7b qwen-2.5-7b qwen-2.5-72b deepseek-67b
 HARDWARE:  a100-80gb-sxm h100-80gb-sxm (per-replica fleet overrides)"
     );
@@ -84,6 +87,7 @@ fn system_by_name(name: &str) -> Option<SystemConfig> {
         "sglang-dfs" => Some(baselines::sglang_dfs()),
         "nanoflow-dfs" => Some(baselines::nanoflow_dfs()),
         "nanoflow-balance" => Some(baselines::nanoflow_balance()),
+        "prefix-aligned" => Some(baselines::prefix_aligned()),
         "blendserve" => Some(baselines::blendserve()),
         _ => None,
     }
@@ -532,6 +536,103 @@ fn cmd_kv(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `blendserve plan`: the optimality-gap report (DESIGN.md §11).  Prints
+/// the planner's resource-area makespan lower bound for the pool, the
+/// exact wave-DP optimum when the trace is small enough, and each
+/// requested system's achieved makespan as a multiple of the bound.
+fn cmd_plan(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    use blendserve::planner::{plan_units, workload_lower_bound, EXACT_MAX_UNITS};
+    use blendserve::scheduler::{prepare_blendserve, run_system};
+    use blendserve::util::Json;
+
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let w = load_jsonl(&pool)?;
+    anyhow::ensure!(!w.is_empty(), "pool {} contains no requests", pool.display());
+    let model = flags
+        .get("model")
+        .map(|name| {
+            presets::model_by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))
+        })
+        .transpose()?;
+    let mut base = baselines::blendserve();
+    if let Some(m) = &model {
+        base = baselines::with_model(base, m.clone());
+    }
+    let (pm, tree, _, _) = prepare_blendserve(&base, &w);
+    let units = plan_units(&tree, &w, &pm);
+    let lb = workload_lower_bound(&w, &pm);
+    println!(
+        "plan: {} requests in {} scheduling units on {} | lower bound {lb:.2}s",
+        w.len(),
+        units.len(),
+        base.model.name,
+    );
+    let exact = if units.len() <= EXACT_MAX_UNITS { units.exact() } else { None };
+    match &exact {
+        Some(e) => println!(
+            "exact wave optimum {:.2}s in {} waves ({:.3}x over the bound)",
+            e.makespan,
+            e.waves.len(),
+            e.makespan / lb.max(1e-12),
+        ),
+        None => println!(
+            "exact planner skipped ({} units > {EXACT_MAX_UNITS}); the bound stays valid",
+            units.len()
+        ),
+    }
+    let names: Vec<String> = match flags.get("systems") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|n| !n.is_empty())
+            .map(str::to_string)
+            .collect(),
+        None => ["blendserve", "prefix-aligned", "nanoflow-dfs"]
+            .map(str::to_string)
+            .to_vec(),
+    };
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    for name in &names {
+        let mut cfg = system_by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system {name}"))?;
+        if let Some(m) = &model {
+            cfg = baselines::with_model(cfg, m.clone());
+        }
+        let out = run_system(&cfg, &w);
+        println!(
+            "{name:<18} makespan {:>9.2}s | gap {:.3}x over bound",
+            out.result.total_time, out.optimality_gap,
+        );
+        rows.push((
+            name.clone(),
+            Json::obj(vec![
+                ("makespan_s", Json::Num(out.result.total_time)),
+                ("optimality_gap", Json::Num(out.optimality_gap)),
+                ("sharing_achieved", Json::Num(out.result.sharing_achieved)),
+            ]),
+        ));
+    }
+    if let Some(out) = flags.get("out") {
+        let mut fields = vec![
+            ("pool", Json::from(pool.display().to_string().as_str())),
+            ("n_requests", Json::from(w.len())),
+            ("n_units", Json::from(units.len())),
+            ("model", Json::from(base.model.name.as_str())),
+            ("lower_bound_s", Json::Num(lb)),
+        ];
+        if let Some(e) = &exact {
+            fields.push(("exact_makespan_s", Json::Num(e.makespan)));
+            fields.push(("exact_waves", Json::from(e.waves.len())));
+        }
+        fields.push(("systems", Json::Obj(rows.into_iter().collect())));
+        let doc = Json::obj(fields);
+        std::fs::write(out, format!("{doc}\n"))?;
+        println!("report -> {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
     let dir = flags
@@ -591,6 +692,7 @@ fn main() -> anyhow::Result<()> {
         "colocate" => cmd_colocate(flags),
         "kv" => cmd_kv(flags),
         "modality" => cmd_modality(flags),
+        "plan" => cmd_plan(flags),
         "serve" => cmd_serve(flags),
         "config" => cmd_config(flags),
         _ => usage(),

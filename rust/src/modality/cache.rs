@@ -27,9 +27,11 @@
 //! - Eviction strictly observes refcounts: a pinned entry is never
 //!   evicted, exactly like the radix cache's pinned prefixes.
 //!
-//! Determinism: eviction picks the minimum `last_use` tick, and ticks are
-//! unique (one per touch), so the iteration order of the backing map
-//! never influences behaviour.
+//! Determinism: eviction picks the minimum `(last_use, hash)` key.  Ticks
+//! are already unique (one per touch), so the hash tie-break is a
+//! belt-and-suspenders guarantee that the iteration order of the backing
+//! map can never influence behaviour, even if a future change makes
+//! ticks collide.
 
 use std::collections::{HashMap, HashSet};
 
@@ -121,7 +123,7 @@ impl EncoderCache {
                 .entries
                 .iter()
                 .filter(|(_, e)| e.refs == 0)
-                .min_by_key(|(_, e)| e.last_use)
+                .min_by_key(|(&h, e)| (e.last_use, h))
                 .map(|(&h, _)| h);
             match victim {
                 Some(h) => {
@@ -156,6 +158,12 @@ impl EncoderCache {
     /// Bytes currently resident (pinned + reclaimable).
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
+    }
+
+    /// Total pinned references across all entries — the engine auditor's
+    /// cross-check against the attachment pins held by active requests.
+    pub fn total_refs(&self) -> u64 {
+        self.entries.values().map(|e| e.refs as u64).sum()
     }
 
     /// Tokens held by pinned (refcount > 0) entries.

@@ -1,0 +1,305 @@
+//! Exact wave-partition planning: subset DP over scheduling units, with
+//! a set-partition brute force as its oracle (DESIGN.md §11).
+//!
+//! The wave model's makespan `Σ_W T(W)` is order-independent, so the
+//! optimum over *ordered* schedules equals the optimum over *set
+//! partitions* — which a classic subset DP solves exactly: for every
+//! unit subset `S`, the best cost is the cheapest feasible wave `W ⊆ S`
+//! containing `S`'s lowest-indexed unit (canonicalization: every
+//! partition has exactly one block holding that unit) plus the best cost
+//! of `S \ W`.  Enumerating submasks costs `O(3ⁿ)` — ~531k wave
+//! evaluations at the [`EXACT_MAX_UNITS`] = 12 cap, each `O(path·|W|)`.
+
+use super::PlanUnits;
+
+/// Hard cap on the exact planner's input size: `3^12` submask visits is
+/// interactive; every unit beyond doubles-and-some the work.
+pub const EXACT_MAX_UNITS: usize = 12;
+
+/// Brute force is an oracle for tests/tiny traces only; Bell(10) ≈ 116k
+/// partitions each costed from scratch is where "instant" ends.
+const BRUTE_MAX_UNITS: usize = 10;
+
+/// Slack for KV feasibility comparisons (token sums are exact dyadic
+/// floats, but stay defensive).
+const KV_EPS: f64 = 1e-9;
+
+/// An exact wave schedule: the minimum wave-model makespan and the
+/// partition (unit indices per wave) achieving it.
+#[derive(Clone, Debug)]
+pub struct ExactPlan {
+    pub makespan: f64,
+    pub waves: Vec<Vec<usize>>,
+}
+
+impl PlanUnits {
+    /// KV feasibility of a wave: average occupancy fits the budget, or
+    /// the wave is a singleton (the engine likewise lets one oversized
+    /// request overflow rather than deadlock).
+    pub fn feasible(&self, mask: u32) -> bool {
+        if mask.count_ones() <= 1 {
+            return true;
+        }
+        let kv: f64 = self.members(mask).map(|u| self.units[u].kv_tokens).sum();
+        kv <= self.kv_capacity + KV_EPS
+    }
+
+    /// Wave-model execution time of the unit subset `mask`:
+    /// `max(tok_s·unique + comp_dec + enc_dedup, mem)` with sharing and
+    /// encoder passes deduplicated across the wave's members.
+    pub fn wave_time(&self, mask: u32) -> f64 {
+        let mut nodes: Vec<(usize, u32)> = Vec::new();
+        let mut passes: Vec<(u64, f64)> = Vec::new();
+        let mut comp_dec = 0.0;
+        let mut mem = 0.0;
+        for u in self.members(mask) {
+            let unit = &self.units[u];
+            nodes.extend(unit.path.iter().copied());
+            passes.extend(unit.enc.iter().copied());
+            comp_dec += unit.decode_comp;
+            mem += unit.mem;
+        }
+        nodes.sort_unstable();
+        nodes.dedup_by_key(|e| e.0);
+        let unique: u64 = nodes.iter().map(|&(_, seg)| seg as u64).sum();
+        passes.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        passes.dedup_by_key(|p| p.0);
+        let enc: f64 = passes.iter().map(|&(_, s)| s).sum();
+        (self.tok_comp_s * unique as f64 + comp_dec + enc).max(mem)
+    }
+
+    fn members(&self, mask: u32) -> impl Iterator<Item = usize> + '_ {
+        (0..self.units.len()).filter(move |&i| mask & (1 << i) != 0)
+    }
+
+    /// Exact minimum wave-model makespan, or `None` when the trace has
+    /// more than [`EXACT_MAX_UNITS`] units (use [`PlanUnits::lower_bound`]
+    /// there).
+    pub fn exact(&self) -> Option<ExactPlan> {
+        let n = self.units.len();
+        if n > EXACT_MAX_UNITS {
+            return None;
+        }
+        if n == 0 {
+            return Some(ExactPlan { makespan: 0.0, waves: Vec::new() });
+        }
+        let full: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+        let mut dp = vec![f64::INFINITY; full as usize + 1];
+        let mut choice = vec![0u32; full as usize + 1];
+        dp[0] = 0.0;
+        for mask in 1..=full {
+            let low = mask & mask.wrapping_neg();
+            let rest = mask ^ low;
+            // Every submask of `rest`, each extended by the low bit, is a
+            // candidate wave containing the canonical lowest unit.
+            let mut sub = rest;
+            loop {
+                let wave = sub | low;
+                if self.feasible(wave) {
+                    let t = dp[(mask ^ wave) as usize] + self.wave_time(wave);
+                    if t < dp[mask as usize] {
+                        dp[mask as usize] = t;
+                        choice[mask as usize] = wave;
+                    }
+                }
+                if sub == 0 {
+                    break;
+                }
+                sub = (sub - 1) & rest;
+            }
+        }
+        // Singleton waves are always feasible, so the DP is total.
+        debug_assert!(dp[full as usize].is_finite());
+        let mut waves = Vec::new();
+        let mut mask = full;
+        while mask != 0 {
+            let wave = choice[mask as usize];
+            waves.push(self.members(wave).collect());
+            mask ^= wave;
+        }
+        Some(ExactPlan { makespan: dp[full as usize], waves })
+    }
+
+    /// Set-partition brute force: enumerate every partition of the units
+    /// into waves, cost each feasible one, take the minimum.  Oracle for
+    /// [`PlanUnits::exact`] on ≤ [`BRUTE_MAX_UNITS`]-unit traces.
+    pub fn brute_force(&self) -> f64 {
+        let n = self.units.len();
+        assert!(
+            n <= BRUTE_MAX_UNITS,
+            "brute force is an oracle for tiny traces ({n} units > {BRUTE_MAX_UNITS})"
+        );
+        if n == 0 {
+            return 0.0;
+        }
+        let mut best = f64::INFINITY;
+        let mut blocks: Vec<u32> = Vec::new();
+        self.brute_rec(0, n, &mut blocks, &mut best);
+        best
+    }
+
+    fn brute_rec(&self, i: usize, n: usize, blocks: &mut Vec<u32>, best: &mut f64) {
+        if i == n {
+            if blocks.iter().all(|&b| self.feasible(b)) {
+                let cost: f64 = blocks.iter().map(|&b| self.wave_time(b)).sum();
+                if cost < *best {
+                    *best = cost;
+                }
+            }
+            return;
+        }
+        let bit = 1u32 << i;
+        for k in 0..blocks.len() {
+            blocks[k] |= bit;
+            self.brute_rec(i + 1, n, blocks, best);
+            blocks[k] &= !bit;
+        }
+        blocks.push(bit);
+        self.brute_rec(i + 1, n, blocks, best);
+        blocks.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{plan_units, PlanUnit};
+    use super::*;
+    use crate::config::presets;
+    use crate::perfmodel::PerfModel;
+    use crate::trace::{Request, TraceKind, Workload};
+    use crate::tree::PrefixTree;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(presets::llama3_8b(), presets::a100_80gb(), 1)
+    }
+
+    /// Hand-built workload: three prompt families sharing prefixes.
+    fn tiny_workload() -> Workload {
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        for fam in 0..3u32 {
+            for leaf in 0..2u32 {
+                let mut prompt: Vec<u32> = (0..64).map(|k| fam * 1000 + k).collect();
+                prompt.extend((0..32).map(|k| fam * 1000 + 500 + leaf * 100 + k));
+                reqs.push(Request::new(id, TraceKind::Custom, prompt, 40 + leaf));
+                id += 1;
+            }
+        }
+        Workload::new("tiny", reqs)
+    }
+
+    fn units(w: &Workload, kv_capacity: f64) -> PlanUnits {
+        let tree = PrefixTree::build(w);
+        let mut pu = plan_units(&tree, w, &pm());
+        pu.kv_capacity = kv_capacity;
+        pu
+    }
+
+    #[test]
+    fn exact_matches_brute_force_tiny() {
+        let w = tiny_workload();
+        for cap in [200.0, 400.0, 1e9] {
+            let pu = units(&w, cap);
+            assert!(pu.len() <= EXACT_MAX_UNITS, "fixture grew: {}", pu.len());
+            let exact = pu.exact().expect("within exact cap").makespan;
+            let brute = pu.brute_force();
+            assert!(
+                (exact - brute).abs() <= 1e-9 * exact.max(brute).max(1e-12),
+                "cap {cap}: exact {exact} vs brute {brute}"
+            );
+            assert!(
+                pu.lower_bound() <= exact * (1.0 + 1e-9),
+                "cap {cap}: bound {} above exact {exact}",
+                pu.lower_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn exact_plan_covers_every_unit_once() {
+        let w = tiny_workload();
+        let pu = units(&w, 300.0);
+        let plan = pu.exact().unwrap();
+        let mut seen: Vec<usize> = plan.waves.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..pu.len()).collect::<Vec<usize>>());
+        let sum: f64 = plan
+            .waves
+            .iter()
+            .map(|wv| {
+                let mask = wv.iter().fold(0u32, |m, &i| m | 1 << i);
+                assert!(pu.feasible(mask));
+                pu.wave_time(mask)
+            })
+            .sum();
+        assert!((sum - plan.makespan).abs() <= 1e-9 * plan.makespan.max(1e-12));
+    }
+
+    #[test]
+    fn tight_kv_forces_more_waves() {
+        // With infinite KV one wave is optimal (max sharing, one roofline);
+        // a tight budget must split and can only cost more.
+        let w = tiny_workload();
+        let loose = units(&w, 1e9).exact().unwrap();
+        let tight = units(&w, 180.0).exact().unwrap();
+        assert_eq!(loose.waves.len(), 1, "infinite KV should fuse all units");
+        assert!(tight.waves.len() > 1, "tight KV should split");
+        assert!(tight.makespan >= loose.makespan * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn oversized_singleton_stays_feasible() {
+        let w = tiny_workload();
+        let pu = units(&w, 1.0);
+        for i in 0..pu.len() {
+            assert!(pu.feasible(1 << i));
+        }
+        assert!(pu.exact().unwrap().makespan.is_finite());
+    }
+
+    #[test]
+    fn too_many_units_returns_none() {
+        let reqs: Vec<Request> = (0..EXACT_MAX_UNITS as u32 + 1)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..16).map(|k| i * 100 + k).collect();
+                Request::new(i, TraceKind::Custom, prompt, 8)
+            })
+            .collect();
+        let w = Workload::new("wide", reqs);
+        let pu = units(&w, 1e9);
+        assert!(pu.len() > EXACT_MAX_UNITS);
+        assert!(pu.exact().is_none());
+        assert!(pu.lower_bound() > 0.0, "bound still available");
+    }
+
+    #[test]
+    fn wave_time_subadditive_under_split() {
+        // Splitting a wave recounts its shared prefix: the two halves
+        // together can never undercut the fused wave's compute area.
+        let w = tiny_workload();
+        let pu = units(&w, 1e9);
+        if pu.len() < 2 {
+            return;
+        }
+        let full = (1u32 << pu.len()) - 1;
+        let half = 1u32 | (1 << (pu.len() - 1));
+        let rest = full ^ half;
+        assert!(pu.wave_time(half) + pu.wave_time(rest) >= pu.wave_time(full) * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn plan_unit_unique_tokens_counts_path() {
+        let u = PlanUnit {
+            node: 3,
+            requests: vec![0],
+            path: vec![(3, 32), (1, 64)],
+            prompt_tokens: 96,
+            decode_tokens: 10,
+            decode_comp: 0.0,
+            mem: 0.0,
+            kv_tokens: 101.0,
+            enc: Vec::new(),
+        };
+        assert_eq!(u.unique_tokens(), 96);
+    }
+}

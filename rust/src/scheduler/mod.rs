@@ -22,6 +22,9 @@ use crate::util::DetRng;
 ///   maximal prefix sharing, the strongest baseline ordering (§6.2 reorders
 ///   every baseline's trace into DFS order).
 /// - `Random`: deterministic shuffle — "NanoFlow-Balance".
+/// - `PrefixAligned`: sharing-savings-sorted DFS
+///   ([`crate::planner::prefix_aligned_order`]) — the AlignedServe-style
+///   strong baseline of the optimality-gap bench.
 ///
 /// `BlendServe` has no static order; it uses [`DualScanner`].
 pub fn static_order(policy: OrderPolicy, tree: &PrefixTree, seed: u64) -> Vec<u32> {
@@ -33,6 +36,7 @@ pub fn static_order(policy: OrderPolicy, tree: &PrefixTree, seed: u64) -> Vec<u3
             DetRng::new(seed ^ 0xbada_55).shuffle(&mut order);
             order
         }
+        OrderPolicy::PrefixAligned => crate::planner::prefix_aligned_order(tree),
         OrderPolicy::BlendServe => {
             panic!("BlendServe uses the dual scanner, not a static order")
         }
@@ -49,7 +53,12 @@ mod tests {
     fn orders_are_permutations() {
         let w = generate_kind(TraceKind::Mmlu, 200, 3);
         let tree = PrefixTree::build(&w);
-        for policy in [OrderPolicy::Fcfs, OrderPolicy::Dfs, OrderPolicy::Random] {
+        for policy in [
+            OrderPolicy::Fcfs,
+            OrderPolicy::Dfs,
+            OrderPolicy::Random,
+            OrderPolicy::PrefixAligned,
+        ] {
             let mut o = static_order(policy, &tree, 7);
             o.sort_unstable();
             assert_eq!(o, (0..200).collect::<Vec<u32>>(), "{policy}");

@@ -26,6 +26,12 @@ pub struct RunOutput {
     pub practical_optimal_throughput: f64,
     /// Fraction of practical optimal achieved.
     pub optimal_fraction: f64,
+    /// Planner resource-area lower bound on makespan (DESIGN.md §11):
+    /// valid for *any* scheduler on this workload/replica.
+    pub makespan_lower_bound: f64,
+    /// Measured optimality gap `total_time / makespan_lower_bound` (≥ 1
+    /// up to model slack — the bound omits attention + chunk overheads).
+    pub optimality_gap: f64,
     /// Tree-transform statistics (BlendServe only).
     pub transform_splits: usize,
     /// Warm-up samples drawn (BlendServe only).
@@ -106,6 +112,7 @@ pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
     let t_o = pm.optimal_time(total, s_o);
     let t_po = pm.practical_optimal_time(total, s_o);
     let opt_tput = workload.total_tokens() as f64 / t_po.max(1e-12);
+    let lb = crate::planner::workload_lower_bound(workload, &pm);
 
     RunOutput {
         system: format!("{}+{}", cfg.scheduler.order, cfg.engine.overlap.name()),
@@ -114,6 +121,8 @@ pub fn run_system(cfg: &SystemConfig, workload: &Workload) -> RunOutput {
         practical_optimal_time: t_po,
         practical_optimal_throughput: opt_tput,
         optimal_fraction: result.throughput / opt_tput.max(1e-12),
+        makespan_lower_bound: lb,
+        optimality_gap: result.total_time / lb.max(1e-12),
         transform_splits,
         n_sampled,
         result,
@@ -145,6 +154,46 @@ mod tests {
         assert!(out.optimal_fraction > 0.3 && out.optimal_fraction <= 1.05,
             "optimal fraction {}", out.optimal_fraction);
         assert!(out.optimal_time <= out.practical_optimal_time);
+    }
+
+    #[test]
+    fn lower_bound_below_every_scheduler() {
+        // DESIGN.md §11: the resource-area bound is valid for *any*
+        // scheduler — no simulated makespan may undercut it.
+        let w = workload(1.0, 0.3, 400);
+        let mut systems = baselines::all_systems();
+        systems.push(("Prefix-Aligned", baselines::prefix_aligned()));
+        for (name, cfg) in systems {
+            let out = run_system(&cfg, &w);
+            assert!(
+                out.makespan_lower_bound > 0.0 && out.makespan_lower_bound.is_finite(),
+                "{name}: bound {}",
+                out.makespan_lower_bound
+            );
+            assert!(
+                out.result.total_time >= out.makespan_lower_bound * (1.0 - 1e-9),
+                "{name}: makespan {} below lower bound {}",
+                out.result.total_time,
+                out.makespan_lower_bound
+            );
+            assert!(out.optimality_gap >= 1.0 - 1e-9, "{name}: gap {}", out.optimality_gap);
+        }
+    }
+
+    #[test]
+    fn prefix_aligned_is_a_working_system() {
+        let w = workload(1.1, 0.3, 500);
+        let out = run_system(&baselines::prefix_aligned(), &w);
+        assert_eq!(out.result.total_tokens, w.total_tokens());
+        // Alignment exists to preserve sharing: it must land in the same
+        // league as DFS, far above the shuffled baseline.
+        let dfs = run_system(&baselines::nanoflow_dfs(), &w);
+        assert!(
+            out.result.sharing_achieved >= dfs.result.sharing_achieved * 0.9,
+            "aligned sharing {} vs dfs {}",
+            out.result.sharing_achieved,
+            dfs.result.sharing_achieved
+        );
     }
 
     #[test]

@@ -370,6 +370,25 @@ fn run_fleet(
         descs.push(r.desc);
         results.push(r.engine.finalize(r.st));
     }
+
+    // Exactly-once issuance audit (DESIGN.md §11): every workload request
+    // finishes on exactly one replica.  A stolen request stays registered
+    // on its donor with an infinite finish time, so a unit that was
+    // double-issued (or dropped) across steals would surface here.
+    if cfg!(debug_assertions) || cfg.engine.audit {
+        let mut finishes = vec![0u32; workload.requests.len()];
+        for res in &results {
+            for t in &res.timings {
+                if t.finish.is_finite() {
+                    finishes[t.id as usize] += 1;
+                }
+            }
+        }
+        for (id, &n) in finishes.iter().enumerate() {
+            assert!(n == 1, "fleet audit: request {id} finished on {n} replicas");
+        }
+    }
+
     FleetRun { results, descs, steals, stolen_units, stolen_requests }
 }
 

@@ -254,6 +254,11 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
                 ("sharing_achieved", Json::Num(o.result.sharing_achieved)),
                 ("optimal_sharing", Json::Num(o.optimal_sharing)),
                 ("optimal_fraction", Json::Num(o.optimal_fraction)),
+                (
+                    "makespan_lower_bound_s",
+                    Json::Num(o.makespan_lower_bound),
+                ),
+                ("optimality_gap", Json::Num(o.optimality_gap)),
                 ("retractions", Json::from(o.result.retractions as usize)),
                 (
                     "recomputed_tokens",

@@ -1,0 +1,229 @@
+//! Golden-trace snapshots (DESIGN.md §11 test strategy): one small
+//! canonical trace per serving scenario — offline batch, online/offline
+//! co-location, work-stealing fleet, tiered-KV pressure, mixed-modality —
+//! with the simulator's key outputs pinned to committed JSON files under
+//! `rust/tests/golden/`.
+//!
+//! Discipline: every scenario is fully seeded, and the snapshot is the
+//! *exact* serialized string (floats use Rust's shortest round-trip
+//! formatting, so a one-ULP drift fails the diff).  A behavioral change
+//! that moves a makespan, a retraction count, or the finish order must
+//! therefore re-justify the numbers by regenerating the golden file —
+//! delete it and re-run to re-pin.  Missing files bootstrap themselves
+//! and pass with a warning so a fresh checkout (or an intentional re-pin)
+//! stays green; the committed copies are what turn drift into a failure.
+//!
+//! The repeated-run test at the bottom is the determinism gate proper:
+//! two in-process runs of the same scenario must serialize bit-identically
+//! (no HashMap iteration order, host time, or allocator address may leak
+//! into results).
+
+use blendserve::baselines;
+use blendserve::engine::RequestTiming;
+use blendserve::scheduler::run_system;
+use blendserve::server::{online_stream, serve_colocated, serve_fleet};
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::synth::mixed_modal;
+use blendserve::trace::{Request, TraceKind, Workload};
+use blendserve::util::json::Json;
+use std::path::PathBuf;
+
+/// FNV-1a over a `u32` id sequence — the finish-order fingerprint.
+fn fnv1a(ids: impl Iterator<Item = u32>) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for id in ids {
+        for b in id.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Completion-order hash: ids sorted by (finish time, id), finished
+/// requests only (fleet donors leave stolen requests unfinished locally).
+fn finish_hash(timings: &[RequestTiming]) -> String {
+    let mut done: Vec<(f64, u32)> = timings
+        .iter()
+        .filter(|t| t.finish.is_finite())
+        .map(|t| (t.finish, t.id))
+        .collect();
+    done.sort_by(|a, b| a.partial_cmp(b).expect("finite finish times"));
+    fnv1a(done.into_iter().map(|(_, id)| id))
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{name}.json"))
+}
+
+/// Compare `doc` against the committed golden file, bootstrapping it on
+/// first run (see module docs for the re-pin workflow).
+fn check_golden(name: &str, doc: &Json) {
+    let rendered = format!("{doc}\n");
+    let path = golden_path(name);
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            want,
+            rendered,
+            "golden snapshot '{name}' drifted; if the change is intended, \
+             delete {} and re-run to re-pin",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+            std::fs::write(&path, &rendered).expect("write golden file");
+            eprintln!(
+                "golden_traces: bootstrapped {} — commit it to pin this scenario",
+                path.display()
+            );
+        }
+    }
+}
+
+/// The SimResult fields worth pinning: makespan, step count, token and
+/// counter conservation, and the completion order.
+fn result_doc(r: &blendserve::engine::SimResult) -> Json {
+    Json::obj(vec![
+        ("makespan_s", Json::Num(r.total_time)),
+        ("steps", Json::from(r.steps as usize)),
+        ("total_tokens", Json::from(r.total_tokens as usize)),
+        ("hit_tokens", Json::from(r.hit_tokens as usize)),
+        ("retractions", Json::from(r.retractions as usize)),
+        ("recomputed_tokens", Json::from(r.recomputed_tokens as usize)),
+        ("swapped_out_tokens", Json::from(r.swapped_out_tokens as usize)),
+        ("swapped_in_tokens", Json::from(r.swapped_in_tokens as usize)),
+        ("encode_time_s", Json::Num(r.encode_time)),
+        (
+            "embed_cache_hit_tokens",
+            Json::from(r.embed_cache_hit_tokens as usize),
+        ),
+        ("peak_kv_tokens", Json::Num(r.peak_kv_used)),
+        ("finish_order_fnv1a", Json::from(finish_hash(&r.timings).as_str())),
+    ])
+}
+
+// ---- scenario fixtures (all seeds fixed; see module docs) ----
+
+fn offline_doc() -> Json {
+    let w = generate_kind(TraceKind::BurstGpt, 120, 42);
+    let out = run_system(&baselines::blendserve(), &w);
+    assert_eq!(out.result.total_tokens, w.total_tokens());
+    result_doc(&out.result)
+}
+
+fn colocate_doc() -> Json {
+    let w = generate_kind(TraceKind::ShareGpt, 80, 11);
+    let mut cfg = baselines::blendserve();
+    cfg.colocate.online_rate = 6.0;
+    cfg.colocate.burst_factor = 4.0;
+    cfg.colocate.phase_secs = 2.0;
+    let online = online_stream(&cfg, TraceKind::ShareGpt, 16, 17);
+    let rep = serve_colocated(&cfg, &w, &online);
+    let mut doc = match result_doc(&rep.result) {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    doc.insert("n_online".into(), Json::from(rep.n_online));
+    doc.insert("slo_attained".into(), Json::from(rep.result.slo_attained));
+    Json::Obj(doc)
+}
+
+fn fleet_doc() -> Json {
+    let w = generate_kind(TraceKind::WildChat, 96, 23);
+    let mut cfg = baselines::blendserve();
+    cfg.dp_replicas = 2;
+    let rep = serve_fleet(&cfg, &w);
+    assert_eq!(rep.total_tokens, w.total_tokens());
+    let replicas: Vec<Json> = rep
+        .per_replica
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("makespan_s", Json::Num(r.total_time)),
+                ("steps", Json::from(r.steps as usize)),
+                ("total_tokens", Json::from(r.total_tokens as usize)),
+                ("finish_order_fnv1a", Json::from(finish_hash(&r.timings).as_str())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("makespan_s", Json::Num(rep.makespan)),
+        ("total_tokens", Json::from(rep.total_tokens as usize)),
+        ("steals", Json::from(rep.steals)),
+        ("stolen_requests", Json::from(rep.stolen_requests)),
+        ("replicas", Json::Arr(replicas)),
+    ])
+}
+
+/// Long-decode unique-prompt requests on a deliberately small-HBM
+/// replica: the retraction/swap path is the scenario under pin.
+fn kv_doc() -> Json {
+    let requests = (0..16)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..200).map(|k| (i * 200 + k) as u32 + 1_000_000).collect();
+            Request::new(i as u32, TraceKind::Custom, prompt, 800)
+        })
+        .collect();
+    let w = Workload::new("golden-kv-pressure", requests);
+    let mut cfg = baselines::blendserve();
+    cfg.hardware.memory_bytes = 22e9;
+    cfg.scheduler.sample_prob = 1.0;
+    cfg.kv.enabled = true;
+    let out = run_system(&cfg, &w);
+    assert_eq!(out.result.total_tokens, w.total_tokens());
+    result_doc(&out.result)
+}
+
+fn modality_doc() -> Json {
+    let w = mixed_modal(36, 15, 9, 0.4, 7);
+    let out = run_system(&baselines::blendserve(), &w);
+    assert_eq!(out.result.total_tokens, w.total_tokens());
+    result_doc(&out.result)
+}
+
+#[test]
+fn golden_offline() {
+    check_golden("offline", &offline_doc());
+}
+
+#[test]
+fn golden_colocate() {
+    check_golden("colocate", &colocate_doc());
+}
+
+#[test]
+fn golden_fleet() {
+    check_golden("fleet", &fleet_doc());
+}
+
+#[test]
+fn golden_kv_pressure() {
+    check_golden("kv", &kv_doc());
+}
+
+#[test]
+fn golden_modality() {
+    check_golden("modality", &modality_doc());
+}
+
+/// The determinism gate: every scenario serialized twice in one process
+/// must agree byte-for-byte.  This is what catches HashMap iteration
+/// order (or any other ambient nondeterminism) leaking into results,
+/// independent of whether the golden files have been committed yet.
+#[test]
+fn repeated_runs_are_bit_identical() {
+    let scenarios: [(&str, fn() -> Json); 5] = [
+        ("offline", offline_doc),
+        ("colocate", colocate_doc),
+        ("fleet", fleet_doc),
+        ("kv", kv_doc),
+        ("modality", modality_doc),
+    ];
+    for (name, build) in scenarios {
+        let a = build().to_string();
+        let b = build().to_string();
+        assert_eq!(a, b, "scenario '{name}' is not run-to-run deterministic");
+    }
+}
