@@ -453,6 +453,162 @@ impl ModalityConfig {
     }
 }
 
+/// What the fleet does with a dead replica's work (`server::fleet`,
+/// DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryStrategy {
+    /// Exactly-once recovery: reclaim the victim's unfinished requests,
+    /// re-price them and redistribute to surviving replicas (rescuing
+    /// swapped-out KV where the ledger holds it).
+    Recover,
+    /// Restart-from-scratch baseline: every death discards all fleet
+    /// progress and the whole run restarts at the failure clock.
+    Restart,
+}
+
+impl RecoveryStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryStrategy::Recover => "recover",
+            RecoveryStrategy::Restart => "restart",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "recover" => Some(RecoveryStrategy::Recover),
+            "restart" => Some(RecoveryStrategy::Restart),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RecoveryStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Failure-injection and recovery knobs (`recovery` module + fault-aware
+/// `server::fleet`, DESIGN.md §12).  Disabled by default: the fleet runs
+/// bit-identically to the pre-recovery coordinator (pinned by tests in
+/// `server/fleet.rs`).  All injected faults are derived deterministically
+/// from `seed`, so a failure run replays exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Master switch for fault injection.
+    pub enabled: bool,
+    /// Seed for the per-replica preemption trace (`recovery::FaultPlan`).
+    pub seed: u64,
+    /// Mean time between failures per replica, seconds (exponential
+    /// inter-arrival); 0 disables replica deaths.
+    pub mtbf_s: f64,
+    /// A dead replica re-joins (empty, at the failure-time clock plus this
+    /// delay) and becomes a steal target again; 0 = never re-joins.
+    pub rejoin_delay_s: f64,
+    /// Cap on total death events across the fleet (keeps seeded plans
+    /// finite even with small `mtbf_s`).
+    pub max_deaths: usize,
+    /// Degraded mode: at this clock every replica's host KV budget shrinks
+    /// to `host_shrink_frac` of its capacity (evicting offloaded extents
+    /// deterministically); 0 = never.
+    pub host_shrink_at_s: f64,
+    /// Remaining fraction of the host KV budget after the shrink, in (0, 1].
+    pub host_shrink_frac: f64,
+    /// Degraded mode: at this clock every replica's PCIe link slows to
+    /// `link_degrade_factor` of its bandwidth; 0 = never.
+    pub link_degrade_at_s: f64,
+    /// Remaining fraction of link bandwidth after the slowdown, in (0, 1].
+    pub link_degrade_factor: f64,
+    /// Adopt a victim's swapped-out KV extents on the heir replica (resume
+    /// decode from host KV) instead of restarting those requests from
+    /// scratch.
+    pub kv_rescue: bool,
+    /// What a death does to the fleet: exactly-once recovery or the
+    /// restart-from-scratch baseline.
+    pub strategy: RecoveryStrategy,
+    /// Journal a fleet snapshot every this many coordinator steps.
+    pub snapshot_every: usize,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            seed: 0,
+            mtbf_s: 0.0,
+            rejoin_delay_s: 0.0,
+            max_deaths: 4,
+            host_shrink_at_s: 0.0,
+            host_shrink_frac: 0.5,
+            link_degrade_at_s: 0.0,
+            link_degrade_factor: 0.25,
+            kv_rescue: true,
+            strategy: RecoveryStrategy::Recover,
+            snapshot_every: 64,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Every key the `[faults]` TOML section accepts; anything else is a
+    /// config error naming the offending key (same policy as `[kv]`).
+    pub const TOML_KEYS: [&'static str; 12] = [
+        "enabled",
+        "seed",
+        "mtbf_s",
+        "rejoin_delay_s",
+        "max_deaths",
+        "host_shrink_at_s",
+        "host_shrink_frac",
+        "link_degrade_at_s",
+        "link_degrade_factor",
+        "kv_rescue",
+        "strategy",
+        "snapshot_every",
+    ];
+
+    /// Semantic validation shared by the TOML and CLI construction paths.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mtbf_s >= 0.0) {
+            return Err(format!("mtbf_s must be >= 0, got {}", self.mtbf_s));
+        }
+        if !(self.rejoin_delay_s >= 0.0) {
+            return Err(format!(
+                "rejoin_delay_s must be >= 0, got {}",
+                self.rejoin_delay_s
+            ));
+        }
+        if !(self.host_shrink_at_s >= 0.0) {
+            return Err(format!(
+                "host_shrink_at_s must be >= 0, got {}",
+                self.host_shrink_at_s
+            ));
+        }
+        if !(self.host_shrink_frac > 0.0 && self.host_shrink_frac <= 1.0) {
+            return Err(format!(
+                "host_shrink_frac must be in (0, 1], got {}",
+                self.host_shrink_frac
+            ));
+        }
+        if !(self.link_degrade_at_s >= 0.0) {
+            return Err(format!(
+                "link_degrade_at_s must be >= 0, got {}",
+                self.link_degrade_at_s
+            ));
+        }
+        if !(self.link_degrade_factor > 0.0 && self.link_degrade_factor <= 1.0) {
+            return Err(format!(
+                "link_degrade_factor must be in (0, 1], got {}",
+                self.link_degrade_factor
+            ));
+        }
+        if self.snapshot_every == 0 {
+            return Err("snapshot_every must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Scheduler knobs (§5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -552,6 +708,8 @@ pub struct SystemConfig {
     pub kv: KvConfig,
     /// Multi-modal subsystem knobs (scheduler awareness + embed cache).
     pub modality: ModalityConfig,
+    /// Failure-injection + recovery knobs (inert at `enabled = false`).
+    pub faults: FaultsConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -570,6 +728,7 @@ impl SystemConfig {
             fleet: FleetConfig::default(),
             kv: KvConfig::default(),
             modality: ModalityConfig::default(),
+            faults: FaultsConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -663,6 +822,23 @@ impl SystemConfig {
             "embed_bytes_per_token",
             self.modality.embed_bytes_per_token,
         );
+
+        d.set_bool("faults", "enabled", self.faults.enabled);
+        d.set_num("faults", "seed", self.faults.seed as f64);
+        d.set_num("faults", "mtbf_s", self.faults.mtbf_s);
+        d.set_num("faults", "rejoin_delay_s", self.faults.rejoin_delay_s);
+        d.set_num("faults", "max_deaths", self.faults.max_deaths as f64);
+        d.set_num("faults", "host_shrink_at_s", self.faults.host_shrink_at_s);
+        d.set_num("faults", "host_shrink_frac", self.faults.host_shrink_frac);
+        d.set_num("faults", "link_degrade_at_s", self.faults.link_degrade_at_s);
+        d.set_num(
+            "faults",
+            "link_degrade_factor",
+            self.faults.link_degrade_factor,
+        );
+        d.set_bool("faults", "kv_rescue", self.faults.kv_rescue);
+        d.set_str("faults", "strategy", self.faults.strategy.name());
+        d.set_num("faults", "snapshot_every", self.faults.snapshot_every as f64);
         d.to_string_pretty()
     }
 
@@ -920,6 +1096,66 @@ impl SystemConfig {
             .validate()
             .map_err(|e| TomlError(format!("[modality] {e}")))?;
 
+        // The [faults] section is optional (older config files predate the
+        // fault-tolerance layer; the default is the inert `enabled =
+        // false`), with the same strictness policy as [kv]: a present
+        // section rejects unknown keys by name.
+        if let Some(sec) = d.sections.get("faults") {
+            for key in sec.keys() {
+                if !FaultsConfig::TOML_KEYS.contains(&key.as_str()) {
+                    return Err(TomlError(format!(
+                        "[faults] unknown key '{key}' (expected one of: {})",
+                        FaultsConfig::TOML_KEYS.join(", ")
+                    ))
+                    .into());
+                }
+            }
+        }
+        let fadef = FaultsConfig::default();
+        let fabool = |key: &str, def: bool| -> Result<bool, TomlError> {
+            match d.get("faults", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| TomlError(format!("[faults] {key}: expected bool"))),
+            }
+        };
+        let fanum = |key: &str, def: f64| -> Result<f64, TomlError> {
+            match d.get("faults", key) {
+                None => Ok(def),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[faults] {key}: expected number"))),
+            }
+        };
+        let strategy = match d.get("faults", "strategy") {
+            None => fadef.strategy,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| TomlError("[faults] strategy: expected string".into()))?;
+                RecoveryStrategy::from_name(s)
+                    .ok_or_else(|| TomlError(format!("unknown recovery strategy '{s}'")))?
+            }
+        };
+        let faults = FaultsConfig {
+            enabled: fabool("enabled", fadef.enabled)?,
+            seed: fanum("seed", fadef.seed as f64)? as u64,
+            mtbf_s: fanum("mtbf_s", fadef.mtbf_s)?,
+            rejoin_delay_s: fanum("rejoin_delay_s", fadef.rejoin_delay_s)?,
+            max_deaths: fanum("max_deaths", fadef.max_deaths as f64)? as usize,
+            host_shrink_at_s: fanum("host_shrink_at_s", fadef.host_shrink_at_s)?,
+            host_shrink_frac: fanum("host_shrink_frac", fadef.host_shrink_frac)?,
+            link_degrade_at_s: fanum("link_degrade_at_s", fadef.link_degrade_at_s)?,
+            link_degrade_factor: fanum("link_degrade_factor", fadef.link_degrade_factor)?,
+            kv_rescue: fabool("kv_rescue", fadef.kv_rescue)?,
+            strategy,
+            snapshot_every: fanum("snapshot_every", fadef.snapshot_every as f64)? as usize,
+        };
+        faults
+            .validate()
+            .map_err(|e| TomlError(format!("[faults] {e}")))?;
+
         let gpus_per_replica = n("", "gpus_per_replica")? as usize;
         let dp_replicas = n("", "dp_replicas")? as usize;
         fleet
@@ -934,6 +1170,7 @@ impl SystemConfig {
             fleet,
             kv,
             modality,
+            faults,
             gpus_per_replica,
             dp_replicas,
         })
@@ -1201,6 +1438,84 @@ mod tests {
             .replace("embed_bytes_per_token = 8192", "embed_bytes_per_token = -1");
         assert!(SystemConfig::from_toml(&text).is_err());
         assert!(ModalityConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn faults_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.faults.enabled = true;
+        cfg.faults.seed = 99;
+        cfg.faults.mtbf_s = 120.0;
+        cfg.faults.rejoin_delay_s = 30.0;
+        cfg.faults.max_deaths = 2;
+        cfg.faults.host_shrink_at_s = 50.0;
+        cfg.faults.host_shrink_frac = 0.25;
+        cfg.faults.link_degrade_at_s = 10.0;
+        cfg.faults.link_degrade_factor = 0.5;
+        cfg.faults.kv_rescue = false;
+        cfg.faults.strategy = RecoveryStrategy::Restart;
+        cfg.faults.snapshot_every = 16;
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating the fault-tolerance layer (no [faults]
+        // section) must parse with the inert default — and that default
+        // must be *disabled*.
+        let mut stripped = String::new();
+        let mut in_faults = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[faults]" {
+                in_faults = true;
+                continue;
+            }
+            if in_faults && line.trim().starts_with('[') {
+                in_faults = false;
+            }
+            if !in_faults {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.faults, FaultsConfig::default());
+        assert!(!parsed.faults.enabled, "faults must default to disabled");
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_faults_key_by_name() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("[faults]", "[faults]\nmtbf = 10");
+        let err = SystemConfig::from_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("mtbf"), "key name missing from: {err}");
+        assert!(err.contains("[faults]"), "section missing from: {err}");
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_faults_values() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg.to_toml().replace("mtbf_s = 0", "mtbf_s = -1");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("host_shrink_frac = 0.5", "host_shrink_frac = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("link_degrade_factor = 0.25", "link_degrade_factor = 1.5");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("snapshot_every = 64", "snapshot_every = 0");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg.to_toml().replace("\"recover\"", "\"hope\"");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        assert!(FaultsConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn recovery_strategy_names_roundtrip() {
+        for s in [RecoveryStrategy::Recover, RecoveryStrategy::Restart] {
+            assert_eq!(RecoveryStrategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(RecoveryStrategy::from_name("bogus"), None);
     }
 
     #[test]

@@ -33,9 +33,10 @@
 //!    made retraction progress (the engine retracts one victim per
 //!    step).
 //! 5. **Host ledger** — host bytes within the configured budget;
-//!    `offloaded = fetched + resident` conservation; the run counters
-//!    mirror the ledger; swap counters frozen at zero when tiering is
-//!    disabled.
+//!    `offloaded = fetched + dropped + resident` conservation (dropped
+//!    extents come from degraded-mode host shrinks, DESIGN.md §12); the
+//!    run counters mirror the ledger; swap counters frozen at zero when
+//!    tiering is disabled.
 //! 6. **Link FIFO causality** — `busy_until` and `busy_time` are
 //!    monotone and `busy_until ≥ busy_time` (transfers are issued at
 //!    non-negative times, FIFO, never retroactively).
@@ -92,6 +93,17 @@ impl EngineAuditor {
     /// Number of steps audited so far.
     pub fn checks(&self) -> u64 {
         self.checks
+    }
+
+    /// Re-baseline the delta-gated counters after a *coordinator-level*
+    /// mutation (cross-replica adoption of a rescued extent, a host-KV
+    /// shrink).  Those legitimately grow `swapped_out_tokens` /
+    /// `recomputed_tokens` outside a retraction step, which invariant 7
+    /// would otherwise flag; conservation invariants still apply in full
+    /// at the next `check`.
+    pub(crate) fn resync_external(&mut self, swapped_out_tokens: u64, recomputed_tokens: u64) {
+        self.prev_swapped_out = self.prev_swapped_out.max(swapped_out_tokens);
+        self.prev_recomputed = self.prev_recomputed.max(recomputed_tokens);
     }
 
     /// Verify every invariant against the post-step state.  Panics with
@@ -230,8 +242,8 @@ impl EngineAuditor {
         );
         assert_eq!(
             led.offloaded_tokens,
-            led.fetched_tokens + led.resident_tokens(),
-            "audit: ledger conservation broken (offloaded != fetched + resident)"
+            led.fetched_tokens + led.dropped_tokens + led.resident_tokens(),
+            "audit: ledger conservation broken (offloaded != fetched + dropped + resident)"
         );
         assert_eq!(
             st.kv.swapped_out_tokens, led.offloaded_tokens,

@@ -516,6 +516,11 @@ pub struct RunState {
     /// Non-cached prompt + decoded tokens.
     private_tokens: f64,
     finished: usize,
+    /// Finish events in completion order, for the fleet journal: each
+    /// finished request is appended exactly once as `(id, finish_clock)`.
+    /// The coordinator drains this with its own cursor
+    /// ([`SimEngine::finish_log`]); the engine only appends.
+    finish_log: Vec<(u32, f64)>,
     /// Alg. 3 balanced chunking: remaining compute/memory work estimates.
     rem_comp: f64,
     rem_mem: f64,
@@ -898,12 +903,163 @@ impl SimEngine {
             decode_ctx_sum: 0.0,
             private_tokens: 0.0,
             finished: 0,
+            finish_log: Vec::new(),
             rem_comp,
             rem_mem,
             kv: KvRunState::new(&self.kv_params),
             mm: MmRunState::default(),
             audit: audit::EngineAuditor::maybe(&self.cfg),
         }
+    }
+
+    /// [`Self::begin`], but with the clock pre-advanced to `clock` —
+    /// a replica that re-joins the fleet (or a restart-strategy rebuild)
+    /// starts its timeline at the fleet's current simulated time instead
+    /// of rewriting history from t = 0.
+    pub fn begin_at(&self, clock: f64) -> RunState {
+        let mut st = self.begin();
+        st.clock = clock;
+        st
+    }
+
+    /// Finish events in completion order (`(id, finish_clock)` per
+    /// finished request).  The fleet coordinator journals the tail past
+    /// its own cursor after each step.
+    pub fn finish_log<'a>(&self, st: &'a RunState) -> &'a [(u32, f64)] {
+        &st.finish_log
+    }
+
+    /// Advance an idle run's clock to `to` (no-op if already past it).
+    /// The fleet coordinator uses this when it revives a retired replica
+    /// to absorb work orphaned by a failure: the replica sat idle until
+    /// the failure instant, so nothing it adopts may predate the death.
+    pub fn bump_clock(&self, st: &mut RunState, to: f64) {
+        st.clock = st.clock.max(to);
+    }
+
+    /// Requests this engine is responsible for that have not finished:
+    /// the in-flight actives and retracted requests (admitted once, admit
+    /// time finite), plus adopted requests still waiting in the retract
+    /// queue for their first admission here (admit NaN — an heir can die
+    /// before re-admitting its inheritance).  On replica death this is
+    /// the reclamation set the coordinator must re-home; the
+    /// never-admitted remainder comes from the scanner's `drain_pending`.
+    /// Sorted by id for deterministic re-distribution.
+    pub fn unfinished_admitted_ids(&self, st: &RunState) -> Vec<u32> {
+        let mut ids: Vec<u32> = st
+            .timings
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.admit.is_finite() && t.finish.is_nan())
+            .map(|(i, _)| self.requests[i].id)
+            .collect();
+        for &id in &st.retract_queue {
+            let idx = self.by_id[id as usize];
+            if st.timings[idx].admit.is_nan() && st.timings[idx].finish.is_nan() {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// The host-resident KV extent a (dead) replica still holds for
+    /// `req`, if any.  Read-only: rescuing from a corpse must not touch
+    /// its fetch counters — the extent is *copied* to the heir, and the
+    /// victim's ledger is simply abandoned with the rest of its state.
+    pub fn kv_extent(&self, st: &RunState, req: u32) -> Option<KvExtent> {
+        st.kv.ledger.get(req).copied()
+    }
+
+    /// A clone of this engine's request record for `req` (the coordinator
+    /// re-homes reclaimed requests onto heirs by value).
+    pub fn request_by_id(&self, req: u32) -> Option<SimRequest> {
+        let idx = *self.by_id.get(req as usize)?;
+        if idx == usize::MAX {
+            return None;
+        }
+        Some(self.requests[idx].clone())
+    }
+
+    /// Adopt a request reclaimed from a dead replica, optionally with a
+    /// KV extent rescued from the victim's host memory.  The request is
+    /// registered ([`Self::feed_requests`]) and queued for priority
+    /// re-admission through the retract queue — exactly the path a local
+    /// retraction takes, so the existing restore/recompute machinery does
+    /// the rest.  A rescued extent is installed with `ready_at = ∞`
+    /// (DESIGN.md §12: the host-to-host rescue copy is modeled as one
+    /// synchronous fetch over the heir's link at re-admission).  Returns
+    /// whether the extent was actually installed — `false` means the
+    /// heir's host budget rejected it and the request restarts from
+    /// scratch instead (still exactly-once, just slower).
+    pub fn adopt_retracted(
+        &mut self,
+        st: &mut RunState,
+        req: SimRequest,
+        ext: Option<KvExtent>,
+    ) -> bool {
+        let id = req.id;
+        self.feed_requests(st, vec![req]);
+        let mut rescued = false;
+        if let Some(mut ext) = ext {
+            ext.ready_at = f64::INFINITY;
+            rescued = st.kv.ledger.try_offload(id, ext);
+            if rescued {
+                // Mirror what the victim's retraction already counted on
+                // its own timeline: the heir's ledger gained an offloaded
+                // extent, so its run counter must follow (audit inv. 5).
+                st.kv.swapped_out_tokens += ext.tokens;
+            }
+        }
+        st.retract_queue.push_back(id);
+        if let Some(aud) = st.audit.as_mut() {
+            aud.resync_external(st.kv.swapped_out_tokens, st.kv.recomputed_tokens);
+        }
+        rescued
+    }
+
+    /// Degraded mode: shrink the host KV budget to `frac` of its current
+    /// capacity (a co-tenant claimed the memory).  Extents that no longer
+    /// fit are dropped deterministically (ascending request id); their
+    /// owners recompute from scratch at re-admission.  Returns the tokens
+    /// dropped.
+    pub fn shrink_host_kv(&mut self, st: &mut RunState, frac: f64) -> u64 {
+        let new_cap = st.kv.ledger.capacity_bytes() * frac;
+        let evicted = st.kv.ledger.shrink_capacity(new_cap);
+        self.kv_params.host_capacity_bytes = self.kv_params.host_capacity_bytes.min(new_cap);
+        let mut dropped = 0u64;
+        for (_, ext) in &evicted {
+            dropped += ext.tokens;
+        }
+        // The dropped progress will be re-run token for token, same as a
+        // discarded retraction.
+        st.kv.recomputed_tokens += dropped;
+        if let Some(aud) = st.audit.as_mut() {
+            aud.resync_external(st.kv.swapped_out_tokens, st.kv.recomputed_tokens);
+        }
+        dropped
+    }
+
+    /// Degraded mode: scale the host link bandwidth by `factor` (a
+    /// co-tenant is sharing the PCIe switch).  In-flight transfers keep
+    /// their completion times; future swaps see the slower link, and the
+    /// swap policy's cost probe follows automatically (it reads the live
+    /// timeline).
+    pub fn degrade_link(&mut self, st: &mut RunState, factor: f64) {
+        let bw = st.kv.link.bytes_per_s() * factor;
+        st.kv.link.set_bandwidth(bw);
+        self.kv_params.link_bytes_per_s = bw;
+    }
+
+    /// Tokens of in-flight progress (prefill cursor + decoded) the active
+    /// batch currently holds — the work a preemption at this instant
+    /// would destroy.  Fleet fault reporting only.
+    pub fn inflight_progress_tokens(&self, st: &RunState) -> u64 {
+        st.active
+            .iter()
+            .map(|a| (a.prefill_pos + a.decoded as usize) as u64)
+            .sum()
     }
 
     /// Add requests to a paused run (work-stealing refill).  The matching
@@ -1335,6 +1491,7 @@ impl SimEngine {
                     }
                     st.timings[idx].finish = st.clock;
                     st.finished += 1;
+                    st.finish_log.push((a.req, st.clock));
                     continue;
                 }
             }

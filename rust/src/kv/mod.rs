@@ -86,6 +86,20 @@ impl LinkTimeline {
     pub fn busy_until(&self) -> f64 {
         self.busy_until
     }
+
+    /// Current link bandwidth, bytes/s.
+    pub fn bytes_per_s(&self) -> f64 {
+        self.bytes_per_s
+    }
+
+    /// Change the link bandwidth mid-run (degraded mode: a preemptible
+    /// host starts sharing the PCIe switch).  In-flight transfers keep
+    /// their already-computed completion times; only transfers issued
+    /// after this call see the new rate.
+    pub fn set_bandwidth(&mut self, bytes_per_s: f64) {
+        assert!(bytes_per_s >= 0.0, "negative bandwidth {bytes_per_s}");
+        self.bytes_per_s = bytes_per_s;
+    }
 }
 
 /// [`KvConfig`] resolved against one replica's perf model: the constants
@@ -187,6 +201,17 @@ mod tests {
         assert_eq!(link.transfer(10.0, 10.0), 11.0);
         assert_eq!(link.busy_time(), 4.0);
         assert_eq!(link.busy_until(), 11.0);
+    }
+
+    #[test]
+    fn set_bandwidth_affects_only_future_transfers() {
+        let mut link = LinkTimeline::new(10.0);
+        assert_eq!(link.transfer(0.0, 20.0), 2.0); // queued at old rate
+        link.set_bandwidth(5.0);
+        assert_eq!(link.bytes_per_s(), 5.0);
+        // New transfer queues behind the old one at the degraded rate.
+        assert_eq!(link.transfer(0.0, 20.0), 6.0);
+        assert_eq!(link.busy_time(), 6.0);
     }
 
     #[test]

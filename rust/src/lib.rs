@@ -9,7 +9,10 @@
 //!   NanoFlow-style overlapping execution engine ([`engine`]) with a tiered
 //!   HBM ↔ host KV manager ([`kv`], DESIGN.md §9) and a multi-modal
 //!   request subsystem — vision-encoder demand, embedding dedup cache and
-//!   encode/decode overlap ([`modality`], DESIGN.md §10) — workload
+//!   encode/decode overlap ([`modality`], DESIGN.md §10) — a fault-tolerance
+//!   layer: seeded failure injection, exactly-once recovery and a
+//!   crash-consistent journal with deterministic resume ([`recovery`],
+//!   DESIGN.md §12) — workload
 //!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
 //!   tensor parallel deployment ([`parallel`]) and the serving frontends
 //!   ([`server`]) — the offline batch API plus online/offline co-located
@@ -34,6 +37,7 @@ pub mod modality;
 pub mod parallel;
 pub mod perfmodel;
 pub mod planner;
+pub mod recovery;
 pub mod scheduler;
 pub mod server;
 pub mod trace;
@@ -45,8 +49,9 @@ pub mod util;
 pub mod runtime;
 
 pub use config::{
-    ColocateConfig, ColocationPolicy, FleetConfig, HardwareSpec, KvConfig,
-    ModalityConfig, ModelSpec, SchedulerConfig, SystemConfig,
+    ColocateConfig, ColocationPolicy, FaultsConfig, FleetConfig, HardwareSpec,
+    KvConfig, ModalityConfig, ModelSpec, RecoveryStrategy, SchedulerConfig,
+    SystemConfig,
 };
 pub use perfmodel::PerfModel;
 pub use trace::{Request, Workload};

@@ -27,7 +27,9 @@ use blendserve::perfmodel::PerfModel;
 use blendserve::runtime::serve::zipper_order;
 use blendserve::runtime::RealServer;
 use blendserve::server::pool::{load_jsonl, save_jsonl, save_results};
-use blendserve::server::{online_stream, serve_batch, serve_colocated, serve_fleet};
+use blendserve::server::{
+    online_stream, serve_batch, serve_colocated, serve_fleet_opts, FleetFtOptions,
+};
 use blendserve::trace::generators::remap_vocab;
 use blendserve::trace::synth::{synthesize, SynthSpec};
 use blendserve::trace::TraceKind;
@@ -44,6 +46,8 @@ USAGE:
   blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE]
   blendserve fleet    --pool FILE [--dp N] [--no-steal] [--steal-ratio F] [--gpus N,N,..]
                       [--hardware NAME,NAME,..] [--model NAME] [--out FILE]
+                      [--faults] [--mtbf F] [--fault-seed N] [--strategy recover|restart]
+                      [--journal FILE] [--resume FILE]
   blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
                       [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
   blendserve kv       --pool FILE [--memory-gb F] [--margins F,F,..] [--host-gb F] [--no-prefetch]
@@ -158,7 +162,22 @@ fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
-    let w = load_jsonl(&pool)?;
+    // A resume implies a prior crash, which may also have torn the pool
+    // file's final line mid-append: load tolerantly and say what was
+    // dropped.  Fresh runs keep the strict parser (a malformed pool is a
+    // bug to surface, not a tail to forgive).
+    let w = if flags.contains_key("resume") {
+        let (w, truncated) = blendserve::server::load_jsonl_tolerant(&pool)?;
+        if truncated > 0 {
+            println!(
+                "pool {}: dropped {truncated} torn trailing record (tolerant resume load)",
+                pool.display()
+            );
+        }
+        w
+    } else {
+        load_jsonl(&pool)?
+    };
     anyhow::ensure!(!w.is_empty(), "pool {} contains no requests", pool.display());
     let mut cfg = baselines::blendserve();
     if let Some(model_name) = flags.get("model") {
@@ -192,6 +211,25 @@ fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
             .map(str::to_string)
             .collect();
     }
+    // Fault injection + checkpoint/resume (DESIGN.md §12).
+    if flags.contains_key("faults") {
+        cfg.faults.enabled = true;
+    }
+    if let Some(m) = flags.get("mtbf") {
+        cfg.faults.mtbf_s = m.parse()?;
+    }
+    if let Some(s) = flags.get("fault-seed") {
+        cfg.faults.seed = s.parse()?;
+    }
+    if let Some(name) = flags.get("strategy") {
+        cfg.faults.strategy = blendserve::config::RecoveryStrategy::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown recovery strategy '{name}'"))?;
+    }
+    let opts = FleetFtOptions {
+        journal_path: flags.get("journal").map(PathBuf::from),
+        resume_path: flags.get("resume").map(PathBuf::from),
+        halt_after_steps: None,
+    };
     anyhow::ensure!(cfg.dp_replicas >= 1, "--dp must be >= 1");
     // Same semantic checks as the [fleet] TOML section (one source of
     // truth in FleetConfig::validate).
@@ -205,7 +243,34 @@ fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
         cfg.dp_replicas,
         if cfg.fleet.steal { "work stealing" } else { "static fork-join" },
     );
-    let rep = serve_fleet(&cfg, &w);
+    if cfg.faults.enabled {
+        println!(
+            "faults: seed {} mtbf {:.1}s strategy {} (max {} deaths, rejoin {:+.1}s)",
+            cfg.faults.seed,
+            cfg.faults.mtbf_s,
+            cfg.faults.strategy,
+            cfg.faults.max_deaths,
+            cfg.faults.rejoin_delay_s,
+        );
+    }
+    let rep = serve_fleet_opts(&cfg, &w, opts)?;
+    if rep.faults.deaths + rep.faults.host_shrinks + rep.faults.link_degrades > 0
+        || rep.faults.resumed_finishes > 0
+    {
+        let f = &rep.faults;
+        println!(
+            "recovery: {} deaths ({} suppressed, {} rejoins) | {} requests reclaimed | \
+             {} KV extents rescued ({} tok) | {} tok in-flight lost | resumed {} finishes",
+            f.deaths,
+            f.suppressed_deaths,
+            f.rejoins,
+            f.reclaimed_requests,
+            f.rescued_extents,
+            f.rescued_tokens,
+            f.lost_progress_tokens,
+            f.resumed_finishes,
+        );
+    }
     for (desc, idle) in rep.replica_desc.iter().zip(&rep.idle_fracs) {
         println!("  replica {desc}: idle {:.1}%", idle * 100.0);
     }

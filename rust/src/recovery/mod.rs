@@ -1,0 +1,721 @@
+//! Fault tolerance for the fleet (DESIGN.md §12): deterministic failure
+//! injection, a crash-consistent run journal, and the resume bookkeeping
+//! the coordinator uses to prune already-finished work.
+//!
+//! Offline batch inference runs on preemptible capacity by design — the
+//! relaxed latency requirement that lets BlendServe batch aggressively is
+//! the same one that makes spot GPUs economical.  That puts replica death
+//! and coordinator crashes on the *expected* path, so this module treats
+//! them as schedulable events rather than exceptions:
+//!
+//! - [`FaultPlan`] expands a `[faults]` config section into a sorted,
+//!   fully seeded event trace (per-replica exponential preemptions with
+//!   optional re-join, plus two degraded modes: a mid-run host-memory
+//!   shrink and a PCIe link slowdown).  The same seed always yields the
+//!   same plan, so a failure run replays bit-for-bit.
+//! - [`JournalWriter`] / [`load_journal`] implement an append-only journal
+//!   of length+hash-framed single-line JSON records.  Each record is
+//!   framed as `<8 hex len><16 hex fnv64><payload>\n`; a crash can only
+//!   tear the final record, and the loader truncates a torn tail cleanly
+//!   (counting it in [`JournalLoad::truncated_records`]) instead of
+//!   erroring the whole run.
+//! - [`ResumeState`] folds a loaded journal into what the coordinator
+//!   needs: the set of requests that already finished (pruned on resume
+//!   and cross-checked against the deterministic replay), plus snapshot /
+//!   fault / steal counts for reporting.
+//!
+//! Recovery itself is *deterministic replay*: the coordinator re-runs the
+//! seeded schedule and skips re-reporting journaled work, which makes the
+//! remaining results bit-identical to an uninterrupted run by
+//! construction (`rust/tests/recovery_resume.rs` pins it at every kill
+//! step).  The journal's finish records double as a corruption check —
+//! replay must reproduce each journaled finish exactly.
+
+use crate::config::FaultsConfig;
+use crate::trace::Workload;
+use crate::util::json::Json;
+use crate::util::DetRng;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------
+// Hashing / fingerprints
+// ---------------------------------------------------------------------
+
+/// FNV-1a over bytes — the journal's record checksum and the fingerprint
+/// primitive.  Not cryptographic: it detects torn writes and bit rot, not
+/// adversaries (same stance as the rest of the repo's golden hashing).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Content fingerprint of a workload: ids, prompts, output lengths and
+/// attachment profiles.  A journal recorded against one pool must not be
+/// resumed against another.
+pub fn workload_fingerprint(w: &Workload) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    mix(w.len() as u64);
+    for r in &w.requests {
+        mix(r.id as u64);
+        mix(r.prompt.len() as u64);
+        for &t in r.prompt.iter() {
+            mix(t as u64);
+        }
+        mix(r.output_len as u64);
+        mix(r.known_output as u64);
+        for a in &r.modality.attachments {
+            mix(a.content_hash);
+            mix(a.enc_tokens as u64);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Fingerprint of the serialized system config.  Resuming under different
+/// knobs would silently change the schedule; the fingerprint makes that a
+/// hard error instead.
+pub fn config_fingerprint(cfg: &crate::config::SystemConfig) -> String {
+    format!("{:016x}", fnv64(cfg.to_toml().as_bytes()))
+}
+
+// ---------------------------------------------------------------------
+// Fault plan
+// ---------------------------------------------------------------------
+
+/// Marker for fleet-wide degraded-mode events (host shrink, link
+/// slowdown), which hit every replica at once.
+pub const ALL_REPLICAS: usize = usize::MAX;
+
+/// What happens when a [`FaultEvent`] fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The replica is preempted: its in-flight work is lost to it and the
+    /// coordinator reclaims its unfinished requests.  `rejoin_at` is the
+    /// clock at which the replica comes back empty ([`f64::INFINITY`] =
+    /// never).
+    Death { rejoin_at: f64 },
+    /// Every replica's host KV budget shrinks to `frac` of its capacity.
+    HostShrink { frac: f64 },
+    /// Every replica's PCIe link slows to `factor` of its bandwidth.
+    LinkDegrade { factor: f64 },
+}
+
+/// One injected fault: `kind` fires on `replica` the first time that
+/// replica is stepped at clock >= `at`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    /// Victim replica index, or [`ALL_REPLICAS`] for degraded modes.
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// The full, pre-expanded failure trace for one fleet run, sorted by
+/// `(at, replica)`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Expand `cfg` into a deterministic event trace for `n_replicas`
+    /// replicas.  Each replica draws its preemption times from an
+    /// independent child stream of `cfg.seed` (exponential inter-arrival
+    /// with mean `mtbf_s`, restarting after each re-join), and the fleet
+    /// keeps only the first `max_deaths` deaths overall.  Disabled
+    /// configs produce an empty plan.
+    pub fn generate(cfg: &FaultsConfig, n_replicas: usize) -> FaultPlan {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        if cfg.enabled && cfg.mtbf_s > 0.0 && cfg.max_deaths > 0 {
+            let root = DetRng::new(cfg.seed);
+            let mut deaths: Vec<FaultEvent> = Vec::new();
+            for r in 0..n_replicas {
+                let mut rng = root.child(&format!("replica-{r}"));
+                // Without re-join a replica can die at most once; with it,
+                // cap per-replica draws at the global budget (any excess
+                // is truncated after the merge anyway).
+                let draws = if cfg.rejoin_delay_s > 0.0 { cfg.max_deaths } else { 1 };
+                let mut t = 0.0;
+                for _ in 0..draws {
+                    // Exponential inter-arrival: -mtbf * ln(1 - u),
+                    // u in [0, 1) so the argument stays in (0, 1].
+                    t += -cfg.mtbf_s * (1.0 - rng.f64()).ln();
+                    let rejoin_at = if cfg.rejoin_delay_s > 0.0 {
+                        t + cfg.rejoin_delay_s
+                    } else {
+                        f64::INFINITY
+                    };
+                    deaths.push(FaultEvent {
+                        at: t,
+                        replica: r,
+                        kind: FaultKind::Death { rejoin_at },
+                    });
+                    // The next preemption can only hit after the replica
+                    // is back.
+                    t += cfg.rejoin_delay_s;
+                }
+            }
+            deaths.sort_by(|a, b| {
+                a.at.partial_cmp(&b.at).expect("finite death times").then(a.replica.cmp(&b.replica))
+            });
+            deaths.truncate(cfg.max_deaths);
+            events.extend(deaths);
+        }
+        if cfg.enabled && cfg.host_shrink_at_s > 0.0 {
+            events.push(FaultEvent {
+                at: cfg.host_shrink_at_s,
+                replica: ALL_REPLICAS,
+                kind: FaultKind::HostShrink { frac: cfg.host_shrink_frac },
+            });
+        }
+        if cfg.enabled && cfg.link_degrade_at_s > 0.0 {
+            events.push(FaultEvent {
+                at: cfg.link_degrade_at_s,
+                replica: ALL_REPLICAS,
+                kind: FaultKind::LinkDegrade { factor: cfg.link_degrade_factor },
+            });
+        }
+        events.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at).expect("finite fault times").then(a.replica.cmp(&b.replica))
+        });
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Journal framing
+// ---------------------------------------------------------------------
+
+/// Header bytes per record: 8 hex chars of payload length + 16 hex chars
+/// of payload FNV-1a.
+const FRAME_HEADER: usize = 24;
+
+/// Frame one single-line JSON payload as a journal record.
+pub fn frame_record(payload: &str) -> String {
+    debug_assert!(!payload.contains('\n'), "journal payloads are single-line");
+    format!("{:08x}{:016x}{payload}\n", payload.len(), fnv64(payload.as_bytes()))
+}
+
+/// Result of loading a journal: the records that verified, plus how the
+/// file ended.
+#[derive(Debug)]
+pub struct JournalLoad {
+    pub records: Vec<Json>,
+    /// 1 when the file ends in a torn/corrupt tail (the crash-consistent
+    /// case: everything after the last intact record is dropped), else 0.
+    pub truncated_records: usize,
+    /// Byte length of the intact prefix — the offset appending resumes at.
+    pub valid_bytes: u64,
+}
+
+/// Read a journal tolerantly: verified records parse in order; the first
+/// framing/checksum failure ends the read and everything after it counts
+/// as one truncated record.  A missing file is an error (resuming from
+/// nothing is a caller bug); an empty file is an empty journal.
+pub fn load_journal(path: &Path) -> anyhow::Result<JournalLoad> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("journal {}: {e}", path.display()))?;
+    Ok(parse_journal_bytes(&bytes))
+}
+
+fn parse_journal_bytes(bytes: &[u8]) -> JournalLoad {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        if pos == bytes.len() {
+            return JournalLoad { records, truncated_records: 0, valid_bytes: pos as u64 };
+        }
+        let torn = JournalLoad {
+            records: Vec::new(),
+            truncated_records: 1,
+            valid_bytes: pos as u64,
+        };
+        if bytes.len() - pos < FRAME_HEADER {
+            return JournalLoad { records, ..torn };
+        }
+        let hex = |range: std::ops::Range<usize>| -> Option<u64> {
+            std::str::from_utf8(&bytes[range])
+                .ok()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+        };
+        let (len, want_hash) = match (hex(pos..pos + 8), hex(pos + 8..pos + FRAME_HEADER)) {
+            (Some(l), Some(h)) => (l as usize, h),
+            _ => return JournalLoad { records, ..torn },
+        };
+        let body_start = pos + FRAME_HEADER;
+        // Need the payload plus its terminating newline.
+        if bytes.len() - body_start < len + 1 || bytes[body_start + len] != b'\n' {
+            return JournalLoad { records, ..torn };
+        }
+        let payload = &bytes[body_start..body_start + len];
+        if fnv64(payload) != want_hash {
+            return JournalLoad { records, ..torn };
+        }
+        let parsed = std::str::from_utf8(payload).ok().and_then(|s| Json::parse(s).ok());
+        match parsed {
+            Some(j) => records.push(j),
+            None => return JournalLoad { records, ..torn },
+        }
+        pos = body_start + len + 1;
+    }
+}
+
+/// Append-only journal writer.  Every record goes to disk in a single
+/// `write_all` before `record` returns, so a process crash can tear at
+/// most the final record — which the loader then drops.
+pub struct JournalWriter {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal (truncates an existing file).
+    pub fn create(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("journal {}: {e}", path.display()))?;
+        Ok(JournalWriter { file, path: path.to_path_buf() })
+    }
+
+    /// Re-open an existing journal for appending: the intact prefix is
+    /// kept, a torn tail is cut off first (crash recovery), and new
+    /// records continue from there.
+    pub fn resume_append(path: &Path, valid_bytes: u64) -> anyhow::Result<Self> {
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| anyhow::anyhow!("journal {}: {e}", path.display()))?;
+        file.set_len(valid_bytes)
+            .map_err(|e| anyhow::anyhow!("journal {}: truncate: {e}", path.display()))?;
+        use std::io::Seek;
+        let mut file = file;
+        file.seek(std::io::SeekFrom::End(0))
+            .map_err(|e| anyhow::anyhow!("journal {}: seek: {e}", path.display()))?;
+        Ok(JournalWriter { file, path: path.to_path_buf() })
+    }
+
+    /// Append one record durably.
+    pub fn record(&mut self, payload: &Json) -> anyhow::Result<()> {
+        let framed = frame_record(&payload.to_string());
+        self.file
+            .write_all(framed.as_bytes())
+            .map_err(|e| anyhow::anyhow!("journal {}: {e}", self.path.display()))?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+// ---------------------------------------------------------------------
+// Record constructors
+// ---------------------------------------------------------------------
+
+/// Typed constructors for the journal's record kinds.  All payloads are
+/// flat JSON objects with a `type` tag; floats round-trip exactly through
+/// the repo's JSON codec (integral values print as integers, everything
+/// else uses shortest-round-trip formatting), so a replayed finish clock
+/// can be compared bitwise against its journaled value.
+pub mod records {
+    use super::Json;
+
+    /// Journal header: what run this is.  Always the first record.
+    pub fn meta(workload_fp: &str, config_fp: &str, n_requests: usize, dp: usize) -> Json {
+        Json::obj(vec![
+            ("type", Json::from("meta")),
+            ("workload_fp", Json::from(workload_fp)),
+            ("config_fp", Json::from(config_fp)),
+            ("n_requests", Json::from(n_requests)),
+            ("dp", Json::from(dp)),
+        ])
+    }
+
+    /// One request finished on `replica` at engine clock `finish`.
+    pub fn finish(id: u32, replica: usize, finish: f64) -> Json {
+        Json::obj(vec![
+            ("type", Json::from("finish")),
+            ("id", Json::from(id as usize)),
+            ("replica", Json::from(replica)),
+            ("finish", Json::Num(finish)),
+        ])
+    }
+
+    /// Periodic fleet snapshot: coordinator progress + per-replica queue
+    /// depths (scanner pending + engine actives) and cache summaries.
+    pub fn snapshot(
+        step: usize,
+        clock: f64,
+        finished: usize,
+        queued: &[usize],
+        host_resident: &[usize],
+    ) -> Json {
+        Json::obj(vec![
+            ("type", Json::from("snap")),
+            ("step", Json::from(step)),
+            ("clock", Json::Num(clock)),
+            ("finished", Json::from(finished)),
+            ("queued", Json::arr_usize(queued)),
+            ("host_resident_tokens", Json::arr_usize(host_resident)),
+        ])
+    }
+
+    /// A fault fired.
+    pub fn fault(ev: &super::FaultEvent) -> Json {
+        let (kind, detail) = match ev.kind {
+            super::FaultKind::Death { rejoin_at } => ("death", ("rejoin_at", Json::Num(rejoin_at))),
+            super::FaultKind::HostShrink { frac } => ("host_shrink", ("frac", Json::Num(frac))),
+            super::FaultKind::LinkDegrade { factor } => {
+                ("link_degrade", ("factor", Json::Num(factor)))
+            }
+        };
+        Json::obj(vec![
+            ("type", Json::from("fault")),
+            ("kind", Json::from(kind)),
+            ("at", Json::Num(ev.at)),
+            ("replica", Json::from(ev.replica)),
+            detail,
+        ])
+    }
+
+    /// Work moved between replicas (steal or death reclamation).
+    pub fn steal(clock: f64, from: usize, to: usize, n_requests: usize) -> Json {
+        Json::obj(vec![
+            ("type", Json::from("steal")),
+            ("clock", Json::Num(clock)),
+            ("from", Json::from(from)),
+            ("to", Json::from(to)),
+            ("n_requests", Json::from(n_requests)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Resume state
+// ---------------------------------------------------------------------
+
+/// A loaded journal folded into coordinator-usable form.
+#[derive(Debug, Default)]
+pub struct ResumeState {
+    /// Requests already finished, with their journaled finish clocks.
+    /// The resuming coordinator prunes these from its output and
+    /// cross-checks each one against the deterministic replay.
+    pub finished: HashMap<u32, f64>,
+    /// Torn-tail count from the load (0 or 1).
+    pub truncated_records: usize,
+    /// Snapshot records seen.
+    pub snapshots: usize,
+    /// Coordinator step of the latest snapshot.
+    pub last_snapshot_step: usize,
+    /// Fault records seen.
+    pub faults: usize,
+    /// Steal records seen.
+    pub steals: usize,
+    /// Intact journal prefix length (where appends resume).
+    pub valid_bytes: u64,
+}
+
+impl ResumeState {
+    /// Validate and fold a journal load.  The first record must be a
+    /// `meta` whose fingerprints match the workload and config being
+    /// resumed — resuming a journal against the wrong pool or knobs is an
+    /// error, not a silent re-schedule.
+    pub fn from_load(
+        load: &JournalLoad,
+        want_workload_fp: &str,
+        want_config_fp: &str,
+    ) -> anyhow::Result<ResumeState> {
+        let mut st = ResumeState {
+            truncated_records: load.truncated_records,
+            valid_bytes: load.valid_bytes,
+            ..ResumeState::default()
+        };
+        let Some(first) = load.records.first() else {
+            anyhow::bail!("journal holds no intact records (nothing to resume)");
+        };
+        anyhow::ensure!(
+            first.get("type").and_then(Json::as_str) == Some("meta"),
+            "journal does not start with a meta record"
+        );
+        let wfp = first.req("workload_fp")?.as_str().unwrap_or_default().to_string();
+        let cfp = first.req("config_fp")?.as_str().unwrap_or_default().to_string();
+        anyhow::ensure!(
+            wfp == want_workload_fp,
+            "journal was recorded against a different workload \
+             (journal {wfp}, resuming {want_workload_fp})"
+        );
+        anyhow::ensure!(
+            cfp == want_config_fp,
+            "journal was recorded under a different config \
+             (journal {cfp}, resuming {want_config_fp})"
+        );
+        for rec in &load.records[1..] {
+            match rec.get("type").and_then(Json::as_str) {
+                Some("finish") => {
+                    let id = rec.req("id")?.as_usize().unwrap_or(u32::MAX as usize) as u32;
+                    let t = rec.req("finish")?.as_f64().unwrap_or(f64::NAN);
+                    anyhow::ensure!(
+                        st.finished.insert(id, t).is_none(),
+                        "journal finishes request {id} twice (exactly-once violated)"
+                    );
+                }
+                Some("snap") => {
+                    st.snapshots += 1;
+                    st.last_snapshot_step = rec.req("step")?.as_usize().unwrap_or(0);
+                }
+                Some("fault") => st.faults += 1,
+                Some("steal") => st.steals += 1,
+                Some("meta") => anyhow::bail!("journal holds a second meta record"),
+                other => anyhow::bail!("journal holds unknown record type {other:?}"),
+            }
+        }
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, SystemConfig};
+    use crate::trace::generators::generate_kind;
+    use crate::trace::TraceKind;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("blendserve_recovery_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_records() -> Vec<Json> {
+        vec![
+            records::meta("aaaa", "bbbb", 10, 2),
+            records::finish(3, 0, 12.5),
+            records::finish(7, 1, 13.0625),
+            records::snapshot(64, 14.0, 2, &[4, 3], &[0, 128]),
+            records::steal(15.5, 1, 0, 2),
+        ]
+    }
+
+    #[test]
+    fn journal_roundtrip() {
+        let path = tmp("roundtrip.journal");
+        let recs = sample_records();
+        let mut w = JournalWriter::create(&path).unwrap();
+        for r in &recs {
+            w.record(r).unwrap();
+        }
+        drop(w);
+        let load = load_journal(&path).unwrap();
+        assert_eq!(load.truncated_records, 0);
+        assert_eq!(load.records, recs);
+        assert_eq!(load.valid_bytes, std::fs::metadata(&path).unwrap().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The crash-consistency property proper: a journal cut at *any* byte
+    /// boundary loads the longest intact record prefix, flags exactly the
+    /// torn tail, and never errors.
+    #[test]
+    fn journal_tolerates_truncation_at_every_byte() {
+        let recs = sample_records();
+        let full: String = recs.iter().map(|r| frame_record(&r.to_string())).collect();
+        let bytes = full.as_bytes();
+        // Record boundaries (byte offsets at which the file is clean).
+        let mut boundaries = vec![0usize];
+        let mut off = 0;
+        for r in &recs {
+            off += frame_record(&r.to_string()).len();
+            boundaries.push(off);
+        }
+        for cut in 0..=bytes.len() {
+            let load = parse_journal_bytes(&bytes[..cut]);
+            let n_complete = boundaries.iter().filter(|&&b| b <= cut && b > 0).count();
+            assert_eq!(load.records.len(), n_complete, "cut at byte {cut}");
+            assert_eq!(load.records[..], recs[..n_complete], "cut at byte {cut}");
+            let at_boundary = boundaries.contains(&cut);
+            assert_eq!(
+                load.truncated_records,
+                usize::from(!at_boundary),
+                "cut at byte {cut}"
+            );
+            assert_eq!(load.valid_bytes as usize, boundaries[n_complete], "cut at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn journal_stops_at_corrupt_record() {
+        let recs = sample_records();
+        let mut bytes: Vec<u8> = recs
+            .iter()
+            .map(|r| frame_record(&r.to_string()))
+            .collect::<String>()
+            .into_bytes();
+        // Flip one payload byte inside record 2 (records 0 and 1 intact).
+        let prefix: usize =
+            recs[..2].iter().map(|r| frame_record(&r.to_string()).len()).sum();
+        bytes[prefix + FRAME_HEADER + 3] ^= 0x40;
+        let load = parse_journal_bytes(&bytes);
+        assert_eq!(load.records.len(), 2);
+        assert_eq!(load.records[..], recs[..2]);
+        assert_eq!(load.truncated_records, 1);
+        assert_eq!(load.valid_bytes as usize, prefix);
+    }
+
+    #[test]
+    fn resume_append_cuts_torn_tail_then_continues() {
+        let path = tmp("resume_append.journal");
+        let recs = sample_records();
+        let mut text: String = recs.iter().map(|r| frame_record(&r.to_string())).collect();
+        let clean_len = text.len();
+        text.push_str("0000001fdeadbeef"); // torn header, no payload
+        std::fs::write(&path, &text).unwrap();
+
+        let load = load_journal(&path).unwrap();
+        assert_eq!(load.truncated_records, 1);
+        assert_eq!(load.valid_bytes as usize, clean_len);
+
+        let mut w = JournalWriter::resume_append(&path, load.valid_bytes).unwrap();
+        let extra = records::finish(9, 0, 20.25);
+        w.record(&extra).unwrap();
+        drop(w);
+
+        let reload = load_journal(&path).unwrap();
+        assert_eq!(reload.truncated_records, 0);
+        assert_eq!(reload.records.len(), recs.len() + 1);
+        assert_eq!(*reload.records.last().unwrap(), extra);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn finish_clock_roundtrips_bitwise() {
+        // Non-trivial f64s must survive journal serialization exactly —
+        // the resume cross-check compares replayed finish clocks bitwise.
+        for &t in &[12.5, 1.0 / 3.0, 1e-17, 123456.789012345, f64::MIN_POSITIVE] {
+            let rec = records::finish(1, 0, t);
+            let framed = frame_record(&rec.to_string());
+            let load = parse_journal_bytes(framed.as_bytes());
+            let back = load.records[0].req("finish").unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), t.to_bits(), "t = {t:?}");
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_seed_sensitive() {
+        let mut cfg = FaultsConfig { enabled: true, mtbf_s: 100.0, ..FaultsConfig::default() };
+        cfg.max_deaths = 8;
+        cfg.rejoin_delay_s = 10.0;
+        let a = FaultPlan::generate(&cfg, 4);
+        let b = FaultPlan::generate(&cfg, 4);
+        assert_eq!(a.events, b.events);
+        assert!(!a.is_empty());
+        assert!(a.events.len() <= 8);
+        // Sorted by time.
+        for w in a.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        cfg.seed = 1;
+        let c = FaultPlan::generate(&cfg, 4);
+        assert_ne!(a.events, c.events, "seed must move the plan");
+    }
+
+    #[test]
+    fn fault_plan_respects_caps_and_disable() {
+        let off = FaultsConfig::default();
+        assert!(FaultPlan::generate(&off, 4).is_empty());
+
+        let mut cfg = FaultsConfig { enabled: true, mtbf_s: 1.0, ..FaultsConfig::default() };
+        cfg.max_deaths = 3;
+        // No rejoin: at most one death per replica, truncated to the cap.
+        let plan = FaultPlan::generate(&cfg, 8);
+        assert_eq!(plan.events.len(), 3);
+        for ev in &plan.events {
+            match ev.kind {
+                FaultKind::Death { rejoin_at } => assert!(rejoin_at.is_infinite()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // mtbf = 0 disables deaths even when enabled.
+        cfg.mtbf_s = 0.0;
+        assert!(FaultPlan::generate(&cfg, 8).is_empty());
+    }
+
+    #[test]
+    fn fault_plan_includes_degraded_modes() {
+        let cfg = FaultsConfig {
+            enabled: true,
+            host_shrink_at_s: 5.0,
+            host_shrink_frac: 0.5,
+            link_degrade_at_s: 2.0,
+            link_degrade_factor: 0.25,
+            ..FaultsConfig::default()
+        };
+        let plan = FaultPlan::generate(&cfg, 2);
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(
+            plan.events[0].kind,
+            FaultKind::LinkDegrade { factor: 0.25 },
+            "events sorted by time"
+        );
+        assert_eq!(plan.events[1].kind, FaultKind::HostShrink { frac: 0.5 });
+        assert!(plan.events.iter().all(|e| e.replica == ALL_REPLICAS));
+    }
+
+    #[test]
+    fn resume_state_folds_and_validates() {
+        let load = JournalLoad {
+            records: sample_records(),
+            truncated_records: 0,
+            valid_bytes: 100,
+        };
+        let st = ResumeState::from_load(&load, "aaaa", "bbbb").unwrap();
+        assert_eq!(st.finished.len(), 2);
+        assert_eq!(st.finished[&3], 12.5);
+        assert_eq!(st.snapshots, 1);
+        assert_eq!(st.last_snapshot_step, 64);
+        assert_eq!(st.steals, 1);
+
+        // Wrong fingerprints are hard errors.
+        assert!(ResumeState::from_load(&load, "zzzz", "bbbb").is_err());
+        assert!(ResumeState::from_load(&load, "aaaa", "zzzz").is_err());
+
+        // Duplicate finish violates exactly-once.
+        let mut dup = sample_records();
+        dup.push(records::finish(3, 1, 99.0));
+        let load = JournalLoad { records: dup, truncated_records: 0, valid_bytes: 0 };
+        let err = ResumeState::from_load(&load, "aaaa", "bbbb").unwrap_err().to_string();
+        assert!(err.contains("exactly-once"), "{err}");
+
+        // A journal without records cannot be resumed.
+        let empty = JournalLoad { records: vec![], truncated_records: 0, valid_bytes: 0 };
+        assert!(ResumeState::from_load(&empty, "a", "b").is_err());
+    }
+
+    #[test]
+    fn fingerprints_are_content_sensitive() {
+        let w1 = generate_kind(TraceKind::BurstGpt, 20, 42);
+        let w2 = generate_kind(TraceKind::BurstGpt, 20, 43);
+        assert_eq!(workload_fingerprint(&w1), workload_fingerprint(&w1));
+        assert_ne!(workload_fingerprint(&w1), workload_fingerprint(&w2));
+
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let mut cfg2 = cfg.clone();
+        cfg2.scheduler.chunk_tokens += 1;
+        assert_eq!(config_fingerprint(&cfg), config_fingerprint(&cfg));
+        assert_ne!(config_fingerprint(&cfg), config_fingerprint(&cfg2));
+    }
+}

@@ -175,6 +175,62 @@ impl DualScanner {
         stolen
     }
 
+    /// Remove and return every request neither cursor has issued, as
+    /// rump units in dual-scanner order — the reclamation path when this
+    /// scanner's replica dies (DESIGN.md §12).  Unlike
+    /// [`Self::steal_from_memory_end`], which may only take whole
+    /// untouched units (the donor keeps scanning its partial ones), a
+    /// dead replica scans nothing ever again, so the cursor-partial units
+    /// are cut down to their unissued remainders and handed back too.
+    /// Each rump keeps its density (a property of the shared prefix, not
+    /// of the count) and scales `est_cost` by the fraction of requests
+    /// remaining.  The scanner is left exhausted (and may be re-armed
+    /// with [`Self::feed`], though a dead replica's scanner never is).
+    pub fn drain_pending(&mut self) -> Vec<Unit> {
+        if self.crossed() {
+            self.units.clear();
+            self.total = self.issued;
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (i, u) in self.units.iter().enumerate() {
+            let n = u.requests.len();
+            let left_taken = if i < self.l.0 {
+                n
+            } else if i == self.l.0 {
+                self.l.1.min(n)
+            } else {
+                0
+            };
+            let right_taken = if self.r.0 == usize::MAX || i > self.r.0 {
+                n
+            } else if i == self.r.0 {
+                self.r.1.min(n)
+            } else {
+                0
+            };
+            if left_taken + right_taken >= n {
+                continue;
+            }
+            let remaining = &u.requests[left_taken..n - right_taken];
+            out.push(Unit {
+                requests: remaining.to_vec(),
+                density: u.density,
+                est_cost: u.est_cost.max(0.0) * remaining.len() as f64 / n as f64,
+            });
+        }
+        debug_assert_eq!(
+            out.iter().map(|u| u.requests.len()).sum::<usize>(),
+            self.total - self.issued,
+            "drain_pending dropped or duplicated requests"
+        );
+        self.units.clear();
+        self.total = self.issued;
+        self.l = (0, 0);
+        self.r = (usize::MAX, 0);
+        out
+    }
+
     fn left_req(&self) -> Option<u32> {
         self.units
             .get(self.l.0)
@@ -552,6 +608,72 @@ mod tests {
         }
         got.sort_unstable();
         assert_eq!(got, (0..6).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn drain_pending_returns_everything_on_a_fresh_scanner() {
+        let units = vec![unit(0..3, 3.0, 1.0), unit(3..6, 1.0, 2.0)];
+        let mut s = DualScanner::from_units(units.clone(), 1.5);
+        let drained = s.drain_pending();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].requests, vec![0, 1, 2]);
+        assert_eq!(drained[1].requests, vec![3, 4, 5]);
+        assert_eq!(drained[1].est_cost, 2.0, "untouched unit keeps full est");
+        assert!(s.exhausted());
+        assert_eq!(s.remaining(), 0);
+        assert_eq!(s.peek(&view(1e6, 0.0, 0.0)), None);
+    }
+
+    #[test]
+    fn drain_pending_mid_scan_partitions_exactly_once() {
+        let units = vec![
+            unit(0..3, 3.0, 3.0),
+            unit(3..6, 2.0, 3.0),
+            unit(6..9, 1.0, 3.0),
+            unit(9..12, 0.5, 3.0),
+        ];
+        let mut s = DualScanner::from_units(units, 1.5);
+        let mut issued = Vec::new();
+        // Two from the compute end, one from the memory end.
+        for _ in 0..2 {
+            let (r, _) = s.peek(&view(1e6, 0.0, 1e9)).unwrap();
+            issued.push(r);
+            s.pop();
+        }
+        let (r, _) = s.peek(&view(1e6, 1e9, 0.0)).unwrap();
+        issued.push(r);
+        s.pop();
+        let drained = s.drain_pending();
+        // Rump of unit 0 (one request), whole units 1 and 2, rump of
+        // unit 3 — dual-scanner order, cursor-partials cut down.
+        assert_eq!(drained.len(), 4);
+        assert_eq!(drained[0].requests, vec![2]);
+        assert!((drained[0].est_cost - 1.0).abs() < 1e-12, "est scaled 1/3");
+        assert_eq!(drained[1].requests, vec![3, 4, 5]);
+        assert_eq!(drained[2].requests, vec![6, 7, 8]);
+        assert_eq!(drained[3].requests, vec![9, 10]);
+        assert!((drained[3].est_cost - 2.0).abs() < 1e-12, "est scaled 2/3");
+        // Issued + drained = every request exactly once.
+        let mut all: Vec<u32> = issued;
+        all.extend(drained.iter().flat_map(|u| u.requests.iter().copied()));
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<u32>>());
+        assert!(s.exhausted());
+        // The corpse's scanner can still be re-armed (feed asserts
+        // exhausted) even though the fleet never does this.
+        s.feed(vec![unit(20..22, 1.0, 1.0)]);
+        assert_eq!(s.remaining(), 2);
+    }
+
+    #[test]
+    fn drain_pending_on_exhausted_scanner_is_empty() {
+        let mut s = DualScanner::from_units(vec![unit(0..2, 1.0, 1.0)], 1.0);
+        while s.peek(&view(1e6, 0.0, 0.0)).is_some() {
+            s.pop();
+        }
+        assert!(s.drain_pending().is_empty());
+        assert!(s.exhausted());
+        assert!(DualScanner::from_units(vec![], 1.0).drain_pending().is_empty());
     }
 
     #[test]

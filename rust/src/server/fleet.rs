@@ -27,15 +27,80 @@
 //! to the static path: one replica, the same prepared tree, the same
 //! scanner — bit-identical to `run_system`.
 
-use crate::config::{presets, SystemConfig};
+use crate::config::{presets, RecoveryStrategy, SystemConfig};
 use crate::engine::sim::{SimEngine, SimRequest, SimResult, StepOutcome};
+use crate::kv::KvExtent;
 use crate::parallel::{assign_units, work_units, WorkUnit};
 use crate::perfmodel::PerfModel;
+use crate::recovery::{
+    self, records, FaultKind, FaultPlan, JournalWriter, ResumeState,
+};
 use crate::scheduler::dual_scan::Unit;
 use crate::scheduler::{prepare_blendserve, DualScanner};
 use crate::trace::Workload;
 use crate::tree::PrefixTree;
 use crate::util::Json;
+use std::path::PathBuf;
+
+/// Per-run fault-tolerance counters (DESIGN.md §12).  All-zero when the
+/// `[faults]` section is disabled.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// Replica preemptions that fired.
+    pub deaths: usize,
+    /// Death events dropped because they targeted the last live replica
+    /// (killing it would strand work forever; DESIGN.md §12).
+    pub suppressed_deaths: usize,
+    /// Replicas that re-joined after a preemption.
+    pub rejoins: usize,
+    /// Fleet-wide rebuilds under [`RecoveryStrategy::Restart`].
+    pub restarts: usize,
+    /// Unfinished requests reclaimed from dead replicas.
+    pub reclaimed_requests: usize,
+    /// Host KV extents rescued from corpses and re-installed on heirs.
+    pub rescued_extents: usize,
+    /// Tokens those rescued extents carried.
+    pub rescued_tokens: u64,
+    /// In-flight prefill + decode tokens destroyed by preemptions (and,
+    /// under Restart, by the fleet rebuild).
+    pub lost_progress_tokens: u64,
+    /// Degraded-mode events fired.
+    pub host_shrinks: usize,
+    pub link_degrades: usize,
+    /// Host-resident tokens dropped by shrink evictions.
+    pub dropped_host_tokens: u64,
+    /// Records appended to the journal this run.
+    pub journal_records: usize,
+    /// Finishes pruned on resume (journaled by the interrupted run and
+    /// cross-checked bitwise against the deterministic replay).
+    pub resumed_finishes: usize,
+}
+
+impl FaultStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("deaths", Json::from(self.deaths)),
+            ("suppressed_deaths", Json::from(self.suppressed_deaths)),
+            ("rejoins", Json::from(self.rejoins)),
+            ("restarts", Json::from(self.restarts)),
+            ("reclaimed_requests", Json::from(self.reclaimed_requests)),
+            ("rescued_extents", Json::from(self.rescued_extents)),
+            ("rescued_tokens", Json::from(self.rescued_tokens as usize)),
+            (
+                "lost_progress_tokens",
+                Json::from(self.lost_progress_tokens as usize),
+            ),
+            ("host_shrinks", Json::from(self.host_shrinks)),
+            ("link_degrades", Json::from(self.link_degrades)),
+            (
+                "dropped_host_tokens",
+                Json::from(self.dropped_host_tokens as usize),
+            ),
+            ("journal_records", Json::from(self.journal_records)),
+            ("resumed_finishes", Json::from(self.resumed_finishes)),
+        ])
+    }
+}
 
 /// Outcome of one fleet job (stealing run + static reference).
 #[derive(Clone, Debug)]
@@ -76,6 +141,11 @@ pub struct FleetReport {
     /// Tokens re-computed because retractions discarded KV, summed over
     /// replicas.
     pub recomputed_tokens: u64,
+    /// Fault-tolerance counters (DESIGN.md §12; all-zero without faults).
+    pub faults: FaultStats,
+    /// The run was stopped by a test/checkpoint kill switch before every
+    /// request finished (the exactly-once audit is skipped in that case).
+    pub halted: bool,
 }
 
 impl FleetReport {
@@ -119,6 +189,7 @@ impl FleetReport {
                 Json::from(self.recompute_saved_tokens as usize),
             ),
             ("recomputed_tokens", Json::from(self.recomputed_tokens as usize)),
+            ("faults", self.faults.to_json()),
             ("replicas", Json::Arr(replicas)),
         ])
     }
@@ -131,6 +202,8 @@ struct Replica {
     st: crate::engine::sim::RunState,
     done: bool,
     desc: String,
+    /// Finish-log entries already journaled (per-replica cursor).
+    logged: usize,
 }
 
 /// Raw outcome of one fleet pass (before the static comparison).
@@ -140,6 +213,61 @@ struct FleetRun {
     steals: usize,
     stolen_units: usize,
     stolen_requests: usize,
+    stats: FaultStats,
+    halted: bool,
+}
+
+/// Fault-tolerance machinery threaded through one [`run_fleet`] pass.
+/// [`FtDriver::inert`] disables every hook, leaving the coordinator
+/// bit-identical to the pre-fault fleet.
+struct FtDriver<'a> {
+    plan: FaultPlan,
+    next_event: usize,
+    strategy: RecoveryStrategy,
+    kv_rescue: bool,
+    snapshot_every: usize,
+    journal: Option<JournalWriter>,
+    resume: Option<&'a ResumeState>,
+    halt_after_steps: Option<usize>,
+}
+
+impl FtDriver<'_> {
+    fn inert() -> Self {
+        FtDriver {
+            plan: FaultPlan::default(),
+            next_event: 0,
+            strategy: RecoveryStrategy::Recover,
+            kv_rescue: true,
+            snapshot_every: usize::MAX,
+            journal: None,
+            resume: None,
+            halt_after_steps: None,
+        }
+    }
+
+    fn record(&mut self, stats: &mut FaultStats, rec: &Json) {
+        if let Some(w) = self.journal.as_mut() {
+            w.record(rec).expect("journal write failed");
+            stats.journal_records += 1;
+        }
+    }
+}
+
+/// Checkpoint/resume + failure-injection options for
+/// [`serve_fleet_opts`].  Default = plain [`serve_fleet`] behavior.
+#[derive(Clone, Debug, Default)]
+pub struct FleetFtOptions {
+    /// Append a crash-consistent run journal here.  When equal to
+    /// `resume_path`, the torn tail is cut and new records continue the
+    /// same file.
+    pub journal_path: Option<PathBuf>,
+    /// Resume from this journal: already-finished requests are
+    /// cross-checked bitwise against the deterministic replay and counted
+    /// in [`FaultStats::resumed_finishes`] instead of being re-reported.
+    pub resume_path: Option<PathBuf>,
+    /// Test/checkpoint kill switch: stop the coordinator after this many
+    /// steps, as a crash would.
+    pub halt_after_steps: Option<usize>,
 }
 
 impl FleetRun {
@@ -264,14 +392,94 @@ fn prepare_fleet(cfg: &SystemConfig, workload: &Workload) -> PreparedFleet {
     PreparedFleet { tree, sched, units, rho_root, pms, parts_by_slot }
 }
 
+/// Build (or rebuild) the replica for `slot` over the unit batch `us`,
+/// clock pinned to `clock`, inheriting any fleet-wide degraded state
+/// (`host_mult` / `link_mult` are the cumulative shrink factors applied
+/// so far — a rejoined replica must not come back with pristine host
+/// memory or link bandwidth).
+fn build_replica(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    prep: &PreparedFleet,
+    slot: usize,
+    us: Vec<Unit>,
+    clock: f64,
+    host_mult: f64,
+    link_mult: f64,
+) -> Replica {
+    let reqs = shard_requests(workload, &prep.tree, &us);
+    let mut engine = SimEngine::new(
+        prep.pms[slot].clone(),
+        cfg.engine.clone(),
+        prep.sched.clone(),
+        reqs,
+    )
+    .with_kv(&cfg.kv)
+    .with_modality(&cfg.modality);
+    let mut st = engine.begin_at(clock);
+    if host_mult < 1.0 {
+        engine.shrink_host_kv(&mut st, host_mult);
+    }
+    if link_mult < 1.0 {
+        engine.degrade_link(&mut st, link_mult);
+    }
+    Replica {
+        engine,
+        scanner: DualScanner::from_units(us, prep.rho_root),
+        st,
+        done: false,
+        desc: format!("{} x{}", prep.pms[slot].hw.name, prep.pms[slot].n_gpus),
+        logged: 0,
+    }
+}
+
+/// Reclaim everything a dying replica still owns — pending scanner units
+/// plus admitted-but-unfinished requests (with their host KV extents when
+/// `kv_rescue` is on) — into the coordinator's orphan pools, and finalize
+/// the corpse's partial results.  Exactly-once hinges on this set being
+/// complete: every registered request is either finished (kept in the
+/// corpse's result), stolen away earlier (another replica's problem), or
+/// reclaimed here.
+fn reclaim_replica(
+    rep: &mut Replica,
+    kv_rescue: bool,
+    stats: &mut FaultStats,
+    orphan_units: &mut Vec<Unit>,
+    orphan_reqs: &mut Vec<(SimRequest, Option<KvExtent>)>,
+) -> SimResult {
+    let mut units = rep.scanner.drain_pending();
+    stats.reclaimed_requests += units.iter().map(|u| u.requests.len()).sum::<usize>();
+    orphan_units.append(&mut units);
+    let ids = rep.engine.unfinished_admitted_ids(&rep.st);
+    stats.reclaimed_requests += ids.len();
+    stats.lost_progress_tokens += rep.engine.inflight_progress_tokens(&rep.st);
+    for id in ids {
+        let Some(req) = rep.engine.request_by_id(id) else {
+            continue;
+        };
+        let ext = if kv_rescue { rep.engine.kv_extent(&rep.st, id) } else { None };
+        orphan_reqs.push((req, ext));
+    }
+    let fresh = rep.engine.begin();
+    let st = std::mem::replace(&mut rep.st, fresh);
+    rep.logged = 0;
+    rep.done = true;
+    rep.engine.finalize(st)
+}
+
 /// One fleet pass over the workload.  Every configured replica slot is
 /// materialized — a slot whose initial shard came back empty (coarse
 /// units, dp > #units) starts idle and immediately joins via stealing.
+///
+/// `ft` threads the fault-tolerance machinery through the pass; with
+/// [`FtDriver::inert`] every fault/journal/resume branch is dead and the
+/// loop is bit-identical to the pre-fault coordinator.
 fn run_fleet(
     cfg: &SystemConfig,
     workload: &Workload,
     prep: &PreparedFleet,
     steal: bool,
+    mut ft: FtDriver<'_>,
 ) -> FleetRun {
     let tree = &prep.tree;
     let units = &prep.units;
@@ -298,9 +506,27 @@ fn run_fleet(
                 st,
                 done: false,
                 desc: format!("{} x{}", prep.pms[slot].hw.name, prep.pms[slot].n_gpus),
+                logged: 0,
             }
         })
         .collect();
+
+    let mut stats = FaultStats::default();
+    let mut halted = false;
+    // Fault bookkeeping.  `dead[r]` replicas are finalized corpses
+    // (skipped at the end); `rejoin_at[r]` is the clock a dead slot comes
+    // back empty.  Orphan pools hold work reclaimed from corpses until a
+    // replica drains and adopts it.  The multipliers accumulate fleet-wide
+    // degraded modes so rebuilt replicas inherit them.
+    let mut dead: Vec<bool> = vec![false; reps.len()];
+    let mut rejoin_at: Vec<f64> = vec![f64::INFINITY; reps.len()];
+    let mut pre_results: Vec<SimResult> = Vec::new();
+    let mut pre_descs: Vec<String> = Vec::new();
+    let mut orphan_units: Vec<Unit> = Vec::new();
+    let mut orphan_reqs: Vec<(SimRequest, Option<KvExtent>)> = Vec::new();
+    let mut host_mult = 1.0f64;
+    let mut link_mult = 1.0f64;
+    let mut coord_steps = 0usize;
 
     let mut steals = 0usize;
     let mut stolen_units = 0usize;
@@ -321,17 +547,226 @@ fn run_fleet(
         else {
             break;
         };
+        let tmin = reps[i].st.clock();
+
+        // Due re-joins first: a dead slot whose rejoin clock has passed
+        // comes back as an empty replica (steal target) inheriting any
+        // degraded state, then the coordinator re-selects.
+        let mut reselect = false;
+        for r in 0..reps.len() {
+            if dead[r] && rejoin_at[r] <= tmin {
+                reps[r] =
+                    build_replica(cfg, workload, prep, r, Vec::new(), rejoin_at[r], host_mult, link_mult);
+                dead[r] = false;
+                rejoin_at[r] = f64::INFINITY;
+                stats.rejoins += 1;
+                reselect = true;
+            }
+        }
+        if reselect {
+            continue;
+        }
+
+        // Fire every fault whose injection clock the fleet has reached.
+        while ft.next_event < ft.plan.events.len() && ft.plan.events[ft.next_event].at <= tmin {
+            let ev = ft.plan.events[ft.next_event];
+            ft.next_event += 1;
+            let rec = records::fault(&ev);
+            ft.record(&mut stats, &rec);
+            match ev.kind {
+                FaultKind::Death { rejoin_at: rj } => {
+                    let r = ev.replica;
+                    if r >= reps.len() || dead[r] {
+                        continue;
+                    }
+                    if (0..reps.len()).filter(|&j| !dead[j]).count() <= 1 {
+                        // Killing the last live replica would strand the
+                        // workload forever; the preemption is suppressed
+                        // (DESIGN.md §12 liveness rule).
+                        stats.suppressed_deaths += 1;
+                        continue;
+                    }
+                    stats.deaths += 1;
+                    match ft.strategy {
+                        RecoveryStrategy::Recover => {
+                            let res = reclaim_replica(
+                                &mut reps[r],
+                                ft.kv_rescue,
+                                &mut stats,
+                                &mut orphan_units,
+                                &mut orphan_reqs,
+                            );
+                            pre_descs.push(format!("{} (preempted)", reps[r].desc));
+                            pre_results.push(res);
+                            dead[r] = true;
+                            rejoin_at[r] = rj;
+                            // Wake every retired survivor: the orphan pool
+                            // must drain, and nothing a retiree adopts may
+                            // predate the death it is absorbing.
+                            for j in 0..reps.len() {
+                                if !dead[j] && reps[j].done {
+                                    reps[j].done = false;
+                                    let rep = &mut reps[j];
+                                    rep.engine.bump_clock(&mut rep.st, tmin);
+                                }
+                            }
+                        }
+                        RecoveryStrategy::Restart => {
+                            // Restart-from-scratch baseline: every death
+                            // discards all fleet progress (finished work
+                            // included) and the survivors re-run the whole
+                            // decomposition from the failure clock.
+                            stats.restarts += 1;
+                            stats.lost_progress_tokens += reps
+                                .iter()
+                                .enumerate()
+                                .filter(|(j, _)| !dead[*j])
+                                .map(|(_, rep)| rep.engine.inflight_progress_tokens(&rep.st))
+                                .sum::<u64>();
+                            stats.reclaimed_requests += workload.requests.len();
+                            dead[r] = true;
+                            rejoin_at[r] = rj;
+                            reps[r].done = true;
+                            let alive: Vec<usize> =
+                                (0..reps.len()).filter(|&j| !dead[j]).collect();
+                            // Deterministic re-shard: all original units,
+                            // density-descending (stable), round-robin over
+                            // the survivors.
+                            let mut order: Vec<usize> = (0..units.len()).collect();
+                            order.sort_by(|&a, &b| {
+                                units[b]
+                                    .density
+                                    .partial_cmp(&units[a].density)
+                                    .unwrap_or(std::cmp::Ordering::Equal)
+                            });
+                            let mut per_slot: Vec<Vec<usize>> =
+                                vec![Vec::new(); alive.len()];
+                            for (k, &u) in order.iter().enumerate() {
+                                per_slot[k % alive.len()].push(u);
+                            }
+                            pre_results.clear();
+                            pre_descs.clear();
+                            orphan_units.clear();
+                            orphan_reqs.clear();
+                            for (k, &slot) in alive.iter().enumerate() {
+                                let us = scanner_units(units, &per_slot[k]);
+                                reps[slot] = build_replica(
+                                    cfg, workload, prep, slot, us, ev.at, host_mult, link_mult,
+                                );
+                            }
+                        }
+                    }
+                    reselect = true;
+                }
+                FaultKind::HostShrink { frac } => {
+                    stats.host_shrinks += 1;
+                    host_mult *= frac;
+                    for (r, rep) in reps.iter_mut().enumerate() {
+                        if !dead[r] {
+                            stats.dropped_host_tokens +=
+                                rep.engine.shrink_host_kv(&mut rep.st, frac);
+                        }
+                    }
+                }
+                FaultKind::LinkDegrade { factor } => {
+                    stats.link_degrades += 1;
+                    link_mult *= factor;
+                    for (r, rep) in reps.iter_mut().enumerate() {
+                        if !dead[r] {
+                            rep.engine.degrade_link(&mut rep.st, factor);
+                        }
+                    }
+                }
+            }
+        }
+        if reselect {
+            continue;
+        }
+
         let outcome = {
             let rep = &mut reps[i];
             rep.engine.step_once(&mut rep.st, &mut rep.scanner)
         };
+        coord_steps += 1;
+
+        // Journal finishes the moment they happen (append-only, framed:
+        // a crash tears at most the last record) and cross-check replayed
+        // finishes bitwise against a resumed journal.
+        if ft.journal.is_some() || ft.resume.is_some() {
+            let pending: Vec<(u32, f64)> = {
+                let rep = &reps[i];
+                rep.engine.finish_log(&rep.st)[rep.logged..].to_vec()
+            };
+            reps[i].logged += pending.len();
+            for (id, t) in pending {
+                if let Some(rs) = ft.resume {
+                    if let Some(&jt) = rs.finished.get(&id) {
+                        assert_eq!(
+                            t.to_bits(),
+                            jt.to_bits(),
+                            "resume replay diverged on request {id}: {t} vs journaled {jt}"
+                        );
+                        stats.resumed_finishes += 1;
+                        continue;
+                    }
+                }
+                let rec = records::finish(id, i, t);
+                ft.record(&mut stats, &rec);
+            }
+            if ft.journal.is_some() && coord_steps % ft.snapshot_every == 0 {
+                let finished: usize = reps.iter().map(|r| r.st.finished()).sum();
+                let queued: Vec<usize> = reps
+                    .iter()
+                    .map(|r| r.scanner.remaining() + r.st.active_requests())
+                    .collect();
+                let host: Vec<usize> = reps
+                    .iter()
+                    .map(|r| r.st.host_resident_tokens() as usize)
+                    .collect();
+                let rec = records::snapshot(coord_steps, tmin, finished, &queued, &host);
+                ft.record(&mut stats, &rec);
+            }
+        }
+        if let Some(h) = ft.halt_after_steps {
+            if coord_steps >= h {
+                halted = true;
+                break;
+            }
+        }
+
         if outcome == StepOutcome::Progress {
             continue;
         }
-        // Done (all local work finished) or Starved (queue empty): try to
-        // refill from the straggler before retiring.
+        // Done (all local work finished) or Starved (queue empty): adopt
+        // failure orphans first, then try to refill from the straggler,
+        // then retire.
         let mut refilled = false;
-        if steal {
+        if !orphan_units.is_empty() || !orphan_reqs.is_empty() {
+            let mut adopted = 0usize;
+            if !orphan_units.is_empty() {
+                let us = std::mem::take(&mut orphan_units);
+                adopted += us.iter().map(|u| u.requests.len()).sum::<usize>();
+                let reqs = shard_requests(workload, tree, &us);
+                let rep = &mut reps[i];
+                rep.engine.feed_requests(&mut rep.st, reqs);
+                rep.scanner.feed(us);
+            }
+            if !orphan_reqs.is_empty() {
+                let adopt = std::mem::take(&mut orphan_reqs);
+                adopted += adopt.len();
+                let rep = &mut reps[i];
+                for (req, ext) in adopt {
+                    let tokens = ext.as_ref().map(|e| e.tokens).unwrap_or(0);
+                    if rep.engine.adopt_retracted(&mut rep.st, req, ext) {
+                        stats.rescued_extents += 1;
+                        stats.rescued_tokens += tokens;
+                    }
+                }
+            }
+            let rec = records::steal(reps[i].st.clock(), reps.len(), i, adopted);
+            ft.record(&mut stats, &rec);
+            refilled = true;
+        } else if steal {
             if let Some(v) = pick_victim(&reps, i) {
                 let target =
                     (reps[v].scanner.remaining_whole_est() * cfg.fleet.steal_ratio)
@@ -351,6 +786,9 @@ fn run_fleet(
                         let victim = &mut reps[v];
                         victim.engine.unfeed_requests(&mut victim.st, &stolen_ids);
                     }
+                    let rec =
+                        records::steal(reps[i].st.clock(), v, i, stolen_ids.len());
+                    ft.record(&mut stats, &rec);
                     let reqs = shard_requests(workload, tree, &stolen);
                     let rep = &mut reps[i];
                     rep.engine.feed_requests(&mut rep.st, reqs);
@@ -364,18 +802,26 @@ fn run_fleet(
         }
     }
 
-    let mut results = Vec::with_capacity(reps.len());
-    let mut descs = Vec::with_capacity(reps.len());
-    for r in reps {
+    let mut results = pre_results;
+    let mut descs = pre_descs;
+    for (slot, r) in reps.into_iter().enumerate() {
+        if dead[slot] {
+            // A corpse's partial results were captured when it died
+            // (Recover) or discarded wholesale (Restart baseline).
+            continue;
+        }
         descs.push(r.desc);
         results.push(r.engine.finalize(r.st));
     }
 
-    // Exactly-once issuance audit (DESIGN.md §11): every workload request
-    // finishes on exactly one replica.  A stolen request stays registered
-    // on its donor with an infinite finish time, so a unit that was
-    // double-issued (or dropped) across steals would surface here.
-    if cfg!(debug_assertions) || cfg.engine.audit {
+    // Exactly-once issuance audit (DESIGN.md §11/§12): every workload
+    // request finishes exactly once across the whole fleet history —
+    // corpses' partial results included.  A stolen request stays
+    // registered on its donor with an infinite finish time, and a
+    // reclaimed one on its corpse with a NaN finish, so double issuance
+    // or a dropped reclamation would surface here.  Skipped when the run
+    // was halted mid-flight by the checkpoint kill switch.
+    if !halted && (cfg!(debug_assertions) || cfg.engine.audit) {
         let mut finishes = vec![0u32; workload.requests.len()];
         for res in &results {
             for t in &res.timings {
@@ -385,29 +831,95 @@ fn run_fleet(
             }
         }
         for (id, &n) in finishes.iter().enumerate() {
-            assert!(n == 1, "fleet audit: request {id} finished on {n} replicas");
+            assert!(n == 1, "fleet audit: request {id} finished {n} times across the fleet");
         }
     }
 
-    FleetRun { results, descs, steals, stolen_units, stolen_requests }
+    FleetRun { results, descs, steals, stolen_units, stolen_requests, stats, halted }
 }
 
 /// Serve a request pool on the work-stealing fleet.  Runs the stealing
-/// schedule per `cfg.fleet`, plus (at `dp > 1` with stealing on) the
-/// static fork-join reference on the same decomposition for the
-/// speedup/sharing-loss accounting.
+/// schedule per `cfg.fleet` (including any `cfg.faults` injection), plus
+/// (at `dp > 1` with stealing on) the static fork-join reference on the
+/// same decomposition for the speedup/sharing-loss accounting.
 pub fn serve_fleet(cfg: &SystemConfig, workload: &Workload) -> FleetReport {
+    serve_fleet_opts(cfg, workload, FleetFtOptions::default()).expect("fleet run failed")
+}
+
+/// [`serve_fleet`] with checkpoint/resume plumbing: optionally journal
+/// every finish (crash-consistent framed records), resume from a prior —
+/// possibly torn — journal, and/or halt after a fixed number of
+/// coordinator steps (crash injection for tests).  Failure injection
+/// itself is configured by `cfg.faults`.
+pub fn serve_fleet_opts(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    opts: FleetFtOptions,
+) -> anyhow::Result<FleetReport> {
+    let dp = cfg.dp_replicas.max(1);
+    let plan = FaultPlan::generate(&cfg.faults, dp);
+    if opts.journal_path.is_some()
+        && !plan.is_empty()
+        && cfg.faults.strategy == RecoveryStrategy::Restart
+    {
+        anyhow::bail!(
+            "journaling is exactly-once and the restart baseline re-runs finished \
+             requests; use strategy = \"recover\" with a journal"
+        );
+    }
     let prep = prepare_fleet(cfg, workload);
-    let run = run_fleet(cfg, workload, &prep, cfg.fleet.steal);
+    let wfp = recovery::workload_fingerprint(workload);
+    let cfp = recovery::config_fingerprint(cfg);
+    let resume: Option<ResumeState> = match &opts.resume_path {
+        Some(p) => {
+            let load = recovery::load_journal(p)?;
+            Some(ResumeState::from_load(&load, &wfp, &cfp)?)
+        }
+        None => None,
+    };
+    let journal = match &opts.journal_path {
+        Some(jp) => {
+            if opts.resume_path.as_ref() == Some(jp) {
+                // Same file: cut the torn tail and continue appending.
+                let rs = resume.as_ref().expect("resume state loaded above");
+                Some(JournalWriter::resume_append(jp, rs.valid_bytes)?)
+            } else {
+                let mut w = JournalWriter::create(jp)?;
+                w.record(&records::meta(&wfp, &cfp, workload.requests.len(), dp))?;
+                Some(w)
+            }
+        }
+        None => None,
+    };
+    let ft = FtDriver {
+        plan,
+        next_event: 0,
+        strategy: cfg.faults.strategy,
+        kv_rescue: cfg.faults.kv_rescue,
+        snapshot_every: cfg.faults.snapshot_every.max(1),
+        journal,
+        resume: resume.as_ref(),
+        halt_after_steps: opts.halt_after_steps,
+    };
+    let run = run_fleet(cfg, workload, &prep, cfg.fleet.steal, ft);
+    if let Some(rs) = resume.as_ref() {
+        if !run.halted {
+            anyhow::ensure!(
+                run.stats.resumed_finishes == rs.finished.len(),
+                "resume journaled {} finishes but the replay only crossed {}",
+                rs.finished.len(),
+                run.stats.resumed_finishes,
+            );
+        }
+    }
     let makespan = run.makespan();
     let sharing = run.sharing();
-    let (static_makespan, static_sharing) =
-        if cfg.fleet.steal && cfg.dp_replicas.max(1) > 1 {
-            let st = run_fleet(cfg, workload, &prep, false);
-            (st.makespan(), st.sharing())
-        } else {
-            (makespan, sharing)
-        };
+    let (static_makespan, static_sharing) = if cfg.fleet.steal && dp > 1 && !run.halted {
+        let st = run_fleet(cfg, workload, &prep, false, FtDriver::inert());
+        (st.makespan(), st.sharing())
+    } else {
+        (makespan, sharing)
+    };
 
     let total_tokens: u64 = run.results.iter().map(|r| r.total_tokens).sum();
     let idle_fracs: Vec<f64> = run
@@ -420,7 +932,7 @@ pub fn serve_fleet(cfg: &SystemConfig, workload: &Workload) -> FleetReport {
     } else {
         idle_fracs.iter().sum::<f64>() / idle_fracs.len() as f64
     };
-    FleetReport {
+    Ok(FleetReport {
         makespan,
         total_tokens,
         total_throughput: total_tokens as f64 / makespan.max(1e-12),
@@ -443,7 +955,9 @@ pub fn serve_fleet(cfg: &SystemConfig, workload: &Workload) -> FleetReport {
         recomputed_tokens: run.results.iter().map(|r| r.recomputed_tokens).sum(),
         per_replica: run.results,
         replica_desc: run.descs,
-    }
+        faults: run.stats,
+        halted: run.halted,
+    })
 }
 
 #[cfg(test)]
@@ -639,6 +1153,196 @@ mod tests {
             strong as f64 > weak as f64 * 1.2,
             "2x-GPU replica under-loaded: {strong} vs {weak}"
         );
+    }
+
+    /// Bitwise per-request finish times of a fleet report (asserts each
+    /// request finished at most once on the way).
+    fn finish_bits(rep: &FleetReport) -> std::collections::HashMap<u32, u64> {
+        let mut m = std::collections::HashMap::new();
+        for r in &rep.per_replica {
+            for t in &r.timings {
+                if t.finish.is_finite() {
+                    let prev = m.insert(t.id, t.finish.to_bits());
+                    assert!(prev.is_none(), "request {} finished twice", t.id);
+                }
+            }
+        }
+        m
+    }
+
+    fn one_death_plan(at: f64, replica: usize, rejoin_at: f64) -> FaultPlan {
+        FaultPlan {
+            events: vec![crate::recovery::FaultEvent {
+                at,
+                replica,
+                kind: FaultKind::Death { rejoin_at },
+            }],
+        }
+    }
+
+    #[test]
+    fn preemption_with_recover_conserves_tokens_exactly_once() {
+        let w = skewed_workload(32, 16, 10);
+        let mut cfg = skewed_cfg(4);
+        cfg.kv.enabled = true;
+        let base = serve_fleet(&cfg, &w).makespan;
+        let prep = prepare_fleet(&cfg, &w);
+        let mut ft = FtDriver::inert();
+        ft.plan = one_death_plan(base * 0.4, 0, f64::INFINITY);
+        let run = run_fleet(&cfg, &w, &prep, true, ft);
+        assert!(!run.halted);
+        assert_eq!(run.stats.deaths, 1);
+        assert!(run.stats.reclaimed_requests > 0, "mid-run victim held no work");
+        // The exactly-once audit already ran inside run_fleet; token
+        // conservation across corpse + heirs is the other half.
+        let total: u64 = run.results.iter().map(|r| r.total_tokens).sum();
+        assert_eq!(total, w.total_tokens());
+        // Corpse results are kept in place of the dead slot's: the corpse
+        // plus the three surviving slots (replica 0 never re-joins).
+        assert_eq!(run.results.len(), 4);
+        assert!(run.descs.iter().any(|d| d.contains("(preempted)")));
+        // Swap conservation fleet-wide: rescued extents re-count their
+        // offload on the heir, so fetches never exceed offloads.
+        let (si, so) = run.results.iter().fold((0u64, 0u64), |acc, r| {
+            (acc.0 + r.swapped_in_tokens, acc.1 + r.swapped_out_tokens)
+        });
+        assert!(si <= so, "fetched {si} > offloaded {so}");
+    }
+
+    #[test]
+    fn dead_replica_rejoins_and_fleet_finishes() {
+        let w = skewed_workload(32, 16, 10);
+        let cfg = skewed_cfg(4);
+        let base = serve_fleet(&cfg, &w).makespan;
+        let prep = prepare_fleet(&cfg, &w);
+        let mut ft = FtDriver::inert();
+        ft.plan = one_death_plan(base * 0.2, 1, base * 0.4);
+        let run = run_fleet(&cfg, &w, &prep, true, ft);
+        assert_eq!(run.stats.deaths, 1);
+        assert_eq!(run.stats.rejoins, 1, "replica 1 never re-joined");
+        let total: u64 = run.results.iter().map(|r| r.total_tokens).sum();
+        assert_eq!(total, w.total_tokens());
+        // Corpse + 4 live slots (the re-joined replica is a fresh entry
+        // in its old slot).
+        assert_eq!(run.results.len(), 5);
+    }
+
+    #[test]
+    fn killing_last_replica_is_suppressed() {
+        let w = balanced_workload(200);
+        let cfg = baselines::blendserve(); // dp = 1
+        let prep = prepare_fleet(&cfg, &w);
+        let mut ft = FtDriver::inert();
+        ft.plan = one_death_plan(0.0, 0, f64::INFINITY);
+        let run = run_fleet(&cfg, &w, &prep, true, ft);
+        assert_eq!(run.stats.deaths, 0);
+        assert_eq!(run.stats.suppressed_deaths, 1);
+        let total: u64 = run.results.iter().map(|r| r.total_tokens).sum();
+        assert_eq!(total, w.total_tokens());
+    }
+
+    #[test]
+    fn restart_baseline_loses_to_exactly_once_recovery() {
+        let w = skewed_workload(32, 16, 10);
+        let cfg = skewed_cfg(4);
+        let base = serve_fleet(&cfg, &w).makespan;
+        let prep = prepare_fleet(&cfg, &w);
+
+        let mut rec_ft = FtDriver::inert();
+        rec_ft.plan = one_death_plan(base * 0.5, 0, f64::INFINITY);
+        let recov = run_fleet(&cfg, &w, &prep, true, rec_ft);
+
+        let mut rst_ft = FtDriver::inert();
+        rst_ft.plan = one_death_plan(base * 0.5, 0, f64::INFINITY);
+        rst_ft.strategy = RecoveryStrategy::Restart;
+        let restart = run_fleet(&cfg, &w, &prep, true, rst_ft);
+
+        assert_eq!(restart.stats.restarts, 1);
+        for run in [&recov, &restart] {
+            let total: u64 = run.results.iter().map(|r| r.total_tokens).sum();
+            assert_eq!(total, w.total_tokens());
+        }
+        assert!(
+            recov.makespan() < restart.makespan(),
+            "recovery ({}) not better than restart-from-scratch ({})",
+            recov.makespan(),
+            restart.makespan()
+        );
+    }
+
+    #[test]
+    fn degraded_modes_fire_through_config_plan() {
+        let w = skewed_workload(32, 16, 10);
+        let mut cfg = skewed_cfg(4);
+        cfg.kv.enabled = true;
+        cfg.faults.enabled = true;
+        cfg.faults.mtbf_s = 0.0; // no deaths, degraded modes only
+        cfg.faults.host_shrink_at_s = 1e-6;
+        cfg.faults.host_shrink_frac = 0.25;
+        cfg.faults.link_degrade_at_s = 1e-6;
+        cfg.faults.link_degrade_factor = 0.25;
+        let rep = serve_fleet(&cfg, &w);
+        assert_eq!(rep.faults.host_shrinks, 1);
+        assert_eq!(rep.faults.link_degrades, 1);
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"host_shrinks\""));
+        assert!(json.contains("\"resumed_finishes\""));
+    }
+
+    #[test]
+    fn seeded_deaths_via_config_conserve_and_report() {
+        let w = skewed_workload(32, 16, 10);
+        let mut cfg = skewed_cfg(4);
+        let base = serve_fleet(&cfg, &w).makespan;
+        cfg.faults.enabled = true;
+        cfg.faults.seed = 11;
+        cfg.faults.mtbf_s = base * 0.3; // several deaths within the run
+        cfg.faults.max_deaths = 2;
+        let rep = serve_fleet(&cfg, &w);
+        assert!(rep.faults.deaths + rep.faults.suppressed_deaths > 0, "no deaths fired");
+        assert_eq!(rep.total_tokens, w.total_tokens());
+        assert!(!rep.halted);
+    }
+
+    #[test]
+    fn halt_journal_resume_is_bit_identical() {
+        let w = skewed_workload(8, 4, 6);
+        let mut cfg = skewed_cfg(2);
+        cfg.faults.snapshot_every = 8; // journaling cadence only, not execution
+        let golden = serve_fleet(&cfg, &w);
+        let want = finish_bits(&golden);
+        assert_eq!(want.len(), w.requests.len());
+
+        let path = std::env::temp_dir().join("blendserve_fleet_halt_resume.journal");
+        std::fs::remove_file(&path).ok();
+        let halted = serve_fleet_opts(
+            &cfg,
+            &w,
+            FleetFtOptions {
+                journal_path: Some(path.clone()),
+                resume_path: None,
+                halt_after_steps: Some(50),
+            },
+        )
+        .unwrap();
+        assert!(halted.halted, "run finished before the kill switch");
+        assert!(halted.faults.journal_records > 0);
+
+        let resumed = serve_fleet_opts(
+            &cfg,
+            &w,
+            FleetFtOptions {
+                journal_path: Some(path.clone()),
+                resume_path: Some(path.clone()),
+                halt_after_steps: None,
+            },
+        )
+        .unwrap();
+        assert!(!resumed.halted);
+        let got = finish_bits(&resumed);
+        assert_eq!(got, want, "resumed run diverged from the uninterrupted golden");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod fleet;
 pub mod pool;
 
 pub use colocate::{online_stream, serve_colocated, ColocateReport};
-pub use fleet::{serve_fleet, FleetReport};
-pub use pool::{load_jsonl, save_results, JsonlRequest};
+pub use fleet::{serve_fleet, serve_fleet_opts, FaultStats, FleetFtOptions, FleetReport};
+pub use pool::{load_jsonl, load_jsonl_tolerant, save_results, JsonlRequest};
 
 use crate::config::SystemConfig;
 use crate::parallel::partition_dp;

@@ -19,7 +19,7 @@ use crate::scheduler::RunOutput;
 use crate::trace::{Request, TraceKind, Workload};
 use crate::util::Json;
 use std::io::{BufRead, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// A request as read from the pool file.
 #[derive(Clone, Debug, PartialEq)]
@@ -87,118 +87,181 @@ fn parse_attachments(j: &Json, lineno: usize) -> anyhow::Result<Vec<Attachment>>
     Ok(atts)
 }
 
-/// Load a JSONL pool file into a workload.
-pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
+/// Parse one pool line (1-based `lineno` for error messages).
+/// `att_sizes` is the cross-line hash → embedding-size registry: one
+/// content hash must map to one size across the whole pool (the
+/// EncoderCache dedups by hash and would otherwise serve a wrong-sized
+/// embedding on the conflict).
+fn parse_pool_line(
+    line: &str,
+    lineno: usize,
+    att_sizes: &mut std::collections::HashMap<u64, (u32, usize)>,
+) -> anyhow::Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+    let prompt_arr = j
+        .req("prompt")
+        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("line {lineno}: prompt not an array"))?;
+    // Reject malformed tokens instead of coercing them to 0: a silent
+    // `unwrap_or(0.0)` corrupts the prompt AND fabricates shared
+    // 0-token prefixes across every malformed request.
+    let mut prompt: Vec<u32> = Vec::with_capacity(prompt_arr.len());
+    for (pos, x) in prompt_arr.iter().enumerate() {
+        let v = x.as_f64().ok_or_else(|| {
+            anyhow::anyhow!("line {lineno}: prompt[{pos}] is not a number (got {x})")
+        })?;
+        if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+            anyhow::bail!("line {lineno}: prompt[{pos}] is not a valid token id (got {v})");
+        }
+        prompt.push(v as u32);
+    }
+    let id = j.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u32;
+    // `max_tokens` may be absent (defaults to 16) but, like prompt
+    // tokens, a present-but-malformed value is an error, not a 16.
+    let max_tokens = match j.get("max_tokens") {
+        None => 16,
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("line {lineno}: max_tokens is not a number (got {v})")
+            })?;
+            if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                anyhow::bail!(
+                    "line {lineno}: max_tokens is not a valid token count (got {x})"
+                );
+            }
+            x as u32
+        }
+    };
+    let dataset = j
+        .get("dataset")
+        .and_then(|x| x.as_str())
+        .unwrap_or("Custom")
+        .to_string();
+    let kind = kind_from_name(&dataset);
+    // `known_output` may be absent (compat: derived from the dataset
+    // tag) but a present non-bool is an error, not a default.
+    let known_output = match j.get("known_output") {
+        None => kind.default_known_output(),
+        Some(v) => v.as_bool().ok_or_else(|| {
+            anyhow::anyhow!("line {lineno}: known_output is not a bool (got {v})")
+        })?,
+    };
+    let attachments = parse_attachments(&j, lineno)?;
+    for (pos, a) in attachments.iter().enumerate() {
+        match att_sizes.get(&a.content_hash) {
+            Some(&(tokens, first_line)) if tokens != a.enc_tokens => {
+                anyhow::bail!(
+                    "line {lineno}: attachments[{pos}].tokens ({}) conflicts with hash {} \
+                     first seen at line {first_line} with {tokens} tokens",
+                    a.enc_tokens,
+                    a.content_hash
+                );
+            }
+            Some(_) => {}
+            None => {
+                att_sizes.insert(a.content_hash, (a.enc_tokens, lineno));
+            }
+        }
+    }
+    Ok(
+        Request::with_known_output(id, kind, prompt, max_tokens, known_output)
+            .with_attachments(attachments),
+    )
+}
+
+fn load_jsonl_inner(path: &Path, tolerant: bool) -> anyhow::Result<(Workload, usize)> {
     let file = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(file);
+    let lines: Vec<String> = reader.lines().collect::<Result<_, _>>()?;
+    let last_content = lines.iter().rposition(|l| !l.trim().is_empty());
     let mut requests = Vec::new();
-    // A content hash IS the content: one hash must map to one embedding
-    // size across the whole pool (the EncoderCache dedups by hash and
-    // would otherwise serve a wrong-sized embedding on the conflict).
     let mut att_sizes: std::collections::HashMap<u64, (u32, usize)> =
         std::collections::HashMap::new();
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
+    let mut truncated = 0usize;
+    for (idx, line) in lines.iter().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
-        let j = Json::parse(&line)
-            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
-        let prompt_arr = j
-            .req("prompt")
-            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("line {}: prompt not an array", lineno + 1))?;
-        // Reject malformed tokens instead of coercing them to 0: a silent
-        // `unwrap_or(0.0)` corrupts the prompt AND fabricates shared
-        // 0-token prefixes across every malformed request.
-        let mut prompt: Vec<u32> = Vec::with_capacity(prompt_arr.len());
-        for (pos, x) in prompt_arr.iter().enumerate() {
-            let v = x.as_f64().ok_or_else(|| {
-                anyhow::anyhow!(
-                    "line {}: prompt[{pos}] is not a number (got {x})",
-                    lineno + 1
-                )
-            })?;
-            if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
-                anyhow::bail!(
-                    "line {}: prompt[{pos}] is not a valid token id (got {v})",
-                    lineno + 1
-                );
-            }
-            prompt.push(v as u32);
-        }
-        let id = j.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u32;
-        // `max_tokens` may be absent (defaults to 16) but, like prompt
-        // tokens, a present-but-malformed value is an error, not a 16.
-        let max_tokens = match j.get("max_tokens") {
-            None => 16,
-            Some(v) => {
-                let x = v.as_f64().ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "line {}: max_tokens is not a number (got {v})",
-                        lineno + 1
-                    )
-                })?;
-                if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
-                    anyhow::bail!(
-                        "line {}: max_tokens is not a valid token count (got {x})",
-                        lineno + 1
-                    );
+        match parse_pool_line(line, idx + 1, &mut att_sizes) {
+            Ok(req) => requests.push(req),
+            // Tolerant mode forgives exactly the tail a crash can tear: a
+            // writer interrupted mid-append leaves at most one partial
+            // FINAL line.  A malformed line anywhere earlier is
+            // corruption, not a torn tail, and still errors.
+            Err(e) => {
+                if tolerant && Some(idx) == last_content {
+                    truncated = 1;
+                    break;
                 }
-                x as u32
-            }
-        };
-        let dataset = j
-            .get("dataset")
-            .and_then(|x| x.as_str())
-            .unwrap_or("Custom")
-            .to_string();
-        let kind = kind_from_name(&dataset);
-        // `known_output` may be absent (compat: derived from the dataset
-        // tag) but a present non-bool is an error, not a default.
-        let known_output = match j.get("known_output") {
-            None => kind.default_known_output(),
-            Some(v) => v.as_bool().ok_or_else(|| {
-                anyhow::anyhow!(
-                    "line {}: known_output is not a bool (got {v})",
-                    lineno + 1
-                )
-            })?,
-        };
-        let attachments = parse_attachments(&j, lineno + 1)?;
-        for (pos, a) in attachments.iter().enumerate() {
-            match att_sizes.get(&a.content_hash) {
-                Some(&(tokens, first_line)) if tokens != a.enc_tokens => {
-                    anyhow::bail!(
-                        "line {}: attachments[{pos}].tokens ({}) conflicts with hash {} \
-                         first seen at line {first_line} with {tokens} tokens",
-                        lineno + 1,
-                        a.enc_tokens,
-                        a.content_hash
-                    );
-                }
-                Some(_) => {}
-                None => {
-                    att_sizes.insert(a.content_hash, (a.enc_tokens, lineno + 1));
-                }
+                return Err(e);
             }
         }
-        requests.push(
-            Request::with_known_output(id, kind, prompt, max_tokens, known_output)
-                .with_attachments(attachments),
-        );
     }
-    Ok(Workload::new(
-        path.file_stem().and_then(|s| s.to_str()).unwrap_or("pool"),
-        requests,
+    Ok((
+        Workload::new(
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("pool"),
+            requests,
+        ),
+        truncated,
     ))
 }
 
+/// Load a JSONL pool file into a workload (strict: any malformed line is
+/// an error naming the line and position).
+pub fn load_jsonl(path: &Path) -> anyhow::Result<Workload> {
+    let (w, _) = load_jsonl_inner(path, false)?;
+    Ok(w)
+}
+
+/// Tolerant variant for resume-path inputs produced by a possibly
+/// crash-interrupted writer: a malformed FINAL line is dropped and
+/// counted (returned as `truncated_records`, 0 or 1) instead of failing
+/// the load.  Earlier malformed lines still error — only the tail of an
+/// append-only file can be torn by a crash.  Non-resume inputs should
+/// keep using the strict [`load_jsonl`].
+pub fn load_jsonl_tolerant(path: &Path) -> anyhow::Result<(Workload, usize)> {
+    load_jsonl_inner(path, true)
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Crash-safe file replace: stream into a `.tmp` sibling, flush, then
+/// rename onto the target.  The rename is atomic on POSIX filesystems,
+/// so a crash at any point leaves either the old file or the new one —
+/// never a half-written result a later resume would misread.  A failed
+/// write removes the sibling instead of leaving it behind.
+fn write_atomic(
+    path: &Path,
+    write: impl FnOnce(&mut BufWriter<std::fs::File>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let tmp = tmp_sibling(path);
+    let res: anyhow::Result<()> = (|| {
+        let file = std::fs::File::create(&tmp)?;
+        let mut out = BufWriter::new(file);
+        write(&mut out)?;
+        out.flush()?;
+        Ok(())
+    })();
+    if let Err(e) = res {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
 /// Write a workload out as a JSONL pool file (used by `blendserve synth`).
+/// Crash-safe: the file appears atomically via a `.tmp` sibling.
 pub fn save_jsonl(w: &Workload, path: &Path) -> anyhow::Result<()> {
-    let file = std::fs::File::create(path)?;
-    let mut out = BufWriter::new(file);
+    write_atomic(path, |out| save_jsonl_to(w, out))
+}
+
+fn save_jsonl_to(w: &Workload, out: &mut BufWriter<std::fs::File>) -> anyhow::Result<()> {
     for r in &w.requests {
         let mut fields = vec![
             ("id", Json::from(r.id as usize)),
@@ -241,7 +304,8 @@ pub fn save_jsonl(w: &Workload, path: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Write a job summary + per-replica stats as JSON.
+/// Write a job summary + per-replica stats as JSON.  Crash-safe via the
+/// same `.tmp`-sibling + atomic-rename scheme as [`save_jsonl`].
 pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
     let replicas: Vec<Json> = outputs
         .iter()
@@ -286,8 +350,10 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
         })
         .collect();
     let doc = Json::obj(vec![("replicas", Json::Arr(replicas))]);
-    std::fs::write(path, doc.to_string())?;
-    Ok(())
+    write_atomic(path, |out| {
+        write!(out, "{doc}")?;
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -516,6 +582,98 @@ mod tests {
             .unwrap();
         let err = load_jsonl(&path).unwrap_err().to_string();
         assert!(err.contains("line 1") && err.contains("known_output"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tolerant_load_forgives_only_a_torn_tail() {
+        let dir = std::env::temp_dir().join("blendserve_pool_torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+
+        // A crash mid-append tears the final line.  Strict load fails;
+        // tolerant load drops and counts exactly that record.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4}\n\
+             {\"id\":2,\"prompt\":[3],\"max_tokens\":2}\n\
+             {\"id\":3,\"prom",
+        )
+        .unwrap();
+        assert!(load_jsonl(&path).is_err());
+        let (w, truncated) = load_jsonl_tolerant(&path).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(truncated, 1);
+        assert_eq!(*w.requests[1].prompt, vec![3]);
+
+        // Intact files report zero truncation and identical content.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4}\n\
+             {\"id\":2,\"prompt\":[3],\"max_tokens\":2}\n",
+        )
+        .unwrap();
+        let (w, truncated) = load_jsonl_tolerant(&path).unwrap();
+        assert_eq!((w.len(), truncated), (2, 0));
+
+        // A malformed line BEFORE the tail is corruption, not a torn
+        // append — tolerant mode must still error on it.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1,\"oops\"]}\n\
+             {\"id\":2,\"prompt\":[3],\"max_tokens\":2}\n",
+        )
+        .unwrap();
+        let err = load_jsonl_tolerant(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+
+        // Torn tail followed by blank lines (editor artifacts) is still
+        // the last content line, hence still forgiven.
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"prompt\":[1]}\n{\"id\":2,\"pro\n\n",
+        )
+        .unwrap();
+        let (w, truncated) = load_jsonl_tolerant(&path).unwrap();
+        assert_eq!((w.len(), truncated), (1, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp_sibling_and_survives_failed_writes() {
+        let dir = std::env::temp_dir().join("blendserve_pool_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.jsonl");
+        let tmp = dir.join("out.jsonl.tmp");
+
+        let w = crate::trace::Workload::new(
+            "atomic",
+            vec![crate::trace::Request::new(1, TraceKind::Custom, vec![1, 2], 4)],
+        );
+        save_jsonl(&w, &path).unwrap();
+        assert!(path.exists());
+        assert!(!tmp.exists(), "tmp sibling left behind");
+        assert_eq!(load_jsonl(&path).unwrap().len(), 1);
+
+        // A failing save (hash beyond the JSONL-exact range) must leave
+        // the previous file intact and clean up its sibling — that is the
+        // whole point of writing through the tmp file.
+        let before = std::fs::read_to_string(&path).unwrap();
+        let bad = crate::trace::Workload::new(
+            "bad",
+            vec![crate::trace::Request::new(2, TraceKind::Custom, vec![1], 4)
+                .with_attachments(vec![Attachment::new(1u64 << 60, 16)])],
+        );
+        assert!(save_jsonl(&bad, &path).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+        assert!(!tmp.exists(), "failed save left tmp sibling");
+
+        // save_results goes through the same scheme.
+        let rpath = dir.join("results.json");
+        save_results(&[], &rpath).unwrap();
+        assert!(rpath.exists());
+        assert!(!dir.join("results.json.tmp").exists());
+        assert!(std::fs::read_to_string(&rpath).unwrap().contains("replicas"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,206 @@
+//! Crash/recovery property suite (DESIGN.md §12 test strategy).
+//!
+//! The contract under test: a fleet run that is killed after ANY
+//! coordinator step and resumed from its journal must finish with
+//! bit-identical per-request finish times to the uninterrupted golden
+//! run, with every journaled finish pruned (replayed, cross-checked,
+//! never re-reported) — and under randomized seeded fault plans every
+//! request must finish exactly once across the whole fleet, deaths,
+//! re-joins and steals included.
+
+use blendserve::baselines;
+use blendserve::config::RecoveryStrategy;
+use blendserve::recovery::load_journal;
+use blendserve::server::{serve_fleet, serve_fleet_opts, FleetFtOptions, FleetReport};
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::TraceKind;
+use blendserve::util::check::forall;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Map id → finish-time bits, erroring on any double finish.  Bits, not
+/// floats: resume determinism is pinned to exact equality, ULPs count.
+fn finish_map(rep: &FleetReport) -> Result<HashMap<u32, u64>, String> {
+    let mut m = HashMap::new();
+    for r in &rep.per_replica {
+        for t in &r.timings {
+            if t.finish.is_finite() && m.insert(t.id, t.finish.to_bits()).is_some() {
+                return Err(format!("request {} finished more than once", t.id));
+            }
+        }
+    }
+    Ok(m)
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("blendserve_recovery_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The kill-at-every-step fixture: moderate fleet with stealing, tiered
+/// KV and a seeded fault plan (death + re-join) so a resume has to replay
+/// through every coordinator mechanism, not just the happy path.
+fn fixture() -> (blendserve::config::SystemConfig, blendserve::trace::Workload) {
+    let w = generate_kind(TraceKind::ShareGpt, 36, 7);
+    let mut cfg = baselines::blendserve();
+    cfg.dp_replicas = 2;
+    cfg.fleet.steal = true;
+    cfg.kv.enabled = true;
+    cfg.engine.audit = true;
+    let base = serve_fleet(&cfg, &w).makespan;
+    cfg.faults.enabled = true;
+    cfg.faults.seed = 5;
+    cfg.faults.mtbf_s = base * 0.35;
+    cfg.faults.rejoin_delay_s = base * 0.25;
+    cfg.faults.max_deaths = 2;
+    cfg.faults.snapshot_every = 6;
+    (cfg, w)
+}
+
+#[test]
+fn kill_at_every_step_resumes_bit_identical() {
+    let (cfg, w) = fixture();
+    let golden = finish_map(&serve_fleet(&cfg, &w)).unwrap();
+    assert_eq!(golden.len(), w.len(), "golden run lost requests");
+
+    let jp = tmp_path("kill_at_step.journal");
+    let journal_opts = |resume: bool, halt: Option<usize>| FleetFtOptions {
+        journal_path: Some(jp.clone()),
+        resume_path: resume.then(|| jp.clone()),
+        halt_after_steps: halt,
+    };
+
+    // Kill after step k for triangularly-sampled k (1, 3, 6, 10, ... —
+    // every small k exactly, long tails sampled) until a kill point past
+    // the end of the run shows the journaled full run is golden too.
+    let (mut k, mut stride) = (1usize, 1usize);
+    let mut saw_resumed_finishes = false;
+    loop {
+        let halted = serve_fleet_opts(&cfg, &w, journal_opts(false, Some(k))).unwrap();
+        if !halted.halted {
+            assert_eq!(finish_map(&halted).unwrap(), golden, "journaled full run");
+            break;
+        }
+        assert!(
+            !load_journal(&jp).unwrap().records.is_empty(),
+            "halted run journaled nothing"
+        );
+        let resumed = serve_fleet_opts(&cfg, &w, journal_opts(true, None)).unwrap();
+        assert!(!resumed.halted);
+        assert_eq!(finish_map(&resumed).unwrap(), golden, "kill at step {k}");
+        saw_resumed_finishes |= resumed.faults.resumed_finishes > 0;
+        stride += 1;
+        k += stride;
+        assert!(k < 100_000, "fixture run never completed");
+    }
+    assert!(saw_resumed_finishes, "no kill point ever pruned a journaled finish");
+
+    // The journal of the final (uninterrupted) run is complete: resuming
+    // from it replays everything, prunes every finish, and still lands on
+    // the golden bits.
+    let replay = serve_fleet_opts(&cfg, &w, journal_opts(true, None)).unwrap();
+    assert_eq!(replay.faults.resumed_finishes, w.len());
+    assert_eq!(finish_map(&replay).unwrap(), golden);
+}
+
+#[test]
+fn torn_journal_tail_resumes_bit_identical() {
+    let (cfg, w) = fixture();
+    let golden = finish_map(&serve_fleet(&cfg, &w)).unwrap();
+    let jp = tmp_path("torn_tail.journal");
+    let opts = |resume: bool, halt: Option<usize>| FleetFtOptions {
+        journal_path: Some(jp.clone()),
+        resume_path: resume.then(|| jp.clone()),
+        halt_after_steps: halt,
+    };
+
+    // Tear 1: the crash happens mid-append — the journal ends in a
+    // partial frame.  The torn bytes must be dropped, not parsed.
+    let halted = serve_fleet_opts(&cfg, &w, opts(false, Some(12))).unwrap();
+    assert!(halted.halted);
+    let intact = std::fs::metadata(&jp).unwrap().len();
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&jp).unwrap();
+    f.write_all(b"0000002a{\"t\":\"finish\",\"id\":9").unwrap();
+    drop(f);
+    let load = load_journal(&jp).unwrap();
+    assert_eq!(load.truncated_records, 1, "torn tail not detected");
+    assert_eq!(load.valid_bytes, intact, "valid prefix mismeasured");
+    let resumed = serve_fleet_opts(&cfg, &w, opts(true, None)).unwrap();
+    assert_eq!(finish_map(&resumed).unwrap(), golden, "resume after appended tear");
+    // The resumed run truncated the tear and appended real records: the
+    // journal is whole again.
+    assert_eq!(load_journal(&jp).unwrap().truncated_records, 0);
+
+    // Tear 2: the last record itself is cut short by a few bytes.  The
+    // torn record's work simply replays.
+    let halted = serve_fleet_opts(&cfg, &w, opts(false, Some(12))).unwrap();
+    assert!(halted.halted);
+    let len = std::fs::metadata(&jp).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&jp)
+        .unwrap()
+        .set_len(len - 7)
+        .unwrap();
+    assert_eq!(load_journal(&jp).unwrap().truncated_records, 1);
+    let resumed = serve_fleet_opts(&cfg, &w, opts(true, None)).unwrap();
+    assert_eq!(finish_map(&resumed).unwrap(), golden, "resume after truncated tear");
+    assert_eq!(load_journal(&jp).unwrap().truncated_records, 0);
+}
+
+#[test]
+fn randomized_fault_plans_preserve_exactly_once() {
+    forall("exactly-once under seeded fault plans", 8, 0xB1E7D, |rng| {
+        let n = 24 + rng.range(0, 24) as usize;
+        let w = generate_kind(TraceKind::ShareGpt, n, rng.u64());
+        let mut cfg = baselines::blendserve();
+        cfg.dp_replicas = 2 + rng.range(0, 1) as usize;
+        cfg.fleet.steal = true;
+        cfg.kv.enabled = rng.chance(0.5);
+        cfg.engine.audit = true;
+        let base = serve_fleet(&cfg, &w).makespan;
+        cfg.faults.enabled = true;
+        cfg.faults.seed = rng.u64();
+        cfg.faults.mtbf_s = base * (0.2 + rng.f64() * 0.8);
+        cfg.faults.max_deaths = 1 + rng.range(0, 2) as usize;
+        cfg.faults.rejoin_delay_s = if rng.chance(0.5) { base * 0.3 } else { 0.0 };
+        if rng.chance(0.3) {
+            cfg.faults.host_shrink_at_s = base * 0.3;
+            cfg.faults.host_shrink_frac = 0.5;
+        }
+        if rng.chance(0.3) {
+            cfg.faults.link_degrade_at_s = base * 0.2;
+            cfg.faults.link_degrade_factor = 0.5;
+        }
+        if rng.chance(0.25) {
+            cfg.faults.strategy = RecoveryStrategy::Restart;
+        }
+        let rep = serve_fleet(&cfg, &w);
+        let m = finish_map(&rep)?;
+        if m.len() != w.len() {
+            return Err(format!(
+                "{} of {} requests finished (deaths={} suppressed={} strategy={})",
+                m.len(),
+                w.len(),
+                rep.faults.deaths,
+                rep.faults.suppressed_deaths,
+                cfg.faults.strategy
+            ));
+        }
+        for r in &w.requests {
+            if !m.contains_key(&r.id) {
+                return Err(format!("request {} never finished", r.id));
+            }
+        }
+        if rep.total_tokens != w.total_tokens() {
+            return Err(format!(
+                "token conservation broken: {} != {}",
+                rep.total_tokens,
+                w.total_tokens()
+            ));
+        }
+        Ok(())
+    });
+}
