@@ -48,8 +48,16 @@
 //!    bounded by the actives' pin lengths.
 //! 9. **Token conservation at completion** — when a run reaches `Done`,
 //!    the finished timings account for exactly `total_tokens`.
+//! 10. **Result coherence** ([`EngineAuditor::check_final`], called from
+//!    `finalize`) — every derived metric in [`SimResult`] matches its
+//!    definition recomputed from the raw counters: throughputs, sharing,
+//!    SLO attainment, overlap/busy fractions in `[0, 1]`, swap/recompute
+//!    implications, and the step series summing back to the aggregate
+//!    busy times.  The static linter's rule r5 (DESIGN.md §13) enforces
+//!    that every `SimResult` field stays referenced here, so new
+//!    accounting cannot ship without a final audit.
 
-use super::{RunState, SimEngine};
+use super::{RunState, SimEngine, SimResult};
 
 /// Relative slack for float aggregate comparisons.  Every audited sum is
 /// dyadic (token counts and `d̂/2` halves), so f64 accumulation is exact;
@@ -139,6 +147,8 @@ impl EngineAuditor {
             // Admission sets `private_prompt = prompt − pinned`, and
             // neither side changes until finish/retraction releases both.
             assert!(
+                // lint:allow(r3) -- both sides are exact small-integer-valued f64s,
+                // set once at admission and never accumulated
                 a.private_prompt == (p - a.pin.len()) as f64,
                 "audit: request {} private prompt {} != prompt {p} − pinned {}",
                 a.req,
@@ -329,6 +339,175 @@ impl EngineAuditor {
         self.prev_link_busy_until = st.kv.link.busy_until();
         self.prev_link_busy_time = st.kv.link.busy_time();
         self.checks += 1;
+    }
+
+    /// Invariant 10: audit the finished [`SimResult`] — every derived
+    /// metric must match its definition recomputed from the raw counters
+    /// it summarizes.  Rule r5 of the static linter keeps this function
+    /// total over the struct: adding a `SimResult` field without
+    /// referencing it here fails `blendserve lint`.
+    pub fn check_final(&self, res: &SimResult) {
+        // ---- throughputs ----
+        assert!(res.total_time >= 0.0, "audit: negative total_time {}", res.total_time);
+        if res.total_time > 0.0 {
+            close("throughput", res.throughput, res.total_tokens as f64 / res.total_time);
+            close(
+                "offline_throughput",
+                res.offline_throughput,
+                res.offline_tokens as f64 / res.total_time,
+            );
+        }
+        assert!(
+            res.offline_tokens <= res.total_tokens,
+            "audit: offline goodput {} exceeds total tokens {}",
+            res.offline_tokens,
+            res.total_tokens
+        );
+        assert!(
+            res.steps > 0 || res.total_tokens == 0,
+            "audit: {} tokens produced in zero steps",
+            res.total_tokens
+        );
+
+        // ---- prefix sharing ----
+        assert!(
+            res.hit_tokens <= res.prompt_tokens,
+            "audit: cache hits {} exceed prompt tokens {}",
+            res.hit_tokens,
+            res.prompt_tokens
+        );
+        if res.prompt_tokens > 0 {
+            close(
+                "sharing_achieved",
+                res.sharing_achieved,
+                res.hit_tokens as f64 / res.prompt_tokens as f64,
+            );
+        }
+
+        // ---- online SLO attainment ----
+        assert!(
+            res.slo_attained <= res.n_online,
+            "audit: {} SLO-attained of {} online requests",
+            res.slo_attained,
+            res.n_online
+        );
+        assert!(
+            res.n_online <= res.timings.len(),
+            "audit: {} online requests but only {} timing records",
+            res.n_online,
+            res.timings.len()
+        );
+        if res.n_online > 0 {
+            close(
+                "slo_attainment",
+                res.slo_attainment,
+                res.slo_attained as f64 / res.n_online as f64,
+            );
+        }
+        assert!(
+            res.mean_ttft >= 0.0 && res.p99_ttft >= 0.0 && res.mean_queue_delay >= 0.0,
+            "audit: negative latency summary (mean_ttft {}, p99_ttft {}, mean_queue_delay {})",
+            res.mean_ttft,
+            res.p99_ttft,
+            res.mean_queue_delay
+        );
+
+        // ---- tiered-KV accounting ----
+        assert!(
+            res.swapped_in_tokens <= res.swapped_out_tokens,
+            "audit: {} tokens swapped in but only {} ever swapped out",
+            res.swapped_in_tokens,
+            res.swapped_out_tokens
+        );
+        // Adoption (`adopt_retracted`) grows the heir's swap counters
+        // without a local retraction, so the implication only runs in the
+        // other direction: recompute needs a discard (retraction) or a
+        // dropped/restored offloaded extent to have existed.
+        assert!(
+            res.retractions == 0 || res.steps > 0,
+            "audit: {} retractions in a run that never stepped",
+            res.retractions
+        );
+        assert!(
+            res.recomputed_tokens == 0 || res.retractions > 0 || res.swapped_out_tokens > 0,
+            "audit: {} tokens recomputed without a retraction or an offloaded extent",
+            res.recomputed_tokens
+        );
+        assert!(
+            res.recompute_saved_tokens == 0 || res.swapped_in_tokens > 0,
+            "audit: {} tokens saved from recompute without a single restore",
+            res.recompute_saved_tokens
+        );
+        assert!(res.peak_kv_used >= 0.0, "audit: negative peak_kv_used {}", res.peak_kv_used);
+
+        // ---- link occupancy ----
+        // No upper bound: `LinkModel::transfer` accrues busy time at
+        // issue, so a swap-out that is never waited on (its extent was
+        // dropped by a host shrink) can leave `busy_until` past the final
+        // clock and push the fraction marginally above 1.
+        assert!(
+            res.link_busy_frac >= 0.0 && res.link_busy_frac.is_finite(),
+            "audit: link_busy_frac {} is negative or non-finite",
+            res.link_busy_frac
+        );
+        let stall_tol = REL_EPS * res.total_time.max(1.0);
+        assert!(
+            res.link_stall_time >= 0.0 && res.link_stall_time <= res.total_time + stall_tol,
+            "audit: link stall {} outside the run's {}s",
+            res.link_stall_time,
+            res.total_time
+        );
+
+        // ---- encoder accounting ----
+        assert!(res.encode_time >= 0.0, "audit: negative encode_time {}", res.encode_time);
+        // Same slack form as the per-step invariant (absolute REL_EPS on
+        // the overlapped seconds, not on the fraction): reconstruct
+        // `overlapped` and bound it by the executed encoder seconds.
+        assert!(
+            res.encode_overlap_frac >= 0.0
+                && res.encode_overlap_frac * res.encode_time <= res.encode_time + REL_EPS,
+            "audit: encode_overlap_frac {} of {}s exceeds the executed encoder seconds",
+            res.encode_overlap_frac,
+            res.encode_time
+        );
+        assert!(
+            res.embed_cache_hit_tokens == 0 || res.steps > 0,
+            "audit: embedding-cache hits in a run that never stepped"
+        );
+
+        // ---- step series vs aggregate busy time ----
+        assert!(
+            res.total_comp >= 0.0 && res.total_mem >= 0.0,
+            "audit: negative busy time (comp {}, mem {})",
+            res.total_comp,
+            res.total_mem
+        );
+        assert!(
+            res.series.len() as u64 <= res.steps,
+            "audit: {} series samples from {} steps",
+            res.series.len(),
+            res.steps
+        );
+        // When the series is uncapped it covers every step, so its sums
+        // must reproduce the aggregates (same addends, same order).
+        if res.series.len() as u64 == res.steps {
+            let mut comp = 0.0;
+            let mut mem = 0.0;
+            let mut wall = 0.0;
+            for s in &res.series {
+                comp += s.t_comp;
+                mem += s.t_mem;
+                wall += s.step_time;
+            }
+            close("total_comp", res.total_comp, comp);
+            close("total_mem", res.total_mem, mem);
+            assert!(
+                wall <= res.total_time + stall_tol,
+                "audit: series step times sum to {} beyond total_time {}",
+                wall,
+                res.total_time
+            );
+        }
     }
 }
 

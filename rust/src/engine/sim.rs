@@ -1652,6 +1652,12 @@ impl SimEngine {
         st.result.p99_ttft = crate::util::stats::percentile(&ttfts, 99.0);
         st.result.mean_queue_delay = crate::util::stats::mean(&delays);
         st.result.timings = st.timings;
+        // Invariant 10 (DESIGN.md §11): the finished result must cohere —
+        // every derived metric matches its definition over the raw
+        // counters it summarizes.
+        if let Some(aud) = st.audit.as_ref() {
+            aud.check_final(&st.result);
+        }
         st.result
     }
 }

@@ -33,6 +33,7 @@ pub mod baselines;
 pub mod config;
 pub mod engine;
 pub mod kv;
+pub mod lint;
 pub mod modality;
 pub mod parallel;
 pub mod perfmodel;

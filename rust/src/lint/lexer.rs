@@ -1,0 +1,404 @@
+//! A hand-rolled, dependency-free Rust lexer — just enough fidelity for
+//! the repo lints (DESIGN.md §13).
+//!
+//! The crate vendors offline dependencies only, so `syn` is off the
+//! table; token-level analysis is also exactly the right altitude for
+//! the rules we enforce — every one of them is a pattern over
+//! identifiers, punctuation and literal kinds, none needs a full AST.
+//! The lexer understands the constructs that would otherwise produce
+//! false positives: strings (plain, raw, byte), char literals vs
+//! lifetimes, nested block comments, and float vs integer literals
+//! (including `1.` / `1..2` / `1.0f64` / `1e-9` disambiguation).
+//!
+//! Line comments are captured separately because the suppression syntax
+//! (`// lint:allow(<rule>) -- <reason>`) lives in them.
+
+/// What kind of lexeme a [`Token`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`for`, `in`, `let`, `self`, type names…).
+    Ident,
+    /// Integer literal (any base, any suffix except `f32`/`f64`).
+    Int,
+    /// Float literal (`1.0`, `1.`, `1e-9`, `2f64`, `0.5e3`).
+    Float,
+    /// String literal (plain, raw or byte) — contents opaque.
+    Str,
+    /// Char literal (`'x'`, `'\n'`).
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Punctuation, longest-match (`==`, `::`, `->`, `{`, …).
+    Punct,
+}
+
+/// One token with its 1-indexed source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One `//` line comment: its line and the text after the `//`.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    /// Whether any token precedes the comment on the same line (a
+    /// trailing comment suppresses its own line; a full-line comment
+    /// suppresses the next line that carries code).
+    pub trailing: bool,
+}
+
+/// Lexed form of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-char punctuation, longest first so greedy matching is correct.
+const PUNCTS: [&str; 24] = [
+    "<<=", ">>=", "..=", "...", "==", "!=", "<=", ">=", "&&", "||", "::", "..", "->", "=>", "+=",
+    "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`.  Unterminated strings/comments end the file quietly —
+/// the linter reports on what it saw, it is not a compiler front-end.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != '\n' {
+                j += 1;
+            }
+            let trailing = out.tokens.last().is_some_and(|t| t.line == line);
+            out.comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect(),
+                trailing,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && b.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && b.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+        if (c == 'r' || c == 'b') && raw_or_byte_string(&b, i).is_some() {
+            let (j, lines) = raw_or_byte_string(&b, i).expect("checked above");
+            out.tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+            line += lines;
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let (j, lines) = skip_string(&b, i);
+            out.tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+            line += lines;
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: a lifetime is `'ident` NOT followed
+        // by a closing quote.
+        if c == '\'' {
+            let next = b.get(i + 1).copied().unwrap_or('\0');
+            if is_ident_start(next) && b.get(i + 2) != Some(&'\'') {
+                let mut j = i + 1;
+                while j < b.len() && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: b[i + 1..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let (j, lines) = skip_char(&b, i);
+            out.tokens.push(Token { kind: TokKind::Char, text: String::new(), line });
+            line += lines;
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < b.len() && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (j, kind) = lex_number(&b, i);
+            out.tokens.push(Token { kind, text: b[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // Punctuation, longest match first.
+        let mut matched = false;
+        for p in PUNCTS {
+            let pc: Vec<char> = p.chars().collect();
+            if b.len() - i >= pc.len() && b[i..i + pc.len()] == pc[..] {
+                out.tokens.push(Token { kind: TokKind::Punct, text: p.to_string(), line });
+                i += pc.len();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            out.tokens.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Skip a plain string starting at the opening quote; returns (index
+/// past the closing quote, newlines crossed).
+fn skip_string(b: &[char], start: usize) -> (usize, u32) {
+    let mut j = start + 1;
+    let mut lines = 0;
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '\n' => {
+                lines += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, lines),
+            _ => j += 1,
+        }
+    }
+    (j, lines)
+}
+
+/// Skip a char literal starting at the opening quote.
+fn skip_char(b: &[char], start: usize) -> (usize, u32) {
+    let mut j = start + 1;
+    let mut lines = 0;
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '\n' => {
+                lines += 1;
+                j += 1;
+            }
+            '\'' => return (j + 1, lines),
+            _ => j += 1,
+        }
+    }
+    (j, lines)
+}
+
+/// Recognize `r"…"`, `r#"…"#`, `b"…"`, `br##"…"##` at `start`; returns
+/// (index past the close, newlines crossed) or None if not one.
+fn raw_or_byte_string(b: &[char], start: usize) -> Option<(usize, u32)> {
+    let mut j = start;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    let raw = b.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&'"') || (!raw && hashes > 0) {
+        return None;
+    }
+    if !raw {
+        // Plain byte string: backslash escapes apply.
+        let (end, lines) = skip_string(b, j);
+        return Some((end, lines));
+    }
+    // Raw string: ends at `"` followed by `hashes` hashes, no escapes.
+    j += 1;
+    let mut lines = 0;
+    while j < b.len() {
+        if b[j] == '\n' {
+            lines += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = 0;
+            while k < hashes && b.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return Some((j + 1 + hashes, lines));
+            }
+        }
+        j += 1;
+    }
+    Some((j, lines))
+}
+
+/// Lex a numeric literal; classifies float vs int per Rust's rules
+/// (`1.` float, `1..2` int + range, `1.max(2)` int + method call,
+/// `1e-9` float, `1f64` float-by-suffix, `0x1f` int).
+fn lex_number(b: &[char], start: usize) -> (usize, TokKind) {
+    let mut j = start;
+    let mut float = false;
+    if b[j] == '0' && matches!(b.get(j + 1), Some('x' | 'o' | 'b')) {
+        j += 2;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+            j += 1;
+        }
+        return (j, TokKind::Int);
+    }
+    while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+        j += 1;
+    }
+    if b.get(j) == Some(&'.') {
+        let after = b.get(j + 1).copied().unwrap_or('\0');
+        // `1..2` is int + range; `1.max()` is int + method call.
+        if after.is_ascii_digit() || !(after == '.' || is_ident_start(after)) {
+            float = true;
+            j += 1;
+            while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    if matches!(b.get(j), Some('e' | 'E')) {
+        let mut k = j + 1;
+        if matches!(b.get(k), Some('+' | '-')) {
+            k += 1;
+        }
+        if b.get(k).is_some_and(|c| c.is_ascii_digit()) {
+            float = true;
+            j = k;
+            while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // Suffix (`u32`, `f64`, …): a float suffix makes the literal float.
+    if b.get(j).copied().is_some_and(is_ident_start) {
+        let s = j;
+        while j < b.len() && is_ident_continue(b[j]) {
+            j += 1;
+        }
+        let suffix: String = b[s..j].iter().collect();
+        if suffix == "f32" || suffix == "f64" {
+            float = true;
+        }
+    }
+    (j, if float { TokKind::Float } else { TokKind::Int })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn float_vs_int_disambiguation() {
+        let ks = kinds("1.0 1. 1..2 1.max(2) 1e-9 2f64 3u32 0x1f 1_000.5");
+        let got: Vec<TokKind> = ks.iter().map(|(k, _)| *k).collect();
+        use TokKind::*;
+        assert_eq!(
+            got,
+            vec![
+                Float, // 1.0
+                Float, // 1.
+                Int, Punct, Int, // 1..2
+                Int, Punct, Ident, Punct, Int, Punct, // 1.max(2)
+                Float, // 1e-9
+                Float, // 2f64
+                Int,   // 3u32
+                Int,   // 0x1f
+                Float, // 1_000.5
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_chars_lifetimes_and_comments() {
+        let src = "let s = \"a == b\"; // trailing\n// lint:allow(r2) -- x\nlet c = 'x'; let l: &'a str = r#\"raw \"x\" \"#;";
+        let lx = lex(src);
+        // The `==` inside the string must NOT surface as a token.
+        assert!(!lx.tokens.iter().any(|t| t.text == "=="));
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].trailing);
+        assert!(!lx.comments[1].trailing);
+        assert_eq!(lx.comments[1].text.trim(), "lint:allow(r2) -- x");
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Char));
+        assert_eq!(lx.tokens.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "a\n/* b\nc */ d\n\"e\nf\" g";
+        let lx = lex(src);
+        let find = |name: &str| lx.tokens.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("d"), 3);
+        assert_eq!(find("g"), 5);
+    }
+
+    #[test]
+    fn nested_block_comments_and_punct_greed() {
+        let ks = kinds("/* a /* b */ c */ x ..= <<= == != ->");
+        let texts: Vec<&str> = ks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["x", "..=", "<<=", "==", "!=", "->"]);
+    }
+}

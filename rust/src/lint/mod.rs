@@ -1,0 +1,179 @@
+//! Determinism & accounting lint pass (DESIGN.md §13).
+//!
+//! A dependency-free, token-level static analyzer over `rust/src/` that
+//! guards the invariants the runtime [`EngineAuditor`](crate::engine)
+//! and the golden-trace pins can only check *after* the fact.  No `syn`
+//! (the crate vendors offline deps only): [`lexer`] hand-rolls a Rust
+//! lexer good enough to distinguish strings, chars, lifetimes, nested
+//! block comments, and float-vs-int literals, so rule patterns stored
+//! inside string literals — including this linter's own source — never
+//! flag.  [`rules`] holds the catalog (r1–r5) and suppression handling.
+//!
+//! Entry points: `blendserve lint [--root DIR]` (exits non-zero on any
+//! diagnostic) and the `lint_gate` integration test that runs the same
+//! sweep under `cargo test -q`.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Diagnostic};
+
+use std::path::{Path, PathBuf};
+
+/// Lint a set of in-memory files: per-file rules r1–r4 on each, plus the
+/// cross-file r5 when both `engine/sim.rs` and `engine/audit.rs` are
+/// present.  Paths are relative to the source root with forward slashes.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut sorted: Vec<&(String, String)> = files.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    for (relpath, src) in &sorted {
+        diags.extend(rules::lint_source(relpath, src));
+    }
+    let find = |p: &str| sorted.iter().find(|(rp, _)| rp == p);
+    if let (Some((sim_path, sim_src)), Some((audit_path, audit_src))) =
+        (find("engine/sim.rs"), find("engine/audit.rs"))
+    {
+        let sim = lexer::lex(sim_src);
+        let audit = lexer::lex(audit_src);
+        let r5 = rules::rule_r5(sim_path, &sim, audit_path, &audit);
+        let (allow, _) = rules::allows(sim_path, &sim);
+        diags.extend(rules::apply_allows(r5, &allow));
+    }
+    diags.sort();
+    diags
+}
+
+/// Recursively collect `.rs` files under `root` (sorted walk — `read_dir`
+/// order is itself platform-nondeterministic) and lint them.
+pub fn lint_dir(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            std::fs::read_dir(&dir)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                files.push((rel, std::fs::read_to_string(&path)?));
+            }
+        }
+    }
+    Ok(lint_files(&files))
+}
+
+/// Render diagnostics as the canonical `file:line: [rule] msg` report.
+pub fn render(diags: &[Diagnostic]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    if diags.is_empty() {
+        out.push_str("lint: clean\n");
+    } else {
+        out.push_str(&format!(
+            "lint: {} violation{}\n",
+            diags.len(),
+            if diags.len() == 1 { "" } else { "s" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag_ids(diags: &[Diagnostic]) -> Vec<(String, u32)> {
+        diags.iter().map(|d| (d.rule.clone(), d.line)).collect()
+    }
+
+    #[test]
+    fn r1_flags_map_iteration_only_in_sensitive_modules() {
+        let src = "pub struct C { entries: HashMap<u64, u32> }\n\
+                   impl C {\n\
+                   fn total(&self) -> u32 { self.entries.values().sum() }\n\
+                   }\n";
+        let hits = lint_source("modality/cache.rs", src);
+        assert_eq!(diag_ids(&hits), vec![("r1".into(), 3)]);
+        assert!(lint_source("util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_flags_for_loops_and_respects_allow() {
+        let src = "fn f(m: &HashSet<u32>) -> u32 {\n\
+                   let mut s = 0;\n\
+                   // lint:allow(r1) -- commutative integer sum\n\
+                   for x in m { s += x; }\n\
+                   s\n\
+                   }\n\
+                   fn g(m: &HashSet<u32>) { for x in m { drop(x); } }\n";
+        let hits = lint_source("kv/ledger.rs", src);
+        assert_eq!(diag_ids(&hits), vec![("r1".into(), 7)]);
+    }
+
+    #[test]
+    fn r2_flags_wall_clock_anywhere() {
+        let src = "fn f() { let t = std::time::Instant::now(); drop(t); }\n";
+        let hits = lint_source("util/misc.rs", src);
+        assert_eq!(diag_ids(&hits), vec![("r2".into(), 1)]);
+        // Pattern inside a string literal must not flag.
+        let clean = "const P: &str = \"Instant::now\";\n";
+        assert!(lint_source("util/misc.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_float_eq_but_not_to_bits_or_tests() {
+        let src = "fn f(x: f64) -> bool { x == 0.5 }\n\
+                   fn g(x: f64, y: f64) -> bool { x.to_bits() == y.to_bits() }\n\
+                   #[cfg(test)]\n\
+                   mod t { fn h(x: f64) -> bool { x == 0.5 } }\n";
+        let hits = lint_source("engine/sim.rs", src);
+        assert_eq!(diag_ids(&hits), vec![("r3".into(), 1)]);
+    }
+
+    #[test]
+    fn r4_scoped_to_pool_and_recovery() {
+        let src = "fn f(p: &std::path::Path) { let _ = std::fs::File::create(p); }\n";
+        assert_eq!(diag_ids(&lint_source("server/pool.rs", src)), vec![("r4".into(), 1)]);
+        assert_eq!(diag_ids(&lint_source("recovery/mod.rs", src)), vec![("r4".into(), 1)]);
+        assert!(lint_source("util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn empty_reason_allow_is_itself_a_violation() {
+        let src = "fn f(x: f64) -> bool {\n\
+                   // lint:allow(r3) --\n\
+                   x == 0.5\n\
+                   }\n";
+        let hits = lint_source("engine/sim.rs", src);
+        // The r3 hit is suppressed structurally? No: a reasonless allow
+        // grants nothing, so both the allow error and the r3 hit remain.
+        assert_eq!(diag_ids(&hits), vec![("allow".into(), 2), ("r3".into(), 3)]);
+    }
+
+    #[test]
+    fn r5_cross_file_checks_simresult_fields() {
+        let sim = "pub struct SimResult { pub steps: u64, pub novel: f64 }\n";
+        let audit = "fn check(r: &SimResult) { assert!(r.steps > 0); }\n";
+        let files = vec![
+            ("engine/sim.rs".to_string(), sim.to_string()),
+            ("engine/audit.rs".to_string(), audit.to_string()),
+        ];
+        let hits = lint_files(&files);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "r5");
+        assert_eq!(hits[0].line, 1);
+        assert!(hits[0].msg.contains("novel"));
+    }
+}

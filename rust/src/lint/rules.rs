@@ -1,0 +1,666 @@
+//! The repo-specific rule catalog (DESIGN.md §13).  Every rule guards a
+//! determinism or accounting invariant that the runtime `EngineAuditor`
+//! and the golden-trace pins can only catch *after* a seed-dependent
+//! flake has already happened; each descends from a real historical bug:
+//!
+//! - **r1** — no iteration over `HashMap`/`HashSet` in ordering-sensitive
+//!   modules (the PR 6 `EncoderCache` eviction-order bug class).
+//! - **r2** — no ambient nondeterminism or wall-clock (`Instant::now`,
+//!   `SystemTime`, `thread_rng`, `RandomState`) anywhere in `rust/src`.
+//! - **r3** — no direct `==`/`!=` between float expressions outside
+//!   `to_bits` comparisons and test code (the PR 5 running-sum drift
+//!   class that deadlocked the prefill gate).
+//! - **r4** — file writes in `server/pool.rs` and `recovery/` must route
+//!   through `write_atomic`/`JournalWriter` (PR 7 crash consistency).
+//! - **r5** — every field of `SimResult` must be referenced in
+//!   `engine/audit.rs`, so new accounting can never silently escape the
+//!   auditor (cross-file, see [`super::lint_files`]).
+//!
+//! Suppression: `// lint:allow(<rule>[, <rule>]) -- <reason>` on the
+//! violating line (trailing) or alone on the line above; the reason is
+//! mandatory and an empty one is itself a violation (`allow`).
+
+use super::lexer::{lex, Lexed, TokKind, Token};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One lint finding: `file:line: [rule] msg`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Modules where map iteration order can reach scheduling decisions,
+/// golden traces, or the resume replay (rule r1's scope).
+const ORDER_SENSITIVE: [&str; 6] =
+    ["engine/", "scheduler/", "modality/", "kv/", "server/", "recovery/"];
+
+/// Map methods whose visit order is the `RandomState` iteration order.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+const VALID_RULES: [&str; 5] = ["r1", "r2", "r3", "r4", "r5"];
+
+fn is_order_sensitive(relpath: &str) -> bool {
+    ORDER_SENSITIVE.iter().any(|m| relpath.starts_with(m))
+}
+
+fn is_crash_consistent_scope(relpath: &str) -> bool {
+    relpath == "server/pool.rs" || relpath.starts_with("recovery/")
+}
+
+/// Everything the per-file rules need, computed in one pre-pass.
+pub struct FileCtx<'a> {
+    pub relpath: &'a str,
+    pub lexed: &'a Lexed,
+    /// Per-token: inside a `#[cfg(test)]` module or `#[test]` fn body.
+    pub in_test: Vec<bool>,
+    /// Identifiers declared (or initialized) as `HashMap`/`HashSet`.
+    pub map_names: BTreeSet<String>,
+    /// Identifiers declared `f32`/`f64` or initialized from a float
+    /// literal, in this file.
+    pub float_names: BTreeSet<String>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn new(relpath: &'a str, lexed: &'a Lexed) -> Self {
+        FileCtx {
+            relpath,
+            lexed,
+            in_test: test_regions(&lexed.tokens),
+            map_names: collect_map_names(&lexed.tokens),
+            float_names: collect_float_names(&lexed.tokens),
+        }
+    }
+}
+
+/// Mark tokens inside `#[cfg(test)] mod … { }` / `#[test] fn … { }`.
+fn test_regions(toks: &[Token]) -> Vec<bool> {
+    let mut out = vec![false; toks.len()];
+    let mut depth: i32 = 0;
+    let mut pending = false;
+    // While `Some(d)`, we are in a test region that ends when a `}`
+    // returns the depth to `d`.
+    let mut test_end: Option<i32> = None;
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        // Attribute: scan `#[ … ]` as a unit so its contents never
+        // confuse the brace depth, and classify it.
+        if t.text == "#" && toks.get(i + 1).is_some_and(|n| n.text == "[") {
+            let mut j = i + 2;
+            let mut brackets = 1;
+            let mut idents: Vec<&str> = Vec::new();
+            while j < toks.len() && brackets > 0 {
+                match toks[j].text.as_str() {
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    _ => {
+                        if toks[j].kind == TokKind::Ident {
+                            idents.push(&toks[j].text);
+                        }
+                    }
+                }
+                j += 1;
+            }
+            let is_test_attr = idents.as_slice() == ["test"]
+                || (idents.first() == Some(&"cfg")
+                    && idents.contains(&"test")
+                    && !idents.contains(&"not"));
+            if is_test_attr && test_end.is_none() {
+                pending = true;
+            }
+            for slot in out.iter_mut().take(j).skip(i) {
+                *slot = test_end.is_some() || pending;
+            }
+            i = j;
+            continue;
+        }
+        match t.text.as_str() {
+            "{" => {
+                if pending && test_end.is_none() {
+                    test_end = Some(depth);
+                    pending = false;
+                }
+                depth += 1;
+                out[i] = test_end.is_some();
+            }
+            "}" => {
+                depth -= 1;
+                // The closing brace itself still belongs to the region.
+                out[i] = test_end.is_some();
+                if test_end == Some(depth) {
+                    test_end = None;
+                }
+            }
+            ";" => {
+                // `#[cfg(test)] use …;` — attribute spent without a body.
+                out[i] = test_end.is_some() || pending;
+                if test_end.is_none() {
+                    pending = false;
+                }
+            }
+            _ => out[i] = test_end.is_some() || pending,
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Names bound to a `HashMap`/`HashSet`: `name: [&][mut] [path::]HashMap`
+/// (fields, params, lets, struct-literal inits) and
+/// `name = HashMap::new()/with_capacity/from/default()`.
+fn collect_map_names(toks: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        // Forward form: `= HashMap::new()` etc.
+        if toks.get(i + 1).is_some_and(|n| n.text == "::")
+            && toks.get(i + 2).is_some_and(|n| {
+                matches!(n.text.as_str(), "new" | "with_capacity" | "from" | "default")
+            })
+            && i >= 2
+            && toks[i - 1].text == "="
+            && toks[i - 2].kind == TokKind::Ident
+        {
+            names.insert(toks[i - 2].text.clone());
+        }
+        // Backward form: `name : [&][mut] [std::collections::] HashMap`.
+        let mut j = i;
+        while j >= 2 && toks[j - 1].text == "::" && toks[j - 2].kind == TokKind::Ident {
+            j -= 2; // hop over one `path::` segment
+        }
+        while j >= 1 && (toks[j - 1].text == "mut" || toks[j - 1].text == "&") {
+            j -= 1;
+        }
+        if j >= 2 && toks[j - 1].text == ":" && toks[j - 2].kind == TokKind::Ident {
+            names.insert(toks[j - 2].text.clone());
+        }
+    }
+    names
+}
+
+/// Names declared `f32`/`f64` (fields, params, lets, consts) or
+/// `let`-bound directly to a float literal.
+fn collect_float_names(toks: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && (t.text == "f64" || t.text == "f32") {
+            let mut j = i;
+            while j >= 1 && (toks[j - 1].text == "mut" || toks[j - 1].text == "&") {
+                j -= 1;
+            }
+            if j >= 2 && toks[j - 1].text == ":" && toks[j - 2].kind == TokKind::Ident {
+                names.insert(toks[j - 2].text.clone());
+            }
+        }
+        if t.text == "let" && t.kind == TokKind::Ident {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|n| n.text == "mut") {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|n| n.kind == TokKind::Ident)
+                && toks.get(j + 1).is_some_and(|n| n.text == "=")
+                && toks.get(j + 2).is_some_and(|n| n.kind == TokKind::Float)
+            {
+                names.insert(toks[j].text.clone());
+            }
+        }
+    }
+    names
+}
+
+/// r1 — iteration over `HashMap`/`HashSet` in ordering-sensitive modules.
+pub fn rule_r1(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !is_order_sensitive(ctx.relpath) || ctx.map_names.is_empty() {
+        return out;
+    }
+    let toks = &ctx.lexed.tokens;
+    for i in 0..toks.len() {
+        // `name.iter()` / `name.keys()` / …
+        if toks[i].text == "."
+            && toks.get(i + 1).is_some_and(|m| {
+                m.kind == TokKind::Ident && ITER_METHODS.contains(&m.text.as_str())
+            })
+            && toks.get(i + 2).is_some_and(|p| p.text == "(")
+            && i >= 1
+            && toks[i - 1].kind == TokKind::Ident
+            && ctx.map_names.contains(&toks[i - 1].text)
+        {
+            out.push(Diagnostic {
+                file: ctx.relpath.to_string(),
+                line: toks[i + 1].line,
+                rule: "r1".into(),
+                msg: format!(
+                    "iteration over hash-ordered `{}` via `.{}()` in an \
+                     ordering-sensitive module — use a sorted key list, a Vec, \
+                     or a BTreeMap",
+                    toks[i - 1].text,
+                    toks[i + 1].text
+                ),
+            });
+        }
+        // `for … in [&][mut] [self.]name {`
+        if toks[i].kind == TokKind::Ident && toks[i].text == "for" {
+            let mut j = i + 1;
+            // Skip the pattern up to `in` (bounded so a stray `for` in a
+            // generic bound cannot run away).
+            let mut hops = 0;
+            while j < toks.len() && toks[j].text != "in" && hops < 24 {
+                j += 1;
+                hops += 1;
+            }
+            if j >= toks.len() || toks[j].text != "in" {
+                continue;
+            }
+            j += 1;
+            while j < toks.len() && (toks[j].text == "&" || toks[j].text == "mut") {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| t.text == "self")
+                && toks.get(j + 1).is_some_and(|t| t.text == ".")
+            {
+                j += 2;
+            }
+            if toks.get(j).is_some_and(|t| {
+                t.kind == TokKind::Ident && ctx.map_names.contains(&t.text)
+            }) && toks.get(j + 1).is_some_and(|t| t.text == "{")
+            {
+                out.push(Diagnostic {
+                    file: ctx.relpath.to_string(),
+                    line: toks[j].line,
+                    rule: "r1".into(),
+                    msg: format!(
+                        "`for … in` over hash-ordered `{}` in an \
+                         ordering-sensitive module — collect and sort the keys \
+                         first",
+                        toks[j].text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// r2 — ambient nondeterminism / wall-clock sources.
+pub fn rule_r2(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let toks = &ctx.lexed.tokens;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match toks[i].text.as_str() {
+            "Instant"
+                if toks.get(i + 1).is_some_and(|t| t.text == "::")
+                    && toks.get(i + 2).is_some_and(|t| t.text == "now") =>
+            {
+                Some("`Instant::now` reads the wall clock")
+            }
+            "SystemTime" => Some("`SystemTime` reads the wall clock"),
+            "thread_rng" => Some("`thread_rng` is OS-seeded — use `util::DetRng`"),
+            "RandomState" => Some("`RandomState` randomizes hash iteration order"),
+            _ => None,
+        };
+        if let Some(why) = hit {
+            out.push(Diagnostic {
+                file: ctx.relpath.to_string(),
+                line: toks[i].line,
+                rule: "r2".into(),
+                msg: format!("{why}; simulations must be bit-deterministic"),
+            });
+        }
+    }
+    out
+}
+
+/// r3 — direct float `==`/`!=` outside `to_bits` and test code.
+pub fn rule_r3(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let toks = &ctx.lexed.tokens;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Punct || (toks[i].text != "==" && toks[i].text != "!=") {
+            continue;
+        }
+        if ctx.in_test[i] {
+            continue;
+        }
+        let left = operand_back(toks, i);
+        let right = operand_fwd(toks, i);
+        let spans = [&left, &right];
+        let has_to_bits = spans
+            .iter()
+            .any(|s| s.iter().any(|&j| toks[j].text == "to_bits"));
+        if has_to_bits {
+            continue;
+        }
+        let is_float_span = |s: &Vec<usize>| {
+            s.iter().any(|&j| {
+                toks[j].kind == TokKind::Float
+                    || (ctx.float_names.contains(&toks[j].text)
+                        && toks[j].kind == TokKind::Ident
+                        && toks[j].text != "f64"
+                        && toks[j].text != "f32")
+                    || (toks[j].text == "as"
+                        && toks
+                            .get(j + 1)
+                            .is_some_and(|n| n.text == "f64" || n.text == "f32"))
+            })
+        };
+        if is_float_span(&left) || is_float_span(&right) {
+            out.push(Diagnostic {
+                file: ctx.relpath.to_string(),
+                line: toks[i].line,
+                rule: "r3".into(),
+                msg: format!(
+                    "float `{}` comparison — accumulated floats drift (PR 5 \
+                     prefill-gate deadlock); compare integers, use \
+                     `.to_bits()`, or justify exactness",
+                    toks[i].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Operand token indices left of comparison index `op` (balanced groups
+/// included; stops at any other operator or delimiter).
+fn operand_back(toks: &[Token], op: usize) -> Vec<usize> {
+    let mut span = Vec::new();
+    let mut depth = 0usize;
+    let mut j = op;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        match t.text.as_str() {
+            ")" | "]" => depth += 1,
+            "(" | "[" => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            _ if depth > 0 => {}
+            "." | "::" => {}
+            _ => {
+                let atom = matches!(
+                    t.kind,
+                    TokKind::Ident | TokKind::Int | TokKind::Float | TokKind::Str | TokKind::Char
+                );
+                if !atom || matches!(t.text.as_str(), "if" | "while" | "return" | "match") {
+                    break;
+                }
+            }
+        }
+        span.push(j);
+    }
+    span
+}
+
+/// Operand token indices right of comparison index `op`.
+fn operand_fwd(toks: &[Token], op: usize) -> Vec<usize> {
+    let mut span = Vec::new();
+    let mut depth = 0usize;
+    let mut j = op;
+    // A leading unary minus / reference belongs to the operand.
+    while j + 1 < toks.len() && matches!(toks[j + 1].text.as_str(), "-" | "&" | "*" | "!") {
+        j += 1;
+    }
+    while j + 1 < toks.len() {
+        j += 1;
+        let t = &toks[j];
+        match t.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            _ if depth > 0 => {}
+            "." | "::" => {}
+            _ => {
+                let atom = matches!(
+                    t.kind,
+                    TokKind::Ident | TokKind::Int | TokKind::Float | TokKind::Str | TokKind::Char
+                );
+                if !atom {
+                    break;
+                }
+            }
+        }
+        span.push(j);
+    }
+    span
+}
+
+/// r4 — raw file creation/write in crash-consistent modules.
+pub fn rule_r4(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !is_crash_consistent_scope(ctx.relpath) {
+        return out;
+    }
+    let toks = &ctx.lexed.tokens;
+    for i in 0..toks.len() {
+        if ctx.in_test[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let pair = |a: &str, b: &str| {
+            toks[i].text == a
+                && toks.get(i + 1).is_some_and(|t| t.text == "::")
+                && toks.get(i + 2).is_some_and(|t| t.text == b)
+        };
+        let hit = if pair("File", "create") {
+            Some("`File::create`")
+        } else if pair("fs", "write") {
+            Some("`fs::write`")
+        } else if pair("OpenOptions", "new") {
+            Some("`OpenOptions::new`")
+        } else {
+            None
+        };
+        if let Some(call) = hit {
+            out.push(Diagnostic {
+                file: ctx.relpath.to_string(),
+                line: toks[i].line,
+                rule: "r4".into(),
+                msg: format!(
+                    "{call} in a crash-consistent module — route output \
+                     through `write_atomic` or `JournalWriter` so a crash \
+                     cannot leave a torn file"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// r5 — every `SimResult` field must be referenced in `engine/audit.rs`.
+/// Returns diagnostics anchored at the field declarations in `sim_path`.
+pub fn rule_r5(
+    sim_path: &str,
+    sim: &Lexed,
+    audit_path: &str,
+    audit: &Lexed,
+) -> Vec<Diagnostic> {
+    let audit_idents: BTreeSet<&str> = audit
+        .tokens
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.as_str())
+        .collect();
+    let mut out = Vec::new();
+    for (name, line) in struct_fields(&sim.tokens, "SimResult") {
+        if !audit_idents.contains(name.as_str()) {
+            out.push(Diagnostic {
+                file: sim_path.to_string(),
+                line,
+                rule: "r5".into(),
+                msg: format!(
+                    "`SimResult.{name}` is never referenced in {audit_path} — \
+                     extend `EngineAuditor` (or `check_final`) so the new \
+                     accounting cannot silently escape the auditor"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `(field, line)` pairs of `struct <name> { … }` at body depth 1.
+fn struct_fields(toks: &[Token], name: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].text == "struct" && toks[i + 1].text == name && toks[i + 2].text == "{" {
+            let mut depth = 1;
+            let mut j = i + 3;
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "{" | "(" | "[" | "<" => depth += 1,
+                    "}" | ")" | "]" | ">" => depth -= 1,
+                    // `Vec<Vec<f64>>` lexes its closer as one `>>` token.
+                    ">>" => depth -= 2,
+                    ":" if depth == 1
+                        && j >= 1
+                        && toks[j - 1].kind == TokKind::Ident
+                        && (j < 2
+                            || matches!(toks[j - 2].text.as_str(), "{" | "," | "pub")) =>
+                    {
+                        out.push((toks[j - 1].text.clone(), toks[j - 1].line));
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse `lint:allow` comments: per-line allowed rules, plus diagnostics
+/// for malformed suppressions (empty reason, unknown rule).
+pub fn allows(
+    relpath: &str,
+    lexed: &Lexed,
+) -> (BTreeMap<u32, BTreeSet<String>>, Vec<Diagnostic>) {
+    let mut map: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    let diag = |line: u32, msg: String| Diagnostic {
+        file: relpath.to_string(),
+        line,
+        rule: "allow".into(),
+        msg,
+    };
+    for c in &lexed.comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix("lint:allow") else { continue };
+        let Some(rest) = rest.trim_start().strip_prefix('(') else {
+            bad.push(diag(
+                c.line,
+                "malformed suppression — expected `lint:allow(<rule>) -- <reason>`".into(),
+            ));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad.push(diag(c.line, "malformed suppression — missing `)`".into()));
+            continue;
+        };
+        let (rule_list, tail) = rest.split_at(close);
+        let tail = &tail[1..];
+        let mut rules: BTreeSet<String> = BTreeSet::new();
+        let mut ok = true;
+        for r in rule_list.split(',') {
+            let r = r.trim();
+            if VALID_RULES.contains(&r) {
+                rules.insert(r.to_string());
+            } else {
+                bad.push(diag(c.line, format!("unknown rule `{r}` in lint:allow (valid: r1..r5)")));
+                ok = false;
+            }
+        }
+        let reason = tail.trim_start().strip_prefix("--").map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            bad.push(diag(
+                c.line,
+                "suppression without a reason — write \
+                 `lint:allow(<rule>) -- <why this site is safe>`"
+                    .into(),
+            ));
+            continue;
+        }
+        if !ok || rules.is_empty() {
+            continue;
+        }
+        // A trailing comment covers its own line; a full-line comment
+        // covers the next line that carries code.
+        let target = if c.trailing {
+            Some(c.line)
+        } else {
+            lexed.tokens.iter().find(|t| t.line > c.line).map(|t| t.line)
+        };
+        if let Some(line) = target {
+            map.entry(line).or_default().extend(rules);
+        }
+    }
+    (map, bad)
+}
+
+/// Drop diagnostics covered by a `lint:allow` on their line.
+pub fn apply_allows(
+    diags: Vec<Diagnostic>,
+    allow: &BTreeMap<u32, BTreeSet<String>>,
+) -> Vec<Diagnostic> {
+    diags
+        .into_iter()
+        .filter(|d| {
+            d.rule == "allow"
+                || !allow.get(&d.line).is_some_and(|rules| rules.contains(&d.rule))
+        })
+        .collect()
+}
+
+/// Run rules r1–r4 plus suppression handling on one file.  `relpath` is
+/// the path relative to `rust/src` (forward slashes) — it selects which
+/// rules apply.
+pub fn lint_source(relpath: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let ctx = FileCtx::new(relpath, &lexed);
+    let mut diags = Vec::new();
+    diags.extend(rule_r1(&ctx));
+    diags.extend(rule_r2(&ctx));
+    diags.extend(rule_r3(&ctx));
+    diags.extend(rule_r4(&ctx));
+    let (allow, bad) = allows(relpath, &lexed);
+    let mut diags = apply_allows(diags, &allow);
+    diags.extend(bad);
+    diags.sort();
+    diags
+}

@@ -56,6 +56,7 @@ USAGE:
                       [--model NAME] [--out FILE]
   blendserve plan     --pool FILE [--systems NAME,NAME,..] [--model NAME] [--out FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
+  blendserve lint     [--root DIR]   (default rust/src; exits 1 on violations)
   blendserve config   [--preset MODEL]
 
 SYSTEMS:   vllm-dfs sglang-dfs nanoflow-dfs nanoflow-balance prefix-aligned blendserve
@@ -737,6 +738,19 @@ fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_lint(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    let root = flags.get("root").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("rust/src"));
+    if !root.is_dir() {
+        anyhow::bail!("lint root {} is not a directory (use --root DIR)", root.display());
+    }
+    let diags = blendserve::lint::lint_dir(&root)?;
+    print!("{}", blendserve::lint::render(&diags));
+    if !diags.is_empty() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_config(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let name = flags.get("preset").cloned().unwrap_or("llama-3-8b".into());
     let model = presets::model_by_name(&name)
@@ -759,6 +773,7 @@ fn main() -> anyhow::Result<()> {
         "modality" => cmd_modality(flags),
         "plan" => cmd_plan(flags),
         "serve" => cmd_serve(flags),
+        "lint" => cmd_lint(flags),
         "config" => cmd_config(flags),
         _ => usage(),
     }

@@ -103,6 +103,7 @@ impl RealServer {
             n_requests: workload.len(),
             ..Default::default()
         };
+        // lint:allow(r2) -- reports real serving wall time; tokens are unaffected
         let start = Instant::now();
         let exec0 = self.model.exec_seconds;
         let steps0 = self.model.steps;

@@ -68,6 +68,7 @@ fn parse_attachments(j: &Json, lineno: usize) -> anyhow::Result<Vec<Attachment>>
                     "line {lineno}: attachments[{pos}].{key} is not a number (got {f})"
                 )
             })?;
+            // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
             if x < min || x.fract() != 0.0 || x > MAX_JSON_INT {
                 anyhow::bail!(
                     "line {lineno}: attachments[{pos}].{key} is not a valid count (got {x})"
@@ -111,6 +112,7 @@ fn parse_pool_line(
         let v = x.as_f64().ok_or_else(|| {
             anyhow::anyhow!("line {lineno}: prompt[{pos}] is not a number (got {x})")
         })?;
+        // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
         if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
             anyhow::bail!("line {lineno}: prompt[{pos}] is not a valid token id (got {v})");
         }
@@ -125,6 +127,7 @@ fn parse_pool_line(
             let x = v.as_f64().ok_or_else(|| {
                 anyhow::anyhow!("line {lineno}: max_tokens is not a number (got {v})")
             })?;
+            // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
             if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
                 anyhow::bail!(
                     "line {lineno}: max_tokens is not a valid token count (got {x})"
@@ -241,6 +244,7 @@ fn write_atomic(
 ) -> anyhow::Result<()> {
     let tmp = tmp_sibling(path);
     let res: anyhow::Result<()> = (|| {
+        // lint:allow(r4) -- this IS write_atomic: it creates the tmp sibling
         let file = std::fs::File::create(&tmp)?;
         let mut out = BufWriter::new(file);
         write(&mut out)?;

@@ -76,6 +76,7 @@ impl Bench {
     /// Measure `f`, printing the result immediately.
     pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
         // Warmup + calibration: find an iteration time estimate.
+        // lint:allow(r2) -- a benchmark harness measures the real wall clock
         let t0 = Instant::now();
         black_box(f());
         let once = t0.elapsed().max(Duration::from_nanos(1));
@@ -84,11 +85,12 @@ impl Bench {
             .clamp(self.min_samples as u128, 10_000) as usize;
 
         let mut samples = Vec::with_capacity(target_samples);
-        let deadline = Instant::now() + self.budget;
+        let deadline = Instant::now() + self.budget; // lint:allow(r2) -- real time budget
         for _ in 0..target_samples {
-            let t = Instant::now();
+            let t = Instant::now(); // lint:allow(r2) -- the measurement itself
             black_box(f());
             samples.push(t.elapsed());
+            // lint:allow(r2) -- budget check against the real clock
             if Instant::now() > deadline && samples.len() >= self.min_samples {
                 break;
             }

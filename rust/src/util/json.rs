@@ -293,6 +293,7 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
+                // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
                 if x.fract() == 0.0 && x.abs() < 9e15 {
                     write!(f, "{}", *x as i64)
                 } else {

@@ -48,6 +48,7 @@ impl fmt::Display for TomlValue {
         match self {
             TomlValue::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
             TomlValue::Num(x) => {
+                // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
                 if x.fract() == 0.0 && x.abs() < 9e15 {
                     write!(f, "{}", *x as i64)
                 } else {

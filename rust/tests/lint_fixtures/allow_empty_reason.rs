@@ -1,0 +1,6 @@
+// A suppression without a reason grants nothing and is itself flagged:
+// both the `allow` diagnostic and the underlying r3 hit must surface.
+pub fn converged(prev: f64, next: f64) -> bool {
+    // lint:allow(r3) --
+    prev == next
+}

@@ -1,0 +1,5 @@
+// A reasoned suppression on a genuinely exact comparison lints clean.
+pub fn integral(x: f64) -> bool {
+    // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
+    x.fract() == 0.0
+}

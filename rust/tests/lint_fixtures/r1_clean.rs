@@ -1,0 +1,5 @@
+// Clean counterpart to r1_violation.rs: a BTreeMap iterates in key
+// order, so the same shape carries no ordering hazard.
+pub fn sum(m: &std::collections::BTreeMap<u32, u64>) -> u64 {
+    m.values().sum()
+}

@@ -1,0 +1,6 @@
+// Seeded r1 violation: hash-ordered iteration in an ordering-sensitive
+// module (linted as scheduler/fixture.rs).  Never compiled — inert data
+// for rust/tests/lint_gate.rs.
+pub fn sum(m: &std::collections::HashMap<u32, u64>) -> u64 {
+    m.values().sum()
+}

@@ -1,0 +1,5 @@
+// Clean counterpart to r2_violation.rs: time flows in as simulated
+// clock values, never read from the environment.
+pub fn elapsed_ms(start_s: f64, now_s: f64) -> f64 {
+    (now_s - start_s) * 1e3
+}

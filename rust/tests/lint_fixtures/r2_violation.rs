@@ -1,0 +1,5 @@
+// Seeded r2 violation: ambient wall-clock read.
+pub fn elapsed_ms() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}

@@ -1,0 +1,5 @@
+// Clean counterpart to r3_violation.rs: bit-identity via to_bits is the
+// sanctioned exact float comparison.
+pub fn converged(prev: f64, next: f64) -> bool {
+    prev.to_bits() == next.to_bits()
+}

@@ -1,0 +1,4 @@
+// Seeded r3 violation: direct float equality.
+pub fn converged(prev: f64, next: f64) -> bool {
+    prev == next
+}

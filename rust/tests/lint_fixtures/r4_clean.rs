@@ -1,0 +1,5 @@
+// Clean counterpart to r4_violation.rs: output routed through the
+// tmp-sibling + rename path, so a crash leaves old-or-new, never torn.
+pub fn persist(path: &std::path::Path, data: &[u8]) -> anyhow::Result<()> {
+    write_atomic(path, |out| Ok(out.write_all(data)?))
+}

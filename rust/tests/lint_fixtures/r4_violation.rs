@@ -1,0 +1,5 @@
+// Seeded r4 violation: raw write in a crash-consistent module (linted
+// as recovery/fixture.rs) — a crash mid-write leaves a torn file.
+pub fn persist(path: &std::path::Path, data: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, data)
+}

@@ -1,0 +1,5 @@
+// Clean counterpart: the auditor references every SimResult field, so
+// the same sim fixture lints clean against this file.
+pub fn check_final(res: &SimResult) {
+    assert!(res.aborted_requests <= res.steps);
+}

@@ -1,0 +1,7 @@
+// Seeded r5 violation (cross-file, linted as engine/sim.rs against
+// r5_audit_stale.rs as engine/audit.rs): `aborted_requests` is a new
+// counter no auditor check ever references.
+pub struct SimResult {
+    pub steps: u64,
+    pub aborted_requests: u64,
+}

@@ -1,0 +1,122 @@
+//! Gate for the determinism & accounting linter (DESIGN.md §13).
+//!
+//! Two jobs: (1) `rust/src` must lint clean, so `cargo test -q` fails
+//! the moment a hazard lands; (2) the fixture suite under
+//! `rust/tests/lint_fixtures/` pins each rule's exact `file:line` +
+//! rule-id diagnostics — one seeded violation and one clean counterpart
+//! per rule, plus the suppression-syntax edge cases.
+
+use blendserve::lint::{lint_dir, lint_files, lint_source, render, Diagnostic};
+use std::path::{Path, PathBuf};
+
+fn repo(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn fixture(name: &str) -> String {
+    let p = repo("rust/tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+/// `(rule, line)` pairs, in report order.
+fn ids(diags: &[Diagnostic]) -> Vec<(&str, u32)> {
+    diags.iter().map(|d| (d.rule.as_str(), d.line)).collect()
+}
+
+#[test]
+fn tree_is_lint_clean() {
+    let diags = lint_dir(&repo("rust/src")).expect("walk rust/src");
+    assert!(diags.is_empty(), "rust/src has lint violations:\n{}", render(&diags));
+}
+
+#[test]
+fn r1_fixture_exact_diagnostic() {
+    let hits = lint_source("scheduler/fixture.rs", &fixture("r1_violation.rs"));
+    assert_eq!(ids(&hits), vec![("r1", 5)]);
+    assert_eq!(hits[0].file, "scheduler/fixture.rs");
+    assert!(lint_source("scheduler/fixture.rs", &fixture("r1_clean.rs")).is_empty());
+    // Outside the ordering-sensitive modules the same code is fine.
+    assert!(lint_source("util/fixture.rs", &fixture("r1_violation.rs")).is_empty());
+}
+
+#[test]
+fn r2_fixture_exact_diagnostic() {
+    let hits = lint_source("util/fixture.rs", &fixture("r2_violation.rs"));
+    assert_eq!(ids(&hits), vec![("r2", 3)]);
+    assert!(lint_source("util/fixture.rs", &fixture("r2_clean.rs")).is_empty());
+}
+
+#[test]
+fn r3_fixture_exact_diagnostic() {
+    let hits = lint_source("engine/fixture.rs", &fixture("r3_violation.rs"));
+    assert_eq!(ids(&hits), vec![("r3", 3)]);
+    assert!(lint_source("engine/fixture.rs", &fixture("r3_clean.rs")).is_empty());
+}
+
+#[test]
+fn r4_fixture_exact_diagnostic() {
+    let hits = lint_source("recovery/fixture.rs", &fixture("r4_violation.rs"));
+    assert_eq!(ids(&hits), vec![("r4", 4)]);
+    assert!(lint_source("recovery/fixture.rs", &fixture("r4_clean.rs")).is_empty());
+    // r4 is scoped: the raw write is legal outside pool/recovery.
+    assert!(lint_source("util/fixture.rs", &fixture("r4_violation.rs")).is_empty());
+}
+
+#[test]
+fn r5_fixture_cross_file_diagnostic() {
+    let sim = fixture("r5_sim_unaudited.rs");
+    let stale = vec![
+        ("engine/sim.rs".to_string(), sim.clone()),
+        ("engine/audit.rs".to_string(), fixture("r5_audit_stale.rs")),
+    ];
+    let hits = lint_files(&stale);
+    assert_eq!(ids(&hits), vec![("r5", 6)]);
+    assert_eq!(hits[0].file, "engine/sim.rs");
+    assert!(hits[0].msg.contains("aborted_requests"));
+
+    let complete = vec![
+        ("engine/sim.rs".to_string(), sim),
+        ("engine/audit.rs".to_string(), fixture("r5_audit_complete.rs")),
+    ];
+    assert!(lint_files(&complete).is_empty());
+}
+
+/// The acceptance-criteria demonstration: adding a counter to the REAL
+/// `SimResult` without touching the real `audit.rs` must fail r5.
+#[test]
+fn r5_guards_the_real_simresult() {
+    let sim = std::fs::read_to_string(repo("rust/src/engine/sim.rs")).expect("read sim.rs");
+    let audit = std::fs::read_to_string(repo("rust/src/engine/audit.rs")).expect("read audit.rs");
+    let marker = "pub series: Vec<StepSample>,";
+    assert!(sim.contains(marker), "SimResult layout changed; update this test's marker");
+    let grown = sim.replace(marker, "pub series: Vec<StepSample>,\n    pub unaudited_counter: u64,");
+    let files = vec![
+        ("engine/sim.rs".to_string(), grown),
+        ("engine/audit.rs".to_string(), audit),
+    ];
+    let hits = lint_files(&files);
+    let r5: Vec<&Diagnostic> = hits.iter().filter(|d| d.rule == "r5").collect();
+    assert_eq!(r5.len(), 1, "expected exactly the injected field to flag:\n{}", render(&hits));
+    assert!(r5[0].msg.contains("unaudited_counter"));
+}
+
+#[test]
+fn empty_reason_suppression_is_rejected() {
+    let hits = lint_source("engine/fixture.rs", &fixture("allow_empty_reason.rs"));
+    // The reasonless allow grants nothing: both the allow diagnostic and
+    // the underlying r3 hit surface, at their own lines.
+    assert_eq!(ids(&hits), vec![("allow", 4), ("r3", 5)]);
+    assert!(lint_source("engine/fixture.rs", &fixture("allow_reasoned.rs")).is_empty());
+}
+
+/// The linter runs over its own source (it is part of rust/src, so the
+/// tree gate already covers it) — pin that explicitly: rule patterns
+/// live in string literals and must not self-flag.
+#[test]
+fn linter_is_clean_on_its_own_source() {
+    for name in ["lexer.rs", "rules.rs", "mod.rs"] {
+        let src = std::fs::read_to_string(repo("rust/src/lint").join(name)).expect("read linter");
+        let diags = lint_source(&format!("lint/{name}"), &src);
+        assert!(diags.is_empty(), "lint/{name} self-flags:\n{}", render(&diags));
+    }
+}
