@@ -1,0 +1,212 @@
+//! Streaming ingest benchmarks (DESIGN.md §14): the windowed pipeline vs
+//! the monolithic scheduler on one pool, plus an O(window) residency
+//! series on pools large enough that a monolithic run would pin the whole
+//! pool resident at once.
+//!
+//! - `throughput` — the same pool scheduled both ways; acceptance gates
+//!   streaming at ≥95% of the monolithic *simulated* throughput
+//!   (tokens / sim-second — the sim is deterministic, so one run per
+//!   config suffices).  Host wall time rides along for the perf log.
+//! - `residency`  — growing pools, fixed window: the peak count of
+//!   fed-but-unfinished requests must equal the window size, independent
+//!   of pool size (the bounded-memory claim, measured).
+//!
+//! Pools are written straight to JSONL line-by-line, so the bench itself
+//! never materializes a million-request workload either.  Emits
+//! `BENCH_stream.json`; `--smoke` shrinks pool sizes for CI and tags
+//! `"mode": "smoke"`.
+
+use blendserve::baselines;
+use blendserve::scheduler::run_system;
+use blendserve::server::pool::load_jsonl;
+use blendserve::stream::run_stream_file;
+use blendserve::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Write an `n`-request pool as JSONL: an 8-token stem shared by every
+/// request (cross-window cache bait), 4 group tokens shared by runs of 64
+/// (intra-window tree sharing; windows are multiples of 64, so groups
+/// never straddle a boundary), and a 4-token unique tail.
+fn write_pool(path: &Path, n: usize) {
+    let f = std::fs::File::create(path).expect("create pool");
+    let mut out = std::io::BufWriter::new(f);
+    for i in 0..n {
+        let g = 1000 + (i / 64) as u32 * 4;
+        let u = 10_000_000 + i as u32 * 4;
+        writeln!(
+            out,
+            "{{\"id\":{i},\"prompt\":[1,2,3,4,5,6,7,8,{},{},{},{},{},{},{},{}],\
+             \"max_tokens\":4}}",
+            g,
+            g + 1,
+            g + 2,
+            g + 3,
+            u,
+            u + 1,
+            u + 2,
+            u + 3,
+        )
+        .expect("write pool line");
+    }
+    out.flush().expect("flush pool");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (cmp_n, cmp_window, series): (usize, usize, Vec<(usize, usize)>) = if smoke {
+        (3_000, 512, vec![(6_000, 1_024), (12_000, 1_024)])
+    } else {
+        (
+            50_000,
+            4_096,
+            vec![(250_000, 8_192), (500_000, 8_192), (1_000_000, 8_192)],
+        )
+    };
+    println!(
+        "# stream — windowed ingest vs monolithic{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let dir = std::env::temp_dir().join("blendserve_bench_stream");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let pool = dir.join("pool.jsonl");
+
+    // --- Throughput: same pool, monolithic vs windowed (audited runs). ---
+    let mut cfg = baselines::blendserve();
+    cfg.engine.audit = true;
+    write_pool(&pool, cmp_n);
+    let w = load_jsonl(&pool).expect("load pool");
+    let t0 = Instant::now();
+    let mono = run_system(&cfg, &w);
+    let mono_wall = t0.elapsed();
+    drop(w);
+    cfg.stream.window_requests = cmp_window;
+    let t0 = Instant::now();
+    let stream = run_stream_file(&cfg, &pool).expect("stream run");
+    let stream_wall = t0.elapsed();
+    std::fs::remove_file(&pool).ok();
+
+    assert_eq!(
+        mono.result.total_tokens, stream.result.total_tokens,
+        "streaming lost tokens"
+    );
+    let mono_tput = mono.result.total_tokens as f64 / mono.result.total_time.max(1e-12);
+    let stream_tput =
+        stream.result.total_tokens as f64 / stream.result.total_time.max(1e-12);
+    let ratio = stream_tput / mono_tput.max(1e-12);
+    println!(
+        "throughput   {cmp_n:>9} req | mono {mono_tput:>10.0} tok/s (resident {:>7}) \
+         | stream {stream_tput:>10.0} tok/s (resident {:>5}, {} windows, \
+         xwin hits {:>7}) | ratio {ratio:.3} | host {:.2?} vs {:.2?}",
+        mono.result.peak_resident_requests,
+        stream.result.peak_resident_requests,
+        stream.result.windows,
+        stream.result.cross_window_hit_tokens,
+        mono_wall,
+        stream_wall,
+    );
+    assert_eq!(stream.result.windows as usize, cmp_n.div_ceil(cmp_window));
+    assert_eq!(mono.result.peak_resident_requests, cmp_n);
+    assert_eq!(stream.result.peak_resident_requests, cmp_window);
+    assert!(
+        stream.result.cross_window_hit_tokens > 0,
+        "shared stem never hit across a window boundary"
+    );
+
+    // --- Residency: fixed window, growing pools.  Unaudited (the audit
+    // is O(resident) per step and the invariants are already exercised
+    // above); this series measures the memory bound, not correctness. ---
+    cfg.engine.audit = false;
+    let mut residency_rows: Vec<(String, Json)> = Vec::new();
+    let mut residency_ok = true;
+    for &(n, window) in &series {
+        write_pool(&pool, n);
+        cfg.stream.window_requests = window;
+        let t0 = Instant::now();
+        let rep = run_stream_file(&cfg, &pool).expect("stream run");
+        let wall = t0.elapsed();
+        std::fs::remove_file(&pool).ok();
+        let bounded = rep.result.peak_resident_requests == window;
+        residency_ok &= bounded;
+        println!(
+            "residency    {n:>9} req | window {window:>5} | peak resident {:>5} \
+             | {} windows | xwin hits {:>8} | host {:.2?}",
+            rep.result.peak_resident_requests,
+            rep.result.windows,
+            rep.result.cross_window_hit_tokens,
+            wall,
+        );
+        residency_rows.push((
+            format!("{n}"),
+            Json::obj(vec![
+                ("n_requests", Json::from(n)),
+                ("window_requests", Json::from(window)),
+                (
+                    "peak_resident_requests",
+                    Json::from(rep.result.peak_resident_requests),
+                ),
+                ("windows", Json::from(rep.result.windows as usize)),
+                (
+                    "cross_window_hit_tokens",
+                    Json::from(rep.result.cross_window_hit_tokens as usize),
+                ),
+                ("host_wall_s", Json::Num(wall.as_secs_f64())),
+            ]),
+        ));
+    }
+
+    let pass = ratio >= 0.95 && residency_ok;
+    let doc = Json::obj(vec![
+        ("bench", Json::from("stream")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("n_requests", Json::from(cmp_n)),
+                ("window_requests", Json::from(cmp_window)),
+                ("monolithic_tok_per_s", Json::Num(mono_tput)),
+                ("streaming_tok_per_s", Json::Num(stream_tput)),
+                (
+                    "monolithic_peak_resident",
+                    Json::from(mono.result.peak_resident_requests),
+                ),
+                (
+                    "streaming_peak_resident",
+                    Json::from(stream.result.peak_resident_requests),
+                ),
+                (
+                    "cross_window_hit_tokens",
+                    Json::from(stream.result.cross_window_hit_tokens as usize),
+                ),
+                ("monolithic_host_wall_s", Json::Num(mono_wall.as_secs_f64())),
+                ("streaming_host_wall_s", Json::Num(stream_wall.as_secs_f64())),
+            ]),
+        ),
+        ("residency", Json::Obj(residency_rows.into_iter().collect())),
+        (
+            "acceptance",
+            Json::obj(vec![
+                (
+                    "metric",
+                    Json::from(
+                        "windowed streaming throughput vs monolithic; \
+                         peak resident requests == window at every pool size",
+                    ),
+                ),
+                ("required", Json::from(0.95)),
+                ("achieved", Json::Num(ratio)),
+                ("residency_bounded", Json::from(residency_ok)),
+                ("pass", Json::from(pass)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_stream.json";
+    std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+    println!("wrote {path} (throughput ratio {ratio:.3})");
+    assert!(
+        ratio >= 0.95,
+        "streaming throughput fell below 95% of monolithic: {ratio:.3}"
+    );
+    assert!(residency_ok, "peak resident requests exceeded the window");
+}

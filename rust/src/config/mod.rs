@@ -378,6 +378,55 @@ impl KvConfig {
     }
 }
 
+/// Streaming ingest knobs (`stream` module, DESIGN.md §14): window sizing
+/// for the bounded-memory windowed driver behind `blendserve stream`.
+/// Inert for every other entry point.  Both knobs at 0 mean one unbounded
+/// window — bit-identical (per-request finish order and every counter)
+/// to the monolithic engine, which the stream tests pin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamConfig {
+    /// Maximum requests per scheduling window (0 = unbounded).
+    pub window_requests: usize,
+    /// Maximum Σ(prompt + max_tokens) tokens per window (0 = unbounded).
+    /// A window closes when either bound is reached; every window always
+    /// carries at least one request, so an oversized single request
+    /// streams rather than wedging the reader.
+    pub window_tokens: u64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { window_requests: 8192, window_tokens: 0 }
+    }
+}
+
+impl StreamConfig {
+    /// Every key the `[stream]` TOML section accepts; anything else is a
+    /// config error naming the offending key.
+    pub const TOML_KEYS: [&'static str; 2] = ["window_requests", "window_tokens"];
+
+    /// Semantic validation shared by the TOML and CLI construction paths.
+    /// Every non-negative integer is meaningful (0 = unbounded), so this
+    /// only rejects values past the TOML-exact float-integer range, which
+    /// would silently round on the next save/load cycle.
+    pub fn validate(&self) -> Result<(), String> {
+        const MAX_EXACT: u64 = 1 << 53;
+        if self.window_tokens > MAX_EXACT {
+            return Err(format!(
+                "window_tokens {} exceeds the TOML-exact integer range (<= 2^53)",
+                self.window_tokens
+            ));
+        }
+        if self.window_requests as u64 > MAX_EXACT {
+            return Err(format!(
+                "window_requests {} exceeds the TOML-exact integer range (<= 2^53)",
+                self.window_requests
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Multi-modal subsystem knobs (`modality` module, DESIGN.md §10).
 ///
 /// `enabled` gates *scheduler awareness only*: whether tree / dual-scan
@@ -710,6 +759,8 @@ pub struct SystemConfig {
     pub modality: ModalityConfig,
     /// Failure-injection + recovery knobs (inert at `enabled = false`).
     pub faults: FaultsConfig,
+    /// Streaming-ingest window sizing (`blendserve stream` only).
+    pub stream: StreamConfig,
     /// GPUs per model replica (tensor parallel group size).
     pub gpus_per_replica: usize,
     /// Data-parallel replicas.
@@ -729,6 +780,7 @@ impl SystemConfig {
             kv: KvConfig::default(),
             modality: ModalityConfig::default(),
             faults: FaultsConfig::default(),
+            stream: StreamConfig::default(),
             gpus_per_replica: gpus,
             dp_replicas: 1,
         }
@@ -839,6 +891,9 @@ impl SystemConfig {
         d.set_bool("faults", "kv_rescue", self.faults.kv_rescue);
         d.set_str("faults", "strategy", self.faults.strategy.name());
         d.set_num("faults", "snapshot_every", self.faults.snapshot_every as f64);
+
+        d.set_num("stream", "window_requests", self.stream.window_requests as f64);
+        d.set_num("stream", "window_tokens", self.stream.window_tokens as f64);
         d.to_string_pretty()
     }
 
@@ -1156,6 +1211,47 @@ impl SystemConfig {
             .validate()
             .map_err(|e| TomlError(format!("[faults] {e}")))?;
 
+        // The [stream] section is optional (older config files predate the
+        // streaming ingest engine; the default window applies), with the
+        // same strictness policy as [kv]: a present section rejects
+        // unknown keys by name.
+        if let Some(sec) = d.sections.get("stream") {
+            for key in sec.keys() {
+                if !StreamConfig::TOML_KEYS.contains(&key.as_str()) {
+                    return Err(TomlError(format!(
+                        "[stream] unknown key '{key}' (expected one of: {})",
+                        StreamConfig::TOML_KEYS.join(", ")
+                    ))
+                    .into());
+                }
+            }
+        }
+        let sdef = StreamConfig::default();
+        let snum = |key: &str, def: f64| -> Result<f64, TomlError> {
+            let x = match d.get("stream", key) {
+                None => def,
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| TomlError(format!("[stream] {key}: expected number")))?,
+            };
+            // Window sizes are counts: reject negatives and fractions
+            // before the `as` cast silently truncates them.
+            // lint:allow(r3) -- fract() of an integral f64 is exactly 0.0
+            if x < 0.0 || x.fract() != 0.0 {
+                return Err(TomlError(format!(
+                    "[stream] {key}: expected a non-negative integer, got {x}"
+                )));
+            }
+            Ok(x)
+        };
+        let stream = StreamConfig {
+            window_requests: snum("window_requests", sdef.window_requests as f64)? as usize,
+            window_tokens: snum("window_tokens", sdef.window_tokens as f64)? as u64,
+        };
+        stream
+            .validate()
+            .map_err(|e| TomlError(format!("[stream] {e}")))?;
+
         let gpus_per_replica = n("", "gpus_per_replica")? as usize;
         let dp_replicas = n("", "dp_replicas")? as usize;
         fleet
@@ -1171,6 +1267,7 @@ impl SystemConfig {
             kv,
             modality,
             faults,
+            stream,
             gpus_per_replica,
             dp_replicas,
         })
@@ -1508,6 +1605,65 @@ mod tests {
         let text = cfg.to_toml().replace("\"recover\"", "\"hope\"");
         assert!(SystemConfig::from_toml(&text).is_err());
         assert!(FaultsConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn stream_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        cfg.stream.window_requests = 4096;
+        cfg.stream.window_tokens = 2_000_000;
+        let back = SystemConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+
+        // Config files predating the streaming ingest engine (no [stream]
+        // section) must parse with the default window.
+        let mut stripped = String::new();
+        let mut in_stream = false;
+        for line in cfg.to_toml().lines() {
+            if line.trim() == "[stream]" {
+                in_stream = true;
+                continue;
+            }
+            if in_stream && line.trim().starts_with('[') {
+                in_stream = false;
+            }
+            if !in_stream {
+                stripped.push_str(line);
+                stripped.push('\n');
+            }
+        }
+        let parsed = SystemConfig::from_toml(&stripped).unwrap();
+        assert_eq!(parsed.stream, StreamConfig::default());
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_stream_key_by_name() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg
+            .to_toml()
+            .replace("[stream]", "[stream]\nwindw_requests = 4");
+        let err = SystemConfig::from_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("windw_requests"), "key name missing from: {err}");
+        assert!(err.contains("[stream]"), "section missing from: {err}");
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_stream_values() {
+        let cfg = SystemConfig::new(presets::llama3_8b(), presets::a100_80gb());
+        let text = cfg
+            .to_toml()
+            .replace("window_requests = 8192", "window_requests = -1");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        let text = cfg
+            .to_toml()
+            .replace("window_requests = 8192", "window_requests = 1.5");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        // Beyond 2^53 an f64 can no longer represent the count exactly.
+        let text = cfg
+            .to_toml()
+            .replace("window_tokens = 0", "window_tokens = 1e16");
+        assert!(SystemConfig::from_toml(&text).is_err());
+        assert!(StreamConfig::default().validate().is_ok());
     }
 
     #[test]

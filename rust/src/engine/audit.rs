@@ -475,6 +475,32 @@ impl EngineAuditor {
             "audit: embedding-cache hits in a run that never stepped"
         );
 
+        // ---- streaming-window accounting ----
+        assert!(
+            res.cross_window_hit_tokens <= res.hit_tokens,
+            "audit: {} cross-window hit tokens exceed total cache hits {}",
+            res.cross_window_hit_tokens,
+            res.hit_tokens
+        );
+        // A hit can only cross a window boundary if more than one window
+        // was ever fed (the cache epoch never advances otherwise).
+        assert!(
+            res.windows > 1 || res.cross_window_hit_tokens == 0,
+            "audit: {} cross-window hit tokens with only {} windows",
+            res.cross_window_hit_tokens,
+            res.windows
+        );
+        assert!(
+            res.peak_resident_requests <= res.timings.len(),
+            "audit: peak residency {} exceeds the {} requests ever fed",
+            res.peak_resident_requests,
+            res.timings.len()
+        );
+        assert!(
+            res.peak_resident_requests > 0 || res.steps == 0 || res.timings.is_empty(),
+            "audit: a stepped run with requests never observed a resident one"
+        );
+
         // ---- step series vs aggregate busy time ----
         assert!(
             res.total_comp >= 0.0 && res.total_mem >= 0.0,

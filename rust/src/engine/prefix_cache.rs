@@ -87,6 +87,12 @@ struct CNode {
     /// the segment carries exactly this refcount (splits keep it exact).
     refs: u32,
     last_use: u64,
+    /// Cache epoch at materialization time (splits inherit the original
+    /// segment's stamp).  The streaming driver bumps the cache epoch at
+    /// window boundaries; a match on a node stamped in an earlier epoch
+    /// is a cross-window hit.  Monolithic runs never bump, so every node
+    /// matches the live epoch and the cross-epoch stat stays zero.
+    epoch: u64,
     /// Slot is recycled (on the free list).
     free: bool,
 }
@@ -115,10 +121,18 @@ pub struct RadixCache {
     /// nothing is evictable the insert is truncated.
     capacity: u64,
     clock: u64,
+    /// Current ingest epoch; new segments are stamped with it.  Advanced
+    /// by [`bump_epoch`](Self::bump_epoch) at streaming window
+    /// boundaries, never by the cache itself.
+    epoch: u64,
     // ---- statistics ----
     pub hits_tokens: u64,
     pub lookup_tokens: u64,
     pub evicted_tokens: u64,
+    /// Hit tokens matched on segments stamped in an *earlier* epoch —
+    /// i.e. prefix sharing that survived a streaming window boundary.
+    /// Always `<= hits_tokens`; stays 0 unless `bump_epoch` was called.
+    pub prev_epoch_hit_tokens: u64,
 }
 
 /// Length of the common prefix of two equal-length slices; a single
@@ -153,10 +167,21 @@ impl RadixCache {
             pinned: 0,
             capacity,
             clock: 0,
+            epoch: 0,
             hits_tokens: 0,
             lookup_tokens: 0,
             evicted_tokens: 0,
+            prev_epoch_hit_tokens: 0,
         }
+    }
+
+    /// Advance the ingest epoch: content resident *now* becomes
+    /// "previous-epoch" content, so later hits on it accrue to
+    /// [`prev_epoch_hit_tokens`].  Called by the streaming driver when a
+    /// new window is fed; a run that never calls this observes identical
+    /// behavior and statistics to one predating the epoch machinery.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
     }
 
     pub fn size_tokens(&self) -> u64 {
@@ -183,19 +208,28 @@ impl RadixCache {
         self.clock += 1;
         let mut cur = NIL;
         let mut depth = 0usize;
+        let mut prev_epoch = 0u64;
         while depth < prompt.len() {
             let sm = match self.match_child(cur, prompt, depth, prompt.len()) {
                 Some(sm) => sm,
                 None => break,
             };
             if sm.full {
-                self.nodes[sm.child as usize].last_use = self.clock;
+                let n = &mut self.nodes[sm.child as usize];
+                n.last_use = self.clock;
+                if n.epoch < self.epoch {
+                    prev_epoch += sm.matched as u64;
+                }
                 cur = sm.child;
                 depth += sm.matched;
             } else {
                 // Partial: split so the untouched tail keeps its old clock.
                 let p = self.split(sm.child, sm.matched);
-                self.nodes[p as usize].last_use = self.clock;
+                let n = &mut self.nodes[p as usize];
+                n.last_use = self.clock;
+                if n.epoch < self.epoch {
+                    prev_epoch += sm.matched as u64;
+                }
                 cur = p;
                 depth += sm.matched;
                 break;
@@ -206,6 +240,7 @@ impl RadixCache {
         }
         self.hits_tokens += depth as u64;
         self.lookup_tokens += prompt.len() as u64;
+        self.prev_epoch_hit_tokens += prev_epoch;
         depth
     }
 
@@ -239,6 +274,7 @@ impl RadixCache {
         let len = len.min(prompt.len());
         let mut cur = NIL;
         let mut depth = 0usize;
+        let mut prev_epoch = 0u64;
         // ---- match phase: walk/split/pin existing segments ----
         while depth < len {
             let sm = match self.match_child(cur, prompt, depth, len) {
@@ -252,6 +288,9 @@ impl RadixCache {
             } else {
                 self.split(sm.child, sm.matched)
             };
+            if self.nodes[node as usize].epoch < self.epoch {
+                prev_epoch += sm.matched as u64;
+            }
             self.pin_node(node);
             cur = node;
             depth += sm.matched;
@@ -278,6 +317,8 @@ impl RadixCache {
                     n_children: 0,
                     refs: 1,
                     last_use: self.clock,
+                    epoch: self.epoch,
+                    free: false,
                 });
                 if cur != NIL {
                     self.nodes[cur as usize].n_children += 1;
@@ -293,6 +334,7 @@ impl RadixCache {
         if count_lookup {
             self.hits_tokens += hit as u64;
             self.lookup_tokens += prompt.len() as u64;
+            self.prev_epoch_hit_tokens += prev_epoch;
         }
         let handle = if depth == 0 {
             PinHandle::EMPTY
@@ -343,9 +385,9 @@ impl RadixCache {
     /// through the whole segment covers both — so per-token refs and the
     /// pinned total are unchanged.
     fn split(&mut self, id: Id, m: usize) -> Id {
-        let (parent, tokens, start, len, refs, last_use) = {
+        let (parent, tokens, start, len, refs, last_use, epoch) = {
             let n = &self.nodes[id as usize];
-            (n.parent, n.tokens.clone(), n.start, n.len, n.refs, n.last_use)
+            (n.parent, n.tokens.clone(), n.start, n.len, n.refs, n.last_use, n.epoch)
         };
         debug_assert!(0 < m && m < len as usize, "split out of range");
         let m = m as u32;
@@ -357,6 +399,10 @@ impl RadixCache {
             n_children: 1,
             refs,
             last_use,
+            // Both halves were materialized together: the head keeps the
+            // original ingest epoch so cross-epoch attribution is exact.
+            epoch,
+            free: false,
         });
         self.children.insert((parent, tokens[start as usize]), p);
         {
@@ -734,5 +780,47 @@ mod tests {
         let r_int = run(interleaved);
         assert!(r_dfs > 0.5, "dfs hit ratio {r_dfs}");
         assert!(r_dfs > r_int * 2.0, "dfs={r_dfs} interleaved={r_int}");
+    }
+
+    #[test]
+    fn epoch_attribution_counts_only_cross_epoch_hits() {
+        let mut c = RadixCache::new(100);
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
+        c.release(h);
+        // Same-epoch hit: no cross-epoch attribution.
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 4);
+        assert_eq!(c.prev_epoch_hit_tokens, 0);
+        c.bump_epoch();
+        // Cross-epoch hit: all 4 matched tokens predate the boundary.
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 4);
+        assert_eq!(c.prev_epoch_hit_tokens, 4);
+        // Content inserted after the bump is same-epoch again.
+        let (_, h) = c.insert_pinned(&p(&[9, 9, 9]), 3);
+        c.release(h);
+        assert_eq!(c.lookup(&[9, 9, 9]), 3);
+        assert_eq!(c.prev_epoch_hit_tokens, 4);
+        // Un-counted walks (insert_pinned) leave the stat untouched.
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3, 4]), 4);
+        c.release(h);
+        assert_eq!(c.prev_epoch_hit_tokens, 4);
+    }
+
+    #[test]
+    fn epoch_split_head_keeps_original_stamp() {
+        let mut c = RadixCache::new(100);
+        let (_, h) = c.insert_pinned(&p(&[1, 2, 3, 4, 5, 6]), 6);
+        c.release(h);
+        c.bump_epoch();
+        // Diverging walk splits the old segment at depth 3; the matched
+        // head was materialized pre-boundary, so 3 tokens accrue.
+        let (hit, _, h) = c.lookup_insert_pinned(&p(&[1, 2, 3, 9]));
+        assert_eq!(hit, 3);
+        assert_eq!(c.prev_epoch_hit_tokens, 3);
+        c.release(h);
+        // Walking old head + new tail again counts only the old head.
+        let (hit, _, h) = c.lookup_insert_pinned(&p(&[1, 2, 3, 9]));
+        assert_eq!(hit, 4);
+        assert_eq!(c.prev_epoch_hit_tokens, 6);
+        c.release(h);
     }
 }

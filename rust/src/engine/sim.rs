@@ -299,6 +299,19 @@ pub struct SimResult {
     /// Aggregate compute / memory busy time across all steps.
     pub total_comp: f64,
     pub total_mem: f64,
+    /// Scheduling windows fed by the streaming driver (`blendserve
+    /// stream`): one count per `note_window_fed` call.  0 on a
+    /// non-streaming (monolithic) run.
+    pub windows: u64,
+    /// Peak of (requests fed − requests finished) observed at any step —
+    /// the engine's resident working set.  Monolithic runs see the whole
+    /// pool at once, so this equals the pool size; a streaming run is
+    /// bounded by O(window) regardless of pool size.
+    pub peak_resident_requests: usize,
+    /// Prefix-cache hit tokens matched on content inserted before the
+    /// most recent window boundary — sharing that survived the windowed
+    /// split.  Always ≤ `hit_tokens`; 0 unless `windows > 1`.
+    pub cross_window_hit_tokens: u64,
     pub series: Vec<StepSample>,
 }
 
@@ -738,13 +751,16 @@ impl SimEngine {
         };
         let prompt = self.requests[idx].prompt.clone();
         // Single combined radix walk instead of a lookup followed by an
-        // insert re-walking the same path.
+        // insert re-walking the same path.  The cross-epoch stat delta
+        // around the walk isolates this admission's cross-window hits.
+        let prev_epoch_before = self.cache.prev_epoch_hit_tokens;
         let (hit, pin) = if self.cfg.prefix_cache {
             let (hit, _new, pin) = self.cache.lookup_insert_pinned(&prompt);
             (hit, pin)
         } else {
             (0, PinHandle::EMPTY)
         };
+        let cross_window = self.cache.prev_epoch_hit_tokens - prev_epoch_before;
         let private_prompt = (prompt.len() - pin.len()) as f64;
         st.private_tokens += private_prompt;
         let (prefill_pos, decoded) = match &restored {
@@ -781,10 +797,12 @@ impl SimEngine {
             Side::Right => st.used_right += est,
         }
         // Retraction re-admissions don't recount prompt/hit stats
-        // (matching §6.4's accounting).
+        // (matching §6.4's accounting) — nor cross-window hits, which
+        // keeps `cross_window_hit_tokens <= hit_tokens` exact.
         if !readmission {
             st.result.prompt_tokens += prompt.len() as u64;
             st.result.hit_tokens += hit as u64;
+            st.result.cross_window_hit_tokens += cross_window;
         }
         // ---- modality: acquire attachments through the dedup cache ----
         // A hit serves the embedding from cache (no encoder pass); a miss
@@ -1118,6 +1136,27 @@ impl SimEngine {
         }
     }
 
+    /// Record that the streaming driver fed one scheduling window: count
+    /// it, and from the second window on advance the prefix cache's
+    /// epoch so later hits on content resident *before* this boundary
+    /// accrue to [`SimResult::cross_window_hit_tokens`].  A run that
+    /// never calls this (every monolithic path) keeps `windows == 0`,
+    /// the cache epoch at 0, and bit-identical behavior.
+    pub fn note_window_fed(&mut self, st: &mut RunState) {
+        st.result.windows += 1;
+        if st.result.windows > 1 {
+            self.cache.bump_epoch();
+        }
+    }
+
+    /// Update the pacer's expected sharing ratio so requests fed next
+    /// (via [`Self::feed_requests`]) are priced at their own window's
+    /// tree-measured sharing instead of the construction-time value.
+    /// Already-fed pacer shares are untouched.
+    pub fn set_expected_sharing(&mut self, s: f64) {
+        self.sched.expected_sharing = s;
+    }
+
     /// The donor side of a steal: remove never-admitted requests'
     /// balanced-chunk pacer contribution from a paused run, so the donor
     /// stops pacing against work it no longer owns (mirror of
@@ -1160,6 +1199,14 @@ impl SimEngine {
             return StepOutcome::Done;
         }
         st.step += 1;
+        // Resident working set = fed − finished.  Monolithic runs fed the
+        // whole pool up front, so the first step already records the pool
+        // size; a streaming run's peak is bounded by the window size plus
+        // stragglers (the memory-bound claim BENCH_stream gates on).
+        let resident = self.requests.len() - st.finished;
+        if resident > st.result.peak_resident_requests {
+            st.result.peak_resident_requests = resident;
+        }
 
         // ---- admission ----
         loop {
@@ -1705,6 +1752,8 @@ mod tests {
         assert!(r.total_time > 0.0);
         assert!(r.throughput > 0.0);
         assert_eq!(r.retractions, 0);
+        // Monolithic run: the whole pool is resident from step one.
+        assert_eq!(r.peak_resident_requests, 20);
         // No retractions -> nothing was ever re-prefilled or swapped.
         assert_eq!(r.recomputed_tokens, 0);
         assert_eq!(r.swapped_out_tokens, 0);
@@ -2317,6 +2366,51 @@ mod tests {
         assert_eq!(r.total_tokens, 8 * 80);
         assert_eq!(r.timings.len(), 8);
         assert!(r.timings.iter().all(|t| t.finish.is_finite()));
+        // No window was ever noted: the streaming fields stay inert.
+        // Residency still tracks fed − finished: the second half arrived
+        // only after the first four finished, so the peak is 4, not 8.
+        assert_eq!(r.windows, 0);
+        assert_eq!(r.cross_window_hit_tokens, 0);
+        assert_eq!(r.peak_resident_requests, 4);
+    }
+
+    #[test]
+    fn windowed_feed_attributes_cross_window_hits_and_bounds_residency() {
+        // Two 4-request windows sharing a 100-token stem.  The second
+        // window's stem hits content inserted before the boundary, so the
+        // hits accrue to cross_window_hit_tokens; residency peaks at one
+        // window, not the pool.
+        let stem: Vec<u32> = (0..100).collect();
+        let req = |id: u32| {
+            let mut p = stem.clone();
+            p.extend((0..20).map(|k| 10_000 + id * 100 + k));
+            SimRequest::offline(id, Arc::new(p), 10, 10)
+        };
+        let w1: Vec<SimRequest> = (0..4).map(req).collect();
+        let w2: Vec<SimRequest> = (4..8).map(req).collect();
+        let mut e = engine(w1);
+        let mut st = e.begin();
+        e.note_window_fed(&mut st);
+        let mut ad = StaticOrder::new((0..4).collect());
+        while e.step_once(&mut st, &mut ad) == StepOutcome::Progress {}
+        e.feed_requests(&mut st, w2);
+        e.note_window_fed(&mut st);
+        let mut ad2 = StaticOrder::new((4..8).collect());
+        while e.step_once(&mut st, &mut ad2) == StepOutcome::Progress {}
+        let r = e.finalize(st);
+        assert_eq!(r.windows, 2);
+        assert_eq!(r.timings.len(), 8);
+        // Every second-window request re-found the 100-token stem across
+        // the boundary (the first one re-found it from window 1).
+        assert!(
+            r.cross_window_hit_tokens >= 100,
+            "cross-window hits {}",
+            r.cross_window_hit_tokens
+        );
+        assert!(r.cross_window_hit_tokens <= r.hit_tokens);
+        // Window 1 finished before window 2 was fed: residency is one
+        // window, not the 8-request pool.
+        assert_eq!(r.peak_resident_requests, 4);
     }
 
     #[test]

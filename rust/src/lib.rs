@@ -12,7 +12,9 @@
 //!   encode/decode overlap ([`modality`], DESIGN.md §10) — a fault-tolerance
 //!   layer: seeded failure injection, exactly-once recovery and a
 //!   crash-consistent journal with deterministic resume ([`recovery`],
-//!   DESIGN.md §12) — workload
+//!   DESIGN.md §12) — a streaming ingest engine that windows
+//!   million-request pools through the scheduler in bounded memory with
+//!   cross-window cache carryover ([`stream`], DESIGN.md §14) — workload
 //!   synthesis ([`trace`]), the §4 performance model ([`perfmodel`]), data /
 //!   tensor parallel deployment ([`parallel`]) and the serving frontends
 //!   ([`server`]) — the offline batch API plus online/offline co-located
@@ -41,6 +43,7 @@ pub mod planner;
 pub mod recovery;
 pub mod scheduler;
 pub mod server;
+pub mod stream;
 pub mod trace;
 pub mod tree;
 pub mod util;

@@ -40,8 +40,15 @@ impl std::fmt::Display for Diagnostic {
 
 /// Modules where map iteration order can reach scheduling decisions,
 /// golden traces, or the resume replay (rule r1's scope).
-const ORDER_SENSITIVE: [&str; 6] =
-    ["engine/", "scheduler/", "modality/", "kv/", "server/", "recovery/"];
+const ORDER_SENSITIVE: [&str; 7] = [
+    "engine/",
+    "scheduler/",
+    "modality/",
+    "kv/",
+    "server/",
+    "recovery/",
+    "stream/",
+];
 
 /// Map methods whose visit order is the `RandomState` iteration order.
 const ITER_METHODS: [&str; 10] = [

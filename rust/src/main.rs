@@ -8,6 +8,7 @@
 //! blendserve kv       --pool pool.jsonl [--memory-gb 22] [--margins 0.5,1,2] [--out kv.json]
 //! blendserve modality [--n 1200] [--dup 0.4] [--encoder-params 2e9] [--out mm.json]
 //! blendserve plan     --pool pool.jsonl [--systems blendserve,prefix-aligned] [--out plan.json]
+//! blendserve stream   --pool pool.jsonl [--window-requests N] [--window-tokens N] [--out stream.json]
 //! blendserve serve    --pool pool.jsonl --artifacts artifacts [--order blend|dfs|fcfs]
 //! blendserve config   [--preset llama-3-8b] > system.toml
 //! ```
@@ -55,6 +56,7 @@ USAGE:
   blendserve modality [--pool FILE] [--n N] [--dup F] [--encoder-params F] [--cache-frac F]
                       [--model NAME] [--out FILE]
   blendserve plan     --pool FILE [--systems NAME,NAME,..] [--model NAME] [--out FILE]
+  blendserve stream   --pool FILE [--window-requests N] [--window-tokens N] [--model NAME] [--out FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
   blendserve lint     [--root DIR]   (default rust/src; exits 1 on violations)
   blendserve config   [--preset MODEL]
@@ -699,6 +701,82 @@ fn cmd_plan(flags: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `blendserve stream`: windowed bounded-memory scheduling of a JSONL
+/// pool (DESIGN.md §14).  The pool is never materialized: windows of
+/// `[stream]`-sized request batches flow through one persistent engine,
+/// each window's tree built while the previous one executes.  Writes its
+/// own report document — the monolithic `save_results` planner bounds
+/// need the whole pool in memory, which is exactly what streaming
+/// avoids.
+fn cmd_stream(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    use blendserve::stream::run_stream_file;
+    use blendserve::util::Json;
+
+    let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
+    let mut cfg = baselines::blendserve();
+    if let Some(model_name) = flags.get("model") {
+        let model = presets::model_by_name(model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        cfg = baselines::with_model(cfg, model);
+    }
+    if let Some(n) = flags.get("window-requests") {
+        cfg.stream.window_requests = n.parse()?;
+    }
+    if let Some(n) = flags.get("window-tokens") {
+        cfg.stream.window_tokens = n.parse()?;
+    }
+    cfg.stream
+        .validate()
+        .map_err(|e| anyhow::anyhow!("stream config: {e}"))?;
+    println!(
+        "streaming {} on {} (window: {} requests / {} tokens; 0 = unbounded)",
+        pool.display(),
+        cfg.model.name,
+        cfg.stream.window_requests,
+        cfg.stream.window_tokens,
+    );
+    let rep = run_stream_file(&cfg, &pool)?;
+    let r = &rep.result;
+    println!(
+        "{} requests in {} windows | makespan {:.1}s | {:.0} tok/s | \
+         peak resident {} requests | sharing {:.3} ({} tok cross-window)",
+        rep.n_requests,
+        r.windows,
+        r.total_time,
+        r.throughput,
+        r.peak_resident_requests,
+        r.sharing_achieved,
+        r.cross_window_hit_tokens,
+    );
+    if let Some(out) = flags.get("out") {
+        let doc = Json::obj(vec![
+            ("pool", Json::from(pool.display().to_string().as_str())),
+            ("model", Json::from(cfg.model.name.as_str())),
+            ("window_requests", Json::from(cfg.stream.window_requests)),
+            ("window_tokens", Json::from(cfg.stream.window_tokens as usize)),
+            ("n_requests", Json::from(rep.n_requests)),
+            ("windows", Json::from(r.windows as usize)),
+            ("total_time_s", Json::Num(r.total_time)),
+            ("throughput_tok_s", Json::Num(r.throughput)),
+            ("steps", Json::from(r.steps as usize)),
+            ("total_tokens", Json::from(r.total_tokens as usize)),
+            ("sharing_achieved", Json::Num(r.sharing_achieved)),
+            ("hit_tokens", Json::from(r.hit_tokens as usize)),
+            (
+                "cross_window_hit_tokens",
+                Json::from(r.cross_window_hit_tokens as usize),
+            ),
+            (
+                "peak_resident_requests",
+                Json::from(r.peak_resident_requests),
+            ),
+        ]);
+        std::fs::write(out, format!("{doc}\n"))?;
+        println!("report -> {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: HashMap<String, String>) -> anyhow::Result<()> {
     let pool = flags.get("pool").map(PathBuf::from).unwrap_or_else(|| usage());
     let dir = flags
@@ -772,6 +850,7 @@ fn main() -> anyhow::Result<()> {
         "kv" => cmd_kv(flags),
         "modality" => cmd_modality(flags),
         "plan" => cmd_plan(flags),
+        "stream" => cmd_stream(flags),
         "serve" => cmd_serve(flags),
         "lint" => cmd_lint(flags),
         "config" => cmd_config(flags),

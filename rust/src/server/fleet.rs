@@ -336,6 +336,21 @@ fn shard_requests(workload: &Workload, tree: &PrefixTree, us: &[Unit]) -> Vec<Si
         .collect()
 }
 
+/// Monotone total-order key for a replica clock: maps any finite f64 to
+/// a u64 with the same ordering (sign-flip transform), so the
+/// coordinator's min-heap can carry clocks without float comparators.
+/// Exact — two clocks map to the same key iff they are the same float —
+/// which is what keeps heap selection bit-identical to the linear
+/// `min_by` scan it replaced.
+fn clock_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
 /// The straggler: the non-done replica (other than `thief`) with the most
 /// steal-eligible estimated work.
 fn pick_victim(reps: &[Replica], thief: usize) -> Option<usize> {
@@ -531,22 +546,27 @@ fn run_fleet(
     let mut steals = 0usize;
     let mut stolen_units = 0usize;
     let mut stolen_requests = 0usize;
+    // Discrete-event order: always advance the earliest replica, so every
+    // steal observes its victim at a clock ≥ the thief's (the victim's
+    // pending set only shrinks over time — causally safe).  Selection is
+    // a lazy-deletion min-heap keyed by (clock, replica index): every
+    // clock mutation (step, wake, rebuild) pushes a fresh entry and a
+    // popped entry is valid only while it matches the replica's current
+    // clock, so stale entries cost one pop each instead of a per-
+    // iteration O(replicas) scan.  Ties break on the lower replica
+    // index — the first-minimal semantics of the linear scan this
+    // replaced.
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+        (0..reps.len())
+            .map(|i| std::cmp::Reverse((clock_key(reps[i].st.clock()), i)))
+            .collect();
     loop {
-        // Discrete-event order: always advance the earliest replica, so
-        // every steal observes its victim at a clock ≥ the thief's (the
-        // victim's pending set only shrinks over time — causally safe).
-        let Some(i) = (0..reps.len())
-            .filter(|&i| !reps[i].done)
-            .min_by(|&a, &b| {
-                reps[a]
-                    .st
-                    .clock()
-                    .partial_cmp(&reps[b].st.clock())
-                    .expect("replica clocks are finite")
-            })
-        else {
+        let Some(std::cmp::Reverse((key, i))) = heap.pop() else {
             break;
         };
+        if reps[i].done || key != clock_key(reps[i].st.clock()) {
+            continue; // stale: retired, or its clock moved since the push
+        }
         let tmin = reps[i].st.clock();
 
         // Due re-joins first: a dead slot whose rejoin clock has passed
@@ -560,10 +580,14 @@ fn run_fleet(
                 dead[r] = false;
                 rejoin_at[r] = f64::INFINITY;
                 stats.rejoins += 1;
+                heap.push(std::cmp::Reverse((clock_key(reps[r].st.clock()), r)));
                 reselect = true;
             }
         }
         if reselect {
+            // `i` was not stepped: its popped entry is still its current
+            // clock, so re-offer it (the rejoiner may now be earlier).
+            heap.push(std::cmp::Reverse((key, i)));
             continue;
         }
 
@@ -608,6 +632,10 @@ fn run_fleet(
                                     reps[j].done = false;
                                     let rep = &mut reps[j];
                                     rep.engine.bump_clock(&mut rep.st, tmin);
+                                    heap.push(std::cmp::Reverse((
+                                        clock_key(rep.st.clock()),
+                                        j,
+                                    )));
                                 }
                             }
                         }
@@ -653,6 +681,10 @@ fn run_fleet(
                                 reps[slot] = build_replica(
                                     cfg, workload, prep, slot, us, ev.at, host_mult, link_mult,
                                 );
+                                heap.push(std::cmp::Reverse((
+                                    clock_key(reps[slot].st.clock()),
+                                    slot,
+                                )));
                             }
                         }
                     }
@@ -680,6 +712,9 @@ fn run_fleet(
             }
         }
         if reselect {
+            // Deaths may have retired or rebuilt `i` itself; its popped
+            // entry still matches its clock if it survived untouched.
+            heap.push(std::cmp::Reverse((key, i)));
             continue;
         }
 
@@ -735,6 +770,7 @@ fn run_fleet(
         }
 
         if outcome == StepOutcome::Progress {
+            heap.push(std::cmp::Reverse((clock_key(reps[i].st.clock()), i)));
             continue;
         }
         // Done (all local work finished) or Starved (queue empty): adopt
@@ -799,6 +835,9 @@ fn run_fleet(
         }
         if !refilled {
             reps[i].done = true;
+        }
+        if !reps[i].done {
+            heap.push(std::cmp::Reverse((clock_key(reps[i].st.clock()), i)));
         }
     }
 
@@ -967,6 +1006,41 @@ mod tests {
     use crate::scheduler::run_system;
     use crate::trace::synth::{synthesize, SynthSpec};
     use crate::trace::TraceKind;
+
+    #[test]
+    fn clock_key_is_exact_and_order_preserving() {
+        // Every ordered pair from a sign/magnitude/zero spread must map
+        // to keys in the same order; equal floats to equal keys.
+        let xs = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -1.0,
+            -f64::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE,
+            1e-9,
+            1.0,
+            1.0 + f64::EPSILON,
+            4096.75,
+            1e300,
+            f64::INFINITY,
+        ];
+        for (i, &a) in xs.iter().enumerate() {
+            for &b in &xs[i..] {
+                if a < b {
+                    assert!(clock_key(a) < clock_key(b), "{a} vs {b}");
+                } else {
+                    // a == b here (the list is sorted; -0.0 and 0.0 keys
+                    // may differ, which is fine: -0.0 < 0.0 is false and
+                    // the heap only needs a total order refining <).
+                    assert!(clock_key(a) <= clock_key(b), "{a} vs {b}");
+                }
+            }
+        }
+        assert_eq!(clock_key(17.25), clock_key(17.25));
+    }
 
     fn balanced_workload(n: usize) -> Workload {
         let pm = PerfModel::new(

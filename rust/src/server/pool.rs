@@ -93,7 +93,7 @@ fn parse_attachments(j: &Json, lineno: usize) -> anyhow::Result<Vec<Attachment>>
 /// content hash must map to one size across the whole pool (the
 /// EncoderCache dedups by hash and would otherwise serve a wrong-sized
 /// embedding on the conflict).
-fn parse_pool_line(
+pub(crate) fn parse_pool_line(
     line: &str,
     lineno: usize,
     att_sizes: &mut std::collections::HashMap<u64, (u32, usize)>,
@@ -173,27 +173,68 @@ fn parse_pool_line(
     )
 }
 
+/// Incremental content-line reader shared by the strict/tolerant pool
+/// loaders and the streaming [`crate::stream::StreamSource`]: yields one
+/// non-blank line at a time with its 1-based line number, never
+/// materializing the file.  One content line of lookahead (blank lines
+/// are skipped eagerly on both sides) makes `is_last` exact, which is
+/// what lets the tolerant loader forgive exactly a torn FINAL line even
+/// when trailing blank lines follow it.
+pub(crate) struct LineSource<R: BufRead> {
+    lines: std::iter::Enumerate<std::io::Lines<R>>,
+    /// Pre-fetched next content line: `(1-based lineno, text)`.
+    pending: Option<(usize, String)>,
+    primed: bool,
+}
+
+impl<R: BufRead> LineSource<R> {
+    pub(crate) fn new(reader: R) -> Self {
+        LineSource { lines: reader.lines().enumerate(), pending: None, primed: false }
+    }
+
+    /// Pull the next non-blank line from the underlying reader.
+    fn pull(&mut self) -> std::io::Result<Option<(usize, String)>> {
+        for (idx, line) in self.lines.by_ref() {
+            let line = line?;
+            if !line.trim().is_empty() {
+                return Ok(Some((idx + 1, line)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Next content line as `(lineno, text, is_last)`; `is_last` means no
+    /// further content line follows (trailing blanks don't count) and
+    /// `lineno` is 1-based over *all* lines, blank ones included.
+    pub(crate) fn next_content(&mut self) -> std::io::Result<Option<(usize, String, bool)>> {
+        if !self.primed {
+            self.pending = self.pull()?;
+            self.primed = true;
+        }
+        let Some((lineno, line)) = self.pending.take() else {
+            return Ok(None);
+        };
+        self.pending = self.pull()?;
+        Ok(Some((lineno, line, self.pending.is_none())))
+    }
+}
+
 fn load_jsonl_inner(path: &Path, tolerant: bool) -> anyhow::Result<(Workload, usize)> {
     let file = std::fs::File::open(path)?;
-    let reader = std::io::BufReader::new(file);
-    let lines: Vec<String> = reader.lines().collect::<Result<_, _>>()?;
-    let last_content = lines.iter().rposition(|l| !l.trim().is_empty());
+    let mut src = LineSource::new(std::io::BufReader::new(file));
     let mut requests = Vec::new();
     let mut att_sizes: std::collections::HashMap<u64, (u32, usize)> =
         std::collections::HashMap::new();
     let mut truncated = 0usize;
-    for (idx, line) in lines.iter().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        match parse_pool_line(line, idx + 1, &mut att_sizes) {
+    while let Some((lineno, line, is_last)) = src.next_content()? {
+        match parse_pool_line(&line, lineno, &mut att_sizes) {
             Ok(req) => requests.push(req),
             // Tolerant mode forgives exactly the tail a crash can tear: a
             // writer interrupted mid-append leaves at most one partial
             // FINAL line.  A malformed line anywhere earlier is
             // corruption, not a torn tail, and still errors.
             Err(e) => {
-                if tolerant && Some(idx) == last_content {
+                if tolerant && is_last {
                     truncated = 1;
                     break;
                 }
@@ -349,6 +390,15 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
                 (
                     "embed_cache_hit_tokens",
                     Json::from(o.result.embed_cache_hit_tokens as usize),
+                ),
+                ("windows", Json::from(o.result.windows as usize)),
+                (
+                    "peak_resident_requests",
+                    Json::from(o.result.peak_resident_requests),
+                ),
+                (
+                    "cross_window_hit_tokens",
+                    Json::from(o.result.cross_window_hit_tokens as usize),
                 ),
             ])
         })
@@ -695,5 +745,36 @@ mod tests {
         assert_eq!(w.len(), 2);
         assert_eq!(*w.requests[1].prompt, vec![3]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn line_numbers_count_blank_lines() {
+        // The incremental LineSource must report the same 1-based line
+        // numbers the materializing loader did: blank lines advance the
+        // count even though they yield no content.
+        let dir = std::env::temp_dir().join("blendserve_pool_lineno");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("n.jsonl");
+        std::fs::write(&path, "\n\n{\"id\":1,\"prompt\":[\"x\"]}\n").unwrap();
+        let err = load_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "wrong line number in: {err}");
+        assert!(err.contains("prompt[0]"), "no token position in: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn line_source_lookahead_is_exact() {
+        use std::io::Cursor;
+        // Interior blanks are skipped, numbering is absolute, and
+        // `is_last` fires on the final content line even when trailing
+        // blank lines follow it.
+        let mut src = LineSource::new(Cursor::new("a\n\nb\n\n\n"));
+        assert_eq!(src.next_content().unwrap(), Some((1, "a".to_string(), false)));
+        assert_eq!(src.next_content().unwrap(), Some((3, "b".to_string(), true)));
+        assert_eq!(src.next_content().unwrap(), None);
+        assert_eq!(src.next_content().unwrap(), None);
+        // A blank-only file yields nothing.
+        let mut src = LineSource::new(Cursor::new("\n  \n"));
+        assert_eq!(src.next_content().unwrap(), None);
     }
 }

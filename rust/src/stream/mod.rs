@@ -1,0 +1,434 @@
+//! Streaming ingest engine: bounded-memory windowed scheduling for
+//! million-request pools.
+//!
+//! The monolithic pipeline ([`crate::scheduler::run_system`]) loads the
+//! whole pool, builds one prefix tree over it, and schedules once — at
+//! million-request scale the pool, tree and scanner all materialize at
+//! O(pool) memory before the first token is simulated.  This module
+//! replaces that with a window pipeline:
+//!
+//! 1. [`StreamSource`] reads the JSONL pool incrementally through the
+//!    same [`crate::server::pool`] line reader and per-line validator as
+//!    the strict loader — identical error messages, never the whole
+//!    file — and cuts it into windows of at most `[stream]
+//!    window_requests` requests / `window_tokens` tokens.
+//! 2. Each window runs the unchanged BlendServe preprocessing
+//!    (tree build → §5.1 output sampling → §5.2 transform) and is
+//!    scheduled by the unchanged [`DualScanner`] — while the *next*
+//!    window's tree is built and blended on a second thread
+//!    (double-buffered over [`SimEngine::feed_requests`]).
+//! 3. The engine itself persists across windows, so prefix-cache and
+//!    embedding-cache state carry over the boundary: a window-2 request
+//!    whose prefix was inserted by window 1 still hits.  Those carryover
+//!    hits are attributed to [`SimResult::cross_window_hit_tokens`] via
+//!    the cache's ingest-epoch stamps ([`SimEngine::note_window_fed`]).
+//!
+//! With both window knobs at 0 the pool is one unbounded window and the
+//! run is bit-identical to the monolithic engine (asserted by test) —
+//! the pipeline degrades to `run()` with an extra `windows = 1` count.
+//!
+//! Memory bound: the scheduler-side structures (window workload, prefix
+//! tree, unit queue, per-window `Vec<SimRequest>` under preparation) are
+//! O(window); at most two windows are in flight at once (one
+//! scheduling, one preparing).  The engine's request table and timing
+//! records still grow with completed work — those are the per-request
+//! *results* (audited at finalize), not working state — so the bench
+//! gates on [`SimResult::peak_resident_requests`], the peak count of
+//! fed-but-unfinished requests, which streaming bounds by the window
+//! size while a monolithic run pins it at the pool size.
+
+use std::collections::HashMap;
+use std::io::BufRead;
+use std::path::Path;
+
+use crate::config::SystemConfig;
+use crate::engine::sim::{SimEngine, SimRequest, SimResult, StepOutcome};
+use crate::perfmodel::PerfModel;
+use crate::scheduler::dual_scan::{DualScanner, Unit};
+use crate::scheduler::prepare_blendserve;
+use crate::server::pool::{parse_pool_line, LineSource};
+use crate::trace::Workload;
+
+/// Incremental JSONL pool reader: yields bounded windows of validated
+/// requests without ever materializing the pool.  Validation (and every
+/// error message) is shared with [`crate::server::pool::load_jsonl`];
+/// the attachment hash → size registry spans windows, so a cross-window
+/// size conflict still errors citing the first-seen line.
+pub struct StreamSource<R: BufRead> {
+    src: LineSource<R>,
+    name: String,
+    att_sizes: HashMap<u64, (u32, usize)>,
+    emitted: usize,
+}
+
+impl StreamSource<std::io::BufReader<std::fs::File>> {
+    /// Open a JSONL pool file for streaming (window name = file stem,
+    /// matching `load_jsonl`).
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("pool")
+            .to_string();
+        Ok(Self::from_reader(std::io::BufReader::new(file), &name))
+    }
+}
+
+impl<R: BufRead> StreamSource<R> {
+    /// Stream from any reader (tests use an in-memory cursor).
+    pub fn from_reader(reader: R, name: &str) -> Self {
+        StreamSource {
+            src: LineSource::new(reader),
+            name: name.to_string(),
+            att_sizes: HashMap::new(),
+            emitted: 0,
+        }
+    }
+
+    /// Requests emitted across all windows so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Read the next window: at most `max_requests` requests (0 = no
+    /// limit) and at most `max_tokens` prompt+max_tokens tokens (0 = no
+    /// limit; the first request always fits, so a window is never
+    /// empty).  `None` once the pool is drained.  Strict validation: any
+    /// malformed line errors with the loader's exact line + position
+    /// message.
+    pub fn next_window(
+        &mut self,
+        max_requests: usize,
+        max_tokens: u64,
+    ) -> anyhow::Result<Option<Workload>> {
+        let mut requests = Vec::new();
+        let mut tokens = 0u64;
+        while let Some((lineno, line, _)) = self.src.next_content()? {
+            let req = parse_pool_line(&line, lineno, &mut self.att_sizes)?;
+            tokens += req.input_len() as u64 + req.output_len as u64;
+            requests.push(req);
+            if (max_requests > 0 && requests.len() >= max_requests)
+                || (max_tokens > 0 && tokens >= max_tokens)
+            {
+                break;
+            }
+        }
+        if requests.is_empty() {
+            return Ok(None);
+        }
+        self.emitted += requests.len();
+        Ok(Some(Workload::new(&self.name, requests)))
+    }
+}
+
+/// One window's scheduling inputs, built off-thread while the previous
+/// window executes.  Request ids are already offset to the global id
+/// space (the engine's dense `by_id` table keys on them).
+struct Prepared {
+    pm: PerfModel,
+    sims: Vec<SimRequest>,
+    units: Vec<Unit>,
+    rho_root: f64,
+    sharing: f64,
+    n_requests: usize,
+}
+
+/// Run the BlendServe preprocessing pipeline on one window and lift its
+/// dense per-window ids (`Workload::new` renumbers from 0) into the
+/// global id space at offset `base`.  With `base == 0` this produces
+/// exactly the monolithic `run_system` inputs — the window=∞
+/// bit-identity hinges on that.
+fn prepare_window(cfg: &SystemConfig, w: &Workload, base: u32) -> Prepared {
+    let (pm, tree, _n_sampled, _splits) = prepare_blendserve(cfg, w);
+    let mut sims = SimRequest::from_workload(w, &tree.est_output);
+    for s in &mut sims {
+        s.id += base;
+    }
+    let units: Vec<Unit> = tree
+        .scheduling_units()
+        .into_iter()
+        .map(|(id, density)| Unit {
+            requests: tree.nodes[id].requests.iter().map(|&r| r + base).collect(),
+            density,
+            est_cost: 0.0,
+        })
+        .collect();
+    Prepared {
+        rho_root: tree.root_density(),
+        sharing: tree.sharing_ratio(),
+        n_requests: w.len(),
+        pm,
+        sims,
+        units,
+    }
+}
+
+/// Read the next window (sequentially — the source is a single cursor)
+/// and hand its tree build + transform to a worker thread.  Returns
+/// `None` once the pool is drained.
+fn spawn_prepare<R: BufRead>(
+    cfg: &SystemConfig,
+    source: &mut StreamSource<R>,
+    base: u32,
+    max_requests: usize,
+    max_tokens: u64,
+) -> anyhow::Result<Option<std::thread::JoinHandle<Prepared>>> {
+    let Some(w) = source.next_window(max_requests, max_tokens)? else {
+        return Ok(None);
+    };
+    let cfg = cfg.clone();
+    Ok(Some(std::thread::spawn(move || {
+        prepare_window(&cfg, &w, base)
+    })))
+}
+
+/// Outcome of one streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub result: SimResult,
+    /// Requests ingested across all windows.
+    pub n_requests: usize,
+}
+
+/// Drive a full streaming run: window the source per `cfg.stream`,
+/// schedule each window with the dual scanner on one persistent engine,
+/// and overlap each window's execution with the next window's
+/// preparation.  The scheduler order is BlendServe by construction
+/// (windows are density-blended trees; `cfg.scheduler.order` is not
+/// consulted).
+pub fn run_stream<R: BufRead>(
+    cfg: &SystemConfig,
+    source: &mut StreamSource<R>,
+) -> anyhow::Result<StreamReport> {
+    let max_requests = cfg.stream.window_requests;
+    let max_tokens = cfg.stream.window_tokens;
+    let Some(w0) = source.next_window(max_requests, max_tokens)? else {
+        anyhow::bail!("stream: pool has no requests");
+    };
+    // Window 1 prepares inline: there is nothing to overlap with yet.
+    let p0 = prepare_window(cfg, &w0, 0);
+    drop(w0);
+    let mut sched = cfg.scheduler.clone();
+    sched.expected_sharing = p0.sharing;
+    let mut engine = SimEngine::new(p0.pm, cfg.engine.clone(), sched, p0.sims)
+        .with_kv(&cfg.kv)
+        .with_modality(&cfg.modality);
+    // A fresh scanner per window: `DualScanner::feed` would keep the
+    // previous window's root density, skewing the blend target.
+    let mut scanner = DualScanner::from_units(p0.units, p0.rho_root);
+    let mut base = p0.n_requests as u32;
+
+    let mut st = engine.begin();
+    engine.note_window_fed(&mut st);
+    let mut next = spawn_prepare(cfg, source, base, max_requests, max_tokens)?;
+    loop {
+        match engine.step_once(&mut st, &mut scanner) {
+            StepOutcome::Progress => continue,
+            // The window is drained (Starved: scanner empty; Done: every
+            // fed request finished).  Feed the prepared next window and
+            // keep stepping, or finish if the pool is dry.
+            StepOutcome::Starved | StepOutcome::Done => {
+                let Some(handle) = next.take() else { break };
+                let p = handle
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("stream: window prepare thread panicked"))?;
+                engine.set_expected_sharing(p.sharing);
+                engine.feed_requests(&mut st, p.sims);
+                engine.note_window_fed(&mut st);
+                scanner = DualScanner::from_units(p.units, p.rho_root);
+                base += p.n_requests as u32;
+                next = spawn_prepare(cfg, source, base, max_requests, max_tokens)?;
+            }
+        }
+    }
+    Ok(StreamReport {
+        result: engine.finalize(st),
+        n_requests: base as usize,
+    })
+}
+
+/// Convenience wrapper: stream a pool file per `cfg.stream`.
+pub fn run_stream_file(cfg: &SystemConfig, path: &Path) -> anyhow::Result<StreamReport> {
+    let mut source = StreamSource::open(path)?;
+    run_stream(cfg, &mut source)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::scheduler::run_system;
+    use crate::server::pool::{load_jsonl, save_jsonl};
+    use crate::trace::synth::{synthesize, SynthSpec};
+    use crate::trace::{Request, TraceKind};
+
+    fn blend_cfg() -> SystemConfig {
+        let mut cfg = baselines::blendserve();
+        // Every streaming test runs with the invariant auditor armed.
+        cfg.engine.audit = true;
+        cfg
+    }
+
+    fn jsonl(lines: &[&str]) -> String {
+        let mut s = String::new();
+        for l in lines {
+            s.push_str(l);
+            s.push('\n');
+        }
+        s
+    }
+
+    fn source_of(text: &str) -> StreamSource<std::io::Cursor<Vec<u8>>> {
+        StreamSource::from_reader(std::io::Cursor::new(text.into_bytes()), "test")
+    }
+
+    #[test]
+    fn windows_cut_by_request_count() {
+        let lines: Vec<String> = (0..7)
+            .map(|i| format!("{{\"id\":{i},\"prompt\":[{i},1,2],\"max_tokens\":4}}"))
+            .collect();
+        let text = jsonl(&lines.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let mut src = source_of(&text);
+        let sizes: Vec<usize> = std::iter::from_fn(|| {
+            src.next_window(3, 0).unwrap().map(|w| w.len())
+        })
+        .collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+        assert_eq!(src.emitted(), 7);
+        assert!(src.next_window(3, 0).unwrap().is_none(), "drained source stays dry");
+    }
+
+    #[test]
+    fn windows_cut_by_token_budget_and_never_empty() {
+        // 3 prompt tokens + 7 max_tokens = 10 tokens per request.
+        let lines: Vec<String> = (0..5)
+            .map(|i| format!("{{\"id\":{i},\"prompt\":[{i},1,2],\"max_tokens\":7}}"))
+            .collect();
+        let text = jsonl(&lines.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let mut src = source_of(&text);
+        // 25-token budget: the window closes once Σ ≥ 25, i.e. after 3.
+        let w = src.next_window(0, 25).unwrap().unwrap();
+        assert_eq!(w.len(), 3);
+        // A budget smaller than any single request still emits one
+        // request per window (progress guarantee).
+        let w = src.next_window(0, 1).unwrap().unwrap();
+        assert_eq!(w.len(), 1);
+        let w = src.next_window(0, 1).unwrap().unwrap();
+        assert_eq!(w.len(), 1);
+        assert!(src.next_window(0, 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_line_errors_with_loader_message_in_any_window() {
+        let text = jsonl(&[
+            "{\"id\":0,\"prompt\":[1,2],\"max_tokens\":4}",
+            "{\"id\":1,\"prompt\":[1,2],\"max_tokens\":4}",
+            "{\"id\":2,\"prompt\":[1,\"x\"],\"max_tokens\":4}",
+        ]);
+        let mut src = source_of(&text);
+        assert_eq!(src.next_window(2, 0).unwrap().unwrap().len(), 2);
+        let err = src.next_window(2, 0).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "line number missing from: {err}");
+        assert!(err.contains("prompt[1]"), "position missing from: {err}");
+    }
+
+    #[test]
+    fn attachment_hash_conflicts_detected_across_windows() {
+        let text = jsonl(&[
+            "{\"id\":0,\"prompt\":[1],\"attachments\":[{\"hash\":7,\"tokens\":100}]}",
+            "{\"id\":1,\"prompt\":[2],\"max_tokens\":4}",
+            "{\"id\":2,\"prompt\":[3],\"attachments\":[{\"hash\":7,\"tokens\":200}]}",
+        ]);
+        let mut src = source_of(&text);
+        assert_eq!(src.next_window(2, 0).unwrap().unwrap().len(), 2);
+        // The conflicting re-registration sits in a later window; the
+        // registry spans windows, so it still errors citing line 1.
+        let err = src.next_window(2, 0).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "conflict line missing from: {err}");
+        assert!(err.contains("first seen at line 1"), "origin missing from: {err}");
+    }
+
+    #[test]
+    fn unbounded_window_is_bit_identical_to_monolithic_run() {
+        let pm = PerfModel::new(
+            crate::config::presets::llama3_8b(),
+            crate::config::presets::a100_80gb(),
+            1,
+        );
+        let dir = std::env::temp_dir().join("blendserve_stream_ident");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, kind) in [TraceKind::BurstGpt, TraceKind::ShareGpt, TraceKind::Mmlu]
+            .into_iter()
+            .enumerate()
+        {
+            let w = synthesize(&SynthSpec::new(kind, 1.1, 0.3, 300).with_seed(i as u64), &pm);
+            let path = dir.join(format!("pool{i}.jsonl"));
+            save_jsonl(&w, &path).unwrap();
+
+            let mut cfg = blend_cfg();
+            cfg.stream.window_requests = 0;
+            cfg.stream.window_tokens = 0;
+            let mono = run_system(&cfg, &load_jsonl(&path).unwrap());
+            let stream = run_stream_file(&cfg, &path).unwrap();
+
+            assert_eq!(stream.n_requests, w.len());
+            let (a, b) = (&mono.result, &stream.result);
+            assert_eq!(a.total_time.to_bits(), b.total_time.to_bits(), "{kind:?}");
+            assert_eq!(a.steps, b.steps, "{kind:?}");
+            assert_eq!(a.total_tokens, b.total_tokens, "{kind:?}");
+            assert_eq!(a.hit_tokens, b.hit_tokens, "{kind:?}");
+            assert_eq!(a.timings.len(), b.timings.len(), "{kind:?}");
+            for (ta, tb) in a.timings.iter().zip(&b.timings) {
+                assert_eq!(ta.id, tb.id, "{kind:?}");
+                assert_eq!(ta.admit.to_bits(), tb.admit.to_bits(), "{kind:?} req {}", ta.id);
+                assert_eq!(ta.finish.to_bits(), tb.finish.to_bits(), "{kind:?} req {}", ta.id);
+            }
+            // The only permitted divergence: the window count itself.
+            assert_eq!(a.windows, 0, "monolithic runs never count windows");
+            assert_eq!(b.windows, 1, "{kind:?}");
+            assert_eq!(b.cross_window_hit_tokens, 0, "{kind:?}");
+            assert_eq!(a.peak_resident_requests, b.peak_resident_requests, "{kind:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn window_boundaries_attribute_cross_window_hits_and_bound_residency() {
+        // 12 requests sharing a 100-token stem, 4-request windows: the
+        // stem is inserted by window 1 and hit by windows 2 and 3 across
+        // the epoch boundary.
+        let stem: Vec<u32> = (1000..1100).collect();
+        let requests: Vec<Request> = (0..12u32)
+            .map(|i| {
+                let mut p = stem.clone();
+                p.extend([i + 1, i + 2, i + 3]);
+                Request::new(i, TraceKind::ShareGpt, p, 8)
+            })
+            .collect();
+        let w = Workload::new("shared-stem", requests);
+        let dir = std::env::temp_dir().join("blendserve_stream_xwin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pool.jsonl");
+        save_jsonl(&w, &path).unwrap();
+
+        let mut cfg = blend_cfg();
+        cfg.stream.window_requests = 4;
+        cfg.stream.window_tokens = 0;
+        let out = run_stream_file(&cfg, &path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert_eq!(out.n_requests, 12);
+        assert_eq!(out.result.windows, 3);
+        assert_eq!(out.result.total_tokens, w.total_tokens());
+        assert!(
+            out.result.cross_window_hit_tokens >= 100,
+            "stem never hit across a window boundary: {}",
+            out.result.cross_window_hit_tokens
+        );
+        assert!(out.result.cross_window_hit_tokens <= out.result.hit_tokens);
+        // Residency stays bounded by the window, not the pool: windows
+        // are fed only when the previous one has fully drained.
+        assert_eq!(out.result.peak_resident_requests, 4);
+    }
+}

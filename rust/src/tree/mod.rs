@@ -262,6 +262,53 @@ impl PrefixTree {
         self.nodes[ROOT].density
     }
 
+    /// Recompute one node's aggregates from its own requests and its
+    /// children's (already-correct) aggregates.  The per-node summation
+    /// order — own requests in attachment order, then children in child
+    /// order — is the *only* float summation this tree ever does, so any
+    /// caller that respects bottom-up ordering (full post-order sweep or
+    /// an ancestor-path walk after a local edit) produces bit-identical
+    /// aggregates.
+    pub(crate) fn recompute_node(&mut self, id: NodeId, pm: &PerfModel) {
+        let mut demand = Demand::ZERO;
+        let mut prefill = 0u64;
+        let mut unique = self.nodes[id].seg_len as u64;
+        let mut n_req = 0u32;
+        let mut est_sum = 0f64;
+        for i in 0..self.nodes[id].requests.len() {
+            let req = self.nodes[id].requests[i];
+            let p = self.input_len(req);
+            let d = self.est_output[req as usize].max(1) as usize;
+            demand.add(pm.demand_mm(p, d, self.enc_tokens[req as usize]));
+            prefill += p as u64;
+            n_req += 1;
+            est_sum += d as f64;
+        }
+        for i in 0..self.nodes[id].children.len() {
+            let c = self.nodes[id].children[i];
+            let cn = &self.nodes[c];
+            demand.add(cn.demand);
+            prefill += cn.subtree_prefill;
+            unique += cn.subtree_unique;
+            n_req += cn.n_requests;
+            est_sum += cn.est_output * cn.n_requests as f64;
+        }
+        let node = &mut self.nodes[id];
+        node.demand = demand;
+        node.subtree_prefill = prefill;
+        node.subtree_unique = unique;
+        node.n_requests = n_req;
+        node.est_output = if n_req > 0 { est_sum / n_req as f64 } else { 0.0 };
+        // Encoder compute is undiscounted: prefix sharing eliminates
+        // shared prefill, not encoder passes (DESIGN.md §10).
+        let s = node.sharing();
+        node.density = if demand.mem > 0.0 {
+            ((1.0 - s) * demand.comp + demand.enc) / demand.mem
+        } else {
+            f64::INFINITY
+        };
+    }
+
     /// Recompute all subtree aggregates bottom-up using the current
     /// estimated output lengths.  O(nodes + requests).
     pub fn recompute_aggregates(&mut self, pm: &PerfModel) {
@@ -269,43 +316,7 @@ impl PrefixTree {
         // Post-order via an explicit stack (prompt chains can be deep).
         let order = self.post_order();
         for &id in &order {
-            let mut demand = Demand::ZERO;
-            let mut prefill = 0u64;
-            let mut unique = self.nodes[id].seg_len as u64;
-            let mut n_req = 0u32;
-            let mut est_sum = 0f64;
-            for i in 0..self.nodes[id].requests.len() {
-                let req = self.nodes[id].requests[i];
-                let p = self.input_len(req);
-                let d = self.est_output[req as usize].max(1) as usize;
-                demand.add(pm.demand_mm(p, d, self.enc_tokens[req as usize]));
-                prefill += p as u64;
-                n_req += 1;
-                est_sum += d as f64;
-            }
-            for i in 0..self.nodes[id].children.len() {
-                let c = self.nodes[id].children[i];
-                let cn = &self.nodes[c];
-                demand.add(cn.demand);
-                prefill += cn.subtree_prefill;
-                unique += cn.subtree_unique;
-                n_req += cn.n_requests;
-                est_sum += cn.est_output * cn.n_requests as f64;
-            }
-            let node = &mut self.nodes[id];
-            node.demand = demand;
-            node.subtree_prefill = prefill;
-            node.subtree_unique = unique;
-            node.n_requests = n_req;
-            node.est_output = if n_req > 0 { est_sum / n_req as f64 } else { 0.0 };
-            // Encoder compute is undiscounted: prefix sharing eliminates
-            // shared prefill, not encoder passes (DESIGN.md §10).
-            let s = node.sharing();
-            node.density = if demand.mem > 0.0 {
-                ((1.0 - s) * demand.comp + demand.enc) / demand.mem
-            } else {
-                f64::INFINITY
-            };
+            self.recompute_node(id, pm);
         }
         // prefix_len top-down (pre_order guarantees parents first).
         for id in self.pre_order() {

@@ -172,7 +172,15 @@ impl PrefixTree {
     /// the root with its full prefix materialized (the §5.2 "node split").
     /// Returns the number of recompute tokens this costs (= prefix_len).
     ///
-    /// Aggregates are stale afterwards; the caller recomputes.
+    /// When a perf model is cached (`recompute_aggregates` ran), the
+    /// affected aggregates — the moved node plus the old-parent → root
+    /// path — are re-summed incrementally in O(depth), bit-identical to a
+    /// full O(nodes) recompute (see `recompute_node`); only these nodes'
+    /// aggregates can change, because a split leaves every other node's
+    /// segment, request set, child list and descendant aggregates intact
+    /// (descendant `prefix_len`s are preserved too: the moved node's
+    /// `prefix_len + seg_len` is invariant).  Without a cached model,
+    /// aggregates are stale afterwards and the caller recomputes.
     pub fn split_to_root(&mut self, id: NodeId) -> u64 {
         assert_ne!(id, ROOT, "cannot split the root");
         let parent = self.nodes[id].parent;
@@ -198,7 +206,28 @@ impl PrefixTree {
         node.seg_len = new_len;
         node.parent = ROOT;
         node.split_off = true;
+        node.prefix_len = 0; // now a direct root child
         self.nodes[ROOT].children.push(id);
+
+        // Incremental aggregate maintenance: re-sum the moved node first
+        // (its own segment grew by the materialized prefix, so
+        // `subtree_unique` and density change; its children are untouched),
+        // then every node on the old-parent → root path bottom-up (each
+        // lost the subtree from its sums; root gained it back).  `take`
+        // instead of borrowing keeps the borrow checker happy without
+        // cloning the perf model per split.
+        if let Some(pm) = self.pm_cache.take() {
+            self.recompute_node(id, &pm);
+            let mut cur = parent;
+            loop {
+                self.recompute_node(cur, &pm);
+                if cur == ROOT {
+                    break;
+                }
+                cur = self.nodes[cur].parent;
+            }
+            self.pm_cache = Some(pm);
+        }
 
         // If the old parent became a pass-through (no requests, one child),
         // the tree stays valid but slightly fragmented; the dual scanner is
@@ -349,7 +378,10 @@ impl PrefixTree {
                     }
                 }
             }
-            self.recompute_aggregates(pm);
+            // No per-round O(nodes) recompute: every `split_to_root` above
+            // maintained the affected aggregates incrementally (bit-identical
+            // to a full sweep — see its doc), so the next round's layer_sort
+            // and violation scan read exact densities already.
         }
         self.recompute_aggregates(pm);
         stats.sharing_after = self.sharing_ratio();
@@ -606,6 +638,69 @@ mod tests {
             }
             if stats.stop == StopReason::IterationCap {
                 return Err("hit iteration cap".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Pins the incremental aggregate maintenance in `split_to_root`:
+    /// after every split (no intervening full recompute), every node's
+    /// aggregates must match a from-scratch `recompute_aggregates` on a
+    /// clone bit-for-bit — the summation-order argument made executable.
+    #[test]
+    fn property_incremental_split_matches_full_recompute() {
+        forall("incremental split aggregates", 20, 91, |rng: &mut DetRng| {
+            let n = rng.range(5, 80) as usize;
+            let mut reqs = Vec::new();
+            for _ in 0..n {
+                let len = rng.range(2, 30) as usize;
+                let p: Vec<u32> = (0..len).map(|_| rng.range(0, 3) as u32).collect();
+                reqs.push(Request::new(
+                    0,
+                    TraceKind::Custom,
+                    p,
+                    rng.range(2, 500) as u32,
+                ));
+            }
+            let w = Workload::new("diff", reqs);
+            let mut t = PrefixTree::build(&w);
+            let pm = pm();
+            t.sample_outputs(1.0, rng.u64());
+            t.recompute_aggregates(&pm);
+            // A handful of random splits, differentially checked each time.
+            for round in 0..5 {
+                let cands: Vec<NodeId> = t
+                    .pre_order()
+                    .into_iter()
+                    .filter(|&id| id != ROOT && t.nodes[id].parent != ROOT)
+                    .collect();
+                if cands.is_empty() {
+                    break;
+                }
+                let id = cands[rng.range(0, cands.len() as u64 - 1) as usize];
+                t.split_to_root(id); // incremental path (pm is cached)
+                let mut full = t.clone();
+                full.recompute_aggregates(&pm);
+                for node in t.pre_order() {
+                    let a = &t.nodes[node];
+                    let b = &full.nodes[node];
+                    let ok = a.demand.comp.to_bits() == b.demand.comp.to_bits()
+                        && a.demand.mem.to_bits() == b.demand.mem.to_bits()
+                        && a.demand.enc.to_bits() == b.demand.enc.to_bits()
+                        && a.subtree_prefill == b.subtree_prefill
+                        && a.subtree_unique == b.subtree_unique
+                        && a.n_requests == b.n_requests
+                        && a.est_output.to_bits() == b.est_output.to_bits()
+                        && a.density.to_bits() == b.density.to_bits()
+                        && a.prefix_len == b.prefix_len;
+                    if !ok {
+                        return Err(format!(
+                            "round {round}: node {node} diverged after \
+                             splitting {id}: incremental ρ={} vs full ρ={}",
+                            a.density, b.density
+                        ));
+                    }
+                }
             }
             Ok(())
         });
