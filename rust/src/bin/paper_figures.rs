@@ -16,6 +16,7 @@ use blendserve::baselines;
 use blendserve::config::presets;
 use blendserve::engine::distserve::simulate_disagg;
 use blendserve::engine::sim::SimRequest;
+use blendserve::obs::metrics_report;
 use blendserve::perfmodel::{roofline, PerfModel};
 use blendserve::scheduler::{run_system, static_order};
 use blendserve::server::serve_batch;
@@ -503,6 +504,50 @@ fn fig12(opts: &Opts) {
     emit(opts, "fig12_models", &t);
 }
 
+// ---------------------------------------------------------------- figobs
+
+/// Observability figure (DESIGN.md §15): roofline attribution of the
+/// makespan per canonical trace, *measured* from the metrics registry
+/// rather than inferred from workload stats — which fraction of stepped
+/// time was compute-bound vs memory-bound, how much the engine stalled
+/// on the offload link, and the sharing ratio the radix cache actually
+/// delivered by the end of the run (from the traced admission stream).
+fn figobs(opts: &Opts) {
+    let mut t = Table::new(
+        "Obs — measured roofline attribution per trace (BlendServe, simulated)",
+        &["trace", "makespan s", "comp frac", "mem frac", "link stall", "exact",
+          "final sharing", "churn windows"],
+    );
+    let mut cfg = baselines::blendserve();
+    cfg.engine.trace = true;
+    for kind in [
+        TraceKind::BurstGpt,
+        TraceKind::ShareGpt,
+        TraceKind::WildChat,
+        TraceKind::AzureTrace,
+    ] {
+        let w = generate_kind(kind, opts.n_grid.min(2000), 11);
+        let out = run_system(&cfg, &w);
+        let m = metrics_report(&out.result);
+        let sharing = m
+            .sharing_timeline
+            .last()
+            .map(|p| p.cum_hit_tokens as f64 / p.cum_prompt_tokens.max(1) as f64)
+            .unwrap_or(0.0);
+        t.row(&[
+            kind.name().into(),
+            format!("{:.0}", out.result.total_time),
+            format!("{:.2}", m.comp_bound_frac),
+            format!("{:.2}", m.mem_bound_frac),
+            format!("{:.3}", m.link_stall_frac),
+            if m.attribution_exact { "yes" } else { "no" }.into(),
+            format!("{sharing:.3}"),
+            m.churn_windows.len().to_string(),
+        ]);
+    }
+    emit(opts, "figobs_roofline", &t);
+}
+
 // --------------------------------------------------------------------- main
 
 fn main() {
@@ -532,7 +577,7 @@ fn main() {
         eprintln!(
             "usage: paper-figures [--n N] [--n-grid N] [--out DIR] \
              <all | fig2 fig3 fig4 tab1 tab2 fig7 fig8 fig9 fig10 fig11 \
-             tab3 fig12 fig13 fig14 fig15 tab4>"
+             tab3 fig12 fig13 fig14 fig15 tab4 figobs>"
         );
         std::process::exit(2);
     }
@@ -583,5 +628,8 @@ fn main() {
     }
     if want("fig15") {
         grid_figure(&opts, "Fig.15", TraceKind::WildChat);
+    }
+    if want("figobs") {
+        figobs(&opts);
     }
 }

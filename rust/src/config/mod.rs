@@ -721,6 +721,11 @@ pub struct EngineConfig {
     /// test job exercises the auditor); release runs skip it by default so
     /// the hot path pays nothing.
     pub audit: bool,
+    /// Record the observability stream (DESIGN.md §15): typed lifecycle
+    /// events + per-step counter samples, exportable as a Perfetto
+    /// trace.  Off by default — the `None` handle keeps untraced runs
+    /// bit-identical to pre-tracing behavior.
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -730,6 +735,7 @@ impl Default for EngineConfig {
             prefix_cache: true,
             prefill_attn_flops: true,
             audit: false,
+            trace: false,
         }
     }
 }
@@ -840,6 +846,7 @@ impl SystemConfig {
         d.set_bool("engine", "prefix_cache", self.engine.prefix_cache);
         d.set_bool("engine", "prefill_attn_flops", self.engine.prefill_attn_flops);
         d.set_bool("engine", "audit", self.engine.audit);
+        d.set_bool("engine", "trace", self.engine.trace);
 
         d.set_num("colocate", "online_rate", self.colocate.online_rate);
         d.set_num("colocate", "slo_scale", self.colocate.slo_scale);
@@ -968,12 +975,20 @@ impl SystemConfig {
                 .as_bool()
                 .ok_or_else(|| TomlError("[engine] audit: expected bool".into()))?,
         };
+        // `trace` is optional for the same reason (pre-§15 config files).
+        let trace = match d.get("engine", "trace") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| TomlError("[engine] trace: expected bool".into()))?,
+        };
         let engine = EngineConfig {
             overlap: OverlapMode::from_name(&overlap_name)
                 .ok_or_else(|| TomlError(format!("unknown overlap '{overlap_name}'")))?,
             prefix_cache: b("engine", "prefix_cache")?,
             prefill_attn_flops: b("engine", "prefill_attn_flops")?,
             audit,
+            trace,
         };
         // The [colocate] section is optional (older config files predate
         // co-located serving); absent keys fall back to the inert default.

@@ -56,8 +56,17 @@
 //!    busy times.  The static linter's rule r5 (DESIGN.md §13) enforces
 //!    that every `SimResult` field stays referenced here, so new
 //!    accounting cannot ship without a final audit.
+//! 11. **Trace reconciliation** (DESIGN.md §15, inside `check_final`) —
+//!    when a trace stream was recorded, replay it against the result it
+//!    narrates: every `Finish` exactly once, Σ swap-event tokens equal
+//!    the swap counters, retraction / window / admission-sharing event
+//!    sums equal their counters.  A stream that hit its cap (dropped
+//!    records) is skipped with an explicit log line, never trusted
+//!    partially.
 
 use super::{RunState, SimEngine, SimResult};
+use crate::obs::TraceEvent;
+use std::collections::BTreeSet;
 
 /// Relative slack for float aggregate comparisons.  Every audited sum is
 /// dyadic (token counts and `d̂/2` halves), so f64 accumulation is exact;
@@ -514,9 +523,35 @@ impl EngineAuditor {
             res.series.len(),
             res.steps
         );
-        // When the series is uncapped it covers every step, so its sums
-        // must reproduce the aggregates (same addends, same order).
-        if res.series.len() as u64 == res.steps {
+        // The cap is never silent: the flag and the drop counter are set
+        // together, and captured + dropped never exceed the step count
+        // (idle-skip steps legitimately carry no sample either way).
+        assert_eq!(
+            res.series_truncated,
+            res.series_dropped > 0,
+            "audit: series_truncated {} inconsistent with {} dropped samples",
+            res.series_truncated,
+            res.series_dropped
+        );
+        assert!(
+            res.series.len() as u64 + res.series_dropped <= res.steps,
+            "audit: {} captured + {} dropped series samples from {} steps",
+            res.series.len(),
+            res.series_dropped,
+            res.steps
+        );
+        if res.series_truncated {
+            // A capped series cannot reproduce the aggregates — say so
+            // explicitly instead of silently skipping the reconstruction.
+            eprintln!(
+                "audit: step series hit its cap ({} steps uncaptured) — \
+                 skipping series-sum reconstruction",
+                res.series_dropped
+            );
+        } else if res.series.len() as u64 == res.steps {
+            // An uncapped, unthinned series covers every step, so its
+            // sums must reproduce the aggregates (same addends, same
+            // order).
             let mut comp = 0.0;
             let mut mem = 0.0;
             let mut wall = 0.0;
@@ -532,6 +567,85 @@ impl EngineAuditor {
                 "audit: series step times sum to {} beyond total_time {}",
                 wall,
                 res.total_time
+            );
+        }
+
+        // ---- (11) trace reconciliation (DESIGN.md §15) ----
+        // A recorded stream must agree exactly with the result it
+        // narrates.  Incomplete streams (cap hit, records dropped) are
+        // skipped with a log line — reconciling a partial stream would
+        // be guesswork.
+        if let Some(tr) = res.trace.as_ref() {
+            if !tr.complete() {
+                eprintln!(
+                    "audit: trace stream dropped {} records — \
+                     skipping event-stream reconciliation",
+                    tr.dropped
+                );
+                return;
+            }
+            let mut finishes: BTreeSet<u32> = BTreeSet::new();
+            let mut swap_out = 0u64;
+            let mut swap_in = 0u64;
+            let mut retracts = 0u64;
+            let mut windows = 0u64;
+            let mut admit_hit = 0u64;
+            let mut admit_prompt = 0u64;
+            for r in &tr.events {
+                match r.ev {
+                    TraceEvent::Finish { req } => {
+                        assert!(
+                            finishes.insert(req),
+                            "audit: request {req} finished twice in the trace"
+                        );
+                    }
+                    TraceEvent::SwapOut { tokens, .. } => swap_out += tokens,
+                    TraceEvent::SwapIn { tokens, .. } => swap_in += tokens,
+                    TraceEvent::Retract { .. } => retracts += 1,
+                    TraceEvent::WindowFeed { .. } => windows += 1,
+                    TraceEvent::Admit { hit_tokens, new_tokens, .. } => {
+                        admit_hit += hit_tokens;
+                        admit_prompt += hit_tokens + new_tokens;
+                    }
+                    _ => {}
+                }
+            }
+            let finished = res.timings.iter().filter(|t| t.finish.is_finite()).count();
+            assert_eq!(
+                finishes.len(),
+                finished,
+                "audit: {} distinct Finish events vs {finished} finished timings",
+                finishes.len()
+            );
+            assert_eq!(
+                swap_out, res.swapped_out_tokens,
+                "audit: Σ SwapOut tokens {swap_out} vs counter {}",
+                res.swapped_out_tokens
+            );
+            assert_eq!(
+                swap_in, res.swapped_in_tokens,
+                "audit: Σ SwapIn tokens {swap_in} vs counter {}",
+                res.swapped_in_tokens
+            );
+            assert_eq!(
+                retracts, res.retractions,
+                "audit: {retracts} Retract events vs {} retractions",
+                res.retractions
+            );
+            assert_eq!(
+                windows, res.windows,
+                "audit: {windows} WindowFeed events vs {} windows",
+                res.windows
+            );
+            assert_eq!(
+                admit_hit, res.hit_tokens,
+                "audit: Σ Admit hit tokens {admit_hit} vs counter {}",
+                res.hit_tokens
+            );
+            assert_eq!(
+                admit_prompt, res.prompt_tokens,
+                "audit: Σ Admit prompt tokens {admit_prompt} vs counter {}",
+                res.prompt_tokens
             );
         }
     }

@@ -14,6 +14,7 @@ use super::overlap_time;
 use crate::config::{EngineConfig, KvConfig, ModalityConfig, OverlapMode, SchedulerConfig};
 use crate::kv::{recompute_cost, KvExtent, KvParams, KvRunState, SwapCosts, SwapDecision};
 use crate::modality::{Acquire, Attachment, EncoderCache, ModalityParams};
+use crate::obs::{CounterSample, TraceData, TraceEvent};
 use crate::perfmodel::PerfModel;
 use crate::trace::Workload;
 use std::collections::VecDeque;
@@ -312,6 +313,19 @@ pub struct SimResult {
     /// most recent window boundary — sharing that survived the windowed
     /// split.  Always ≤ `hit_tokens`; 0 unless `windows > 1`.
     pub cross_window_hit_tokens: u64,
+    /// True when the run executed more steps than the series cap could
+    /// record — the tail of the run carries no samples.  Never silent:
+    /// `series_dropped` counts the uncaptured steps, and consumers
+    /// (auditor series reconstruction, metrics attribution) downgrade
+    /// explicitly instead of treating the capped series as complete.
+    pub series_truncated: bool,
+    /// Steps executed after the series hit its cap (0 unless
+    /// `series_truncated`).
+    pub series_dropped: u64,
+    /// Recorded observability stream (DESIGN.md §15): lifecycle events +
+    /// per-step counter samples.  `None` when `engine.trace` is off —
+    /// the zero-cost default that keeps untraced runs bit-identical.
+    pub trace: Option<Box<TraceData>>,
     pub series: Vec<StepSample>,
 }
 
@@ -418,6 +432,8 @@ fn retract_one(
     ecache: &mut EncoderCache,
     mm: &mut MmRunState,
     clock: f64,
+    step: u64,
+    trace: &mut Option<Box<TraceData>>,
 ) {
     let a = active.remove(i);
     // Modality teardown: unpin the victim's embeddings (they stay
@@ -472,7 +488,7 @@ fn retract_one(
             };
             let ok = kvst.ledger.try_offload(a.req, ext);
             debug_assert!(ok, "policy approved an offload the ledger rejected");
-            kvst.swapped_out_tokens += extent_tokens;
+            kvst.note_swap_out(extent_tokens, a.req, clock, step, trace);
             swapped = true;
         }
     }
@@ -492,6 +508,9 @@ fn retract_one(
     match a.side {
         Side::Left => *used_left -= a.charge,
         Side::Right => *used_right -= a.charge,
+    }
+    if let Some(tr) = trace.as_mut() {
+        tr.emit(clock, step, TraceEvent::Retract { req: a.req, tokens: extent_tokens, swapped });
     }
     retract_queue.push_back(a.req);
 }
@@ -544,6 +563,11 @@ pub struct RunState {
     /// Invariant auditor (DESIGN.md §11): present in debug builds or when
     /// `engine.audit` is set, `None` (zero-cost) otherwise.
     pub(crate) audit: Option<Box<audit::EngineAuditor>>,
+    /// Observability stream (DESIGN.md §15): `Some` iff `engine.trace`
+    /// is set.  Every emission site is an `if let` that touches no run
+    /// state, so the `None` path is bit-identical to pre-tracing runs.
+    /// Moved into `SimResult::trace` at finalize, before `check_final`.
+    pub(crate) trace: Option<Box<TraceData>>,
 }
 
 impl RunState {
@@ -595,6 +619,9 @@ pub struct SimEngine {
     /// admission, retraction and phase scan — a Vec index beats a
     /// HashMap probe on this hot path.
     by_id: Vec<usize>,
+    /// Replica id stamped on this engine's trace stream (fleet slot;
+    /// 0 for single-replica runs).  Only read when `cfg.trace` is set.
+    trace_replica: u32,
 }
 
 impl SimEngine {
@@ -628,6 +655,7 @@ impl SimEngine {
             ecache: EncoderCache::new(0, 1.0),
             requests,
             by_id,
+            trace_replica: 0,
         };
         e.apply_modality_carve();
         e
@@ -693,6 +721,13 @@ impl SimEngine {
         self.requests.len()
     }
 
+    /// Set the replica id stamped on this engine's trace stream (the
+    /// fleet coordinator tags each replica with its slot so the merged
+    /// Perfetto export gets one track per replica).
+    pub fn set_trace_replica(&mut self, replica: u32) {
+        self.trace_replica = replica;
+    }
+
     /// Admission charge for a request: the from-scratch §5.1 average
     /// `p + d̂/2`, or — for a swapped re-admission resuming at `decoded`
     /// tokens — the restored footprint plus average remaining growth
@@ -715,7 +750,14 @@ impl SimEngine {
     /// to the clock and to `link_stall_time`).  `None` means the
     /// retraction was discarded — the caller re-prefills exactly as
     /// before tiering.
-    fn kv_restore(&self, kvst: &mut KvRunState, clock: &mut f64, req: u32) -> Option<KvExtent> {
+    fn kv_restore(
+        &self,
+        kvst: &mut KvRunState,
+        clock: &mut f64,
+        req: u32,
+        step: u64,
+        trace: &mut Option<Box<TraceData>>,
+    ) -> Option<KvExtent> {
         let ext = kvst.ledger.take(req)?;
         let ready = if ext.ready_at.is_finite() {
             ext.ready_at
@@ -729,7 +771,7 @@ impl SimEngine {
             kvst.link_stall_time += ready - *clock;
             *clock = ready;
         }
-        kvst.swapped_in_tokens += ext.tokens;
+        kvst.note_swap_in(ext.tokens, req, *clock, step, trace);
         Some(ext)
     }
 
@@ -745,7 +787,7 @@ impl SimEngine {
         // A swapped retraction resumes instead of recomputing: wait out
         // any unfinished transfer, then restore the extent.
         let restored = if readmission {
-            self.kv_restore(&mut st.kv, &mut st.clock, req)
+            self.kv_restore(&mut st.kv, &mut st.clock, req, st.step, &mut st.trace)
         } else {
             None
         };
@@ -791,6 +833,7 @@ impl SimEngine {
             None => (hit, 0),
         };
         let was_restored = restored.is_some();
+        let restored_tokens = restored.map_or(0, |e| e.tokens);
         let est = self.admission_charge(idx, restored.map(|e| e.decoded));
         match side {
             Side::Left => st.used_left += est,
@@ -863,6 +906,19 @@ impl SimEngine {
             encode_left,
             att_pins,
         });
+        if let Some(tr) = st.trace.as_mut() {
+            let ev = if readmission {
+                TraceEvent::Readmit { req, restored_tokens }
+            } else {
+                TraceEvent::Admit {
+                    req,
+                    hit_tokens: hit as u64,
+                    new_tokens: (prompt.len() - hit) as u64,
+                    wait: st.clock - st.timings[idx].arrival,
+                }
+            };
+            tr.emit(st.clock, st.step, ev);
+        }
     }
 
     /// Estimated remaining compute/memory work one request contributes to
@@ -927,6 +983,11 @@ impl SimEngine {
             kv: KvRunState::new(&self.kv_params),
             mm: MmRunState::default(),
             audit: audit::EngineAuditor::maybe(&self.cfg),
+            trace: if self.cfg.trace {
+                Some(TraceData::new(self.trace_replica))
+            } else {
+                None
+            },
         }
     }
 
@@ -1027,7 +1088,9 @@ impl SimEngine {
                 // Mirror what the victim's retraction already counted on
                 // its own timeline: the heir's ledger gained an offloaded
                 // extent, so its run counter must follow (audit inv. 5).
-                st.kv.swapped_out_tokens += ext.tokens;
+                // Goes through the lockstep helper so the trace stream
+                // stays reconcilable with the counter it shadows.
+                st.kv.note_swap_out(ext.tokens, id, st.clock, st.step, &mut st.trace);
             }
         }
         st.retract_queue.push_back(id);
@@ -1142,10 +1205,20 @@ impl SimEngine {
     /// accrue to [`SimResult::cross_window_hit_tokens`].  A run that
     /// never calls this (every monolithic path) keeps `windows == 0`,
     /// the cache epoch at 0, and bit-identical behavior.
-    pub fn note_window_fed(&mut self, st: &mut RunState) {
+    pub fn note_window_fed(&mut self, st: &mut RunState, n_requests: usize) {
         st.result.windows += 1;
         if st.result.windows > 1 {
             self.cache.bump_epoch();
+        }
+        if let Some(tr) = st.trace.as_mut() {
+            tr.emit(
+                st.clock,
+                st.step,
+                TraceEvent::WindowFeed {
+                    window: st.result.windows,
+                    n_requests: n_requests as u64,
+                },
+            );
         }
     }
 
@@ -1293,6 +1366,8 @@ impl SimEngine {
                                 &mut self.ecache,
                                 &mut st.mm,
                                 st.clock,
+                                st.step,
+                                &mut st.trace,
                             );
                             st.result.retractions += 1;
                             continue; // re-evaluate with freed memory
@@ -1421,6 +1496,15 @@ impl SimEngine {
                 a.prefill_pos += take;
                 chunk_left -= take;
                 prefill_tokens += take;
+                if take > 0 {
+                    if let Some(tr) = st.trace.as_mut() {
+                        tr.emit(
+                            st.clock,
+                            st.step,
+                            TraceEvent::ChunkPrefill { req: a.req, tokens: take as u64 },
+                        );
+                    }
+                }
             }
         }
 
@@ -1464,6 +1548,13 @@ impl SimEngine {
                         a.encode_left = 0.0;
                         st.mm.waiting -= 1;
                     }
+                    if let Some(tr) = st.trace.as_mut() {
+                        tr.emit(
+                            st.clock,
+                            st.step,
+                            TraceEvent::EncodePass { req: a.req, secs: take, overlapped: true },
+                        );
+                    }
                 }
             }
             st.mm.overlapped += drained;
@@ -1474,6 +1565,18 @@ impl SimEngine {
                     a.encode_left = 0.0;
                     st.mm.waiting -= 1;
                     st.mm.encode_time += enc_dedicated;
+                    let req = a.req;
+                    if let Some(tr) = st.trace.as_mut() {
+                        tr.emit(
+                            st.clock,
+                            st.step,
+                            TraceEvent::EncodePass {
+                                req,
+                                secs: enc_dedicated,
+                                overlapped: false,
+                            },
+                        );
+                    }
                 }
             }
         }
@@ -1539,6 +1642,9 @@ impl SimEngine {
                     st.timings[idx].finish = st.clock;
                     st.finished += 1;
                     st.finish_log.push((a.req, st.clock));
+                    if let Some(tr) = st.trace.as_mut() {
+                        tr.emit(st.clock, st.step, TraceEvent::Finish { req: a.req });
+                    }
                     continue;
                 }
             }
@@ -1580,6 +1686,8 @@ impl SimEngine {
                     &mut self.ecache,
                     &mut st.mm,
                     st.clock,
+                    st.step,
+                    &mut st.trace,
                 );
                 st.result.retractions += 1;
             }
@@ -1594,6 +1702,25 @@ impl SimEngine {
                 prefill_tokens: prefill_tokens as u32,
                 decode_tokens: decode_tokens as u32,
                 kv_used: committed,
+            });
+        } else {
+            // The cap is never silent: flag the truncation and count the
+            // uncaptured steps so downstream consumers (auditor series
+            // reconstruction, metrics attribution) downgrade explicitly
+            // instead of mistaking a capped series for the whole run.
+            st.result.series_truncated = true;
+            st.result.series_dropped += 1;
+        }
+        if let Some(tr) = st.trace.as_mut() {
+            tr.sample(CounterSample {
+                t: st.clock,
+                step: st.step,
+                replica: 0, // stamped by the stream
+                kv_used: committed,
+                t_comp,
+                t_mem,
+                link_backlog: (st.kv.link.busy_until() - st.clock).max(0.0),
+                encode_overlap: st.mm.overlapped,
             });
         }
 
@@ -1699,6 +1826,10 @@ impl SimEngine {
         st.result.p99_ttft = crate::util::stats::percentile(&ttfts, 99.0);
         st.result.mean_queue_delay = crate::util::stats::mean(&delays);
         st.result.timings = st.timings;
+        // The recorded stream rides the result so the auditor's
+        // event-stream reconciliation (and the exporters downstream) see
+        // it — moved *before* `check_final` on purpose.
+        st.result.trace = st.trace.take();
         // Invariant 10 (DESIGN.md §11): the finished result must cohere —
         // every derived metric matches its definition over the raw
         // counters it summarizes.
@@ -2390,11 +2521,11 @@ mod tests {
         let w2: Vec<SimRequest> = (4..8).map(req).collect();
         let mut e = engine(w1);
         let mut st = e.begin();
-        e.note_window_fed(&mut st);
+        e.note_window_fed(&mut st, 4);
         let mut ad = StaticOrder::new((0..4).collect());
         while e.step_once(&mut st, &mut ad) == StepOutcome::Progress {}
         e.feed_requests(&mut st, w2);
-        e.note_window_fed(&mut st);
+        e.note_window_fed(&mut st, 4);
         let mut ad2 = StaticOrder::new((4..8).collect());
         while e.step_once(&mut st, &mut ad2) == StepOutcome::Progress {}
         let r = e.finalize(st);

@@ -37,6 +37,7 @@ pub use ledger::{KvExtent, KvLedger};
 pub use policy::{recompute_cost, SwapCosts, SwapDecision, SwapPolicy};
 
 use crate::config::KvConfig;
+use crate::obs::{TraceData, TraceEvent};
 use crate::perfmodel::PerfModel;
 
 /// The PCIe link as a single-server FIFO queue over simulated time.
@@ -183,6 +184,40 @@ impl KvRunState {
             link_stall_time: 0.0,
         }
     }
+
+    /// Account an HBM → host extent move *and* trace it in one call.
+    /// Counter and event cannot drift apart: the auditor's
+    /// reconciliation (Σ `SwapOut` tokens == `swapped_out_tokens`)
+    /// holds by construction because this is the only bump site.
+    pub fn note_swap_out(
+        &mut self,
+        tokens: u64,
+        req: u32,
+        clock: f64,
+        step: u64,
+        trace: &mut Option<Box<TraceData>>,
+    ) {
+        self.swapped_out_tokens += tokens;
+        if let Some(tr) = trace.as_mut() {
+            tr.emit(clock, step, TraceEvent::SwapOut { req, tokens });
+        }
+    }
+
+    /// Account a host → HBM extent restore and trace it — the
+    /// `swapped_in_tokens` dual of [`Self::note_swap_out`].
+    pub fn note_swap_in(
+        &mut self,
+        tokens: u64,
+        req: u32,
+        clock: f64,
+        step: u64,
+        trace: &mut Option<Box<TraceData>>,
+    ) {
+        self.swapped_in_tokens += tokens;
+        if let Some(tr) = trace.as_mut() {
+            tr.emit(clock, step, TraceEvent::SwapIn { req, tokens });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +277,29 @@ mod tests {
 
         // Disabled config stays disabled on capable hardware.
         assert!(!KvParams::resolve(&KvConfig::default(), &pm).enabled);
+    }
+
+    #[test]
+    fn note_swap_bumps_counter_and_emits_in_lockstep() {
+        let mut st = KvRunState::new(&KvParams::disabled());
+        // Without a recorder: counters move, nothing else.
+        let mut trace: Option<Box<TraceData>> = None;
+        st.note_swap_out(100, 7, 1.5, 3, &mut trace);
+        assert_eq!(st.swapped_out_tokens, 100);
+        assert!(trace.is_none());
+        // With a recorder: the event carries the same token count the
+        // counter gained — reconciliation by construction.
+        let mut trace = Some(TraceData::new(2));
+        st.note_swap_out(50, 8, 2.0, 4, &mut trace);
+        st.note_swap_in(50, 8, 3.0, 5, &mut trace);
+        assert_eq!(st.swapped_out_tokens, 150);
+        assert_eq!(st.swapped_in_tokens, 50);
+        let tr = trace.unwrap();
+        assert_eq!(tr.events.len(), 2);
+        assert_eq!(tr.events[0].ev, TraceEvent::SwapOut { req: 8, tokens: 50 });
+        assert_eq!(tr.events[1].ev, TraceEvent::SwapIn { req: 8, tokens: 50 });
+        assert_eq!(tr.events[1].t, 3.0);
+        assert_eq!(tr.events[1].replica, 2);
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod engine;
 pub mod kv;
 pub mod lint;
 pub mod modality;
+pub mod obs;
 pub mod parallel;
 pub mod perfmodel;
 pub mod planner;

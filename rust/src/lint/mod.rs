@@ -7,7 +7,7 @@
 //! lexer good enough to distinguish strings, chars, lifetimes, nested
 //! block comments, and float-vs-int literals, so rule patterns stored
 //! inside string literals — including this linter's own source — never
-//! flag.  [`rules`] holds the catalog (r1–r5) and suppression handling.
+//! flag.  [`rules`] holds the catalog (r1–r6) and suppression handling.
 //!
 //! Entry points: `blendserve lint [--root DIR]` (exits non-zero on any
 //! diagnostic) and the `lint_gate` integration test that runs the same
@@ -20,9 +20,20 @@ pub use rules::{lint_source, Diagnostic};
 
 use std::path::{Path, PathBuf};
 
+/// Files pooled for the cross-file r6 emission check: every
+/// `TraceEvent` variant must be constructed in at least one of these.
+const R6_EMISSION_SCOPE: [&str; 5] = [
+    "engine/sim.rs",
+    "server/fleet.rs",
+    "server/colocate.rs",
+    "stream/mod.rs",
+    "kv/mod.rs",
+];
+
 /// Lint a set of in-memory files: per-file rules r1–r4 on each, plus the
 /// cross-file r5 when both `engine/sim.rs` and `engine/audit.rs` are
-/// present.  Paths are relative to the source root with forward slashes.
+/// present and the cross-file r6 when `obs/mod.rs` is present.  Paths
+/// are relative to the source root with forward slashes.
 pub fn lint_files(files: &[(String, String)]) -> Vec<Diagnostic> {
     let mut diags = Vec::new();
     let mut sorted: Vec<&(String, String)> = files.iter().collect();
@@ -39,6 +50,19 @@ pub fn lint_files(files: &[(String, String)]) -> Vec<Diagnostic> {
         let r5 = rules::rule_r5(sim_path, &sim, audit_path, &audit);
         let (allow, _) = rules::allows(sim_path, &sim);
         diags.extend(rules::apply_allows(r5, &allow));
+    }
+    if let Some((obs_path, obs_src)) = find("obs/mod.rs") {
+        let obs = lexer::lex(obs_src);
+        let lexed: Vec<(&str, lexer::Lexed)> = R6_EMISSION_SCOPE
+            .iter()
+            .filter_map(|p| find(p))
+            .map(|(rp, src)| (rp.as_str(), lexer::lex(src)))
+            .collect();
+        let emitters: Vec<(&str, &lexer::Lexed)> =
+            lexed.iter().map(|(p, l)| (*p, l)).collect();
+        let r6 = rules::rule_r6(obs_path, &obs, &emitters);
+        let (allow, _) = rules::allows(obs_path, &obs);
+        diags.extend(rules::apply_allows(r6, &allow));
     }
     diags.sort();
     diags
@@ -160,6 +184,41 @@ mod tests {
         // The r3 hit is suppressed structurally? No: a reasonless allow
         // grants nothing, so both the allow error and the r3 hit remain.
         assert_eq!(diag_ids(&hits), vec![("allow".into(), 2), ("r3".into(), 3)]);
+    }
+
+    #[test]
+    fn r6_cross_file_checks_trace_event_emission() {
+        let obs = "pub enum TraceEvent {\n\
+                   Admit { req: u32 },\n\
+                   Ghost { req: u32 },\n\
+                   }\n";
+        // sim.rs emits Admit in production code and Ghost only in a test
+        // module — Ghost must flag.
+        let sim = "fn step(tr: &mut TraceData) {\n\
+                   tr.emit(0.0, 0, TraceEvent::Admit { req: 1 });\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod t {\n\
+                   fn g(tr: &mut TraceData) {\n\
+                   tr.emit(0.0, 0, TraceEvent::Ghost { req: 1 });\n\
+                   }\n\
+                   }\n";
+        let files = vec![
+            ("obs/mod.rs".to_string(), obs.to_string()),
+            ("engine/sim.rs".to_string(), sim.to_string()),
+        ];
+        let hits = lint_files(&files);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "r6");
+        assert_eq!(hits[0].line, 3);
+        assert!(hits[0].msg.contains("Ghost"));
+        // Emitting Ghost from another scope file clears the diagnostic.
+        let kv = "fn swap(tr: &mut TraceData) {\n\
+                  tr.emit(0.0, 0, TraceEvent::Ghost { req: 2 });\n\
+                  }\n";
+        let mut files = files;
+        files.push(("kv/mod.rs".to_string(), kv.to_string()));
+        assert!(lint_files(&files).is_empty(), "{:?}", lint_files(&files));
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! - **r5** — every field of `SimResult` must be referenced in
 //!   `engine/audit.rs`, so new accounting can never silently escape the
 //!   auditor (cross-file, see [`super::lint_files`]).
+//! - **r6** — every `TraceEvent` variant declared in `obs/mod.rs` must
+//!   be constructed (`TraceEvent::X`) outside test code somewhere in the
+//!   emission scope (`engine/sim.rs`, `server/fleet.rs`,
+//!   `server/colocate.rs`, `stream/mod.rs`, `kv/mod.rs`) — dead schema
+//!   the Perfetto tooling advertises but never delivers is a lint error
+//!   (cross-file, see [`super::lint_files`]).
 //!
 //! Suppression: `// lint:allow(<rule>[, <rule>]) -- <reason>` on the
 //! violating line (trailing) or alone on the line above; the reason is
@@ -40,7 +46,7 @@ impl std::fmt::Display for Diagnostic {
 
 /// Modules where map iteration order can reach scheduling decisions,
 /// golden traces, or the resume replay (rule r1's scope).
-const ORDER_SENSITIVE: [&str; 7] = [
+const ORDER_SENSITIVE: [&str; 8] = [
     "engine/",
     "scheduler/",
     "modality/",
@@ -48,6 +54,7 @@ const ORDER_SENSITIVE: [&str; 7] = [
     "server/",
     "recovery/",
     "stream/",
+    "obs/",
 ];
 
 /// Map methods whose visit order is the `RandomState` iteration order.
@@ -64,7 +71,7 @@ const ITER_METHODS: [&str; 10] = [
     "retain",
 ];
 
-const VALID_RULES: [&str; 5] = ["r1", "r2", "r3", "r4", "r5"];
+const VALID_RULES: [&str; 6] = ["r1", "r2", "r3", "r4", "r5", "r6"];
 
 fn is_order_sensitive(relpath: &str) -> bool {
     ORDER_SENSITIVE.iter().any(|m| relpath.starts_with(m))
@@ -539,6 +546,93 @@ pub fn rule_r5(
     out
 }
 
+/// r6 — every `TraceEvent` variant must be constructed (`TraceEvent::X`)
+/// outside test code in at least one emission-scope file.  A variant
+/// nobody emits is dead schema: the Perfetto exporter and summarizer
+/// advertise it, the auditor can never reconcile it, and the docs lie.
+/// Diagnostics anchor at the variant declarations in `obs_path`.
+pub fn rule_r6(
+    obs_path: &str,
+    obs: &Lexed,
+    emitters: &[(&str, &Lexed)],
+) -> Vec<Diagnostic> {
+    let mut emitted: BTreeSet<String> = BTreeSet::new();
+    for (_, lexed) in emitters {
+        let in_test = test_regions(&lexed.tokens);
+        let toks = &lexed.tokens;
+        for i in 0..toks.len() {
+            if toks[i].kind == TokKind::Ident
+                && toks[i].text == "TraceEvent"
+                && !in_test[i]
+                && toks.get(i + 1).is_some_and(|t| t.text == "::")
+                && toks.get(i + 2).is_some_and(|t| t.kind == TokKind::Ident)
+            {
+                emitted.insert(toks[i + 2].text.clone());
+            }
+        }
+    }
+    let scope: Vec<&str> = emitters.iter().map(|(p, _)| *p).collect();
+    let mut out = Vec::new();
+    for (variant, line) in enum_variants(&obs.tokens, "TraceEvent") {
+        if !emitted.contains(&variant) {
+            out.push(Diagnostic {
+                file: obs_path.to_string(),
+                line,
+                rule: "r6".into(),
+                msg: format!(
+                    "`TraceEvent::{variant}` is never emitted in the emission \
+                     scope ({}) — wire the event into its engine/coordinator \
+                     code path or drop the variant",
+                    scope.join(", ")
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `(variant, line)` pairs of `enum <name> { … }` at body depth 1.
+fn enum_variants(toks: &[Token], name: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].text == "enum" && toks[i + 1].text == name && toks[i + 2].text == "{" {
+            let mut depth = 1;
+            let mut j = i + 3;
+            // A variant ident is expected at the body's start and after
+            // each depth-1 comma; payload braces/parens reset the flag so
+            // field names never register as variants.
+            let mut expect_variant = true;
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "{" | "(" | "[" | "<" => {
+                        depth += 1;
+                        expect_variant = false;
+                    }
+                    "}" | ")" | "]" | ">" => depth -= 1,
+                    // `Vec<Vec<f64>>` lexes its closer as one `>>` token.
+                    ">>" => depth -= 2,
+                    "," => {
+                        if depth == 1 {
+                            expect_variant = true;
+                        }
+                    }
+                    _ => {
+                        if depth == 1 && expect_variant && toks[j].kind == TokKind::Ident {
+                            out.push((toks[j].text.clone(), toks[j].line));
+                            expect_variant = false;
+                        }
+                    }
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
 /// `(field, line)` pairs of `struct <name> { … }` at body depth 1.
 fn struct_fields(toks: &[Token], name: &str) -> Vec<(String, u32)> {
     let mut out = Vec::new();
@@ -609,7 +703,7 @@ pub fn allows(
             if VALID_RULES.contains(&r) {
                 rules.insert(r.to_string());
             } else {
-                bad.push(diag(c.line, format!("unknown rule `{r}` in lint:allow (valid: r1..r5)")));
+                bad.push(diag(c.line, format!("unknown rule `{r}` in lint:allow (valid: r1..r6)")));
                 ok = false;
             }
         }

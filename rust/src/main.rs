@@ -44,20 +44,23 @@ fn usage() -> ! {
 
 USAGE:
   blendserve synth    --trace <sharegpt|wildchat|azure|burstgpt> --density F --sharing F --n N --out FILE
-  blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE]
+  blendserve simulate --pool FILE [--system NAME] [--dp N] [--model NAME] [--out FILE] [--trace FILE]
   blendserve fleet    --pool FILE [--dp N] [--no-steal] [--steal-ratio F] [--gpus N,N,..]
-                      [--hardware NAME,NAME,..] [--model NAME] [--out FILE]
+                      [--hardware NAME,NAME,..] [--model NAME] [--out FILE] [--trace FILE]
                       [--faults] [--mtbf F] [--fault-seed N] [--strategy recover|restart]
                       [--journal FILE] [--resume FILE]
   blendserve colocate --pool FILE [--online-rate F] [--slo-scale F] [--policy elastic|best-effort]
                       [--n-online N] [--online-trace NAME] [--reserve F] [--burst F] [--model NAME]
+                      [--trace FILE]
   blendserve kv       --pool FILE [--memory-gb F] [--margins F,F,..] [--host-gb F] [--no-prefetch]
                       [--model NAME] [--out FILE]
   blendserve modality [--pool FILE] [--n N] [--dup F] [--encoder-params F] [--cache-frac F]
                       [--model NAME] [--out FILE]
   blendserve plan     --pool FILE [--systems NAME,NAME,..] [--model NAME] [--out FILE]
   blendserve stream   --pool FILE [--window-requests N] [--window-tokens N] [--model NAME] [--out FILE]
+                      [--trace FILE]
   blendserve serve    --pool FILE [--artifacts DIR] [--order blend|dfs|fcfs]
+  blendserve trace    --in FILE [--top N]   (summarize a --trace Perfetto export)
   blendserve lint     [--root DIR]   (default rust/src; exits 1 on violations)
   blendserve config   [--preset MODEL]
 
@@ -86,6 +89,19 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
         }
     }
     m
+}
+
+/// Export recorded trace streams as one Perfetto-loadable JSON file
+/// (DESIGN.md §15).  Shared by every `--trace FILE` flag.
+fn write_trace(
+    path: &str,
+    streams: &[&blendserve::obs::TraceData],
+    label: &str,
+) -> anyhow::Result<()> {
+    let doc = blendserve::obs::perfetto::export(streams, label);
+    std::fs::write(path, format!("{doc}\n"))?;
+    println!("trace -> {path} ({} streams; load in ui.perfetto.dev)", streams.len());
+    Ok(())
 }
 
 fn system_by_name(name: &str) -> Option<SystemConfig> {
@@ -140,6 +156,9 @@ fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(dp) = flags.get("dp") {
         cfg.dp_replicas = dp.parse()?;
     }
+    if flags.contains_key("trace") {
+        cfg.engine.trace = true;
+    }
     println!(
         "simulating {} requests on {} ({} x{} + DP={})",
         w.len(),
@@ -159,6 +178,14 @@ fn cmd_simulate(flags: HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(out) = flags.get("out") {
         save_results(&job.per_replica, Path::new(out))?;
         println!("results -> {out}");
+    }
+    if let Some(tp) = flags.get("trace") {
+        let streams: Vec<&blendserve::obs::TraceData> = job
+            .per_replica
+            .iter()
+            .filter_map(|o| o.result.trace.as_deref())
+            .collect();
+        write_trace(tp, &streams, "simulate")?;
     }
     Ok(())
 }
@@ -228,6 +255,9 @@ fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
         cfg.faults.strategy = blendserve::config::RecoveryStrategy::from_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown recovery strategy '{name}'"))?;
     }
+    if flags.contains_key("trace") {
+        cfg.engine.trace = true;
+    }
     let opts = FleetFtOptions {
         journal_path: flags.get("journal").map(PathBuf::from),
         resume_path: flags.get("resume").map(PathBuf::from),
@@ -295,6 +325,15 @@ fn cmd_fleet(flags: HashMap<String, String>) -> anyhow::Result<()> {
         std::fs::write(out, format!("{}\n", rep.to_json()))?;
         println!("report -> {out}");
     }
+    if let Some(tp) = flags.get("trace") {
+        let mut streams: Vec<&blendserve::obs::TraceData> = rep
+            .per_replica
+            .iter()
+            .filter_map(|r| r.trace.as_deref())
+            .collect();
+        streams.extend(rep.coord_trace.as_deref());
+        write_trace(tp, &streams, "fleet")?;
+    }
     Ok(())
 }
 
@@ -352,6 +391,9 @@ fn cmd_colocate(flags: HashMap<String, String>) -> anyhow::Result<()> {
         "burstgpt" => TraceKind::BurstGpt,
         other => anyhow::bail!("unknown online trace '{other}'"),
     };
+    if flags.contains_key("trace") {
+        cfg.engine.trace = true;
+    }
     let online = online_stream(&cfg, trace, n_online, 7);
     println!(
         "colocating {} offline + {} online requests ({} policy, {:.1} req/s, SLO x{:.1}) on {}",
@@ -374,6 +416,11 @@ fn cmd_colocate(flags: HashMap<String, String>) -> anyhow::Result<()> {
         rep.mean_queue_delay * 1e3,
         rep.result.retractions,
     );
+    if let Some(tp) = flags.get("trace") {
+        let streams: Vec<&blendserve::obs::TraceData> =
+            rep.result.trace.as_deref().into_iter().collect();
+        write_trace(tp, &streams, "colocate")?;
+    }
     Ok(())
 }
 
@@ -728,6 +775,9 @@ fn cmd_stream(flags: HashMap<String, String>) -> anyhow::Result<()> {
     cfg.stream
         .validate()
         .map_err(|e| anyhow::anyhow!("stream config: {e}"))?;
+    if flags.contains_key("trace") {
+        cfg.engine.trace = true;
+    }
     println!(
         "streaming {} on {} (window: {} requests / {} tokens; 0 = unbounded)",
         pool.display(),
@@ -773,6 +823,54 @@ fn cmd_stream(flags: HashMap<String, String>) -> anyhow::Result<()> {
         ]);
         std::fs::write(out, format!("{doc}\n"))?;
         println!("report -> {out}");
+    }
+    if let Some(tp) = flags.get("trace") {
+        let streams: Vec<&blendserve::obs::TraceData> =
+            rep.result.trace.as_deref().into_iter().collect();
+        write_trace(tp, &streams, "stream")?;
+    }
+    Ok(())
+}
+
+/// `blendserve trace`: parse a `--trace FILE` Perfetto export and print
+/// the triage summary — event counts plus the top-k requests by
+/// recompute waste, queue delay, and swap traffic (DESIGN.md §15).
+fn cmd_trace(flags: HashMap<String, String>) -> anyhow::Result<()> {
+    use blendserve::obs::perfetto::summarize;
+    use blendserve::util::Json;
+
+    let path = flags.get("in").map(PathBuf::from).unwrap_or_else(|| usage());
+    let k: usize = flags.get("top").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    anyhow::ensure!(k > 0, "--top must be >= 1");
+    let text = std::fs::read_to_string(&path)?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let s = summarize(&doc, k)?;
+    let total: u64 = s.counts.iter().map(|(_, c)| c).sum();
+    println!("{}: {total} lifecycle events", path.display());
+    if s.dropped > 0 {
+        println!("  WARNING: {} records dropped at the recorder cap", s.dropped);
+    }
+    for (name, count) in &s.counts {
+        println!("  {name:<14} {count:>10}");
+    }
+    if !s.top_recompute.is_empty() {
+        println!("top {} by recompute waste (discarded tokens):", s.top_recompute.len());
+        for (req, tok) in &s.top_recompute {
+            println!("  req {req:<8} {tok:>10} tok");
+        }
+    }
+    if !s.top_wait.is_empty() {
+        println!("top {} by queue delay:", s.top_wait.len());
+        for (req, w) in &s.top_wait {
+            println!("  req {req:<8} {:>9.3} s", w);
+        }
+    }
+    if !s.top_swap.is_empty() {
+        println!("top {} by swap traffic:", s.top_swap.len());
+        for (req, tok) in &s.top_swap {
+            println!("  req {req:<8} {tok:>10} tok");
+        }
     }
     Ok(())
 }
@@ -852,6 +950,7 @@ fn main() -> anyhow::Result<()> {
         "plan" => cmd_plan(flags),
         "stream" => cmd_stream(flags),
         "serve" => cmd_serve(flags),
+        "trace" => cmd_trace(flags),
         "lint" => cmd_lint(flags),
         "config" => cmd_config(flags),
         _ => usage(),

@@ -1,0 +1,306 @@
+//! Metrics registry: the explanatory timelines a raw `SimResult` can't
+//! answer (DESIGN.md §15).
+//!
+//! [`metrics_report`] derives a [`MetricsReport`] from one finished
+//! run: roofline attribution of the makespan (what fraction of
+//! simulated time the blended step was compute-bound vs memory-bound,
+//! plus the link-stall share — the paper's Fig. 2 argument as a
+//! measurement), sharing-achieved-over-time, and retraction/readmit
+//! churn windows.  The attribution comes from the recorded step series;
+//! the timelines come from the trace stream when one was recorded
+//! (empty otherwise — the report degrades, it never guesses).
+//!
+//! Everything here is a pure fold over already-deterministic data, so
+//! the report (and its JSON form, persisted by `save_results`) is as
+//! bit-stable as the run it describes.
+
+use super::TraceEvent;
+use crate::engine::sim::SimResult;
+use crate::util::Json;
+
+/// One point of the sharing-achieved timeline: cumulative prompt-cache
+/// performance as of simulated time `t` (an admission instant).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SharingPoint {
+    pub t: f64,
+    /// Prompt tokens served from the radix cache so far.
+    pub cum_hit_tokens: u64,
+    /// Prompt tokens admitted so far (hit + prefilled).
+    pub cum_prompt_tokens: u64,
+}
+
+/// One churn bucket: retraction/readmission activity inside
+/// `[t0, t1)`.  Only non-quiet buckets are reported.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnWindow {
+    pub t0: f64,
+    pub t1: f64,
+    pub retractions: u64,
+    pub readmits: u64,
+    /// Swap traffic (out + in tokens) inside the bucket.
+    pub swap_tokens: u64,
+}
+
+/// The registry: per-run explanatory metrics, persisted alongside the
+/// raw counters by `save_results` and consumed by `paper-figures`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsReport {
+    /// Simulated seconds of stepped time whose blended step was
+    /// compute-bound (`t_comp >= t_mem`).
+    pub comp_bound_time: f64,
+    /// Simulated seconds of stepped time that were memory-bound.
+    pub mem_bound_time: f64,
+    /// Seconds the engine stalled waiting on unfinished swap-ins.
+    pub link_stall_time: f64,
+    /// The three attributions as fractions of the makespan.
+    pub comp_bound_frac: f64,
+    pub mem_bound_frac: f64,
+    pub link_stall_frac: f64,
+    /// True when every executed step contributed a sample — i.e. the
+    /// series was neither capped nor thinned by idle-skips, so the
+    /// attribution covers the whole makespan exactly.
+    pub attribution_exact: bool,
+    /// Sharing-achieved over time (admission instants; ≤ [`MAX_POINTS`]
+    /// points, evenly thinned).  Empty without a recorded trace.
+    pub sharing_timeline: Vec<SharingPoint>,
+    /// Non-quiet retraction/readmit buckets over the makespan.  Empty
+    /// without a recorded trace.
+    pub churn_windows: Vec<ChurnWindow>,
+}
+
+/// Cap on reported timeline points; thinning is even and deterministic.
+pub const MAX_POINTS: usize = 128;
+
+/// Churn buckets across the makespan.
+pub const CHURN_BUCKETS: usize = 24;
+
+/// Thin `points` to at most [`MAX_POINTS`] by even stride, always
+/// keeping the final point (the run's closing state).
+fn thin<T: Clone>(points: Vec<T>) -> Vec<T> {
+    if points.len() <= MAX_POINTS {
+        return points;
+    }
+    let stride = points.len().div_ceil(MAX_POINTS);
+    let last = points.len() - 1;
+    points
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % stride == 0 || *i == last)
+        .map(|(_, p)| p.clone())
+        .collect()
+}
+
+/// Build the metrics registry for one finished run.
+pub fn metrics_report(res: &SimResult) -> MetricsReport {
+    let mut comp = 0.0;
+    let mut mem = 0.0;
+    for s in &res.series {
+        if s.t_comp >= s.t_mem {
+            comp += s.step_time;
+        } else {
+            mem += s.step_time;
+        }
+    }
+    let total = res.total_time.max(f64::MIN_POSITIVE);
+    let mut report = MetricsReport {
+        comp_bound_time: comp,
+        mem_bound_time: mem,
+        link_stall_time: res.link_stall_time,
+        comp_bound_frac: comp / total,
+        mem_bound_frac: mem / total,
+        link_stall_frac: res.link_stall_time / total,
+        attribution_exact: !res.series_truncated && res.series.len() as u64 == res.steps,
+        sharing_timeline: Vec::new(),
+        churn_windows: Vec::new(),
+    };
+    let Some(tr) = res.trace.as_ref() else {
+        return report;
+    };
+
+    // Sharing over time: fold the admission stream.
+    let mut cum_hit = 0u64;
+    let mut cum_prompt = 0u64;
+    let mut timeline = Vec::new();
+    for r in &tr.events {
+        if let TraceEvent::Admit { hit_tokens, new_tokens, .. } = r.ev {
+            cum_hit += hit_tokens;
+            cum_prompt += hit_tokens + new_tokens;
+            timeline.push(SharingPoint {
+                t: r.t,
+                cum_hit_tokens: cum_hit,
+                cum_prompt_tokens: cum_prompt,
+            });
+        }
+    }
+    report.sharing_timeline = thin(timeline);
+
+    // Churn windows: bucket the retraction/readmit stream.
+    let width = res.total_time / CHURN_BUCKETS as f64;
+    if width > 0.0 {
+        let mut buckets = vec![(0u64, 0u64, 0u64); CHURN_BUCKETS];
+        for r in &tr.events {
+            let b = ((r.t / width) as usize).min(CHURN_BUCKETS - 1);
+            match r.ev {
+                TraceEvent::Retract { .. } => buckets[b].0 += 1,
+                TraceEvent::Readmit { .. } => buckets[b].1 += 1,
+                TraceEvent::SwapOut { tokens, .. } | TraceEvent::SwapIn { tokens, .. } => {
+                    buckets[b].2 += tokens
+                }
+                _ => {}
+            }
+        }
+        report.churn_windows = buckets
+            .into_iter()
+            .enumerate()
+            .filter(|(_, (r, a, s))| *r + *a + *s > 0)
+            .map(|(i, (retractions, readmits, swap_tokens))| ChurnWindow {
+                t0: i as f64 * width,
+                t1: (i + 1) as f64 * width,
+                retractions,
+                readmits,
+                swap_tokens,
+            })
+            .collect();
+    }
+    report
+}
+
+impl MetricsReport {
+    /// Deterministic JSON form — embedded per replica by
+    /// `save_results`.
+    pub fn to_json(&self) -> Json {
+        let timeline: Vec<Json> = self
+            .sharing_timeline
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("t_s", Json::Num(p.t)),
+                    ("cum_hit_tokens", Json::from(p.cum_hit_tokens as usize)),
+                    ("cum_prompt_tokens", Json::from(p.cum_prompt_tokens as usize)),
+                ])
+            })
+            .collect();
+        let churn: Vec<Json> = self
+            .churn_windows
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("t0_s", Json::Num(w.t0)),
+                    ("t1_s", Json::Num(w.t1)),
+                    ("retractions", Json::from(w.retractions as usize)),
+                    ("readmits", Json::from(w.readmits as usize)),
+                    ("swap_tokens", Json::from(w.swap_tokens as usize)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("comp_bound_time_s", Json::Num(self.comp_bound_time)),
+            ("mem_bound_time_s", Json::Num(self.mem_bound_time)),
+            ("link_stall_time_s", Json::Num(self.link_stall_time)),
+            ("comp_bound_frac", Json::Num(self.comp_bound_frac)),
+            ("mem_bound_frac", Json::Num(self.mem_bound_frac)),
+            ("link_stall_frac", Json::Num(self.link_stall_frac)),
+            ("attribution_exact", Json::from(self.attribution_exact)),
+            ("sharing_timeline", Json::Arr(timeline)),
+            ("churn_windows", Json::Arr(churn)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sim::{SimResult, StepSample};
+    use crate::obs::TraceData;
+
+    fn base_result() -> SimResult {
+        SimResult {
+            total_time: 10.0,
+            steps: 2,
+            link_stall_time: 1.0,
+            series: vec![
+                StepSample {
+                    step: 0,
+                    step_time: 6.0,
+                    t_comp: 3.0,
+                    t_mem: 2.0,
+                    prefill_tokens: 8,
+                    decode_tokens: 0,
+                    kv_used: 8.0,
+                },
+                StepSample {
+                    step: 1,
+                    step_time: 4.0,
+                    t_comp: 1.0,
+                    t_mem: 2.0,
+                    prefill_tokens: 0,
+                    decode_tokens: 4,
+                    kv_used: 12.0,
+                },
+            ],
+            ..SimResult::default()
+        }
+    }
+
+    #[test]
+    fn roofline_attribution_weights_by_step_time() {
+        let m = metrics_report(&base_result());
+        assert_eq!(m.comp_bound_time, 6.0);
+        assert_eq!(m.mem_bound_time, 4.0);
+        assert_eq!(m.comp_bound_frac, 0.6);
+        assert_eq!(m.mem_bound_frac, 0.4);
+        assert_eq!(m.link_stall_frac, 0.1);
+        assert!(m.attribution_exact);
+        assert!(m.sharing_timeline.is_empty(), "no trace, no timeline");
+        assert!(m.churn_windows.is_empty());
+    }
+
+    #[test]
+    fn truncated_or_thinned_series_is_flagged_inexact() {
+        let mut res = base_result();
+        res.series_truncated = true;
+        assert!(!metrics_report(&res).attribution_exact);
+        let mut res = base_result();
+        res.steps = 5; // idle-skipped steps carry no sample
+        assert!(!metrics_report(&res).attribution_exact);
+    }
+
+    #[test]
+    fn trace_drives_sharing_timeline_and_churn_windows() {
+        let mut res = base_result();
+        let mut tr = TraceData::new(0);
+        tr.emit(0.0, 0, TraceEvent::Admit { req: 1, hit_tokens: 0, new_tokens: 10, wait: 0.0 });
+        tr.emit(1.0, 1, TraceEvent::Admit { req: 2, hit_tokens: 6, new_tokens: 4, wait: 0.5 });
+        tr.emit(2.0, 2, TraceEvent::Retract { req: 1, tokens: 12, swapped: true });
+        tr.emit(2.0, 2, TraceEvent::SwapOut { req: 1, tokens: 12 });
+        tr.emit(9.9, 4, TraceEvent::Readmit { req: 1, restored_tokens: 12 });
+        tr.emit(9.9, 4, TraceEvent::SwapIn { req: 1, tokens: 12 });
+        res.trace = Some(tr);
+        let m = metrics_report(&res);
+        assert_eq!(m.sharing_timeline.len(), 2);
+        assert_eq!(m.sharing_timeline[1].cum_hit_tokens, 6);
+        assert_eq!(m.sharing_timeline[1].cum_prompt_tokens, 20);
+        // Two active buckets: the retract/swap-out one and the final
+        // readmit/swap-in one.
+        assert_eq!(m.churn_windows.len(), 2);
+        assert_eq!(m.churn_windows[0].retractions, 1);
+        assert_eq!(m.churn_windows[0].swap_tokens, 12);
+        let last = m.churn_windows.last().unwrap();
+        assert_eq!(last.readmits, 1);
+        assert_eq!(last.swap_tokens, 12);
+        assert_eq!(last.t1, 10.0);
+        // JSON form is deterministic and carries the headline numbers.
+        let a = m.to_json().to_string();
+        assert_eq!(a, metrics_report(&res).to_json().to_string());
+        assert!(a.contains("\"comp_bound_frac\":0.6"), "{a}");
+    }
+
+    #[test]
+    fn timeline_thinning_keeps_ends_and_bound() {
+        let pts: Vec<usize> = (0..1000).collect();
+        let t = thin(pts);
+        assert!(t.len() <= MAX_POINTS);
+        assert_eq!(*t.first().unwrap(), 0);
+        assert_eq!(*t.last().unwrap(), 999);
+    }
+}

@@ -1,0 +1,354 @@
+//! Deterministic observability layer (DESIGN.md §15): typed
+//! request-lifecycle events and per-step counter samples recorded in
+//! *simulated* time.
+//!
+//! The whole layer is a passive observer behind a zero-cost-when-off
+//! handle: the engine carries an `Option<Box<TraceData>>` and every
+//! emission site is an `if let Some(..)` that never touches the clock,
+//! the RNG-free schedule state, or any counter the run already keeps —
+//! so trace-disabled runs are bit-identical to pre-tracing behavior, and
+//! trace-enabled runs are bit-identical to *each other* (pinned by
+//! `tests/trace_determinism.rs`).  Events are stamped with the simulated
+//! clock, the engine step index, and a replica id; there is no wall time
+//! anywhere in this module (lint r2-clean by construction).
+//!
+//! Truthfulness: the trace is not parallel bookkeeping that can drift.
+//! The swap counters are bumped *through* the same call that emits the
+//! swap event ([`crate::kv::KvRunState::note_swap_out`]/`note_swap_in`),
+//! and `EngineAuditor::check_final` replays the recorded stream against
+//! the final `SimResult` — every `Finish` exactly once, Σ swap-event
+//! tokens == the swap counters, retraction/window counts equal — so a
+//! trace that disagrees with the result is a test failure, not a
+//! footnote.
+//!
+//! Capacity: recording is bounded by [`EVENT_CAP`] per stream.  The cap
+//! is never silent — beyond-cap records increment `dropped`, the auditor
+//! skips (and logs) reconciliation for incomplete streams, and the
+//! exporter stamps the drop count into the trace metadata.
+
+pub mod metrics;
+pub mod perfetto;
+
+pub use metrics::{metrics_report, ChurnWindow, MetricsReport, SharingPoint};
+
+use crate::util::Json;
+
+/// Typed request-lifecycle event.  Payloads are simulated-time
+/// quantities only (token counts, simulated seconds); the stamp lives on
+/// the enclosing [`TraceRecord`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// First admission of a request into the running batch.  `wait` is
+    /// the simulated queue delay (admit clock − arrival); `hit_tokens`
+    /// of the prompt came from the radix cache, `new_tokens` must be
+    /// prefilled.
+    Admit { req: u32, hit_tokens: u64, new_tokens: u64, wait: f64 },
+    /// Re-admission of a previously retracted request.
+    /// `restored_tokens` is the KV extent a swap restore brought back
+    /// (0 on the discard-and-recompute path).
+    Readmit { req: u32, restored_tokens: u64 },
+    /// Prefill chunk scheduled for one request in one engine step.
+    ChunkPrefill { req: u32, tokens: u64 },
+    /// Encoder work drained for one request's attachments this step;
+    /// `overlapped` says whether it hid under the decode bubble or ran
+    /// on dedicated (serialized) encoder time.
+    EncodePass { req: u32, secs: f64, overlapped: bool },
+    /// A running request was evicted from the batch under KV pressure
+    /// or SLO urgency; `tokens` is the KV extent it held, `swapped`
+    /// whether that extent went to host (else it is discarded and
+    /// recomputed at re-admission).
+    Retract { req: u32, tokens: u64, swapped: bool },
+    /// KV extent moved HBM → host across the link.
+    SwapOut { req: u32, tokens: u64 },
+    /// KV extent restored host → HBM across the link.
+    SwapIn { req: u32, tokens: u64 },
+    /// Fleet coordinator moved `n_requests` queued requests from
+    /// replica `victim` to replica `thief`.
+    Steal { victim: u32, thief: u32, n_requests: u64 },
+    /// Fault injection killed a fleet replica.
+    ReplicaDeath { replica: u32 },
+    /// A previously dead replica rejoined the fleet.
+    Rejoin { replica: u32 },
+    /// A streaming-ingest window was fed into the persistent engine.
+    WindowFeed { window: u64, n_requests: u64 },
+    /// A request produced its last token.
+    Finish { req: u32 },
+}
+
+impl TraceEvent {
+    /// Stable variant name — the Perfetto event name and the key the
+    /// summarizer aggregates on.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Admit { .. } => "Admit",
+            TraceEvent::Readmit { .. } => "Readmit",
+            TraceEvent::ChunkPrefill { .. } => "ChunkPrefill",
+            TraceEvent::EncodePass { .. } => "EncodePass",
+            TraceEvent::Retract { .. } => "Retract",
+            TraceEvent::SwapOut { .. } => "SwapOut",
+            TraceEvent::SwapIn { .. } => "SwapIn",
+            TraceEvent::Steal { .. } => "Steal",
+            TraceEvent::ReplicaDeath { .. } => "ReplicaDeath",
+            TraceEvent::Rejoin { .. } => "Rejoin",
+            TraceEvent::WindowFeed { .. } => "WindowFeed",
+            TraceEvent::Finish { .. } => "Finish",
+        }
+    }
+
+    /// The request id the event is about, when it is about one (fleet
+    /// coordinator and window events are not).  Drives the per-request
+    /// flow arrows in the Perfetto export.
+    pub fn req(&self) -> Option<u32> {
+        match *self {
+            TraceEvent::Admit { req, .. }
+            | TraceEvent::Readmit { req, .. }
+            | TraceEvent::ChunkPrefill { req, .. }
+            | TraceEvent::EncodePass { req, .. }
+            | TraceEvent::Retract { req, .. }
+            | TraceEvent::SwapOut { req, .. }
+            | TraceEvent::SwapIn { req, .. }
+            | TraceEvent::Finish { req } => Some(req),
+            TraceEvent::Steal { .. }
+            | TraceEvent::ReplicaDeath { .. }
+            | TraceEvent::Rejoin { .. }
+            | TraceEvent::WindowFeed { .. } => None,
+        }
+    }
+
+    /// Payload as a deterministic JSON object (sorted keys via
+    /// [`Json::obj`]) — the `args` of the exported Perfetto event.
+    pub fn args(&self) -> Json {
+        match *self {
+            TraceEvent::Admit { req, hit_tokens, new_tokens, wait } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("hit_tokens", Json::from(hit_tokens as usize)),
+                ("new_tokens", Json::from(new_tokens as usize)),
+                ("wait_s", Json::Num(wait)),
+            ]),
+            TraceEvent::Readmit { req, restored_tokens } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("restored_tokens", Json::from(restored_tokens as usize)),
+            ]),
+            TraceEvent::ChunkPrefill { req, tokens } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("tokens", Json::from(tokens as usize)),
+            ]),
+            TraceEvent::EncodePass { req, secs, overlapped } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("secs", Json::Num(secs)),
+                ("overlapped", Json::from(overlapped)),
+            ]),
+            TraceEvent::Retract { req, tokens, swapped } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("tokens", Json::from(tokens as usize)),
+                ("swapped", Json::from(swapped)),
+            ]),
+            TraceEvent::SwapOut { req, tokens } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("tokens", Json::from(tokens as usize)),
+            ]),
+            TraceEvent::SwapIn { req, tokens } => Json::obj(vec![
+                ("req", Json::from(req as usize)),
+                ("tokens", Json::from(tokens as usize)),
+            ]),
+            TraceEvent::Steal { victim, thief, n_requests } => Json::obj(vec![
+                ("victim", Json::from(victim as usize)),
+                ("thief", Json::from(thief as usize)),
+                ("n_requests", Json::from(n_requests as usize)),
+            ]),
+            TraceEvent::ReplicaDeath { replica } => {
+                Json::obj(vec![("replica", Json::from(replica as usize))])
+            }
+            TraceEvent::Rejoin { replica } => {
+                Json::obj(vec![("replica", Json::from(replica as usize))])
+            }
+            TraceEvent::WindowFeed { window, n_requests } => Json::obj(vec![
+                ("window", Json::from(window as usize)),
+                ("n_requests", Json::from(n_requests as usize)),
+            ]),
+            TraceEvent::Finish { req } => {
+                Json::obj(vec![("req", Json::from(req as usize))])
+            }
+        }
+    }
+}
+
+/// One recorded lifecycle event, stamped with the simulated clock, the
+/// engine step index it happened in, and the recording replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Simulated clock, seconds.
+    pub t: f64,
+    /// Engine step index at emission (coordinator events use the global
+    /// fleet event ordinal instead).
+    pub step: u64,
+    /// Recording replica (fleet slot; 0 for single-replica runs, the
+    /// coordinator track uses the dp count).
+    pub replica: u32,
+    pub ev: TraceEvent,
+}
+
+/// Per-step counter sample — the Perfetto counter tracks (kv_used,
+/// live ρ, link backlog, encoder overlap).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSample {
+    pub t: f64,
+    pub step: u64,
+    pub replica: u32,
+    /// Committed KV tokens resident after the step.
+    pub kv_used: f64,
+    /// Compute service demand of the step, seconds.  Live ρ of the
+    /// current wave is `t_comp / t_mem`.
+    pub t_comp: f64,
+    /// Memory service demand of the step, seconds.
+    pub t_mem: f64,
+    /// Host-link backlog at the step boundary: `busy_until − clock`,
+    /// clamped at 0 (seconds of queued transfer not yet drained).
+    pub link_backlog: f64,
+    /// Cumulative encoder seconds hidden under decode so far.
+    pub encode_overlap: f64,
+}
+
+/// Hard cap on records per stream (events and counter samples each).
+/// Never silent: beyond-cap records are counted in
+/// [`TraceData::dropped`], reconciliation skips incomplete streams with
+/// a log line, and the exporter stamps the drop count into metadata.
+pub const EVENT_CAP: usize = 1_000_000;
+
+/// One replica's recorded stream.  Owned by the engine's `RunState`
+/// while running, moved into `SimResult::trace` at finalize (before the
+/// auditor's `check_final` so reconciliation sees it).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceData {
+    /// Replica id stamped on every record this stream emits.
+    pub replica: u32,
+    pub events: Vec<TraceRecord>,
+    pub counters: Vec<CounterSample>,
+    /// Records not stored because a stream hit [`EVENT_CAP`].
+    pub dropped: u64,
+}
+
+impl TraceData {
+    /// Boxed so the engine's off-path cost is one `Option` check, not a
+    /// fat struct in `RunState`.
+    pub fn new(replica: u32) -> Box<TraceData> {
+        Box::new(TraceData { replica, ..TraceData::default() })
+    }
+
+    /// Record one lifecycle event at simulated time `t`, step `step`.
+    pub fn emit(&mut self, t: f64, step: u64, ev: TraceEvent) {
+        if self.events.len() < EVENT_CAP {
+            self.events.push(TraceRecord { t, step, replica: self.replica, ev });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Record one counter sample.
+    pub fn sample(&mut self, mut c: CounterSample) {
+        if self.counters.len() < EVENT_CAP {
+            c.replica = self.replica;
+            self.counters.push(c);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// True when nothing was dropped — the precondition for exact
+    /// event-stream reconciliation in the auditor.
+    pub fn complete(&self) -> bool {
+        self.dropped == 0
+    }
+
+    /// Re-stamp every record with a new replica id.  Drivers that run
+    /// engines without a fleet slot (the static DP fork-join spawns
+    /// anonymous threads) assign track ids only after joining, so the
+    /// stream is corrected in place before export.
+    pub fn restamp(&mut self, replica: u32) {
+        self.replica = replica;
+        for r in &mut self.events {
+            r.replica = replica;
+        }
+        for c in &mut self.counters {
+            c.replica = replica;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_records_and_caps_with_explicit_drop_count() {
+        let mut tr = TraceData::new(3);
+        tr.emit(1.0, 2, TraceEvent::Finish { req: 7 });
+        assert_eq!(tr.events.len(), 1);
+        assert_eq!(tr.events[0].replica, 3);
+        assert_eq!(tr.events[0].t, 1.0);
+        assert_eq!(tr.events[0].step, 2);
+        assert!(tr.complete());
+
+        // Fill to the cap, then overflow: the overflow is counted, not
+        // silently discarded.
+        let mut tr = TraceData::new(0);
+        for i in 0..EVENT_CAP {
+            tr.emit(0.0, i as u64, TraceEvent::Finish { req: i as u32 });
+        }
+        assert!(tr.complete());
+        tr.emit(0.0, 0, TraceEvent::Finish { req: 0 });
+        tr.emit(0.0, 0, TraceEvent::Finish { req: 1 });
+        assert_eq!(tr.events.len(), EVENT_CAP);
+        assert_eq!(tr.dropped, 2);
+        assert!(!tr.complete());
+    }
+
+    #[test]
+    fn every_variant_names_itself_and_serializes_args() {
+        let evs = [
+            TraceEvent::Admit { req: 1, hit_tokens: 2, new_tokens: 3, wait: 0.5 },
+            TraceEvent::Readmit { req: 1, restored_tokens: 4 },
+            TraceEvent::ChunkPrefill { req: 1, tokens: 8 },
+            TraceEvent::EncodePass { req: 1, secs: 0.1, overlapped: true },
+            TraceEvent::Retract { req: 1, tokens: 16, swapped: false },
+            TraceEvent::SwapOut { req: 1, tokens: 16 },
+            TraceEvent::SwapIn { req: 1, tokens: 16 },
+            TraceEvent::Steal { victim: 0, thief: 1, n_requests: 5 },
+            TraceEvent::ReplicaDeath { replica: 2 },
+            TraceEvent::Rejoin { replica: 2 },
+            TraceEvent::WindowFeed { window: 1, n_requests: 100 },
+            TraceEvent::Finish { req: 1 },
+        ];
+        let mut names: Vec<&str> = evs.iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), evs.len(), "duplicate variant names");
+        for ev in &evs {
+            let args = ev.args().to_string();
+            assert!(args.starts_with('{'), "{ev:?} args not an object: {args}");
+            if let Some(req) = ev.req() {
+                assert!(
+                    args.contains(&format!("\"req\":{req}")),
+                    "{ev:?} args lost the request id: {args}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn counter_samples_are_stamped_with_the_stream_replica() {
+        let mut tr = TraceData::new(5);
+        tr.sample(CounterSample {
+            t: 1.0,
+            step: 3,
+            replica: 0, // overwritten by the stream
+            kv_used: 10.0,
+            t_comp: 0.2,
+            t_mem: 0.1,
+            link_backlog: 0.0,
+            encode_overlap: 0.0,
+        });
+        assert_eq!(tr.counters.len(), 1);
+        assert_eq!(tr.counters[0].replica, 5);
+    }
+}

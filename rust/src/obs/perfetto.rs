@@ -1,0 +1,315 @@
+//! Chrome-trace / Perfetto JSON export of recorded [`TraceData`]
+//! streams, plus the inverse: a parser + aggregator for the
+//! `blendserve trace` summarizer.
+//!
+//! Format: the Trace Event Format's JSON object flavor —
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}` — loadable in
+//! `ui.perfetto.dev` or `chrome://tracing`.  Mapping:
+//!
+//! - one *process* per replica (`pid` = replica id) with a named
+//!   `engine` thread carrying the lifecycle slices;
+//! - every lifecycle event is a zero-duration complete slice
+//!   (`"ph":"X"`) named after its [`TraceEvent`] variant, with the
+//!   typed payload in `args` (plus the engine step);
+//! - request-bearing events additionally emit flow arrows
+//!   (`"ph":"s"/"t"/"f"`, `id` = request id), so one request's journey
+//!   — admit, chunked prefill, retract, swap out/in, steal to another
+//!   replica, finish — renders as a connected arc across tracks;
+//! - per-step counter samples become counter tracks (`"ph":"C"`):
+//!   `kv_used`, `rho` (live compute density `t_comp/t_mem` of the
+//!   wave), `link_backlog`, `encode_overlap`.
+//!
+//! Timestamps are the simulated clock in microseconds (the format's
+//! native unit).  Export is deterministic: record order is the emission
+//! order, every map is a sorted [`Json::obj`], and floats print with
+//! Rust's shortest round-trip formatting — two runs of the same
+//! scenario serialize byte-identically.
+
+use super::{TraceData, TraceEvent};
+use crate::util::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Simulated seconds → Trace Event Format microseconds.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+fn meta(pid: u32, name: &str, arg: &str) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("name", Json::from(arg))])),
+        ("name", Json::from(name)),
+        ("ph", Json::from("M")),
+        ("pid", Json::from(pid as usize)),
+        ("tid", Json::from(0usize)),
+        ("ts", Json::from(0usize)),
+    ])
+}
+
+fn counter(pid: u32, ts: f64, name: &str, value: f64) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("value", Json::Num(value))])),
+        ("name", Json::from(name)),
+        ("ph", Json::from("C")),
+        ("pid", Json::from(pid as usize)),
+        ("ts", us(ts)),
+    ])
+}
+
+/// Export one or more recorded streams (single engine, or every fleet
+/// replica plus the coordinator) as one Perfetto-loadable document.
+pub fn export(traces: &[&TraceData], label: &str) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut dropped = 0u64;
+    for tr in traces {
+        events.push(meta(tr.replica, "process_name", &format!("replica {}", tr.replica)));
+        events.push(meta(tr.replica, "thread_name", "engine"));
+        dropped += tr.dropped;
+    }
+    // Flow phase per request: "s" on its first record anywhere, "f" on
+    // Finish, "t" between.  BTreeSet for determinism discipline (the
+    // set is membership-only, but keep obs/ HashMap-free wholesale).
+    let mut seen: BTreeSet<u32> = BTreeSet::new();
+    for tr in traces {
+        for r in &tr.events {
+            let args = match r.ev.args() {
+                Json::Obj(mut m) => {
+                    m.insert("step".into(), Json::from(r.step as usize));
+                    Json::Obj(m)
+                }
+                other => other,
+            };
+            events.push(Json::obj(vec![
+                ("args", args),
+                ("cat", Json::from("lifecycle")),
+                ("dur", Json::from(0usize)),
+                ("name", Json::from(r.ev.name())),
+                ("ph", Json::from("X")),
+                ("pid", Json::from(r.replica as usize)),
+                ("tid", Json::from(0usize)),
+                ("ts", us(r.t)),
+            ]));
+            if let Some(req) = r.ev.req() {
+                let ph = if seen.insert(req) {
+                    "s"
+                } else if matches!(r.ev, TraceEvent::Finish { .. }) {
+                    "f"
+                } else {
+                    "t"
+                };
+                let mut flow = vec![
+                    ("cat", Json::from("req")),
+                    ("id", Json::from(req as usize)),
+                    ("name", Json::from(format!("req {req}").as_str())),
+                    ("ph", Json::from(ph)),
+                    ("pid", Json::from(r.replica as usize)),
+                    ("tid", Json::from(0usize)),
+                    ("ts", us(r.t)),
+                ];
+                if ph == "f" {
+                    // Bind the terminating arrow to the enclosing slice.
+                    flow.push(("bp", Json::from("e")));
+                }
+                events.push(Json::obj(flow));
+            }
+        }
+        for c in &tr.counters {
+            events.push(counter(c.replica, c.t, "kv_used", c.kv_used));
+            let rho = if c.t_mem > 0.0 { c.t_comp / c.t_mem } else { 0.0 };
+            events.push(counter(c.replica, c.t, "rho", rho));
+            events.push(counter(c.replica, c.t, "link_backlog", c.link_backlog));
+            events.push(counter(c.replica, c.t, "encode_overlap", c.encode_overlap));
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::from("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("dropped_records", Json::from(dropped as usize)),
+                ("label", Json::from(label)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Aggregated view of an exported trace file — what the
+/// `blendserve trace --summary` table renders.  All vectors are sorted
+/// (counts by name; top-k descending by value, ties by request id) so
+/// rendering is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// (event name, occurrences) over every lifecycle slice.
+    pub counts: Vec<(String, u64)>,
+    /// Records the exporter reported dropped at the cap.
+    pub dropped: u64,
+    /// Top-k requests by discarded-progress tokens (non-swapped
+    /// retractions — the recompute waste).
+    pub top_recompute: Vec<(u32, u64)>,
+    /// Top-k requests by first-admission queue delay, seconds.
+    pub top_wait: Vec<(u32, f64)>,
+    /// Top-k requests by swap traffic (swap-out + swap-in tokens).
+    pub top_swap: Vec<(u32, u64)>,
+}
+
+fn top_k<V: PartialOrd + Copy>(m: BTreeMap<u32, V>, k: usize) -> Vec<(u32, V)> {
+    let mut v: Vec<(u32, V)> = m.into_iter().collect();
+    v.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .expect("finite aggregate")
+            .then(a.0.cmp(&b.0))
+    });
+    v.truncate(k);
+    v
+}
+
+/// Parse an exported trace document and aggregate the triage signals.
+/// Accepts exactly what [`export`] writes; unknown events are counted
+/// but otherwise ignored, so the summary survives schema growth.
+pub fn summarize(doc: &Json, k: usize) -> anyhow::Result<TraceSummary> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace file has no traceEvents array"))?;
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_records"))
+        .and_then(|d| d.as_f64())
+        .unwrap_or(0.0) as u64;
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    let mut recompute: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut wait: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut swap: BTreeMap<u32, u64> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow::anyhow!("lifecycle slice without a name"))?;
+        *counts.entry(name.to_string()).or_insert(0) += 1;
+        let arg = |key: &str| e.get("args").and_then(|a| a.get(key)).and_then(|v| v.as_f64());
+        let Some(req) = arg("req").map(|r| r as u32) else { continue };
+        match name {
+            "Retract" => {
+                let swapped = e
+                    .get("args")
+                    .and_then(|a| a.get("swapped"))
+                    .and_then(|s| s.as_bool())
+                    .unwrap_or(false);
+                if !swapped {
+                    *recompute.entry(req).or_insert(0) += arg("tokens").unwrap_or(0.0) as u64;
+                }
+            }
+            "Admit" => {
+                let w = wait.entry(req).or_insert(0.0);
+                *w = w.max(arg("wait_s").unwrap_or(0.0));
+            }
+            "SwapOut" | "SwapIn" => {
+                *swap.entry(req).or_insert(0) += arg("tokens").unwrap_or(0.0) as u64;
+            }
+            _ => {}
+        }
+    }
+    Ok(TraceSummary {
+        counts: counts.into_iter().collect(),
+        dropped,
+        top_recompute: top_k(recompute, k),
+        top_wait: top_k(wait, k),
+        top_swap: top_k(swap, k),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::CounterSample;
+
+    fn sample_trace() -> Box<TraceData> {
+        let mut tr = TraceData::new(0);
+        tr.emit(0.0, 0, TraceEvent::Admit { req: 1, hit_tokens: 4, new_tokens: 6, wait: 0.25 });
+        tr.emit(0.0, 0, TraceEvent::ChunkPrefill { req: 1, tokens: 6 });
+        tr.emit(1.0, 3, TraceEvent::Retract { req: 1, tokens: 9, swapped: true });
+        tr.emit(1.0, 3, TraceEvent::SwapOut { req: 1, tokens: 9 });
+        tr.emit(2.0, 5, TraceEvent::Readmit { req: 1, restored_tokens: 9 });
+        tr.emit(2.0, 5, TraceEvent::SwapIn { req: 1, tokens: 9 });
+        tr.emit(3.0, 9, TraceEvent::Finish { req: 1 });
+        tr.emit(0.5, 1, TraceEvent::Admit { req: 2, hit_tokens: 0, new_tokens: 3, wait: 0.5 });
+        tr.emit(1.5, 4, TraceEvent::Retract { req: 2, tokens: 5, swapped: false });
+        tr.emit(2.5, 7, TraceEvent::Readmit { req: 2, restored_tokens: 0 });
+        tr.emit(3.5, 11, TraceEvent::Finish { req: 2 });
+        tr.sample(CounterSample {
+            t: 1.0,
+            step: 3,
+            replica: 0,
+            kv_used: 128.0,
+            t_comp: 0.3,
+            t_mem: 0.2,
+            link_backlog: 0.05,
+            encode_overlap: 0.0,
+        });
+        tr
+    }
+
+    #[test]
+    fn export_is_loadable_shape_and_deterministic() {
+        let tr = sample_trace();
+        let a = export(&[&tr], "test").to_string();
+        let b = export(&[&tr], "test").to_string();
+        assert_eq!(a, b, "export is not byte-deterministic");
+        let doc = Json::parse(&a).expect("export emits parseable JSON");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 2 metadata + 11 slices + 11 flows + 4 counters.
+        assert_eq!(events.len(), 2 + 11 + 11 + 4);
+        // Flow phases: first record of a request opens, Finish closes.
+        let phases: Vec<String> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("req"))
+            .map(|e| e.get("ph").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(phases, ["s", "t", "t", "t", "t", "t", "f", "s", "t", "t", "f"]);
+        // Counter tracks present with µs timestamps.
+        let kv = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("kv_used"))
+            .expect("kv_used counter");
+        assert_eq!(kv.get("ts").unwrap().as_f64().unwrap(), 1e6);
+        assert_eq!(
+            kv.get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+            128.0
+        );
+    }
+
+    #[test]
+    fn summarize_aggregates_waste_wait_and_swap() {
+        let tr = sample_trace();
+        let doc = export(&[&tr], "test");
+        let s = summarize(&doc, 5).unwrap();
+        assert_eq!(s.dropped, 0);
+        let count = |name: &str| {
+            s.counts
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, c)| *c)
+                .unwrap_or(0)
+        };
+        assert_eq!(count("Admit"), 2);
+        assert_eq!(count("Retract"), 2);
+        assert_eq!(count("Finish"), 2);
+        // Request 2 discarded 5 tokens; request 1 swapped instead.
+        assert_eq!(s.top_recompute, vec![(2, 5)]);
+        // Request 1 moved 18 tokens over the link.
+        assert_eq!(s.top_swap, vec![(1, 18)]);
+        // Waits: req 2 waited longer.
+        assert_eq!(s.top_wait[0].0, 2);
+        assert_eq!(s.top_wait[0].1, 0.5);
+        // k truncates.
+        assert_eq!(summarize(&doc, 1).unwrap().top_wait.len(), 1);
+    }
+
+    #[test]
+    fn summarize_rejects_non_trace_documents() {
+        assert!(summarize(&Json::parse("{}").unwrap(), 3).is_err());
+    }
+}

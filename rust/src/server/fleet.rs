@@ -30,6 +30,7 @@
 use crate::config::{presets, RecoveryStrategy, SystemConfig};
 use crate::engine::sim::{SimEngine, SimRequest, SimResult, StepOutcome};
 use crate::kv::KvExtent;
+use crate::obs::{TraceData, TraceEvent};
 use crate::parallel::{assign_units, work_units, WorkUnit};
 use crate::perfmodel::PerfModel;
 use crate::recovery::{
@@ -146,6 +147,11 @@ pub struct FleetReport {
     /// The run was stopped by a test/checkpoint kill switch before every
     /// request finished (the exactly-once audit is skipped in that case).
     pub halted: bool,
+    /// Coordinator-level trace track (steal / death / rejoin events with
+    /// the dp count as pseudo replica id); `None` unless
+    /// `cfg.engine.trace` was set.  Per-replica engine traces live on
+    /// `per_replica[..].trace`.
+    pub coord_trace: Option<Box<TraceData>>,
 }
 
 impl FleetReport {
@@ -215,6 +221,9 @@ struct FleetRun {
     stolen_requests: usize,
     stats: FaultStats,
     halted: bool,
+    /// Coordinator-level event track (steals / deaths / rejoins); `None`
+    /// unless `cfg.engine.trace` was set.
+    coord_trace: Option<Box<TraceData>>,
 }
 
 /// Fault-tolerance machinery threaded through one [`run_fleet`] pass.
@@ -431,6 +440,7 @@ fn build_replica(
     )
     .with_kv(&cfg.kv)
     .with_modality(&cfg.modality);
+    engine.set_trace_replica(slot as u32);
     let mut st = engine.begin_at(clock);
     if host_mult < 1.0 {
         engine.shrink_host_kv(&mut st, host_mult);
@@ -506,7 +516,7 @@ fn run_fleet(
         .map(|(slot, idxs)| {
             let us = scanner_units(units, idxs);
             let reqs = shard_requests(workload, tree, &us);
-            let engine = SimEngine::new(
+            let mut engine = SimEngine::new(
                 prep.pms[slot].clone(),
                 cfg.engine.clone(),
                 prep.sched.clone(),
@@ -514,6 +524,7 @@ fn run_fleet(
             )
             .with_kv(&cfg.kv)
             .with_modality(&cfg.modality);
+            engine.set_trace_replica(slot as u32);
             let st = engine.begin();
             Replica {
                 engine,
@@ -546,6 +557,18 @@ fn run_fleet(
     let mut steals = 0usize;
     let mut stolen_units = 0usize;
     let mut stolen_requests = 0usize;
+    // Coordinator-level trace track (DESIGN.md §15): steal / death /
+    // rejoin events the per-replica engines cannot see.  The pseudo
+    // replica id is the dp count (one past the last real slot) and the
+    // step stamp is `coord_steps`, the global fleet event ordinal.
+    // Adoption batches from the orphan pool are recorded as steals from
+    // that same pseudo slot.
+    let mut coord_trace: Option<Box<TraceData>> = if cfg.engine.trace {
+        Some(TraceData::new(reps.len() as u32))
+    } else {
+        None
+    };
+    let mut adoption_events = 0usize;
     // Discrete-event order: always advance the earliest replica, so every
     // steal observes its victim at a clock ≥ the thief's (the victim's
     // pending set only shrinks over time — causally safe).  Selection is
@@ -575,6 +598,9 @@ fn run_fleet(
         let mut reselect = false;
         for r in 0..reps.len() {
             if dead[r] && rejoin_at[r] <= tmin {
+                if let Some(tr) = coord_trace.as_mut() {
+                    tr.emit(rejoin_at[r], coord_steps as u64, TraceEvent::Rejoin { replica: r as u32 });
+                }
                 reps[r] =
                     build_replica(cfg, workload, prep, r, Vec::new(), rejoin_at[r], host_mult, link_mult);
                 dead[r] = false;
@@ -611,6 +637,9 @@ fn run_fleet(
                         continue;
                     }
                     stats.deaths += 1;
+                    if let Some(tr) = coord_trace.as_mut() {
+                        tr.emit(ev.at, coord_steps as u64, TraceEvent::ReplicaDeath { replica: r as u32 });
+                    }
                     match ft.strategy {
                         RecoveryStrategy::Recover => {
                             let res = reclaim_replica(
@@ -801,6 +830,18 @@ fn run_fleet(
             }
             let rec = records::steal(reps[i].st.clock(), reps.len(), i, adopted);
             ft.record(&mut stats, &rec);
+            if let Some(tr) = coord_trace.as_mut() {
+                tr.emit(
+                    reps[i].st.clock(),
+                    coord_steps as u64,
+                    TraceEvent::Steal {
+                        victim: reps.len() as u32,
+                        thief: i as u32,
+                        n_requests: adopted as u64,
+                    },
+                );
+            }
+            adoption_events += 1;
             refilled = true;
         } else if steal {
             if let Some(v) = pick_victim(&reps, i) {
@@ -825,6 +866,17 @@ fn run_fleet(
                     let rec =
                         records::steal(reps[i].st.clock(), v, i, stolen_ids.len());
                     ft.record(&mut stats, &rec);
+                    if let Some(tr) = coord_trace.as_mut() {
+                        tr.emit(
+                            reps[i].st.clock(),
+                            coord_steps as u64,
+                            TraceEvent::Steal {
+                                victim: v as u32,
+                                thief: i as u32,
+                                n_requests: stolen_ids.len() as u64,
+                            },
+                        );
+                    }
                     let reqs = shard_requests(workload, tree, &stolen);
                     let rep = &mut reps[i];
                     rep.engine.feed_requests(&mut rep.st, reqs);
@@ -872,9 +924,45 @@ fn run_fleet(
         for (id, &n) in finishes.iter().enumerate() {
             assert!(n == 1, "fleet audit: request {id} finished {n} times across the fleet");
         }
+        // Coordinator-trace reconciliation (DESIGN.md §15): the event
+        // stream must agree exactly with the fleet counters it shadowed.
+        if let Some(tr) = coord_trace.as_ref() {
+            if tr.complete() {
+                let (mut deaths, mut rejoins, mut steal_evs, mut moved) = (0usize, 0usize, 0usize, 0u64);
+                for rec in &tr.events {
+                    match rec.ev {
+                        TraceEvent::ReplicaDeath { .. } => deaths += 1,
+                        TraceEvent::Rejoin { .. } => rejoins += 1,
+                        TraceEvent::Steal { victim, n_requests, .. } => {
+                            steal_evs += 1;
+                            if (victim as usize) < dead.len() {
+                                moved += n_requests;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                assert_eq!(deaths, stats.deaths, "fleet audit: ReplicaDeath events vs deaths counter");
+                assert_eq!(rejoins, stats.rejoins, "fleet audit: Rejoin events vs rejoins counter");
+                assert_eq!(
+                    steal_evs,
+                    steals + adoption_events,
+                    "fleet audit: Steal events vs steals + orphan adoptions"
+                );
+                assert_eq!(
+                    moved as usize, stolen_requests,
+                    "fleet audit: requests moved by Steal events vs stolen_requests"
+                );
+            } else {
+                eprintln!(
+                    "fleet audit: coordinator trace dropped {} records at the cap — skipping event reconciliation",
+                    tr.dropped
+                );
+            }
+        }
     }
 
-    FleetRun { results, descs, steals, stolen_units, stolen_requests, stats, halted }
+    FleetRun { results, descs, steals, stolen_units, stolen_requests, stats, halted, coord_trace }
 }
 
 /// Serve a request pool on the work-stealing fleet.  Runs the stealing
@@ -996,6 +1084,7 @@ pub fn serve_fleet_opts(
         replica_desc: run.descs,
         faults: run.stats,
         halted: run.halted,
+        coord_trace: run.coord_trace,
     })
 }
 

@@ -44,7 +44,7 @@ pub struct BatchJobResult {
 /// [`fleet::serve_fleet`] instead of this static fork-join.
 pub fn serve_batch(cfg: &SystemConfig, workload: &Workload) -> BatchJobResult {
     let dp = cfg.dp_replicas.max(1);
-    let outputs: Vec<RunOutput> = if dp == 1 {
+    let mut outputs: Vec<RunOutput> = if dp == 1 {
         vec![run_system(cfg, workload)]
     } else {
         // Decompose on the centralized tree.
@@ -73,6 +73,14 @@ pub fn serve_batch(cfg: &SystemConfig, workload: &Workload) -> BatchJobResult {
             .collect();
         handles.into_iter().map(|h| h.join().expect("replica thread")).collect()
     };
+    // The fork-join threads run anonymous engines (always slot 0); give
+    // each recorded trace its shard index so export renders one Perfetto
+    // process per replica instead of one collided track.
+    for (slot, o) in outputs.iter_mut().enumerate() {
+        if let Some(tr) = o.result.trace.as_mut() {
+            tr.restamp(slot as u32);
+        }
+    }
 
     let makespan = outputs
         .iter()

@@ -400,6 +400,18 @@ pub fn save_results(outputs: &[RunOutput], path: &Path) -> anyhow::Result<()> {
                     "cross_window_hit_tokens",
                     Json::from(o.result.cross_window_hit_tokens as usize),
                 ),
+                // Surface series-cap truncation instead of letting a
+                // partial roofline timeline masquerade as a full one
+                // (DESIGN.md §15).
+                ("series_truncated", Json::from(o.result.series_truncated)),
+                (
+                    "series_dropped",
+                    Json::from(o.result.series_dropped as usize),
+                ),
+                (
+                    "metrics",
+                    crate::obs::metrics_report(&o.result).to_json(),
+                ),
             ])
         })
         .collect();

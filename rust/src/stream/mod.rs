@@ -220,7 +220,7 @@ pub fn run_stream<R: BufRead>(
     let mut base = p0.n_requests as u32;
 
     let mut st = engine.begin();
-    engine.note_window_fed(&mut st);
+    engine.note_window_fed(&mut st, p0.n_requests);
     let mut next = spawn_prepare(cfg, source, base, max_requests, max_tokens)?;
     loop {
         match engine.step_once(&mut st, &mut scanner) {
@@ -235,7 +235,7 @@ pub fn run_stream<R: BufRead>(
                     .map_err(|_| anyhow::anyhow!("stream: window prepare thread panicked"))?;
                 engine.set_expected_sharing(p.sharing);
                 engine.feed_requests(&mut st, p.sims);
-                engine.note_window_fed(&mut st);
+                engine.note_window_fed(&mut st, p.n_requests);
                 scanner = DualScanner::from_units(p.units, p.rho_root);
                 base += p.n_requests as u32;
                 next = spawn_prepare(cfg, source, base, max_requests, max_tokens)?;

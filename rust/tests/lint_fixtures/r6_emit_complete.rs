@@ -1,0 +1,6 @@
+//! r6 fixture: the missing variant emitted from another emission-scope
+//! file clears the diagnostic.
+
+pub fn swap(tr: &mut TraceData) {
+    tr.emit(0.0, 0, TraceEvent::Ghost { req: 2 });
+}

@@ -1,0 +1,17 @@
+//! r6 fixture: emits Admit in production code, Ghost only under test —
+//! a test-module construction must not satisfy the emission check.
+
+pub fn step(tr: &mut TraceData) {
+    tr.emit(0.0, 0, TraceEvent::Admit { req: 1 });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ghost_only_in_tests_does_not_count() {
+        let mut tr = TraceData::new(0);
+        tr.emit(0.0, 0, TraceEvent::Ghost { req: 9 });
+    }
+}

@@ -1,0 +1,8 @@
+//! r6 fixture: TraceEvent schema with one variant nobody emits.
+
+pub enum TraceEvent {
+    /// Emitted by the stale emitter fixture.
+    Admit { req: u32 },
+    /// Never constructed outside test code — must flag.
+    Ghost { req: u32 },
+}

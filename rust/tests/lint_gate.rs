@@ -101,6 +101,54 @@ fn r5_guards_the_real_simresult() {
 }
 
 #[test]
+fn r6_fixture_cross_file_diagnostic() {
+    let obs = fixture("r6_obs_schema.rs");
+    let stale = vec![
+        ("obs/mod.rs".to_string(), obs.clone()),
+        ("engine/sim.rs".to_string(), fixture("r6_emit_stale.rs")),
+    ];
+    let hits = lint_files(&stale);
+    assert_eq!(ids(&hits), vec![("r6", 7)]);
+    assert_eq!(hits[0].file, "obs/mod.rs");
+    assert!(hits[0].msg.contains("Ghost"));
+
+    // The missing variant emitted from any other emission-scope file
+    // clears the diagnostic.
+    let complete = vec![
+        ("obs/mod.rs".to_string(), obs),
+        ("engine/sim.rs".to_string(), fixture("r6_emit_stale.rs")),
+        ("kv/mod.rs".to_string(), fixture("r6_emit_complete.rs")),
+    ];
+    assert!(lint_files(&complete).is_empty(), "{}", render(&lint_files(&complete)));
+}
+
+/// The acceptance-criteria demonstration: declaring a `TraceEvent`
+/// variant in the REAL `obs/mod.rs` without emitting it anywhere in the
+/// real emission scope must fail r6.
+#[test]
+fn r6_guards_the_real_trace_schema() {
+    let obs = std::fs::read_to_string(repo("rust/src/obs/mod.rs")).expect("read obs/mod.rs");
+    let marker = "pub enum TraceEvent {";
+    assert!(obs.contains(marker), "TraceEvent layout changed; update this test's marker");
+    let grown = obs.replace(marker, "pub enum TraceEvent {\n    Unemitted { req: u32 },");
+    let mut files = vec![("obs/mod.rs".to_string(), grown)];
+    for p in [
+        "engine/sim.rs",
+        "server/fleet.rs",
+        "server/colocate.rs",
+        "stream/mod.rs",
+        "kv/mod.rs",
+    ] {
+        let src = std::fs::read_to_string(repo(&format!("rust/src/{p}"))).expect(p);
+        files.push((p.to_string(), src));
+    }
+    let hits = lint_files(&files);
+    let r6: Vec<&Diagnostic> = hits.iter().filter(|d| d.rule == "r6").collect();
+    assert_eq!(r6.len(), 1, "expected exactly the injected variant to flag:\n{}", render(&hits));
+    assert!(r6[0].msg.contains("Unemitted"));
+}
+
+#[test]
 fn empty_reason_suppression_is_rejected() {
     let hits = lint_source("engine/fixture.rs", &fixture("allow_empty_reason.rs"));
     // The reasonless allow grants nothing: both the allow diagnostic and

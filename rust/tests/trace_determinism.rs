@@ -1,0 +1,208 @@
+//! Observability gates (DESIGN.md §15) over the five canonical golden
+//! scenarios — offline batch, online/offline co-location, work-stealing
+//! fleet, tiered-KV pressure, mixed-modality:
+//!
+//!  1. **Trace-off bit-identity.** With `engine.trace = false` no trace
+//!     buffer is allocated, and the counter document is byte-identical
+//!     to the trace-on run — emission may not perturb the simulation.
+//!     (The committed golden snapshots separately pin trace-off results
+//!     against history, so together these prove tracing is invisible.)
+//!  2. **Trace determinism.** Two trace-on runs of the same scenario
+//!     export byte-identical Perfetto documents.
+//!  3. **Reconciliation.** Every run here arms `engine.audit`, so the
+//!     auditor's event-replay invariant (trace totals == SimResult
+//!     counters) and the fleet coordinator reconciliation execute on all
+//!     five scenarios as a side effect; a mismatch panics the test.
+
+use blendserve::baselines;
+use blendserve::engine::{RequestTiming, SimResult};
+use blendserve::obs::{perfetto, TraceData};
+use blendserve::scheduler::run_system;
+use blendserve::server::{online_stream, serve_colocated, serve_fleet};
+use blendserve::trace::generators::generate_kind;
+use blendserve::trace::synth::mixed_modal;
+use blendserve::trace::{Request, TraceKind, Workload};
+use blendserve::util::json::Json;
+
+/// FNV-1a over the finish-ordered id sequence (finished requests only),
+/// mirroring the golden-trace fingerprint.
+fn finish_hash(timings: &[RequestTiming]) -> String {
+    let mut done: Vec<(f64, u32)> = timings
+        .iter()
+        .filter(|t| t.finish.is_finite())
+        .map(|t| (t.finish, t.id))
+        .collect();
+    done.sort_by(|a, b| a.partial_cmp(b).expect("finite finish times"));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (_, id) in done {
+        for b in id.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Every counter the auditor reconciles, serialized — the equality
+/// witness for the off-vs-on comparison.
+fn counters_doc(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("makespan_s", Json::Num(r.total_time)),
+        ("steps", Json::from(r.steps as usize)),
+        ("total_tokens", Json::from(r.total_tokens as usize)),
+        ("hit_tokens", Json::from(r.hit_tokens as usize)),
+        ("retractions", Json::from(r.retractions as usize)),
+        ("recomputed_tokens", Json::from(r.recomputed_tokens as usize)),
+        ("swapped_out_tokens", Json::from(r.swapped_out_tokens as usize)),
+        ("swapped_in_tokens", Json::from(r.swapped_in_tokens as usize)),
+        ("encode_time_s", Json::Num(r.encode_time)),
+        ("peak_kv_tokens", Json::Num(r.peak_kv_used)),
+        ("series_truncated", Json::from(r.series_truncated)),
+        ("series_dropped", Json::from(r.series_dropped as usize)),
+        ("finish_order_fnv1a", Json::from(finish_hash(&r.timings).as_str())),
+    ])
+}
+
+fn export_streams(streams: &[&TraceData], label: &str) -> String {
+    format!("{}\n", perfetto::export(streams, label))
+}
+
+/// A scenario run: `(counter doc, Perfetto export when tracing)`.
+type RunDocs = (String, Option<String>);
+
+fn offline_run(trace: bool) -> RunDocs {
+    let w = generate_kind(TraceKind::BurstGpt, 120, 42);
+    let mut cfg = baselines::blendserve();
+    cfg.engine.audit = true;
+    cfg.engine.trace = trace;
+    let out = run_system(&cfg, &w);
+    assert_eq!(out.result.trace.is_some(), trace, "trace buffer must follow engine.trace");
+    let doc = out.result.trace.as_deref().map(|t| export_streams(&[t], "offline"));
+    (counters_doc(&out.result).to_string(), doc)
+}
+
+fn colocate_run(trace: bool) -> RunDocs {
+    let w = generate_kind(TraceKind::ShareGpt, 80, 11);
+    let mut cfg = baselines::blendserve();
+    cfg.colocate.online_rate = 6.0;
+    cfg.colocate.burst_factor = 4.0;
+    cfg.colocate.phase_secs = 2.0;
+    cfg.engine.audit = true;
+    cfg.engine.trace = trace;
+    let online = online_stream(&cfg, TraceKind::ShareGpt, 16, 17);
+    let rep = serve_colocated(&cfg, &w, &online);
+    assert_eq!(rep.result.trace.is_some(), trace, "trace buffer must follow engine.trace");
+    let doc = rep.result.trace.as_deref().map(|t| export_streams(&[t], "colocate"));
+    (counters_doc(&rep.result).to_string(), doc)
+}
+
+fn fleet_run(trace: bool) -> RunDocs {
+    let w = generate_kind(TraceKind::WildChat, 96, 23);
+    let mut cfg = baselines::blendserve();
+    cfg.dp_replicas = 2;
+    cfg.engine.audit = true;
+    cfg.engine.trace = trace;
+    let rep = serve_fleet(&cfg, &w);
+    let mut parts: Vec<Json> = rep.per_replica.iter().map(counters_doc).collect();
+    parts.push(Json::obj(vec![
+        ("makespan_s", Json::Num(rep.makespan)),
+        ("steals", Json::from(rep.steals)),
+        ("stolen_requests", Json::from(rep.stolen_requests)),
+    ]));
+    let doc = if trace {
+        let mut streams: Vec<&TraceData> =
+            rep.per_replica.iter().filter_map(|r| r.trace.as_deref()).collect();
+        streams.extend(rep.coord_trace.as_deref());
+        assert_eq!(
+            streams.len(),
+            rep.per_replica.len() + 1,
+            "every replica plus the coordinator must carry a trace stream"
+        );
+        Some(export_streams(&streams, "fleet"))
+    } else {
+        assert!(rep.per_replica.iter().all(|r| r.trace.is_none()));
+        assert!(rep.coord_trace.is_none());
+        None
+    };
+    (Json::Arr(parts).to_string(), doc)
+}
+
+/// Long-decode unique-prompt requests on a small-HBM replica — the
+/// retraction/swap event path is the part under test.
+fn kv_run(trace: bool) -> RunDocs {
+    let requests = (0..16)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..200).map(|k| (i * 200 + k) as u32 + 1_000_000).collect();
+            Request::new(i as u32, TraceKind::Custom, prompt, 800)
+        })
+        .collect();
+    let w = Workload::new("trace-kv-pressure", requests);
+    let mut cfg = baselines::blendserve();
+    cfg.hardware.memory_bytes = 22e9;
+    cfg.scheduler.sample_prob = 1.0;
+    cfg.kv.enabled = true;
+    cfg.engine.audit = true;
+    cfg.engine.trace = trace;
+    let out = run_system(&cfg, &w);
+    assert_eq!(out.result.trace.is_some(), trace, "trace buffer must follow engine.trace");
+    let doc = out.result.trace.as_deref().map(|t| export_streams(&[t], "kv"));
+    (counters_doc(&out.result).to_string(), doc)
+}
+
+fn modality_run(trace: bool) -> RunDocs {
+    let w = mixed_modal(36, 15, 9, 0.4, 7);
+    let mut cfg = baselines::blendserve();
+    cfg.engine.audit = true;
+    cfg.engine.trace = trace;
+    let out = run_system(&cfg, &w);
+    assert_eq!(out.result.trace.is_some(), trace, "trace buffer must follow engine.trace");
+    let doc = out.result.trace.as_deref().map(|t| export_streams(&[t], "modality"));
+    (counters_doc(&out.result).to_string(), doc)
+}
+
+const SCENARIOS: [(&str, fn(bool) -> RunDocs); 5] = [
+    ("offline", offline_run),
+    ("colocate", colocate_run),
+    ("fleet", fleet_run),
+    ("kv", kv_run),
+    ("modality", modality_run),
+];
+
+/// The two headline properties in one sweep (each scenario runs three
+/// times: off once, on twice): enabling tracing must not move a single
+/// counter byte, and the trace-on export must be run-to-run
+/// byte-identical.
+#[test]
+fn tracing_is_invisible_when_off_and_deterministic_when_on() {
+    for (name, run) in SCENARIOS {
+        let (off_counters, off_doc) = run(false);
+        assert!(off_doc.is_none(), "scenario '{name}' exported a trace with tracing off");
+        let (on_counters, on_doc) = run(true);
+        assert_eq!(
+            off_counters, on_counters,
+            "scenario '{name}': enabling tracing changed simulation results"
+        );
+        let (_, on_doc2) = run(true);
+        assert_eq!(
+            on_doc.expect("trace-on export"),
+            on_doc2.expect("trace-on export"),
+            "scenario '{name}': trace export is not run-to-run deterministic"
+        );
+    }
+}
+
+/// The exported document round-trips through the CLI summarizer: parse,
+/// aggregate, and find the lifecycle events every run must contain.
+#[test]
+fn exported_trace_round_trips_through_summarizer() {
+    let (_, doc) = offline_run(true);
+    let doc = Json::parse(&doc.expect("trace-on export")).expect("exported trace parses");
+    let sum = perfetto::summarize(&doc, 5).expect("summarize");
+    assert_eq!(sum.dropped, 0, "canonical scenario must fit the event cap");
+    let count = |ev: &str| {
+        sum.counts.iter().find(|(n, _)| n == ev).map(|(_, c)| *c).unwrap_or(0)
+    };
+    assert_eq!(count("Admit"), 120, "every request admits exactly once");
+    assert_eq!(count("Finish"), 120, "every request finishes exactly once");
+    assert!(!sum.top_wait.is_empty(), "queue-delay leaderboard must populate");
+}
